@@ -1,0 +1,114 @@
+//! E4 + E5: the submission-burst evaluation (figs. 9 and 10) on the live
+//! server stack — real database, central automaton, scheduler and
+//! launcher; only node latencies are modeled (virtual cluster).
+//!
+//!     cargo run --release --example burst_benchmark              # fig 9
+//!     cargo run --release --example burst_benchmark -- parallel  # fig 10
+//!
+//! Results land in EXPERIMENTS.md §E4/§E5.
+
+use oar::bench::{burst, report};
+
+fn main() -> oar::Result<()> {
+    let parallel = std::env::args().any(|a| a == "parallel");
+    if parallel {
+        fig10()
+    } else {
+        fig9()
+    }
+}
+
+fn fig9() -> oar::Result<()> {
+    // Paper: up to 1000 simultaneous submissions of `date` jobs on the
+    // Xeon platform; the claim is stability across the sweep.
+    let bursts = [10usize, 30, 70, 150, 300, 600, 1000];
+    // time_scale compresses the launcher's modeled ssh latencies so the
+    // 1000-job point stays snappy; overhead measured is the real stack's.
+    println!("fig 9: response time vs burst size (Xeon, 17 nodes)\n");
+    let points = burst::fig9_sweep(&bursts, 0.001)?;
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.burst.to_string(),
+                format!("{:.1}", p.response_ms.mean),
+                format!("{:.1}", p.response_ms.p95),
+                p.errors.to_string(),
+                p.drain_ms.to_string(),
+                format!("{:.1}", p.queries as f64 / p.burst as f64),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["burst", "mean(ms)", "p95(ms)", "errors", "drain(ms)", "queries/job"],
+            &rows
+        )
+    );
+    let series: Vec<(f64, f64)> = points
+        .iter()
+        .map(|p| (p.burst as f64, p.response_ms.mean))
+        .collect();
+    println!("{}", report::xy_ascii(&[("mean response (ms)", &series)], 80, 12));
+
+    let stable = points.iter().all(|p| p.errors == 0);
+    println!("stability up to 1000 simultaneous submissions: {}", if stable { "OK" } else { "FAIL" });
+
+    report::write_csv(
+        std::path::Path::new("results/fig9_burst.csv"),
+        &["burst", "mean_ms", "p95_ms", "max_ms", "errors", "queries"],
+        &points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.burst.to_string(),
+                    format!("{:.2}", p.response_ms.mean),
+                    format!("{:.2}", p.response_ms.p95),
+                    format!("{:.2}", p.response_ms.max),
+                    p.errors.to_string(),
+                    p.queries.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    println!("CSV written to results/fig9_burst.csv");
+    Ok(())
+}
+
+fn fig10() -> oar::Result<()> {
+    println!("fig 10: parallel-job response vs nbNodes (Icluster, 119 nodes)\n");
+    let sizes = [1u32, 2, 4, 8, 16, 32, 64, 119];
+    // real scale: the deployment latency model IS the measurement here
+    let series = burst::fig10_sweep(&sizes, 1.0)?;
+    let mut rows = Vec::new();
+    for s in &series {
+        for (n, ms) in &s.points {
+            rows.push(vec![s.setting.clone(), n.to_string(), format!("{ms:.0}")]);
+        }
+    }
+    println!(
+        "{}",
+        report::table(&["setting", "nbNodes", "response(ms)"], &rows)
+    );
+    let plot: Vec<(&str, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|s| {
+            (
+                s.setting.as_str(),
+                s.points.iter().map(|(n, v)| (*n as f64, *v)).collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        plot.iter().map(|(n, v)| (*n, v.as_slice())).collect();
+    println!("{}", report::xy_ascii(&refs, 80, 14));
+
+    report::write_csv(
+        std::path::Path::new("results/fig10_parallel.csv"),
+        &["setting", "nb_nodes", "response_ms"],
+        &rows,
+    )?;
+    println!("CSV written to results/fig10_parallel.csv");
+    Ok(())
+}

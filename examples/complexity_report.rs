@@ -1,0 +1,44 @@
+//! E1 (Table 1): software complexity, the paper's measurement repeated on
+//! this repository and printed next to the paper's original numbers.
+//!
+//!     cargo run --release --example complexity_report
+
+use oar::bench::{complexity, report};
+
+fn main() {
+    println!("Table 1 — software complexity of several resource managers\n");
+    println!("paper's measurements (2005):");
+    println!(
+        "{}",
+        report::table(
+            &["system", "language", "source files", "source lines"],
+            &complexity::PAPER_TABLE1
+                .iter()
+                .map(|(a, b, c, d)| vec![a.to_string(), b.to_string(), c.to_string(), d.to_string()])
+                .collect::<Vec<_>>()
+        )
+    );
+
+    println!("this repository, same procedure (operational files, tests excluded):");
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rows = complexity::measure_repo(repo);
+    println!(
+        "{}",
+        report::table(
+            &["component", "files", "lines", "code lines"],
+            &rows
+                .iter()
+                .map(|l| vec![
+                    l.name.clone(),
+                    l.files.to_string(),
+                    l.lines.to_string(),
+                    l.code_lines.to_string()
+                ])
+                .collect::<Vec<_>>()
+        )
+    );
+    println!("the structural claim under test: the full scheduler core stays within");
+    println!("a few thousand operational lines — the paper's 'low software complexity");
+    println!("through high-level components' argument, here with Rust + an embedded");
+    println!("relational store playing the roles of Perl + MySQL.");
+}

@@ -1,0 +1,105 @@
+//! END-TO-END DRIVER (E3): regenerate the paper's headline evaluation —
+//! Table 3 and figures 4–8 — by running the full ESP2 230-job workload
+//! through every scheduler on the 34-processor Xeon shape, printing the
+//! table side-by-side with the paper's numbers, rendering the utilization
+//! figures, and writing CSV series under `results/`.
+//!
+//!     cargo run --release --example esp_benchmark
+//!
+//! The recorded output of this driver is EXPERIMENTS.md §E3.
+
+use oar::bench::esp::{run_esp, PAPER_TABLE3, XEON_PROCS};
+use oar::bench::report;
+
+fn main() -> oar::Result<()> {
+    println!("ESP2 throughput test: 230 jobs, 34 processors, all submitted at t=0\n");
+    let rows = run_esp(XEON_PROCS, 0);
+
+    // ---- Table 3 ----
+    let mut trows = Vec::new();
+    for row in &rows {
+        let paper = PAPER_TABLE3.iter().find(|(n, _, _)| *n == row.system);
+        trows.push(vec![
+            row.system.to_string(),
+            row.elapsed.to_string(),
+            format!("{:.4}", row.efficiency),
+            paper.map(|(_, e, _)| e.to_string()).unwrap_or_default(),
+            paper.map(|(_, _, f)| format!("{f:.4}")).unwrap_or_default(),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["system", "elapsed(s)", "efficiency", "paper elapsed(s)", "paper efficiency"],
+            &trows
+        )
+    );
+
+    // ---- shape checks the paper argues for (§3.2.1) ----
+    let eff = |n: &str| rows.iter().find(|r| r.system == n).unwrap().efficiency;
+    println!("shape checks against the paper:");
+    println!(
+        "  greedy packers beat OAR's no-famine default:  SGE {:.4} > OAR {:.4}  [{}]",
+        eff("SGE"),
+        eff("OAR"),
+        ok(eff("SGE") > eff("OAR"))
+    );
+    println!(
+        "  OAR and Maui are close:                       |{:.4} - {:.4}| < 0.05 [{}]",
+        eff("OAR"),
+        eff("TORQUE+MAUI"),
+        ok((eff("OAR") - eff("TORQUE+MAUI")).abs() < 0.05)
+    );
+    println!(
+        "  policy swap recovers SGE-level throughput:    OAR(2) {:.4} >= SGE {:.4} - 0.01 [{}]",
+        eff("OAR(2)"),
+        eff("SGE"),
+        ok(eff("OAR(2)") >= eff("SGE") - 0.01)
+    );
+
+    // ---- figures 4-8 ----
+    for row in &rows {
+        println!("\n── fig: ESP2 utilization on {} ──", row.system);
+        println!("{}", report::utilization_ascii(&row.result, 100, 14));
+    }
+
+    // ---- CSV ----
+    let dir = std::path::Path::new("results");
+    report::write_csv(
+        &dir.join("table3.csv"),
+        &["system", "elapsed_s", "efficiency", "max_wait_s"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.system.to_string(),
+                    r.elapsed.to_string(),
+                    format!("{:.4}", r.efficiency),
+                    r.max_wait.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    for row in &rows {
+        let name = row.system.replace(['+', '(', ')'], "_").to_lowercase();
+        report::write_csv(
+            &dir.join(format!("fig_esp_{name}.csv")),
+            &["time_s", "busy_procs"],
+            &row.result
+                .utilization
+                .iter()
+                .map(|(t, b)| vec![t.to_string(), b.to_string()])
+                .collect::<Vec<_>>(),
+        )?;
+    }
+    println!("\nCSV series written under results/");
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "FAIL"
+    }
+}

@@ -1,0 +1,68 @@
+//! Quickstart: bring up a complete OAR system on a virtual cluster,
+//! submit jobs the `oarsub` way, watch them run, read `oarstat` and the
+//! accounting report.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oar::cluster::VirtualCluster;
+use oar::server::{Server, ServerConfig};
+use oar::types::JobSpec;
+
+fn main() -> oar::Result<()> {
+    // A virtual 8-node cluster (2 procs each) and a full server: database,
+    // central automaton, meta-scheduler, launcher, monitor.
+    let cluster = Arc::new(VirtualCluster::tiny(8, 2));
+    let server = Server::new(cluster, ServerConfig::fast(0.05));
+
+    println!("submitting three jobs...");
+    // 1. a plain batch job
+    let a = server
+        .submit(&JobSpec::batch("alice", "sleep 2", 4, 600))?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    // 2. a job with a resource-matching constraint (fig. 2 `properties`)
+    let b = server
+        .submit(&JobSpec {
+            properties: Some("mem >= 512".into()),
+            ..JobSpec::batch("bob", "sleep 1", 2, 600)
+        })?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    // 3. a best-effort job (§3.3): uses idle nodes, evicted when needed
+    let c = server
+        .submit(&JobSpec {
+            best_effort: true,
+            ..JobSpec::batch("grid", "sleep 5", 2, 3600)
+        })?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("  jobs: alice={a} bob={b} grid(best-effort)={c}");
+
+    println!("waiting for completion...");
+    let drained = server.wait_all_terminal(Duration::from_secs(60));
+    println!("  all terminal: {drained}");
+
+    println!("\noarstat:");
+    for job in server.stat(None)? {
+        println!(
+            "  job {:>2}  user={:<6} state={:<10} response={:?}ms",
+            job.id,
+            job.user,
+            job.state.to_string(),
+            job.response_time()
+        );
+    }
+
+    println!("\naccounting:");
+    let acc = server.accounting();
+    for (user, usage) in &acc.by_user {
+        println!(
+            "  {user:<6} terminated={} cpu_ms={}",
+            usage.jobs_terminated, usage.cpu_seconds
+        );
+    }
+
+    let (accepted, discarded) = server.hub_stats();
+    println!("\ncentral module: {accepted} notifications, {discarded} coalesced");
+    Ok(())
+}

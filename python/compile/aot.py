@@ -1,0 +1,67 @@
+"""AOT entry point: lower ``schedule_step`` to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts/schedule_step.hlo.txt
+Also writes a JSON manifest with the compile shapes next to the artifact so
+the Rust side can assert it pads to the right dimensions.
+"""
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/schedule_step.hlo.txt")
+    args = ap.parse_args()
+
+    lowered = jax.jit(model.schedule_step).lower(*model.example_args())
+    text = to_hlo_text(lowered)
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+
+    manifest = {
+        "entry": "schedule_step",
+        "J": model.J, "N": model.N, "P": model.P,
+        "T": model.T, "F": model.F,
+        "inputs": [
+            {"name": "job_lo", "shape": [model.J, model.P]},
+            {"name": "job_hi", "shape": [model.J, model.P]},
+            {"name": "node_props", "shape": [model.N, model.P]},
+            {"name": "node_free", "shape": [model.N, model.T]},
+            {"name": "req", "shape": [model.J]},
+            {"name": "dur", "shape": [model.J]},
+            {"name": "job_feats", "shape": [model.J, model.F]},
+            {"name": "weights", "shape": [model.F]},
+        ],
+        "outputs": ["elig", "freecount", "earliest", "scores"],
+    }
+    man_path = os.path.join(os.path.dirname(os.path.abspath(args.out)),
+                            "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(text)} chars to {args.out} (+ manifest.json)")
+
+
+if __name__ == "__main__":
+    main()

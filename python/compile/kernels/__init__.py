@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the scheduler's compute hot-spot.
+
+``match_pallas`` — jobs-x-nodes eligibility (resource matching).
+``scan_pallas``  — Gantt feasibility scan (earliest-hole finding).
+``ref``          — pure-jnp oracle both are tested against.
+"""
+from .match import match_pallas
+from .scan import scan_pallas
+
+__all__ = ["match_pallas", "scan_pallas"]

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: job-on-node eligibility (resource matching).
+
+OAR matched resources with a per-job SQL WHERE clause evaluated row-by-row
+against the nodes table.  Here the predicate set is normalized to interval
+constraints and the whole (jobs x nodes) matrix is computed in one tiled
+kernel: the grid walks (J/Jt, N/Nt) tiles, each program holds a (Jt, P) job
+slab and an (Nt, P) node slab in VMEM and emits a (Jt, Nt) eligibility tile.
+
+TPU sizing (see DESIGN.md §Hardware-Adaptation): with Jt=64, Nt=128, P=8 the
+operands are 64*8 + 128*8 floats (6 KB) and the broadcast intermediate is
+64*128*8 f32 = 256 KB — comfortably inside one core's ~16 MB VMEM, with the
+output tile (Jt, Nt) laid out (8-sublane, 128-lane) friendly.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls, and lowering under interpret produces plain HLO that the Rust
+runtime executes directly.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _match_tile(lo_ref, hi_ref, props_ref, out_ref):
+    """One (Jt, Nt) tile: reduce-AND of interval tests over the P axis."""
+    lo = lo_ref[...]          # [Jt, P]
+    hi = hi_ref[...]          # [Jt, P]
+    props = props_ref[...]    # [Nt, P]
+    ok = (props[None, :, :] >= lo[:, None, :]) & (
+        props[None, :, :] <= hi[:, None, :]
+    )  # [Jt, Nt, P]
+    out_ref[...] = jnp.all(ok, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_j", "block_n"))
+def match_pallas(job_lo, job_hi, node_props, *, block_j=64, block_n=128):
+    """Eligibility matrix f32[J, N]; J % block_j == 0 and N % block_n == 0
+    are not required — pl handles ragged edges via masking in interpret mode
+    only when shapes divide, so we require divisibility and let callers pad."""
+    J, P = job_lo.shape
+    N, _ = node_props.shape
+    bj = min(block_j, J)
+    bn = min(block_n, N)
+    assert J % bj == 0 and N % bn == 0, "pad J and N to block multiples"
+    grid = (J // bj, N // bn)
+    return pl.pallas_call(
+        _match_tile,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bj, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, P), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((J, N), jnp.float32),
+        interpret=True,
+    )(job_lo, job_hi, node_props)

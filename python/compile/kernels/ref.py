@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+These functions define the *semantics* of the scheduling compute hot-spot;
+the Pallas kernels in ``match.py`` / ``scan.py`` must agree bit-for-bit (up
+to float tolerance) with them.  They are also what the Rust fallback in
+``rust/src/matching/reference.rs`` mirrors.
+
+Semantics
+---------
+``match_ref(job_lo, job_hi, node_props) -> elig``
+    ``elig[j, n] = 1.0`` iff for every property ``p``:
+    ``job_lo[j, p] <= node_props[n, p] <= job_hi[j, p]``.
+    This is OAR's SQL ``properties`` WHERE-clause matching, vectorized: every
+    property constraint is normalized to an interval (equality ``= v`` becomes
+    ``[v, v]``, ``>= v`` becomes ``[v, +inf]``, an absent constraint becomes
+    ``[-inf, +inf]``).
+
+``scan_ref(freecount, req, dur) -> earliest``
+    ``earliest[j]`` = smallest slot ``s`` such that ``s + dur[j] <= T`` and
+    ``freecount[j, t] >= req[j]`` for every ``t`` in ``[s, s + dur[j])``;
+    ``-1.0`` when no such window exists in the horizon.  This is the Gantt
+    hole-finding walk of OAR's meta-scheduler, batched over jobs.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def match_ref(job_lo, job_hi, node_props):
+    """Eligibility matrix: jobs x nodes interval containment over properties.
+
+    job_lo, job_hi: f32[J, P]; node_props: f32[N, P] -> f32[J, N] in {0, 1}.
+    """
+    props = node_props[None, :, :]  # [1, N, P]
+    ok = (props >= job_lo[:, None, :]) & (props <= job_hi[:, None, :])
+    return jnp.all(ok, axis=-1).astype(jnp.float32)
+
+
+def scan_ref(freecount, req, dur):
+    """Earliest feasible start slot per job, -1 if none fits the horizon.
+
+    freecount: f32[J, T]; req: f32[J]; dur: f32[J] (slots, >= 1) -> f32[J].
+    """
+    J, T = freecount.shape
+    ok = freecount >= req[:, None]  # [J, T]
+
+    # run[j, t] = length of the consecutive-ok run ending at t (inclusive).
+    def step(run_prev, ok_t):
+        run = jnp.where(ok_t, run_prev + 1.0, 0.0)
+        return run, run
+
+    _, runs = jax.lax.scan(step, jnp.zeros((J,), jnp.float32), ok.T)
+    runs = runs.T  # [J, T]
+    feasible = runs >= dur[:, None]  # window ending at t of length dur is ok
+    start = jnp.arange(T, dtype=jnp.float32)[None, :] - dur[:, None] + 1.0
+    cand = jnp.where(feasible, start, jnp.inf)
+    earliest = jnp.min(cand, axis=1)
+    return jnp.where(jnp.isinf(earliest), -1.0, earliest)
+
+
+def schedule_step_ref(job_lo, job_hi, node_props, node_free, req, dur,
+                      job_feats, weights):
+    """Full L2 reference: (elig, freecount, earliest, scores)."""
+    elig = match_ref(job_lo, job_hi, node_props)
+    freecount = elig @ node_free  # [J, N] @ [N, T] -> [J, T]
+    earliest = scan_ref(freecount, req, dur)
+    scores = job_feats @ weights  # [J, F] @ [F] -> [J]
+    return elig, freecount, earliest, scores

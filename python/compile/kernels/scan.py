@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: Gantt feasibility scan (earliest-hole finding).
+
+OAR's meta-scheduler walks its Gantt structure per job to find the first
+hole wide enough (duration) and tall enough (resource count).  Batched, that
+walk is a consecutive-run scan over a (jobs x time-slots) free-resource-count
+matrix: run[j,t] = length of the streak of slots ending at t with
+freecount >= req; the earliest start is the first t where the streak reaches
+the job's duration.
+
+The kernel tiles over jobs only — each program holds a full (Jt, T) timeline
+slab in VMEM (64 x 96 f32 = 24 KB) and performs the T-step sequential scan
+with a fori_loop; the scan is inherently sequential in t but fully vector
+(8x128-lane) across jobs, which is the layout the VPU wants.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_tile(fc_ref, req_ref, dur_ref, out_ref):
+    fc = fc_ref[...]            # [Jt, T]
+    req = req_ref[...]          # [Jt, 1]
+    dur = dur_ref[...]          # [Jt, 1]
+    Jt, T = fc.shape
+    ok = fc >= req              # [Jt, T]
+
+    def body(t, carry):
+        run, earliest = carry
+        ok_t = ok[:, t]
+        run = jnp.where(ok_t, run + 1.0, 0.0)
+        start = jnp.float32(t) - dur[:, 0] + 1.0
+        hit = (run >= dur[:, 0]) & (earliest < 0.0)
+        earliest = jnp.where(hit, start, earliest)
+        return run, earliest
+
+    run0 = jnp.zeros((Jt,), jnp.float32)
+    e0 = jnp.full((Jt,), -1.0, jnp.float32)
+    _, earliest = jax.lax.fori_loop(0, T, body, (run0, e0))
+    out_ref[...] = earliest[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_j",))
+def scan_pallas(freecount, req, dur, *, block_j=64):
+    """Earliest feasible start slot f32[J] (-1 when nothing fits)."""
+    J, T = freecount.shape
+    bj = min(block_j, J)
+    assert J % bj == 0, "pad J to a block multiple"
+    out = pl.pallas_call(
+        _scan_tile,
+        grid=(J // bj,),
+        in_specs=[
+            pl.BlockSpec((bj, T), lambda i: (i, 0)),
+            pl.BlockSpec((bj, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bj, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((J, 1), jnp.float32),
+        interpret=True,
+    )(freecount, req[:, None], dur[:, None])
+    return out[:, 0]

@@ -1,0 +1,67 @@
+"""L2: the JAX compute graph for one scheduling round (``schedule_step``).
+
+This is the analogue, for a batch-scheduler paper, of a model forward pass:
+the meta-scheduler's per-round dense computation.  It composes the two L1
+Pallas kernels with a single MXU-friendly matmul:
+
+    elig      = match_pallas(job_lo, job_hi, node_props)     # L1, [J, N]
+    freecount = elig @ node_free                              # XLA dot, [J, T]
+    earliest  = scan_pallas(freecount, req, dur)              # L1, [J]
+    scores    = job_feats @ weights                           # XLA dot, [J]
+
+The Rust coordinator (L3) pads the live jobs/nodes into the fixed compile
+shapes below, executes the AOT artifact through PJRT, and reads back the
+four outputs.  Python never runs at request time.
+
+Fixed compile shapes (see ``aot.py`` manifest):
+    J = 64  jobs per round (the meta-scheduler chunks larger queues)
+    N = 128 nodes   (covers both paper platforms: 17-node Xeon, 119-node
+                     Icluster)
+    P = 8   matchable properties per node
+    T = 96  Gantt horizon slots
+    F = 6   priority features per job
+"""
+import jax
+import jax.numpy as jnp
+
+from .kernels import match_pallas, scan_pallas
+
+# Canonical AOT shapes — keep in sync with rust/src/matching/shapes.rs.
+J, N, P, T, F = 64, 128, 8, 96, 6
+
+
+def schedule_step(job_lo, job_hi, node_props, node_free, req, dur,
+                  job_feats, weights):
+    """One scheduling round's dense compute.
+
+    Args:
+      job_lo, job_hi: f32[J, P] per-property interval constraints.
+      node_props:     f32[N, P] node property values.
+      node_free:      f32[N, T] free-resource count of node n at slot t.
+      req:            f32[J]    resources required by each job.
+      dur:            f32[J]    duration of each job in slots (>= 1).
+      job_feats:      f32[J, F] priority features (wait time, queue prio...).
+      weights:        f32[F]    priority weight vector.
+
+    Returns (elig[J,N], freecount[J,T], earliest[J], scores[J]).
+    """
+    elig = match_pallas(job_lo, job_hi, node_props)
+    freecount = jnp.dot(elig, node_free, preferred_element_type=jnp.float32)
+    earliest = scan_pallas(freecount, req, dur)
+    scores = jnp.dot(job_feats, weights, preferred_element_type=jnp.float32)
+    return elig, freecount, earliest, scores
+
+
+def example_args(j=J, n=N, p=P, t=T, f=F):
+    """ShapeDtypeStructs used both by aot.py lowering and the tests."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((j, p), jnp.float32),  # job_lo
+        s((j, p), jnp.float32),  # job_hi
+        s((n, p), jnp.float32),  # node_props
+        s((n, t), jnp.float32),  # node_free
+        s((j,), jnp.float32),    # req
+        s((j,), jnp.float32),    # dur
+        s((j, f), jnp.float32),  # job_feats
+        s((f,), jnp.float32),    # weights
+    )

@@ -1,0 +1,85 @@
+"""AOT pipeline tests: lowering, HLO-text interchange invariants, and the
+manifest contract with the Rust runtime (rust/src/matching/shapes.rs)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from compile import model
+from compile.aot import to_hlo_text
+
+
+def lowered():
+    return jax.jit(model.schedule_step).lower(*model.example_args())
+
+
+class TestLowering:
+    def test_entry_layout_matches_shapes(self):
+        text = to_hlo_text(lowered())
+        # The Rust runtime feeds literals in this exact order and shape.
+        header = text.splitlines()[0]
+        assert f"f32[{model.J},{model.P}]" in header  # job_lo / job_hi
+        assert f"f32[{model.N},{model.P}]" in header  # node_props
+        assert f"f32[{model.N},{model.T}]" in header  # node_free
+        assert f"f32[{model.J},{model.N}]" in header  # elig output
+        assert f"f32[{model.J},{model.T}]" in header  # freecount output
+
+    def test_tuple_rooted_output(self):
+        # return_tuple=True: the Rust side unwraps with to_tuple().
+        text = to_hlo_text(lowered())
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert any("tuple(" in l for l in root_lines), root_lines
+
+    def test_no_mosaic_custom_calls(self):
+        # interpret=True must keep the module executable on CPU PJRT.
+        text = to_hlo_text(lowered())
+        assert "mosaic" not in text.lower()
+
+    def test_contains_dot_for_mxu_path(self):
+        # the freecount matmul must lower to a dot, not an unrolled loop
+        text = to_hlo_text(lowered())
+        assert " dot(" in text or " dot." in text
+
+    def test_deterministic_lowering(self):
+        assert to_hlo_text(lowered()) == to_hlo_text(lowered())
+
+
+class TestAotCli:
+    def test_writes_artifact_and_manifest(self, tmp_path):
+        out = tmp_path / "schedule_step.hlo.txt"
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        assert out.exists()
+        text = out.read_text()
+        assert text.startswith("HloModule")
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["J"] == model.J
+        assert manifest["N"] == model.N
+        assert manifest["P"] == model.P
+        assert manifest["T"] == model.T
+        assert manifest["F"] == model.F
+        assert [i["name"] for i in manifest["inputs"]] == [
+            "job_lo", "job_hi", "node_props", "node_free",
+            "req", "dur", "job_feats", "weights",
+        ]
+        assert manifest["outputs"] == ["elig", "freecount", "earliest", "scores"]
+
+    def test_checked_in_artifact_is_current(self):
+        """If artifacts/ exists, it must match a fresh lowering (stale
+        artifacts would silently desynchronize Rust and Python)."""
+        repo = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+        path = os.path.join(repo, "artifacts", "schedule_step.hlo.txt")
+        if not os.path.exists(path):
+            return  # not built yet; make artifacts handles it
+        with open(path) as f:
+            on_disk = f.read()
+        assert on_disk == to_hlo_text(lowered())

@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute path — hypothesis sweeps
+shapes and values; fixed seeds keep runs reproducible.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import match_pallas, scan_pallas
+from compile.kernels.ref import match_ref, scan_ref
+
+
+def rand_match_inputs(rng, j, n, p):
+    lo = rng.uniform(-2.0, 1.0, size=(j, p)).astype(np.float32)
+    hi = lo + rng.uniform(0.0, 2.5, size=(j, p)).astype(np.float32)
+    props = rng.uniform(-2.0, 2.0, size=(n, p)).astype(np.float32)
+    return lo, hi, props
+
+
+# ---------------------------------------------------------------- match ----
+
+class TestMatch:
+    def test_basic_agreement(self):
+        rng = np.random.default_rng(0)
+        lo, hi, props = rand_match_inputs(rng, 64, 128, 8)
+        got = np.asarray(match_pallas(lo, hi, props))
+        want = np.asarray(match_ref(lo, hi, props))
+        np.testing.assert_array_equal(got, want)
+
+    def test_all_eligible(self):
+        j, n, p = 8, 16, 4
+        lo = np.full((j, p), -1e30, np.float32)
+        hi = np.full((j, p), 1e30, np.float32)
+        props = np.zeros((n, p), np.float32)
+        got = np.asarray(match_pallas(lo, hi, props, block_j=8, block_n=16))
+        assert got.sum() == j * n
+
+    def test_none_eligible(self):
+        j, n, p = 8, 16, 4
+        lo = np.full((j, p), 2.0, np.float32)
+        hi = np.full((j, p), 3.0, np.float32)
+        props = np.zeros((n, p), np.float32)
+        got = np.asarray(match_pallas(lo, hi, props, block_j=8, block_n=16))
+        assert got.sum() == 0
+
+    def test_equality_constraint_is_closed_interval(self):
+        # '= v' is encoded as [v, v]; boundary must match.
+        lo = np.array([[1.5]], np.float32)
+        hi = np.array([[1.5]], np.float32)
+        props = np.array([[1.5], [1.4999]], np.float32)
+        got = np.asarray(match_pallas(lo, hi, props, block_j=1, block_n=2))
+        np.testing.assert_array_equal(got, [[1.0, 0.0]])
+
+    def test_single_property_violation_disqualifies(self):
+        p = 6
+        lo = np.full((1, p), -1.0, np.float32)
+        hi = np.full((1, p), 1.0, np.float32)
+        props = np.zeros((1, p), np.float32)
+        props[0, 3] = 5.0  # one property out of range
+        got = np.asarray(match_pallas(lo, hi, props, block_j=1, block_n=1))
+        assert got[0, 0] == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        j=st.sampled_from([1, 2, 4, 8, 16, 64]),
+        n=st.sampled_from([1, 4, 16, 128]),
+        p=st.sampled_from([1, 2, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, j, n, p, seed):
+        rng = np.random.default_rng(seed)
+        lo, hi, props = rand_match_inputs(rng, j, n, p)
+        got = np.asarray(match_pallas(lo, hi, props, block_j=j, block_n=n))
+        want = np.asarray(match_ref(lo, hi, props))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bj=st.sampled_from([8, 16, 32, 64]), bn=st.sampled_from([16, 32, 64, 128]))
+    def test_block_shape_invariance(self, bj, bn):
+        # Result must not depend on the tiling.
+        rng = np.random.default_rng(7)
+        lo, hi, props = rand_match_inputs(rng, 64, 128, 8)
+        got = np.asarray(match_pallas(lo, hi, props, block_j=bj, block_n=bn))
+        want = np.asarray(match_ref(lo, hi, props))
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------------- scan ----
+
+def rand_scan_inputs(rng, j, t, max_req=8.0):
+    fc = rng.integers(0, 9, size=(j, t)).astype(np.float32)
+    req = rng.integers(0, int(max_req) + 1, size=(j,)).astype(np.float32)
+    dur = rng.integers(1, t + 1, size=(j,)).astype(np.float32)
+    return fc, req, dur
+
+
+def scan_oracle_py(fc, req, dur):
+    """Plain-python oracle, independent of jax, for double-checking ref.py."""
+    j, t = fc.shape
+    out = np.full((j,), -1.0, np.float32)
+    for a in range(j):
+        d = int(dur[a])
+        for s in range(0, t - d + 1):
+            if np.all(fc[a, s:s + d] >= req[a]):
+                out[a] = float(s)
+                break
+    return out
+
+
+class TestScan:
+    def test_basic_agreement(self):
+        rng = np.random.default_rng(1)
+        fc, req, dur = rand_scan_inputs(rng, 64, 96)
+        got = np.asarray(scan_pallas(fc, req, dur))
+        want = np.asarray(scan_ref(fc, req, dur))
+        np.testing.assert_array_equal(got, want)
+
+    def test_ref_matches_python_oracle(self):
+        rng = np.random.default_rng(2)
+        fc, req, dur = rand_scan_inputs(rng, 32, 40)
+        want = scan_oracle_py(fc, req, dur)
+        got = np.asarray(scan_ref(fc, req, dur))
+        np.testing.assert_array_equal(got, want)
+
+    def test_immediate_fit(self):
+        fc = np.full((4, 8), 10.0, np.float32)
+        req = np.full((4,), 3.0, np.float32)
+        dur = np.array([1.0, 2.0, 4.0, 8.0], np.float32)
+        got = np.asarray(scan_pallas(fc, req, dur, block_j=4))
+        np.testing.assert_array_equal(got, np.zeros(4, np.float32))
+
+    def test_no_fit_returns_minus_one(self):
+        fc = np.zeros((2, 8), np.float32)
+        req = np.array([1.0, 5.0], np.float32)
+        dur = np.array([1.0, 2.0], np.float32)
+        got = np.asarray(scan_pallas(fc, req, dur, block_j=2))
+        np.testing.assert_array_equal(got, [-1.0, -1.0])
+
+    def test_hole_in_middle(self):
+        # free only during slots [3, 6); job needs 3 consecutive slots.
+        fc = np.zeros((1, 10), np.float32)
+        fc[0, 3:6] = 4.0
+        got = np.asarray(scan_pallas(fc, np.array([2.0], np.float32),
+                                     np.array([3.0], np.float32), block_j=1))
+        np.testing.assert_array_equal(got, [3.0])
+
+    def test_duration_longer_than_hole(self):
+        fc = np.zeros((1, 10), np.float32)
+        fc[0, 3:6] = 4.0
+        got = np.asarray(scan_pallas(fc, np.array([2.0], np.float32),
+                                     np.array([4.0], np.float32), block_j=1))
+        np.testing.assert_array_equal(got, [-1.0])
+
+    def test_window_must_fit_horizon(self):
+        # streak at the very end shorter than dur must not match
+        fc = np.zeros((1, 6), np.float32)
+        fc[0, 4:] = 9.0
+        got = np.asarray(scan_pallas(fc, np.array([1.0], np.float32),
+                                     np.array([3.0], np.float32), block_j=1))
+        np.testing.assert_array_equal(got, [-1.0])
+
+    def test_zero_req_always_fits(self):
+        fc = np.zeros((1, 5), np.float32)
+        got = np.asarray(scan_pallas(fc, np.array([0.0], np.float32),
+                                     np.array([5.0], np.float32), block_j=1))
+        np.testing.assert_array_equal(got, [0.0])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        j=st.sampled_from([1, 2, 8, 64]),
+        t=st.sampled_from([1, 4, 24, 96]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, j, t, seed):
+        rng = np.random.default_rng(seed)
+        fc, req, dur = rand_scan_inputs(rng, j, t)
+        got = np.asarray(scan_pallas(fc, req, dur, block_j=j))
+        want = scan_oracle_py(fc, req, dur)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bj=st.sampled_from([8, 16, 32, 64]))
+    def test_block_shape_invariance(self, bj):
+        rng = np.random.default_rng(11)
+        fc, req, dur = rand_scan_inputs(rng, 64, 96)
+        got = np.asarray(scan_pallas(fc, req, dur, block_j=bj))
+        want = np.asarray(scan_ref(fc, req, dur))
+        np.testing.assert_array_equal(got, want)

@@ -1,0 +1,61 @@
+//! Ablation A3 (DESIGN.md §6): the central module's notification path —
+//! coalescing hub throughput, and end-to-end scheduling-round latency of
+//! the meta-scheduler over a loaded database (the paper's reactivity
+//! argument, §2.2).
+
+mod common;
+
+use common::bench;
+use oar::central::{NotificationHub, Task};
+use oar::db::Db;
+use oar::matching::ReferenceStep;
+use oar::sched::{MetaScheduler, SchedulerConfig};
+use oar::types::{Job, JobSpec, Node};
+
+fn main() {
+    println!("== central: notification hub ==");
+    let hub = NotificationHub::new();
+    bench("notify_coalesced/1000", 10, 100, || {
+        for _ in 0..1000 {
+            hub.notify(Task::Schedule);
+        }
+        hub.poll()
+    });
+
+    println!("\n== meta-scheduler round latency (dense vs sql matching) ==");
+    for waiting in [16usize, 64, 256] {
+        for dense in [false, true] {
+            let mut db = Db::with_standard_queues();
+            for i in 1..=34u32 {
+                db.add_node(
+                    Node::new(i, &format!("n{i}"), 1)
+                        .with_prop("mem", oar::db::Value::Int(512))
+                        .with_prop("cpu_mhz", oar::db::Value::Int(2400)),
+                );
+            }
+            for i in 0..waiting {
+                let spec = JobSpec::batch(
+                    &format!("u{}", i % 8),
+                    "date",
+                    1 + (i % 4) as u32,
+                    600,
+                );
+                db.insert_job(Job::from_spec(&spec, i as i64));
+            }
+            let mut meta = MetaScheduler::new(
+                SchedulerConfig {
+                    dense_matching: dense,
+                    ..Default::default()
+                },
+                Box::new(ReferenceStep),
+            );
+            let label = if dense { "dense" } else { "sql" };
+            bench(
+                &format!("meta_round/{waiting}_waiting_{label}"),
+                2,
+                20,
+                || meta.round(&mut db, 0).unwrap().starts.len(),
+            );
+        }
+    }
+}

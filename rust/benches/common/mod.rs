@@ -1,0 +1,68 @@
+//! Tiny self-contained bench harness (criterion is unavailable offline):
+//! warmup + timed iterations + summary stats, printed in a stable format
+//! and appended to `results/bench.csv`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters.max(1);
+    let pct = |q: f64| samples[(((samples.len() - 1) as f64) * q).round() as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: pct(0.5),
+        p95: pct(0.95),
+        min: samples[0],
+    };
+    println!(
+        "{:<48} iters={:<5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+        r.name, r.iters, r.mean, r.p50, r.p95, r.min
+    );
+    append_csv(&r);
+    r
+}
+
+fn append_csv(r: &BenchResult) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results/bench.csv");
+    let _ = std::fs::create_dir_all(path.parent().unwrap());
+    let header_needed = !path.exists();
+    let mut line = String::new();
+    if header_needed {
+        line.push_str("name,iters,mean_ns,p50_ns,p95_ns,min_ns\n");
+    }
+    line.push_str(&format!(
+        "{},{},{},{},{},{}\n",
+        r.name,
+        r.iters,
+        r.mean.as_nanos(),
+        r.p50.as_nanos(),
+        r.p95.as_nanos(),
+        r.min.as_nanos()
+    ));
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}

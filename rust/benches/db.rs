@@ -1,0 +1,74 @@
+//! Ablation A5 (DESIGN.md §6): the cost of the paper's core design choice
+//! — all module communication through the database. Measures the
+//! SQL-equivalent operations on the jobs path at realistic table sizes,
+//! plus WHERE-expression evaluation throughput.
+
+mod common;
+
+use common::bench;
+use oar::db::{Db, Expr};
+use oar::types::{Job, JobSpec, JobState, Node};
+
+fn filled_db(jobs: usize) -> Db {
+    let mut db = Db::with_standard_queues();
+    for i in 1..=64u32 {
+        db.add_node(
+            Node::new(i, &format!("n{i}"), 2)
+                .with_prop("mem", oar::db::Value::Int(256 * (1 + i as i64 % 4))),
+        );
+    }
+    for i in 0..jobs {
+        let spec = JobSpec::batch(&format!("u{}", i % 10), "date", 1 + (i % 4) as u32, 600);
+        db.insert_job(Job::from_spec(&spec, i as i64));
+    }
+    db
+}
+
+fn main() {
+    println!("== db: table ops at realistic sizes ==");
+    for size in [100usize, 1000, 10_000] {
+        let mut db = filled_db(size);
+
+        bench(&format!("insert_job/{size}_existing"), 10, 100, || {
+            db.insert_job(Job::from_spec(&JobSpec::default(), 0))
+        });
+
+        bench(&format!("jobs_in_state_waiting/{size}"), 3, 50, || {
+            db.jobs_in_state(JobState::Waiting).len()
+        });
+
+        bench(&format!("set_job_state/{size}"), 0, 100, || {
+            // walk a fresh job through its lifecycle each iteration
+            let id = db.insert_job(Job::from_spec(&JobSpec::default(), 0));
+            db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+            db.set_job_state(id, JobState::Launching, 2).unwrap();
+            db.set_job_state(id, JobState::Running, 3).unwrap();
+            db.set_job_state(id, JobState::Terminated, 4).unwrap();
+        });
+
+        bench(&format!("matching_nodes_expr/{size}"), 3, 50, || {
+            db.matching_nodes("mem >= 512").unwrap().len()
+        });
+    }
+
+    println!("\n== expression engine ==");
+    let expr = Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND switch = 'sw1'").unwrap();
+    let row = {
+        let n = Node::new(1, "n1", 2)
+            .with_prop("mem", oar::db::Value::Int(1024))
+            .with_prop("cpu_mhz", oar::db::Value::Int(2400))
+            .with_prop("switch", oar::db::Value::Text("sw1".into()));
+        n.property_row()
+    };
+    bench("expr_parse/3_clauses", 100, 1000, || {
+        Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND switch = 'sw1'").unwrap()
+    });
+    bench("expr_eval/3_clauses", 100, 1000, || expr.matches(&row));
+
+    println!("\n== snapshot/restore (data-safety path) ==");
+    let db = filled_db(1000);
+    let path = std::env::temp_dir().join("oar_bench_snapshot.json");
+    bench("snapshot/1000_jobs", 1, 20, || db.snapshot(&path).unwrap());
+    bench("restore/1000_jobs", 1, 20, || Db::restore(&path).unwrap());
+    let _ = std::fs::remove_file(path);
+}

@@ -1,0 +1,56 @@
+//! End-to-end ESP2 bench (Table 3 / figs 4–8 generator, E3): full 230-job
+//! simulated run per scheduler, on the Xeon shape (34 procs). Also sweeps
+//! submission-order seeds to show the Table 3 ordering is not a
+//! one-seed artifact.
+
+mod common;
+
+use common::bench;
+use oar::bench::esp::{esp_workload_seeded, table3_schedulers, XEON_PROCS};
+use oar::sim::{simulate, SimConfig};
+use oar::types::NodeId;
+
+fn main() {
+    println!("== esp: full 230-job simulated runs (34 procs) ==");
+    let nodes: Vec<(NodeId, u32)> = (1..=XEON_PROCS).map(|i| (i, 1)).collect();
+
+    for (name, policy) in table3_schedulers() {
+        let jobs = esp_workload_seeded(XEON_PROCS, 2005);
+        bench(&format!("esp_full_run/{name}"), 1, 10, || {
+            simulate(policy.as_ref(), &nodes, &jobs, SimConfig::default()).elapsed()
+        });
+    }
+
+    println!("\n== seed sweep: efficiency ordering across submission orders ==");
+    let mut oar_beats_sge = 0;
+    let mut sjf_recovers = 0;
+    const SEEDS: u64 = 10;
+    for seed in 0..SEEDS {
+        let jobs = esp_workload_seeded(XEON_PROCS, 3000 + seed);
+        let effs: Vec<(String, f64)> = table3_schedulers()
+            .into_iter()
+            .map(|(name, policy)| {
+                let r = simulate(policy.as_ref(), &nodes, &jobs, SimConfig::default());
+                (name.to_string(), r.efficiency())
+            })
+            .collect();
+        let get = |n: &str| effs.iter().find(|(name, _)| name == n).unwrap().1;
+        if get("OAR") < get("SGE") {
+            oar_beats_sge += 1;
+        }
+        if get("OAR(2)") >= get("OAR") {
+            sjf_recovers += 1;
+        }
+        println!(
+            "seed {seed}: SGE={:.4} TORQUE={:.4} MAUI={:.4} OAR={:.4} OAR(2)={:.4}",
+            get("SGE"),
+            get("TORQUE"),
+            get("TORQUE+MAUI"),
+            get("OAR"),
+            get("OAR(2)")
+        );
+    }
+    println!(
+        "\nOAR < SGE on {oar_beats_sge}/{SEEDS} seeds; OAR(2) >= OAR on {sjf_recovers}/{SEEDS} seeds"
+    );
+}

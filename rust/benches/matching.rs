@@ -1,0 +1,67 @@
+//! Ablation A1 (DESIGN.md §6): resource matching — SQL row-at-a-time vs
+//! dense Rust reference vs AOT HLO kernel through PJRT, at the scheduling
+//! round's batch shapes. This is the L1/L3 hot-path microbenchmark.
+
+mod common;
+
+use common::bench;
+use oar::cluster::VirtualCluster;
+use oar::matching::encode::{Encoder, JobToMatch};
+use oar::matching::{ReferenceStep, ScheduleStep, SqlMatcher};
+use oar::runtime::HloStep;
+
+fn jobs(n: usize) -> Vec<JobToMatch> {
+    (0..n)
+        .map(|i| JobToMatch {
+            id: i as u64 + 1,
+            properties: match i % 4 {
+                0 => String::new(),
+                1 => "mem >= 256".into(),
+                2 => "mem >= 256 AND cpu_mhz >= 733".into(),
+                _ => "switch = 'sw2'".into(),
+            },
+            total_procs: 1 + (i % 4) as u32,
+            duration: 600,
+            wait_time: i as i64,
+            queue_priority: 10,
+            best_effort: false,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== matching: SQL vs dense-reference vs HLO/PJRT ==");
+    let cluster = VirtualCluster::icluster();
+    let nodes = cluster.nodes().to_vec();
+    let encoder = Encoder::from_nodes(&nodes);
+    let free = vec![vec![1.0f32; oar::matching::T]; nodes.len()];
+
+    for batch in [8usize, 32, 64] {
+        let js = jobs(batch);
+
+        bench(&format!("sql_match/{batch}jobs_119nodes"), 3, 30, || {
+            js.iter()
+                .map(|j| SqlMatcher::eligible_nodes(&j.properties, &nodes).unwrap().len())
+                .sum::<usize>()
+        });
+
+        bench(&format!("encode/{batch}jobs_119nodes"), 3, 30, || {
+            encoder.encode(&js, &nodes, &free, 300, [0.0; oar::matching::F])
+        });
+
+        let batch_enc = encoder.encode(&js, &nodes, &free, 300, [0.0; oar::matching::F]);
+        let mut reference = ReferenceStep;
+        bench(&format!("dense_reference/{batch}jobs_119nodes"), 3, 30, || {
+            reference.run(&batch_enc.input).unwrap()
+        });
+
+        match HloStep::load_default() {
+            Ok(mut hlo) => {
+                bench(&format!("hlo_pjrt/{batch}jobs_119nodes"), 3, 30, || {
+                    hlo.run(&batch_enc.input).unwrap()
+                });
+            }
+            Err(_) => println!("hlo_pjrt/{batch}: SKIPPED (run `make artifacts`)"),
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Admission rules (§2.1): "a connection to the database to get the
+//! appropriate admission rules. These rules are used to set the value of
+//! parameters that are not provided by the user and to check the validity
+//! of the submission. ... The rules are stored as Perl code in the
+//! database".
+//!
+//! The paper stores executable rule code in a table; we store a small rule
+//! DSL (conditions are the same SQL expressions the rest of the system
+//! uses) in the `admission_rules` table and interpret it here:
+//!
+//! ```text
+//! DEFAULT <field> = <literal>              # set when absent
+//! IF <where-expr> THEN SET <field> = <literal>
+//! IF <where-expr> THEN REJECT '<message>'
+//! ```
+//!
+//! Conditions see the submission as a row: `user`, `command`, `nbNodes`,
+//! `weight`, `maxTime` (NULL when unset), `queue` (NULL when unset),
+//! `bestEffort`, `interactive`, `reservation` (requested start or NULL).
+//! After the stored rules run, two built-in checks apply, mirroring the
+//! paper's defaults: the target queue must exist and be active, and the
+//! job must not exceed the queue's `max_procs_per_job` ("no user ask for
+//! too much resources at once").
+
+use crate::db::{Db, Expr, Row, Value};
+use crate::types::{JobKind, JobSpec};
+use crate::Result;
+
+/// A parsed admission rule.
+#[derive(Debug, Clone)]
+pub enum Rule {
+    Default { field: String, value: Value },
+    Set { cond: Expr, field: String, value: Value },
+    Reject { cond: Expr, message: String },
+}
+
+impl Rule {
+    /// Parse one rule line (comments start with `#`).
+    pub fn parse(line: &str) -> Result<Option<Rule>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        if let Some(rest) = strip_kw(line, "DEFAULT") {
+            let (field, value) = parse_assignment(rest)?;
+            return Ok(Some(Rule::Default { field, value }));
+        }
+        if let Some(rest) = strip_kw(line, "IF") {
+            let Some(idx) = find_kw(rest, "THEN") else {
+                anyhow::bail!("IF rule missing THEN: {line:?}");
+            };
+            let cond = Expr::parse(&rest[..idx])
+                .map_err(|e| anyhow::anyhow!("bad condition in {line:?}: {e}"))?;
+            let action = rest[idx + 4..].trim();
+            if let Some(rest) = strip_kw(action, "SET") {
+                let (field, value) = parse_assignment(rest)?;
+                return Ok(Some(Rule::Set { cond, field, value }));
+            }
+            if let Some(rest) = strip_kw(action, "REJECT") {
+                let message = rest.trim().trim_matches('\'').to_string();
+                return Ok(Some(Rule::Reject { cond, message }));
+            }
+            anyhow::bail!("unknown action in {line:?}");
+        }
+        anyhow::bail!("unknown rule syntax: {line:?}");
+    }
+}
+
+fn strip_kw<'a>(s: &'a str, kw: &str) -> Option<&'a str> {
+    let s = s.trim_start();
+    if s.len() >= kw.len() && s[..kw.len()].eq_ignore_ascii_case(kw) {
+        Some(&s[kw.len()..])
+    } else {
+        None
+    }
+}
+
+fn find_kw(s: &str, kw: &str) -> Option<usize> {
+    let upper = s.to_ascii_uppercase();
+    let pat = format!(" {kw} ");
+    upper.find(&pat).map(|i| i + 1)
+}
+
+fn parse_assignment(s: &str) -> Result<(String, Value)> {
+    let mut parts = s.splitn(2, '=');
+    let field = parts
+        .next()
+        .map(str::trim)
+        .filter(|f| !f.is_empty())
+        .ok_or_else(|| anyhow::anyhow!("assignment missing field"))?;
+    let raw = parts
+        .next()
+        .map(str::trim)
+        .ok_or_else(|| anyhow::anyhow!("assignment missing value"))?;
+    let value = match Expr::parse(raw).map_err(|e| anyhow::anyhow!("bad literal {raw:?}: {e}"))? {
+        Expr::Literal(v) => v,
+        _ => anyhow::bail!("assignment value must be a literal: {raw:?}"),
+    };
+    Ok((field.to_string(), value))
+}
+
+/// The default rule set installed into a fresh database — the behaviour
+/// §2.1 describes.
+pub const DEFAULT_RULES: &[(i32, &str)] = &[
+    (10, "IF bestEffort = TRUE THEN SET queue = 'besteffort'"),
+    (20, "DEFAULT queue = 'default'"),
+    (30, "IF nbNodes <= 0 THEN REJECT 'nbNodes must be positive'"),
+    (31, "IF weight <= 0 THEN REJECT 'weight must be positive'"),
+    (40, "IF maxTime <= 0 THEN REJECT 'maxTime must be positive'"),
+];
+
+/// Install [`DEFAULT_RULES`] into a database.
+pub fn install_default_rules(db: &mut Db) {
+    for (prio, src) in DEFAULT_RULES {
+        db.add_admission_rule(*prio, src);
+    }
+}
+
+/// Outcome of the admission process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    /// Completed spec (all parameters filled), ready for insertion.
+    Accepted(JobSpec),
+    Rejected(String),
+}
+
+/// Run the admission process: stored rules (priority order), then the
+/// built-in queue checks. Reads the rules and queues from the database —
+/// exactly the two round-trips the paper's submission makes.
+pub fn admit(db: &mut Db, spec: &JobSpec) -> Result<Admission> {
+    let mut spec = spec.clone();
+    let rules = db.admission_rules();
+    for (_prio, source) in rules {
+        for line in source.lines() {
+            let Some(rule) = Rule::parse(line)? else {
+                continue;
+            };
+            let row = spec_row(&spec);
+            match rule {
+                Rule::Default { field, value } => {
+                    if row.get(&field).map(Value::is_null).unwrap_or(true) {
+                        apply_field(&mut spec, &field, &value)?;
+                    }
+                }
+                Rule::Set { cond, field, value } => {
+                    if cond.matches(&row) {
+                        apply_field(&mut spec, &field, &value)?;
+                    }
+                }
+                Rule::Reject { cond, message } => {
+                    if cond.matches(&row) {
+                        return Ok(Admission::Rejected(message));
+                    }
+                }
+            }
+        }
+    }
+
+    // Built-in: queue must exist and be active; fill queue defaults.
+    let qname = spec.queue.clone().unwrap_or_else(|| "default".into());
+    let queue = match db.queue(&qname) {
+        Ok(q) => q,
+        Err(_) => return Ok(Admission::Rejected(format!("no such queue: {qname}"))),
+    };
+    if !queue.active {
+        return Ok(Admission::Rejected(format!("queue {qname} is closed")));
+    }
+    spec.queue = Some(queue.name.clone());
+    if spec.max_time.is_none() {
+        spec.max_time = Some(queue.default_max_time);
+    }
+    if spec.total_procs() > queue.max_procs_per_job {
+        return Ok(Admission::Rejected(format!(
+            "requests {} procs > queue limit {}",
+            spec.total_procs(),
+            queue.max_procs_per_job
+        )));
+    }
+    Ok(Admission::Accepted(spec))
+}
+
+fn spec_row(spec: &JobSpec) -> Row {
+    let mut row = Row::new();
+    row.insert("user".into(), Value::Text(spec.user.clone()));
+    row.insert("command".into(), Value::Text(spec.command.clone()));
+    row.insert("nbNodes".into(), Value::Int(spec.nb_nodes as i64));
+    row.insert("weight".into(), Value::Int(spec.weight as i64));
+    row.insert(
+        "maxTime".into(),
+        spec.max_time.map(Value::Int).unwrap_or(Value::Null),
+    );
+    row.insert(
+        "queue".into(),
+        spec.queue.clone().map(Value::Text).unwrap_or(Value::Null),
+    );
+    row.insert("bestEffort".into(), Value::Bool(spec.best_effort));
+    row.insert(
+        "interactive".into(),
+        Value::Bool(spec.kind == JobKind::Interactive),
+    );
+    row.insert(
+        "reservation".into(),
+        spec.reservation_start.map(Value::Int).unwrap_or(Value::Null),
+    );
+    row
+}
+
+fn apply_field(spec: &mut JobSpec, field: &str, value: &Value) -> Result<()> {
+    match field {
+        "queue" => {
+            spec.queue = value.as_str().map(str::to_string);
+        }
+        "maxTime" => {
+            spec.max_time = value.as_i64();
+        }
+        "nbNodes" => {
+            spec.nb_nodes = value.as_i64().unwrap_or(1) as u32;
+        }
+        "weight" => {
+            spec.weight = value.as_i64().unwrap_or(1) as u32;
+        }
+        "bestEffort" => {
+            spec.best_effort = value.is_truthy();
+        }
+        other => anyhow::bail!("admission rule sets unknown field {other:?}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Queue;
+
+    fn db() -> Db {
+        let mut db = Db::with_standard_queues();
+        install_default_rules(&mut db);
+        db
+    }
+
+    #[test]
+    fn fills_missing_queue_and_max_time() {
+        let mut db = db();
+        let spec = JobSpec {
+            max_time: None,
+            queue: None,
+            ..JobSpec::default()
+        };
+        match admit(&mut db, &spec).unwrap() {
+            Admission::Accepted(s) => {
+                assert_eq!(s.queue.as_deref(), Some("default"));
+                assert_eq!(s.max_time, Some(3600), "queue default applied");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn routes_best_effort_to_besteffort_queue() {
+        let mut db = db();
+        let spec = JobSpec {
+            best_effort: true,
+            ..JobSpec::default()
+        };
+        match admit(&mut db, &spec).unwrap() {
+            Admission::Accepted(s) => assert_eq!(s.queue.as_deref(), Some("besteffort")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_over_limit_requests() {
+        let mut db = db();
+        db.add_queue(Queue {
+            max_procs_per_job: 8,
+            ..Queue::new("small", 5, crate::types::QueuePolicyKind::FifoConservative)
+        });
+        let spec = JobSpec {
+            nb_nodes: 16,
+            queue: Some("small".into()),
+            max_time: Some(60),
+            ..JobSpec::default()
+        };
+        assert!(matches!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected(m) if m.contains("queue limit")
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_queue_and_closed_queue() {
+        let mut db = db();
+        let spec = JobSpec {
+            queue: Some("nope".into()),
+            ..JobSpec::default()
+        };
+        assert!(matches!(admit(&mut db, &spec).unwrap(), Admission::Rejected(_)));
+        db.set_queue_active("default", false).unwrap();
+        let spec = JobSpec::default();
+        assert!(matches!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected(m) if m.contains("closed")
+        ));
+    }
+
+    #[test]
+    fn custom_rule_reject_by_user() {
+        let mut db = db();
+        db.add_admission_rule(5, "IF user = 'mallory' THEN REJECT 'banned'");
+        let spec = JobSpec {
+            user: "mallory".into(),
+            ..JobSpec::default()
+        };
+        assert_eq!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected("banned".into())
+        );
+    }
+
+    #[test]
+    fn custom_rule_caps_interactive_time() {
+        let mut db = db();
+        db.add_admission_rule(
+            50,
+            "IF interactive = TRUE AND maxTime > 7200 THEN SET maxTime = 7200",
+        );
+        let spec = JobSpec {
+            kind: JobKind::Interactive,
+            max_time: Some(100_000),
+            ..JobSpec::default()
+        };
+        match admit(&mut db, &spec).unwrap() {
+            Admission::Accepted(s) => assert_eq!(s.max_time, Some(7200)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rule_parse_errors_are_reported() {
+        assert!(Rule::parse("IF x THEN").is_err());
+        assert!(Rule::parse("FOO bar").is_err());
+        assert!(Rule::parse("# comment").unwrap().is_none());
+        assert!(Rule::parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn default_does_not_override_user_value() {
+        let mut db = db();
+        let spec = JobSpec {
+            queue: Some("besteffort".into()),
+            max_time: Some(42),
+            ..JobSpec::default()
+        };
+        match admit(&mut db, &spec).unwrap() {
+            Admission::Accepted(s) => {
+                assert_eq!(s.queue.as_deref(), Some("besteffort"));
+                assert_eq!(s.max_time, Some(42));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Submission-burst benchmarks (§3.2.2): figures 9 and 10.
+//!
+//! Fig. 9 — "average response time of small jobs depending on the total
+//! number of simultaneous submissions" on the Xeon platform (17 nodes):
+//! B identical 1-node `date` jobs are submitted at once through the full
+//! live stack (admission → database → central module → meta-scheduler →
+//! launcher → virtual nodes); the scheduler has no decisions to make, so
+//! the measurement isolates system overhead — exactly the paper's test.
+//!
+//! Fig. 10 — "average response time of parallel jobs depending on the
+//! number of nodes required" on the Icluster platform (119 nodes), for
+//! the four OAR launcher settings (rsh/ssh × check/no-check) and the
+//! Torque-like baseline.
+//!
+//! Both run against the real server with modeled launcher latencies; the
+//! `time_scale` knob compresses wall-clock without changing the measured
+//! *modeled* response times' structure.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::{Protocol, VirtualCluster};
+use crate::launcher::LauncherConfig;
+use crate::server::{Server, ServerConfig};
+use crate::types::JobSpec;
+use crate::util::Summary;
+use crate::Result;
+
+/// One fig. 9 measurement point.
+#[derive(Debug, Clone)]
+pub struct BurstPoint {
+    pub burst: usize,
+    /// Response-time summary over the burst's jobs, milliseconds.
+    pub response_ms: Summary,
+    /// Jobs that ended in error (must be 0 for a stable system).
+    pub errors: usize,
+    /// Wall time to drain the burst, ms.
+    pub drain_ms: u64,
+    /// SQL-equivalent queries issued while processing the burst.
+    pub queries: u64,
+}
+
+/// Fig. 9: submit `burst` 1-node `date` jobs at once; measure response
+/// times through the live stack.
+pub fn burst_response(
+    cluster: Arc<VirtualCluster>,
+    burst: usize,
+    config: ServerConfig,
+) -> Result<BurstPoint> {
+    let server = Server::new(cluster, config);
+    server.with_db(|db| db.reset_stats());
+    let t0 = std::time::Instant::now();
+    let mut ids = Vec::with_capacity(burst);
+    for i in 0..burst {
+        let id = server
+            .submit(&JobSpec::batch(&format!("u{}", i % 16), "date", 1, 300))
+            ?
+            .map_err(|e| anyhow::anyhow!("admission rejected: {e}"))?;
+        ids.push(id);
+    }
+    let ok = server.wait_all_terminal(Duration::from_secs(600));
+    anyhow::ensure!(ok, "burst {burst} did not drain");
+    let drain_ms = t0.elapsed().as_millis() as u64;
+
+    let mut responses = Vec::with_capacity(burst);
+    let mut errors = 0;
+    let queries = server.with_db(|db| db.stats().total());
+    for id in ids {
+        let job = server.with_db(|db| db.job(id))?;
+        match job.response_time() {
+            Some(r) if job.state == crate::types::JobState::Terminated => {
+                responses.push(r as f64)
+            }
+            _ => errors += 1,
+        }
+    }
+    Ok(BurstPoint {
+        burst,
+        response_ms: Summary::of(&responses),
+        errors,
+        drain_ms,
+        queries,
+    })
+}
+
+/// Fig. 9 sweep over burst sizes on the Xeon platform.
+pub fn fig9_sweep(bursts: &[usize], time_scale: f64) -> Result<Vec<BurstPoint>> {
+    bursts
+        .iter()
+        .map(|b| {
+            let cluster = Arc::new(VirtualCluster::xeon());
+            let mut cfg = ServerConfig::fast(time_scale);
+            cfg.launcher.protocol = Protocol::Ssh;
+            cfg.launcher.check_before_launch = false;
+            burst_response(cluster, *b, cfg)
+        })
+        .collect()
+}
+
+/// One fig. 10 series: launcher setting name + (nb_nodes → mean response
+/// ms, modeled).
+#[derive(Debug, Clone)]
+pub struct ParallelSeries {
+    pub setting: String,
+    pub points: Vec<(u32, f64)>,
+}
+
+/// Fig. 10: response time of one parallel job of `nb_nodes` nodes on the
+/// Icluster platform, per launcher setting. The response is dominated by
+/// the deployment cost model, so we measure through the server once per
+/// (setting, size).
+pub fn fig10_sweep(sizes: &[u32], time_scale: f64) -> Result<Vec<ParallelSeries>> {
+    let settings: Vec<(String, Protocol, bool)> = vec![
+        ("oar-rsh".into(), Protocol::Rsh, false),
+        ("oar-rsh+check".into(), Protocol::Rsh, true),
+        ("oar-ssh".into(), Protocol::Ssh, false),
+        ("oar-ssh+check".into(), Protocol::Ssh, true),
+    ];
+    let mut out = Vec::new();
+    for (name, protocol, check) in settings {
+        let mut points = Vec::new();
+        for &size in sizes {
+            let cluster = Arc::new(VirtualCluster::icluster());
+            let mut cfg = ServerConfig::fast(time_scale);
+            cfg.launcher = LauncherConfig {
+                protocol,
+                check_before_launch: check,
+                connect_timeout: Duration::from_secs(5),
+                time_scale,
+            };
+            let server = Server::new(cluster, cfg);
+            let id = server
+                .submit(&JobSpec::batch("u", "date", size, 300))?
+                .map_err(|e| anyhow::anyhow!("rejected: {e}"))?;
+            anyhow::ensure!(
+                server.wait_all_terminal(Duration::from_secs(120)),
+                "{name}/{size} did not finish"
+            );
+            let job = server.with_db(|db| db.job(id))?;
+            // measured end-to-end response (submission -> termination);
+            // run at time_scale=1.0 for real-scale numbers.
+            let resp = job.response_time().unwrap_or(0) as f64;
+            points.push((size, resp));
+        }
+        out.push(ParallelSeries {
+            setting: name,
+            points,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_burst_drains_cleanly() {
+        let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+        let mut cfg = ServerConfig::fast(0.0);
+        cfg.sched.dense_matching = false;
+        let p = burst_response(cluster, 25, cfg).unwrap();
+        assert_eq!(p.errors, 0);
+        assert_eq!(p.response_ms.n, 25);
+        assert!(p.queries > 0, "query counting must be active");
+    }
+
+    #[test]
+    fn fig10_orderings_hold() {
+        // real scale so the protocol latency dominates measurement noise
+        let series = fig10_sweep(&[1, 8], 1.0).unwrap();
+        let get = |name: &str| {
+            series
+                .iter()
+                .find(|s| s.setting == name)
+                .unwrap()
+                .points
+                .iter()
+                .map(|(_, v)| *v)
+                .sum::<f64>()
+        };
+        assert!(get("oar-ssh") > get("oar-rsh"), "ssh slower than rsh");
+        assert!(
+            get("oar-ssh+check") > get("oar-ssh"),
+            "check adds a round-trip"
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! The ESP2 benchmark (§3.2.1): Table 3 and figures 4–8.
+//!
+//! ESP ("Effective System Performance", Wong et al., SC2000) measures the
+//! time a batch system needs to run a fixed 230-job mix whose per-job
+//! runtimes are fixed targets, so the result depends only on scheduling
+//! quality and per-job launch overhead. The paper runs the *throughput*
+//! variant (all jobs submitted at t = 0) on 34 processors and reports
+//! Elapsed Time + Efficiency for SGE, Torque, Maui+Torque, OAR and OAR(2)
+//! (Table 3), plus the utilization profiles (figs. 4–8).
+//!
+//! Job classes: the ESP mix (fraction of system, count); runtimes are
+//! rescaled so the jobmix work equals the paper's 443,340 CPU·s on 34
+//! processors (lower bound 13,039 s — Table 3's "Jobmix work" row), per
+//! the substitution note in DESIGN.md.
+
+use crate::sched::baselines::{MauiLike, SgeLike, TorqueLike};
+use crate::sched::policies::{FifoConservative, QueuePolicy, SjfConservative};
+use crate::sim::{simulate, SimConfig, SimJob, SimResult};
+use crate::types::{NodeId, Time};
+
+/// One ESP job class: (name, fraction of system, count, base target
+/// runtime in seconds — ESP-2 values).
+pub const ESP_CLASSES: &[(&str, f64, u32, Time)] = &[
+    ("A", 0.03125, 75, 267),
+    ("B", 0.06250, 9, 322),
+    ("C", 0.50000, 3, 534),
+    ("D", 0.25000, 3, 616),
+    ("E", 0.50000, 3, 315),
+    ("F", 0.06250, 9, 1846),
+    ("G", 0.12500, 6, 1334),
+    ("H", 0.15625, 6, 1067),
+    ("I", 0.03125, 24, 1432),
+    ("J", 0.06250, 24, 725),
+    ("K", 0.09375, 15, 487),
+    ("L", 0.12500, 36, 366),
+    ("M", 0.25000, 15, 187),
+    ("Z", 1.00000, 2, 100),
+];
+
+/// The paper's jobmix work on the Xeon platform (CPU·seconds, Table 3).
+pub const PAPER_JOBMIX_WORK: i64 = 443_340;
+
+/// Processors of the Xeon platform exploited by the schedulers.
+pub const XEON_PROCS: u32 = 34;
+
+/// Paper's Table 3 numbers, for side-by-side reporting.
+pub const PAPER_TABLE3: &[(&str, i64, f64)] = &[
+    ("SGE", 14_164, 0.9206),
+    ("TORQUE", 14_818, 0.8800),
+    ("TORQUE+MAUI", 15_115, 0.8627),
+    ("OAR", 15_264, 0.8543),
+    ("OAR(2)", 14_037, 0.9289),
+];
+
+/// Generate the ESP2 throughput workload for a machine of `procs`
+/// processors: 230 jobs, all submitted at t = 0 in a *seeded-random
+/// order* (ESP randomizes submission order — this is what puts the
+/// full-configuration Z jobs mid-queue and makes FIFO schedulers pay a
+/// drain, the effect behind Table 3's spread). Runtimes are rescaled so
+/// the total work matches [`PAPER_JOBMIX_WORK`] when `procs == 34`.
+pub fn esp_workload(procs: u32) -> Vec<SimJob> {
+    esp_workload_seeded(procs, 2005)
+}
+
+/// Seeded variant (benches sweep seeds for robustness).
+pub fn esp_workload_seeded(procs: u32, seed: u64) -> Vec<SimJob> {
+    let mut raw: Vec<(u32, Time)> = Vec::new();
+    for (_, frac, count, base) in ESP_CLASSES {
+        let p = ((frac * procs as f64).round() as u32).clamp(1, procs);
+        for _ in 0..*count {
+            raw.push((p, *base));
+        }
+    }
+    let mut rng = crate::util::Rng::new(seed);
+    rng.shuffle(&mut raw);
+    let raw_work: i64 = raw.iter().map(|(p, t)| *p as i64 * t).sum();
+    let target_work = PAPER_JOBMIX_WORK as f64 * (procs as f64 / XEON_PROCS as f64);
+    let scale = target_work / raw_work as f64;
+    raw.iter()
+        .enumerate()
+        .map(|(i, (p, t))| {
+            let runtime = ((*t as f64 * scale).round() as Time).max(1);
+            SimJob {
+                id: i as u64 + 1,
+                nb_nodes: *p,
+                weight: 1,
+                runtime,
+                max_time: runtime, // ESP gives schedulers accurate estimates
+                submit: 0,
+            }
+        })
+        .collect()
+}
+
+/// One Table 3 row produced by our reproduction.
+#[derive(Debug, Clone)]
+pub struct EspRow {
+    pub system: &'static str,
+    pub elapsed: Time,
+    pub efficiency: f64,
+    /// Famine indicator: the maximum job wait time (§3.2.1 discussion).
+    pub max_wait: Time,
+    pub result: SimResult,
+}
+
+/// The five schedulers of Table 3, in the paper's column order.
+pub fn table3_schedulers() -> Vec<(&'static str, Box<dyn QueuePolicy>)> {
+    vec![
+        ("SGE", Box::new(SgeLike)),
+        ("TORQUE", Box::new(TorqueLike)),
+        ("TORQUE+MAUI", Box::new(MauiLike)),
+        ("OAR", Box::new(FifoConservative)),
+        ("OAR(2)", Box::new(SjfConservative)),
+    ]
+}
+
+/// Run the full ESP benchmark: one row per scheduler (Table 3), each row
+/// carrying the utilization trace for its figure (figs. 4–8).
+pub fn run_esp(procs: u32, launch_overhead: Time) -> Vec<EspRow> {
+    let nodes: Vec<(NodeId, u32)> = (1..=procs).map(|i| (i, 1)).collect();
+    let jobs = esp_workload(procs);
+    table3_schedulers()
+        .into_iter()
+        .map(|(system, policy)| {
+            let result = simulate(
+                policy.as_ref(),
+                &nodes,
+                &jobs,
+                SimConfig { launch_overhead },
+            );
+            EspRow {
+                system,
+                elapsed: result.elapsed(),
+                efficiency: result.efficiency(),
+                max_wait: result.max_wait_time(),
+                result,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_matches_esp_shape() {
+        let jobs = esp_workload(XEON_PROCS);
+        assert_eq!(jobs.len(), 230, "ESP is a 230-job mix");
+        // two full-configuration Z jobs
+        assert_eq!(
+            jobs.iter().filter(|j| j.nb_nodes == XEON_PROCS).count(),
+            2,
+            "exactly the two Z jobs use the full machine"
+        );
+        // total work calibrated to the paper's number (±1% rounding)
+        let work: i64 = jobs.iter().map(|j| j.runtime * j.total_procs() as i64).sum();
+        let err = (work - PAPER_JOBMIX_WORK).abs() as f64 / PAPER_JOBMIX_WORK as f64;
+        assert!(err < 0.01, "work {work} vs {PAPER_JOBMIX_WORK}");
+    }
+
+    #[test]
+    fn lower_bound_matches_paper() {
+        let jobs = esp_workload(XEON_PROCS);
+        let work: i64 = jobs.iter().map(|j| j.runtime * j.total_procs() as i64).sum();
+        let lower_bound = work / XEON_PROCS as i64;
+        // paper: 443340 / 34 = 13039s
+        assert!((lower_bound - 13_039).abs() < 140, "lower bound {lower_bound}");
+    }
+
+    #[test]
+    fn all_schedulers_complete_the_mix() {
+        // small machine to keep the test fast in debug builds
+        let rows = run_esp(8, 0);
+        assert_eq!(rows.len(), 5);
+        for row in &rows {
+            assert_eq!(row.result.records.len(), 230, "{}", row.system);
+            assert!(row.efficiency > 0.5, "{}: {}", row.system, row.efficiency);
+            assert!(row.efficiency <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn famine_ordering_holds() {
+        // The paper's qualitative claim: greedy small-first packers (SGE)
+        // starve big jobs; OAR's conservative FIFO does not. Compare the
+        // mean wait of jobs needing >= half the machine.
+        let rows = run_esp(8, 0);
+        let big_wait = |name: &str| {
+            let r = rows.iter().find(|r| r.system == name).unwrap();
+            let waits: Vec<i64> = r
+                .result
+                .records
+                .iter()
+                .filter(|rec| rec.procs >= 4)
+                .map(|rec| rec.wait_time())
+                .collect();
+            waits.iter().sum::<i64>() as f64 / waits.len() as f64
+        };
+        assert!(
+            big_wait("OAR") < big_wait("SGE"),
+            "OAR {} vs SGE {}",
+            big_wait("OAR"),
+            big_wait("SGE")
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Table 2 (§3.1): the functionality matrix — but *verified*, not
+//! asserted: each feature row is backed by a programmatic check that
+//! exercises the feature through the public API and reports pass/fail.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::VirtualCluster;
+use crate::server::{Server, ServerConfig};
+use crate::types::{JobKind, JobSpec, JobState};
+
+/// One feature row of Table 2.
+#[derive(Debug, Clone)]
+pub struct FeatureRow {
+    pub feature: &'static str,
+    /// Paper's Table 2 support marks: (OpenPBS, SGE, Maui+OpenPBS, OAR).
+    pub paper: (bool, bool, bool, bool),
+    /// Did this repository demonstrate the feature end-to-end?
+    pub demonstrated: bool,
+    pub note: String,
+}
+
+fn quick_server() -> Server {
+    scaled_server(0.0)
+}
+
+/// `scale > 0` makes simulated runtimes real so ordering checks are
+/// deterministic (a `sleep 0.5` blocker really blocks for 500 ms).
+fn scaled_server(scale: f64) -> Server {
+    let cluster = Arc::new(VirtualCluster::tiny(4, 2));
+    let mut cfg = ServerConfig::fast(scale);
+    cfg.sched.dense_matching = false;
+    Server::new(cluster, cfg)
+}
+
+/// Run every feature check; one row per Table 2 line.
+pub fn verify_features() -> Vec<FeatureRow> {
+    let wait = Duration::from_secs(20);
+    let mut rows = Vec::new();
+
+    // Interactive mode: submit an INTERACTIVE job; it must run.
+    rows.push({
+        let server = quick_server();
+        let id = server
+            .submit(&JobSpec {
+                kind: JobKind::Interactive,
+                ..JobSpec::batch("u", "date", 1, 60)
+            })
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let ok = server.with_db(|db| db.job(id)).unwrap().state == JobState::Terminated;
+        FeatureRow {
+            feature: "Interactive mode",
+            paper: (true, true, true, true),
+            demonstrated: ok,
+            note: "INTERACTIVE job ran to completion".into(),
+        }
+    });
+
+    // Batch mode.
+    rows.push({
+        let server = quick_server();
+        let id = server
+            .submit(&JobSpec::batch("u", "date", 1, 60))
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let ok = server.with_db(|db| db.job(id)).unwrap().state == JobState::Terminated;
+        FeatureRow {
+            feature: "Batch mode",
+            paper: (true, true, true, true),
+            demonstrated: ok,
+            note: "PASSIVE job ran to completion".into(),
+        }
+    });
+
+    // Parallel jobs.
+    rows.push({
+        let server = quick_server();
+        let id = server
+            .submit(&JobSpec {
+                weight: 2,
+                ..JobSpec::batch("u", "date", 3, 60)
+            })
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let (state, assigned) =
+            server.with_db(|db| (db.job(id).unwrap().state, db.assigned_nodes(id)));
+        FeatureRow {
+            feature: "Parallel jobs support",
+            paper: (true, true, true, true),
+            demonstrated: state == JobState::Terminated && assigned.len() == 3,
+            note: format!("3 nodes x 2 procs -> {assigned:?}"),
+        }
+    });
+
+    // Multiqueues with priorities.
+    rows.push({
+        let server = scaled_server(1.0);
+        server.with_db(|db| {
+            db.add_queue(crate::types::Queue::new(
+                "urgent",
+                100,
+                crate::types::QueuePolicyKind::FifoConservative,
+            ))
+        });
+        // Fill the cluster, then submit to both queues; urgent must start
+        // first once resources free up.
+        let _fill = server
+            .submit(&JobSpec::batch("x", "sleep 0.5", 4, 60))
+            .unwrap()
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let slow = server
+            .submit(&JobSpec::batch("a", "date", 4, 60))
+            .unwrap()
+            .unwrap();
+        let fast = server
+            .submit(&JobSpec {
+                queue: Some("urgent".into()),
+                ..JobSpec::batch("b", "date", 4, 60)
+            })
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let (s_slow, s_fast) = server.with_db(|db| {
+            (
+                db.job(slow).unwrap().start_time.unwrap_or(i64::MAX),
+                db.job(fast).unwrap().start_time.unwrap_or(i64::MAX),
+            )
+        });
+        FeatureRow {
+            feature: "Multiqueues with priorities",
+            paper: (true, true, true, true),
+            demonstrated: s_fast <= s_slow,
+            note: format!("urgent started at {s_fast}ms, default at {s_slow}ms"),
+        }
+    });
+
+    // Resources matching.
+    rows.push({
+        let server = quick_server();
+        let id = server
+            .submit(&JobSpec {
+                properties: Some("mem >= 1024".into()),
+                ..JobSpec::batch("u", "date", 1, 60)
+            })
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let ok = server.with_db(|db| db.job(id)).unwrap().state == JobState::Terminated;
+        FeatureRow {
+            feature: "Resources matching",
+            paper: (true, true, true, true),
+            demonstrated: ok,
+            note: "properties = 'mem >= 1024' matched and ran".into(),
+        }
+    });
+
+    // Admission policies.
+    rows.push({
+        let server = quick_server();
+        server.with_db(|db| db.add_admission_rule(5, "IF user = 'evil' THEN REJECT 'no'"));
+        let rejected = server
+            .submit(&JobSpec {
+                user: "evil".into(),
+                ..JobSpec::default()
+            })
+            .unwrap()
+            .is_err();
+        FeatureRow {
+            feature: "Admission policies",
+            paper: (true, true, true, true),
+            demonstrated: rejected,
+            note: "stored rule rejected the submission".into(),
+        }
+    });
+
+    // File staging — not supported by OAR in the paper either.
+    rows.push(FeatureRow {
+        feature: "File staging",
+        paper: (true, true, true, false),
+        demonstrated: false,
+        note: "unsupported, as in the paper".into(),
+    });
+
+    // Jobs dependences — not supported by OAR in the paper either.
+    rows.push(FeatureRow {
+        feature: "Jobs dependences",
+        paper: (true, true, true, false),
+        demonstrated: false,
+        note: "unsupported, as in the paper".into(),
+    });
+
+    // Backfilling: a short job must start before a blocked big one ends.
+    rows.push({
+        let server = scaled_server(1.0);
+        let _running = server
+            .submit(&JobSpec::batch("x", "sleep 0.6", 2, 600))
+            .unwrap()
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // big job wants all 4 nodes -> must wait for _running
+        let big = server
+            .submit(&JobSpec::batch("a", "date", 4, 600))
+            .unwrap()
+            .unwrap();
+        // small short job fits on the 2 idle nodes without delaying big
+        let small = server
+            .submit(&JobSpec::batch("b", "date", 2, 60))
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(wait);
+        let (s_big, s_small) = server.with_db(|db| {
+            (
+                db.job(big).unwrap().start_time.unwrap_or(i64::MAX),
+                db.job(small).unwrap().start_time.unwrap_or(i64::MAX),
+            )
+        });
+        FeatureRow {
+            feature: "Backfilling",
+            paper: (false, false, true, true),
+            demonstrated: s_small < s_big,
+            note: format!("small backfilled at {s_small}ms, big at {s_big}ms"),
+        }
+    });
+
+    // Reservations.
+    rows.push({
+        let server = quick_server();
+        let id = server
+            .submit(&JobSpec {
+                reservation_start: Some(1), // 1s after epoch
+                ..JobSpec::batch("u", "date", 2, 60)
+            })
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(Duration::from_secs(30));
+        let job = server.with_db(|db| db.job(id)).unwrap();
+        let ok = job.state == JobState::Terminated
+            && job.start_time.unwrap_or(0) >= 1000
+            && job.reservation == crate::types::ReservationField::Scheduled;
+        FeatureRow {
+            feature: "Reservations",
+            paper: (false, false, true, true),
+            demonstrated: ok,
+            note: format!(
+                "reserved t=1000ms, started {:?}ms",
+                job.start_time
+            ),
+        }
+    });
+
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_oar_feature_is_demonstrated() {
+        for row in verify_features() {
+            let oar_supported = row.paper.3;
+            assert_eq!(
+                row.demonstrated, oar_supported,
+                "{}: {}",
+                row.feature, row.note
+            );
+        }
+    }
+}

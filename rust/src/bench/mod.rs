@@ -1,0 +1,14 @@
+//! Benchmark harnesses regenerating every table and figure of the
+//! paper's evaluation (§3):
+//!
+//! * [`esp`] — the ESP2 benchmark: Table 3 and figs. 4–8.
+//! * [`burst`] — submission bursts: figs. 9 and 10.
+//! * [`complexity`] — software complexity: Table 1.
+//! * [`features`] — functionality matrix: Table 2.
+//! * [`report`] — ASCII rendering + CSV output shared by the harnesses.
+
+pub mod burst;
+pub mod complexity;
+pub mod esp;
+pub mod features;
+pub mod report;

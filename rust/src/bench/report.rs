@@ -1,0 +1,198 @@
+//! Shared reporting: ASCII utilization plots (the figures), aligned
+//! tables, and CSV files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::sim::SimResult;
+use crate::types::Time;
+
+/// Render a fig. 4–8 style utilization profile: plain line = busy
+/// processors over time, markers = job starts.
+pub fn utilization_ascii(result: &SimResult, width: usize, height: usize) -> String {
+    let elapsed = result.elapsed().max(1);
+    let cap = result.total_procs.max(1) as usize;
+    let mut grid = vec![vec![' '; width]; height];
+
+    // busy-processor staircase
+    let mut level = 0u32;
+    let mut trace = result.utilization.clone();
+    trace.sort_by_key(|(t, _)| *t);
+    let col_of = |t: Time| ((t as f64 / elapsed as f64) * (width - 1) as f64) as usize;
+    let row_of = |busy: u32| {
+        let frac = busy as f64 / cap as f64;
+        height - 1 - ((frac * (height - 1) as f64).round() as usize).min(height - 1)
+    };
+    let mut prev_col = 0usize;
+    for (t, busy) in trace {
+        let col = col_of(t).min(width - 1);
+        let row = row_of(level);
+        for c in prev_col..=col {
+            grid[row][c] = '-';
+        }
+        level = busy;
+        prev_col = col;
+    }
+    let row = row_of(level);
+    for c in prev_col..width {
+        grid[row][c] = '-';
+    }
+
+    // start markers (dashed vertical lines with height = procs requested)
+    for (t, procs) in &result.starts {
+        let col = col_of(*t).min(width - 1);
+        let top = row_of(*procs);
+        for r in grid.iter_mut().skip(top) {
+            if r[col] == ' ' {
+                r[col] = ':';
+            }
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{cap} procs ┐");
+    for row in grid {
+        let line: String = row.into_iter().collect();
+        let _ = writeln!(out, "       │{line}");
+    }
+    let _ = writeln!(out, "     0 └{}", "─".repeat(width));
+    let _ = writeln!(out, "        t=0{}t={elapsed}s", " ".repeat(width.saturating_sub(12)));
+    out
+}
+
+/// Aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    let _ = writeln!(out, "{}", fmt_row(&head, &widths));
+    let _ = writeln!(out, "{}", "─".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        let _ = writeln!(out, "{}", fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Write rows as CSV under `results/` (created if needed).
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut text = headers.join(",");
+    text.push('\n');
+    for row in rows {
+        text.push_str(&row.join(","));
+        text.push('\n');
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// Simple ASCII x/y plot for figs. 9–10 (log-ish labeling left to caller).
+pub fn xy_ascii(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return String::new();
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), (x, _)| {
+            (lo.min(*x), hi.max(*x))
+        });
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), (_, y)| {
+            (lo.min(*y), hi.max(*y))
+        });
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (x, y) in pts.iter() {
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = height - 1 - (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{ymax:>10.1} ┐");
+    for row in grid {
+        let line: String = row.into_iter().collect();
+        let _ = writeln!(out, "           │{line}");
+    }
+    let _ = writeln!(out, "{ymin:>10.1} └{}", "─".repeat(width));
+    let _ = writeln!(out, "            {xmin:<10.0}{}{xmax:>10.0}", " ".repeat(width.saturating_sub(20)));
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "            {} {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimConfig, SimJob};
+    use crate::sched::policies::FifoConservative;
+
+    #[test]
+    fn utilization_plot_renders() {
+        let jobs = [
+            SimJob { id: 1, nb_nodes: 2, weight: 1, runtime: 50, max_time: 50, submit: 0 },
+            SimJob { id: 2, nb_nodes: 1, weight: 1, runtime: 100, max_time: 100, submit: 0 },
+        ];
+        let r = simulate(&FifoConservative, &[(1, 1), (2, 1), (3, 1)], &jobs, SimConfig::default());
+        let plot = utilization_ascii(&r, 40, 8);
+        assert!(plot.contains('-'));
+        assert!(plot.contains(':'));
+        assert!(plot.lines().count() >= 8);
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "x"],
+            &[vec!["a".into(), "1".into()], vec!["longer".into(), "22".into()]],
+        );
+        assert!(t.contains("longer"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let dir = std::env::temp_dir().join("oar_csv_test");
+        let path = dir.join("x.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn xy_plot_renders_series() {
+        let s1 = [(1.0, 2.0), (2.0, 4.0)];
+        let s2 = [(1.0, 1.0), (2.0, 8.0)];
+        let plot = xy_ascii(&[("a", &s1), ("b", &s2)], 30, 10);
+        assert!(plot.contains('*'));
+        assert!(plot.contains('o'));
+    }
+}

@@ -1,0 +1,311 @@
+//! The central module (§2.2): "made of two interconnected parts. The main
+//! part is an automaton that reads its entries from a buffer of events ...
+//! The second part ... is in charge of listening for external
+//! notifications, discarding the redundant ones and planing the next tasks
+//! required by users."
+//!
+//! [`NotificationHub`] is the second part: commands and modules call
+//! [`NotificationHub::notify`]; redundant notifications coalesce (a
+//! notification "is taken into account only if no scheduling was already
+//! planned", §2.1). [`Planner`] is the redundancy part: every task also
+//! fires periodically, so lost notifications never wedge the system —
+//! "even if some notifications are lost, the whole system is kept in a
+//! correct behavior".
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::types::{JobId, Time};
+
+/// The tasks the automaton dispatches to the executive modules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Run the meta-scheduler.
+    Schedule,
+    /// Run the monitoring module.
+    Monitor,
+    /// Check launched/running jobs for completion bookkeeping.
+    CheckJobs,
+    /// Stop the automaton.
+    Shutdown,
+}
+
+/// A job-lifecycle event queued for the automaton (the "buffer of
+/// events"). These carry payloads and are never coalesced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobEvent {
+    Ended { job: JobId, at: Time, ok: bool },
+    LaunchFailed { job: JobId, at: Time },
+}
+
+/// Coalescing notification listener + event buffer.
+#[derive(Debug)]
+pub struct NotificationHub {
+    schedule: AtomicBool,
+    monitor: AtomicBool,
+    check_jobs: AtomicBool,
+    shutdown: AtomicBool,
+    events: Mutex<VecDeque<JobEvent>>,
+    /// Wakeup channel: pending-signal counter + condvar.
+    signal: Mutex<u64>,
+    wake: Condvar,
+    /// Telemetry: how many notifications were absorbed by coalescing.
+    pub discarded: std::sync::atomic::AtomicU64,
+    /// Telemetry: how many notifications were accepted.
+    pub accepted: std::sync::atomic::AtomicU64,
+}
+
+impl Default for NotificationHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NotificationHub {
+    pub fn new() -> NotificationHub {
+        NotificationHub {
+            schedule: AtomicBool::new(false),
+            monitor: AtomicBool::new(false),
+            check_jobs: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            events: Mutex::new(VecDeque::new()),
+            signal: Mutex::new(0),
+            wake: Condvar::new(),
+            discarded: std::sync::atomic::AtomicU64::new(0),
+            accepted: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn flag(&self, task: Task) -> &AtomicBool {
+        match task {
+            Task::Schedule => &self.schedule,
+            Task::Monitor => &self.monitor,
+            Task::CheckJobs => &self.check_jobs,
+            Task::Shutdown => &self.shutdown,
+        }
+    }
+
+    /// Request a task; redundant requests (one already pending) are
+    /// discarded. Returns whether the notification was accepted.
+    pub fn notify(&self, task: Task) -> bool {
+        let fresh = !self.flag(task).swap(true, Ordering::AcqRel);
+        if fresh {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+            self.ring();
+        } else {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+        fresh
+    }
+
+    /// Queue a job event (never coalesced).
+    pub fn push_event(&self, ev: JobEvent) {
+        self.events.lock().unwrap().push_back(ev);
+        self.ring();
+    }
+
+    fn ring(&self) {
+        *self.signal.lock().unwrap() += 1;
+        self.wake.notify_one();
+    }
+
+    /// Non-blocking: next pending work item, events first (they carry
+    /// data the tasks need), then flags in fixed priority order.
+    pub fn poll(&self) -> Option<Work> {
+        if let Some(ev) = self.events.lock().unwrap().pop_front() {
+            return Some(Work::Event(ev));
+        }
+        if self.shutdown.swap(false, Ordering::AcqRel) {
+            return Some(Work::Task(Task::Shutdown));
+        }
+        if self.schedule.swap(false, Ordering::AcqRel) {
+            return Some(Work::Task(Task::Schedule));
+        }
+        if self.check_jobs.swap(false, Ordering::AcqRel) {
+            return Some(Work::Task(Task::CheckJobs));
+        }
+        if self.monitor.swap(false, Ordering::AcqRel) {
+            return Some(Work::Task(Task::Monitor));
+        }
+        None
+    }
+
+    /// Block until at least one notification arrives (or `d` elapses) —
+    /// the periodic planner's tick drives the redundant re-execution even
+    /// when nothing notifies, so a bounded wait is always safe.
+    pub fn wait_timeout(&self, d: Duration) {
+        let mut pending = self.signal.lock().unwrap();
+        if *pending == 0 {
+            let (guard, _timeout) = self.wake.wait_timeout(pending, d).unwrap();
+            pending = guard;
+        }
+        *pending = 0;
+    }
+}
+
+/// One unit of automaton work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Work {
+    Task(Task),
+    Event(JobEvent),
+}
+
+/// The redundancy planner (§2.2): schedules every task on a period so the
+/// system self-heals from lost notifications, crashed modules or manual
+/// database edits.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    pub schedule_every: Duration,
+    pub monitor_every: Duration,
+    pub check_jobs_every: Duration,
+    last_schedule: Option<std::time::Instant>,
+    last_monitor: Option<std::time::Instant>,
+    last_check: Option<std::time::Instant>,
+}
+
+impl Planner {
+    pub fn new(
+        schedule_every: Duration,
+        monitor_every: Duration,
+        check_jobs_every: Duration,
+    ) -> Planner {
+        Planner {
+            schedule_every,
+            monitor_every,
+            check_jobs_every,
+            last_schedule: None,
+            last_monitor: None,
+            last_check: None,
+        }
+    }
+
+    /// Fire periodic notifications that are due at `now`.
+    pub fn tick(&mut self, now: std::time::Instant, hub: &NotificationHub) {
+        let due = |last: &mut Option<std::time::Instant>, every: Duration| {
+            let fire = last.map(|l| now.duration_since(l) >= every).unwrap_or(true);
+            if fire {
+                *last = Some(now);
+            }
+            fire
+        };
+        if due(&mut self.last_schedule, self.schedule_every) {
+            hub.notify(Task::Schedule);
+        }
+        if due(&mut self.last_monitor, self.monitor_every) {
+            hub.notify(Task::Monitor);
+        }
+        if due(&mut self.last_check, self.check_jobs_every) {
+            hub.notify(Task::CheckJobs);
+        }
+    }
+
+    /// The shortest period (the automaton's idle wait bound).
+    pub fn min_period(&self) -> Duration {
+        self.schedule_every
+            .min(self.monitor_every)
+            .min(self.check_jobs_every)
+    }
+}
+
+/// Shared handle used across modules and commands.
+pub type HubHandle = Arc<NotificationHub>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redundant_notifications_are_discarded() {
+        let hub = NotificationHub::new();
+        assert!(hub.notify(Task::Schedule));
+        assert!(!hub.notify(Task::Schedule), "second is redundant");
+        assert!(!hub.notify(Task::Schedule));
+        assert_eq!(hub.discarded.load(Ordering::Relaxed), 2);
+        assert_eq!(hub.poll(), Some(Work::Task(Task::Schedule)));
+        assert_eq!(hub.poll(), None);
+        // after draining, a new notification is accepted again
+        assert!(hub.notify(Task::Schedule));
+    }
+
+    #[test]
+    fn events_are_never_coalesced_and_come_first() {
+        let hub = NotificationHub::new();
+        hub.notify(Task::Schedule);
+        hub.push_event(JobEvent::Ended { job: 1, at: 10, ok: true });
+        hub.push_event(JobEvent::Ended { job: 2, at: 11, ok: false });
+        assert_eq!(
+            hub.poll(),
+            Some(Work::Event(JobEvent::Ended { job: 1, at: 10, ok: true }))
+        );
+        assert_eq!(
+            hub.poll(),
+            Some(Work::Event(JobEvent::Ended { job: 2, at: 11, ok: false }))
+        );
+        assert_eq!(hub.poll(), Some(Work::Task(Task::Schedule)));
+    }
+
+    #[test]
+    fn shutdown_preempts_other_tasks() {
+        let hub = NotificationHub::new();
+        hub.notify(Task::Monitor);
+        hub.notify(Task::Shutdown);
+        assert_eq!(hub.poll(), Some(Work::Task(Task::Shutdown)));
+    }
+
+    #[test]
+    fn planner_fires_every_task_initially_then_respects_periods() {
+        let hub = NotificationHub::new();
+        let mut planner = Planner::new(
+            Duration::from_secs(60),
+            Duration::from_secs(120),
+            Duration::from_secs(60),
+        );
+        let t0 = std::time::Instant::now();
+        planner.tick(t0, &hub);
+        let mut tasks = Vec::new();
+        while let Some(w) = hub.poll() {
+            tasks.push(w);
+        }
+        assert_eq!(tasks.len(), 3, "all tasks fire on first tick");
+        // immediately after, nothing is due
+        planner.tick(t0 + Duration::from_secs(1), &hub);
+        assert_eq!(hub.poll(), None);
+        // after the schedule period, schedule (and check) fire again
+        planner.tick(t0 + Duration::from_secs(61), &hub);
+        let mut again = Vec::new();
+        while let Some(w) = hub.poll() {
+            again.push(w);
+        }
+        assert!(again.contains(&Work::Task(Task::Schedule)));
+        assert!(!again.contains(&Work::Task(Task::Monitor)));
+    }
+
+    #[test]
+    fn wait_wakes_on_notify() {
+        let hub = Arc::new(NotificationHub::new());
+        let h2 = hub.clone();
+        let waiter = std::thread::spawn(move || {
+            h2.wait_timeout(Duration::from_secs(5));
+            h2.poll()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        hub.notify(Task::Schedule);
+        let got = waiter.join().unwrap();
+        assert_eq!(got, Some(Work::Task(Task::Schedule)));
+    }
+
+    #[test]
+    fn wait_timeout_returns_without_signal() {
+        let hub = NotificationHub::new();
+        let t0 = std::time::Instant::now();
+        hub.wait_timeout(Duration::from_millis(30));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // a pre-rung signal makes the wait return immediately
+        hub.notify(Task::Monitor);
+        let t0 = std::time::Instant::now();
+        hub.wait_timeout(Duration::from_secs(10));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

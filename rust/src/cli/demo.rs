@@ -1,0 +1,146 @@
+//! `oar demo`: a narrated live run on the virtual Xeon cluster, touching
+//! every §2/§3.3 mechanism: submissions, properties matching, priorities,
+//! a reservation, best-effort + reclamation, node failure + recovery, and
+//! the accounting report.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::VirtualCluster;
+use crate::server::{Server, ServerConfig};
+use crate::types::{JobSpec, JobState};
+use crate::Result;
+
+pub fn run_demo(scale: f64) -> Result<i32> {
+    println!("── oar demo: virtual Xeon cluster (17 bi-Xeon nodes), scale={scale} ──\n");
+    let cluster = Arc::new(VirtualCluster::xeon());
+    let server = Server::new(cluster.clone(), ServerConfig::fast(scale));
+
+    println!("• oarsub: 6 batch jobs (mixed sizes), one with a property constraint");
+    let mut ids = Vec::new();
+    for (user, cmd, nodes) in [
+        ("alice", "sleep 2", 4),
+        ("bob", "sleep 1", 2),
+        ("carol", "sleep 1", 8),
+        ("dave", "date", 1),
+        ("erin", "sleep 1", 2),
+    ] {
+        let id = server
+            .submit(&JobSpec::batch(user, cmd, nodes, 600))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!("    job {id}: {user} wants {nodes} nodes ({cmd})");
+        ids.push(id);
+    }
+    let picky = server
+        .submit(&JobSpec {
+            properties: Some("mem >= 512 AND switch = 'sw1'".into()),
+            ..JobSpec::batch("frank", "date", 2, 600)
+        })?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("    job {picky}: frank wants 2 nodes WHERE mem >= 512 AND switch = 'sw1'");
+
+    println!("• oarsub -r: a reservation 3s from now");
+    let resa = server
+        .submit(&JobSpec {
+            reservation_start: Some(3),
+            ..JobSpec::batch("grace", "date", 4, 60)
+        })?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("    job {resa}: grace reserved 4 nodes at t+3s");
+
+    println!("• best-effort (Global computing, §3.3): a 17-node background sweep");
+    let be = server
+        .submit(&JobSpec {
+            best_effort: true,
+            ..JobSpec::batch("grid", "sleep 30", 17, 3600)
+        })?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("    job {be}: routed to the besteffort queue; will be reclaimed");
+
+    println!("• injecting a node failure; the monitor must suspect it");
+    cluster.inject_failure(9);
+    std::thread::sleep(Duration::from_millis(800));
+    let suspected = server
+        .nodes()
+        .into_iter()
+        .filter(|(_, state, _)| state == "Suspected")
+        .count();
+    println!("    suspected nodes: {suspected}");
+    cluster.repair(9);
+
+    println!("• waiting for the system to drain...");
+    let done = server.wait_all_terminal(Duration::from_secs(120));
+    println!("    drained: {done}\n");
+
+    println!("• oarstat:");
+    for job in server.stat(None)? {
+        println!(
+            "    job {:>3}  {:<8} {:<10} resp={:?}ms  msg={:?}",
+            job.id,
+            job.user,
+            job.state.to_string(),
+            job.response_time(),
+            job.message
+        );
+    }
+
+    let be_job = server.with_db(|db| db.job(be))?;
+    println!(
+        "\n• best-effort job ended as {:?} ({})",
+        be_job.state, be_job.message
+    );
+
+    println!("\n• oarstat --accounting:");
+    let acc = server.accounting();
+    for (user, usage) in &acc.by_user {
+        println!(
+            "    {user:<8} submitted={} terminated={} errors={} cpu_ms={} wait_ms={}",
+            usage.jobs_submitted,
+            usage.jobs_terminated,
+            usage.jobs_error,
+            usage.cpu_seconds,
+            usage.total_wait
+        );
+    }
+    println!("    mean response: {:.0} ms", acc.mean_response_time);
+
+    let (accepted, discarded) = server.hub_stats();
+    println!("\n• central module: {accepted} notifications accepted, {discarded} coalesced");
+    let stats = server.with_db(|db| db.stats());
+    println!(
+        "• database: {} SQL-equivalent statements ({} selects, {} inserts, {} updates)",
+        stats.total(),
+        stats.selects,
+        stats.inserts,
+        stats.updates
+    );
+    Ok(0)
+}
+
+/// `oar snapshot`: run a short workload, snapshot the database, restore it
+/// and verify — the paper's §2 data-safety argument, demonstrated.
+pub fn run_snapshot(out: PathBuf) -> Result<i32> {
+    let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+    let server = Server::new(cluster, ServerConfig::fast(0.0));
+    for i in 0..8 {
+        server
+            .submit(&JobSpec::batch(&format!("u{i}"), "date", 1, 60))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    server.wait_all_terminal(Duration::from_secs(30));
+    let db = server.shutdown();
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    db.snapshot(&out)?;
+    // prove the snapshot round-trips
+    let mut restored = crate::db::Db::restore(&out)?;
+    let terminated = restored.jobs_in_state(JobState::Terminated).len();
+    println!(
+        "snapshot written to {} ({} terminated jobs round-tripped)",
+        out.display(),
+        terminated
+    );
+    Ok(0)
+}

@@ -1,0 +1,194 @@
+//! The virtual cluster substrate.
+//!
+//! The paper evaluates on two real testbeds — *Xeon* (17 bi-Xeon 2.4 GHz
+//! compute nodes + 1 server, 34 processors) and *Icluster* (119 PIII
+//! 733 MHz nodes + 1 PIII 866 server). We do not have those machines, so
+//! this module simulates them: node inventories with the paper's property
+//! values, plus a failure-injection surface the launcher's reachability
+//! test observes (DESIGN.md substitution table).
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::db::Value;
+use crate::types::{Node, NodeId};
+
+/// Latency model of one remote-execution protocol (§2.4: Taktuk drives
+/// standard rsh/ssh clients).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// Insecure, cheap connections.
+    Rsh,
+    /// Secure; key exchange makes connections an order of magnitude
+    /// slower.
+    Ssh,
+}
+
+impl Protocol {
+    /// Per-connection setup latency, in microseconds. Values are
+    /// representative of 2005-era LAN rsh vs ssh handshakes and are the
+    /// knob behind fig. 10's four OAR settings.
+    pub fn connect_micros(self) -> u64 {
+        match self {
+            Protocol::Rsh => 10_000,  // 10 ms
+            Protocol::Ssh => 150_000, // 150 ms
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Protocol::Rsh => "rsh",
+            Protocol::Ssh => "ssh",
+        }
+    }
+}
+
+/// A simulated cluster: inventory + failure set.
+#[derive(Debug)]
+pub struct VirtualCluster {
+    pub name: &'static str,
+    nodes: Vec<Node>,
+    /// Nodes that currently do not answer connections.
+    failed: Mutex<HashSet<NodeId>>,
+}
+
+impl VirtualCluster {
+    /// The *Xeon* platform: 17 compute nodes, bi-Xeon 2.4 GHz, 512 MB RAM,
+    /// 1 Gb/s Ethernet (34 processors exploited by the scheduler).
+    pub fn xeon() -> VirtualCluster {
+        let nodes = (1..=17)
+            .map(|i| {
+                Node::new(i, &format!("xeon-{i:02}"), 2)
+                    .with_prop("mem", Value::Int(512))
+                    .with_prop("cpu_mhz", Value::Int(2400))
+                    .with_prop("eth_mbps", Value::Int(1000))
+                    .with_prop("switch", Value::Text("sw1".into()))
+            })
+            .collect();
+        VirtualCluster {
+            name: "xeon",
+            nodes,
+            failed: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// The *Icluster* platform: 119 PIII 733 MHz nodes, 256 MB RAM,
+    /// 100 Mb/s Ethernet, spread over 5 switches.
+    pub fn icluster() -> VirtualCluster {
+        let nodes = (1..=119)
+            .map(|i| {
+                Node::new(i, &format!("ic-{i:03}"), 1)
+                    .with_prop("mem", Value::Int(256))
+                    .with_prop("cpu_mhz", Value::Int(733))
+                    .with_prop("eth_mbps", Value::Int(100))
+                    .with_prop("switch", Value::Text(format!("sw{}", (i - 1) / 24 + 1)))
+            })
+            .collect();
+        VirtualCluster {
+            name: "icluster",
+            nodes,
+            failed: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// A tiny synthetic cluster for tests/examples.
+    pub fn tiny(n: u32, procs: u32) -> VirtualCluster {
+        let nodes = (1..=n)
+            .map(|i| {
+                Node::new(i, &format!("tiny-{i}"), procs)
+                    .with_prop("mem", Value::Int(1024))
+                    .with_prop("cpu_mhz", Value::Int(2000))
+                    .with_prop("switch", Value::Text("sw1".into()))
+            })
+            .collect();
+        VirtualCluster {
+            name: "tiny",
+            nodes,
+            failed: Mutex::new(HashSet::new()),
+        }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn total_procs(&self) -> u32 {
+        self.nodes.iter().map(|n| n.nb_procs).sum()
+    }
+
+    /// Register the inventory into a database.
+    pub fn register(&self, db: &mut crate::db::Db) {
+        for n in &self.nodes {
+            db.add_node(n.clone());
+        }
+    }
+
+    // ------------------------------------------------ failure surface ----
+
+    /// Make a node stop answering connections.
+    pub fn inject_failure(&self, node: NodeId) {
+        self.failed.lock().unwrap().insert(node);
+    }
+
+    /// Bring a node back.
+    pub fn repair(&self, node: NodeId) {
+        self.failed.lock().unwrap().remove(&node);
+    }
+
+    /// Does the node answer connection attempts?
+    pub fn is_reachable(&self, node: NodeId) -> bool {
+        self.nodes.iter().any(|n| n.id == node) && !self.failed.lock().unwrap().contains(&node)
+    }
+
+    pub fn failed_nodes(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.failed.lock().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xeon_matches_paper_platform() {
+        let c = VirtualCluster::xeon();
+        assert_eq!(c.nodes().len(), 17);
+        assert_eq!(c.total_procs(), 34);
+        assert!(c.nodes().iter().all(|n| n.nb_procs == 2));
+    }
+
+    #[test]
+    fn icluster_matches_paper_platform() {
+        let c = VirtualCluster::icluster();
+        assert_eq!(c.nodes().len(), 119);
+        assert_eq!(c.total_procs(), 119);
+        // spread over 5 switches
+        let switches: std::collections::HashSet<_> = c
+            .nodes()
+            .iter()
+            .filter_map(|n| n.properties.get("switch").and_then(Value::as_str))
+            .map(str::to_string)
+            .collect();
+        assert_eq!(switches.len(), 5);
+    }
+
+    #[test]
+    fn failure_injection_round_trip() {
+        let c = VirtualCluster::tiny(3, 1);
+        assert!(c.is_reachable(2));
+        c.inject_failure(2);
+        assert!(!c.is_reachable(2));
+        assert_eq!(c.failed_nodes(), vec![2]);
+        c.repair(2);
+        assert!(c.is_reachable(2));
+        // unknown nodes are never reachable
+        assert!(!c.is_reachable(99));
+    }
+
+    #[test]
+    fn protocol_latencies_ordered() {
+        assert!(Protocol::Ssh.connect_micros() > Protocol::Rsh.connect_micros());
+    }
+}

@@ -1,0 +1,120 @@
+//! Accounting views over the jobs table — the "friendly and powerfull data
+//! analysis and extraction" the paper buys by using a real database (§1).
+//! These are the canned reports `oarstat --accounting` exposes.
+
+use std::collections::BTreeMap;
+
+
+use crate::types::{Job, JobState, Time};
+
+/// Per-user consumption summary.
+#[derive(Debug, Clone, Default)]
+pub struct UserUsage {
+    pub jobs_submitted: usize,
+    pub jobs_terminated: usize,
+    pub jobs_error: usize,
+    /// Σ (stopTime − startTime) · procs over completed jobs: CPU·seconds.
+    pub cpu_seconds: i64,
+    /// Σ wait time (startTime − submissionTime) over started jobs.
+    pub total_wait: i64,
+}
+
+/// Aggregated accounting over a set of job rows.
+#[derive(Debug, Clone, Default)]
+pub struct Accounting {
+    pub by_user: BTreeMap<String, UserUsage>,
+    pub by_queue: BTreeMap<String, usize>,
+    pub total_cpu_seconds: i64,
+    /// Mean response time (stop − submission) over terminated jobs.
+    pub mean_response_time: f64,
+}
+
+impl Accounting {
+    /// Build the report from job rows (typically `db.jobs_where(TRUE)`).
+    pub fn compute(jobs: &[Job]) -> Accounting {
+        let mut acc = Accounting::default();
+        let mut resp_sum: i64 = 0;
+        let mut resp_n: i64 = 0;
+        for j in jobs {
+            let u = acc.by_user.entry(j.user.clone()).or_default();
+            u.jobs_submitted += 1;
+            *acc.by_queue.entry(j.queue_name.clone()).or_default() += 1;
+            match j.state {
+                JobState::Terminated => {
+                    u.jobs_terminated += 1;
+                    if let (Some(start), Some(stop)) = (j.start_time, j.stop_time) {
+                        let cpu = (stop - start) * j.total_procs() as Time;
+                        u.cpu_seconds += cpu;
+                        acc.total_cpu_seconds += cpu;
+                    }
+                    if let Some(r) = j.response_time() {
+                        resp_sum += r;
+                        resp_n += 1;
+                    }
+                }
+                JobState::Error => u.jobs_error += 1,
+                _ => {}
+            }
+            if let Some(w) = j.wait_time() {
+                u.total_wait += w;
+            }
+        }
+        acc.mean_response_time = if resp_n > 0 {
+            resp_sum as f64 / resp_n as f64
+        } else {
+            0.0
+        };
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{JobKind, ReservationField};
+
+    fn job(user: &str, state: JobState, sub: Time, start: Option<Time>, stop: Option<Time>, procs: u32) -> Job {
+        Job {
+            id: 0,
+            kind: JobKind::Passive,
+            info_type: None,
+            state,
+            reservation: ReservationField::None,
+            message: String::new(),
+            user: user.into(),
+            nb_nodes: procs,
+            weight: 1,
+            command: String::new(),
+            bpid: None,
+            queue_name: "default".into(),
+            max_time: 100,
+            properties: String::new(),
+            launching_directory: String::new(),
+            submission_time: sub,
+            start_time: start,
+            stop_time: stop,
+            best_effort: false,
+            reservation_start: None,
+        }
+    }
+
+    #[test]
+    fn aggregates_per_user_and_total() {
+        let jobs = vec![
+            job("a", JobState::Terminated, 0, Some(10), Some(110), 2),
+            job("a", JobState::Error, 0, None, Some(5), 1),
+            job("b", JobState::Terminated, 50, Some(60), Some(70), 4),
+            job("b", JobState::Waiting, 100, None, None, 1),
+        ];
+        let acc = Accounting::compute(&jobs);
+        assert_eq!(acc.by_user["a"].jobs_submitted, 2);
+        assert_eq!(acc.by_user["a"].jobs_terminated, 1);
+        assert_eq!(acc.by_user["a"].jobs_error, 1);
+        assert_eq!(acc.by_user["a"].cpu_seconds, 200);
+        assert_eq!(acc.by_user["b"].cpu_seconds, 40);
+        assert_eq!(acc.total_cpu_seconds, 240);
+        // responses: (110-0)=110 and (70-50)=20 -> mean 65
+        assert_eq!(acc.mean_response_time, 65.0);
+        assert_eq!(acc.by_queue["default"], 4);
+    }
+}

@@ -1,0 +1,819 @@
+//! The SQL `WHERE`-expression engine.
+//!
+//! This is the language of the `properties` field of fig. 2 ("sql
+//! expression used to match ressources compatible with the job") and of
+//! ad-hoc queries against any table. Grammar (case-insensitive keywords):
+//!
+//! ```text
+//! expr     := or
+//! or       := and (OR and)*
+//! and      := not (AND not)*
+//! not      := NOT not | cmp
+//! cmp      := sum ((=|!=|<>|<|<=|>|>=) sum)
+//!           | sum LIKE string | sum NOT? IN '(' literal,* ')'
+//!           | sum IS NOT? NULL | sum BETWEEN sum AND sum
+//! sum      := primary (('+'|'-') primary)*
+//! primary  := literal | identifier | '(' expr ')'
+//! literal  := integer | float | 'single-quoted string' | TRUE | FALSE | NULL
+//! ```
+//!
+//! Besides exact evaluation against a row, conjunctive comparisons over
+//! numeric columns can be *compiled to interval constraints*
+//! ([`Expr::to_intervals`]) — this is the bridge from OAR's SQL matching to
+//! the dense L1 kernel: `mem >= 512 AND cpu_mhz > 2000` becomes per-property
+//! `[lo, hi]` rows of the `job_lo`/`job_hi` tensors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+
+use super::value::Value;
+use super::table::Row;
+
+/// Binary comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Parsed expression AST.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Literal(Value),
+    Column(String),
+    Cmp(CmpOp, Box<Expr>, Box<Expr>),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    Like(Box<Expr>, String),
+    In(Box<Expr>, Vec<Value>, /*negated*/ bool),
+    IsNull(Box<Expr>, /*negated*/ bool),
+    Between(Box<Expr>, Box<Expr>, Box<Expr>),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+}
+
+/// Parse error with position information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub message: String,
+    pub position: usize,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at {}: {}", self.position, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+// ------------------------------------------------------------ lexer ----
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Int(i64),
+    Real(f64),
+    Str(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn lex(src: &str) -> Result<Vec<(Tok, usize)>, ParseError> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        match c {
+            '(' => {
+                toks.push((Tok::LParen, start));
+                i += 1;
+            }
+            ')' => {
+                toks.push((Tok::RParen, start));
+                i += 1;
+            }
+            ',' => {
+                toks.push((Tok::Comma, start));
+                i += 1;
+            }
+            '+' => {
+                toks.push((Tok::Op("+"), start));
+                i += 1;
+            }
+            '-' => {
+                toks.push((Tok::Op("-"), start));
+                i += 1;
+            }
+            '=' => {
+                toks.push((Tok::Op("="), start));
+                i += 1;
+            }
+            '!' if bytes.get(i + 1) == Some(&b'=') => {
+                toks.push((Tok::Op("!="), start));
+                i += 2;
+            }
+            '<' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    toks.push((Tok::Op("<="), start));
+                    i += 2;
+                } else if bytes.get(i + 1) == Some(&b'>') {
+                    toks.push((Tok::Op("!="), start));
+                    i += 2;
+                } else {
+                    toks.push((Tok::Op("<"), start));
+                    i += 1;
+                }
+            }
+            '>' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    toks.push((Tok::Op(">="), start));
+                    i += 2;
+                } else {
+                    toks.push((Tok::Op(">"), start));
+                    i += 1;
+                }
+            }
+            '\'' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match bytes.get(i) {
+                        Some(b'\'') if bytes.get(i + 1) == Some(&b'\'') => {
+                            s.push('\'');
+                            i += 2;
+                        }
+                        Some(b'\'') => {
+                            i += 1;
+                            break;
+                        }
+                        Some(&b) => {
+                            s.push(b as char);
+                            i += 1;
+                        }
+                        None => {
+                            return Err(ParseError {
+                                message: "unterminated string".into(),
+                                position: start,
+                            })
+                        }
+                    }
+                }
+                toks.push((Tok::Str(s), start));
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                let mut is_real = false;
+                while j < bytes.len()
+                    && ((bytes[j] as char).is_ascii_digit() || bytes[j] == b'.')
+                {
+                    if bytes[j] == b'.' {
+                        is_real = true;
+                    }
+                    j += 1;
+                }
+                let text = &src[i..j];
+                if is_real {
+                    let v = text.parse::<f64>().map_err(|e| ParseError {
+                        message: format!("bad number {text}: {e}"),
+                        position: start,
+                    })?;
+                    toks.push((Tok::Real(v), start));
+                } else {
+                    let v = text.parse::<i64>().map_err(|e| ParseError {
+                        message: format!("bad number {text}: {e}"),
+                        position: start,
+                    })?;
+                    toks.push((Tok::Int(v), start));
+                }
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < bytes.len()
+                    && ((bytes[j] as char).is_ascii_alphanumeric() || bytes[j] == b'_')
+                {
+                    j += 1;
+                }
+                toks.push((Tok::Ident(src[i..j].to_string()), start));
+                i = j;
+            }
+            other => {
+                return Err(ParseError {
+                    message: format!("unexpected character {other:?}"),
+                    position: start,
+                })
+            }
+        }
+    }
+    Ok(toks)
+}
+
+// ----------------------------------------------------------- parser ----
+
+struct Parser {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn peek_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Tok::Ident(s)) if s.eq_ignore_ascii_case(kw))
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|(t, _)| t.clone());
+        self.pos += 1;
+        t
+    }
+
+    fn here(&self) -> usize {
+        self.toks
+            .get(self.pos)
+            .or_else(|| self.toks.last())
+            .map(|(_, p)| *p)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError {
+            message: msg.into(),
+            position: self.here(),
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), ParseError> {
+        if self.peek_kw(kw) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {kw}")))
+        }
+    }
+
+    fn parse_or(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_and()?;
+        while self.peek_kw("OR") {
+            self.pos += 1;
+            let rhs = self.parse_and()?;
+            lhs = Expr::Or(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_and(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_not()?;
+        while self.peek_kw("AND") {
+            self.pos += 1;
+            let rhs = self.parse_not()?;
+            lhs = Expr::And(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_not(&mut self) -> Result<Expr, ParseError> {
+        if self.peek_kw("NOT") {
+            self.pos += 1;
+            let inner = self.parse_not()?;
+            return Ok(Expr::Not(Box::new(inner)));
+        }
+        self.parse_cmp()
+    }
+
+    fn parse_cmp(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.parse_sum()?;
+        // IS [NOT] NULL
+        if self.peek_kw("IS") {
+            self.pos += 1;
+            let negated = if self.peek_kw("NOT") {
+                self.pos += 1;
+                true
+            } else {
+                false
+            };
+            self.expect_kw("NULL")?;
+            return Ok(Expr::IsNull(Box::new(lhs), negated));
+        }
+        // [NOT] IN / LIKE
+        let negated_in = if self.peek_kw("NOT") {
+            self.pos += 1;
+            true
+        } else {
+            false
+        };
+        if self.peek_kw("LIKE") {
+            self.pos += 1;
+            match self.bump() {
+                Some(Tok::Str(p)) => {
+                    let like = Expr::Like(Box::new(lhs), p);
+                    return Ok(if negated_in {
+                        Expr::Not(Box::new(like))
+                    } else {
+                        like
+                    });
+                }
+                _ => return Err(self.err("LIKE expects a string pattern")),
+            }
+        }
+        if self.peek_kw("IN") {
+            self.pos += 1;
+            if self.bump() != Some(Tok::LParen) {
+                return Err(self.err("IN expects '('"));
+            }
+            let mut items = Vec::new();
+            loop {
+                match self.bump() {
+                    Some(Tok::Int(i)) => items.push(Value::Int(i)),
+                    Some(Tok::Real(r)) => items.push(Value::Real(r)),
+                    Some(Tok::Str(s)) => items.push(Value::Text(s)),
+                    _ => return Err(self.err("IN list expects literals")),
+                }
+                match self.bump() {
+                    Some(Tok::Comma) => continue,
+                    Some(Tok::RParen) => break,
+                    _ => return Err(self.err("expected ',' or ')' in IN list")),
+                }
+            }
+            return Ok(Expr::In(Box::new(lhs), items, negated_in));
+        }
+        if negated_in {
+            return Err(self.err("dangling NOT"));
+        }
+        if self.peek_kw("BETWEEN") {
+            self.pos += 1;
+            let lo = self.parse_sum()?;
+            self.expect_kw("AND")?;
+            let hi = self.parse_sum()?;
+            return Ok(Expr::Between(Box::new(lhs), Box::new(lo), Box::new(hi)));
+        }
+        let op = match self.peek() {
+            Some(Tok::Op("=")) => Some(CmpOp::Eq),
+            Some(Tok::Op("!=")) => Some(CmpOp::Ne),
+            Some(Tok::Op("<")) => Some(CmpOp::Lt),
+            Some(Tok::Op("<=")) => Some(CmpOp::Le),
+            Some(Tok::Op(">")) => Some(CmpOp::Gt),
+            Some(Tok::Op(">=")) => Some(CmpOp::Ge),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.pos += 1;
+            let rhs = self.parse_sum()?;
+            return Ok(Expr::Cmp(op, Box::new(lhs), Box::new(rhs)));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_sum(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_primary()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Op("+")) => {
+                    self.pos += 1;
+                    let rhs = self.parse_primary()?;
+                    lhs = Expr::Add(Box::new(lhs), Box::new(rhs));
+                }
+                Some(Tok::Op("-")) => {
+                    self.pos += 1;
+                    let rhs = self.parse_primary()?;
+                    lhs = Expr::Sub(Box::new(lhs), Box::new(rhs));
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn parse_primary(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Some(Tok::Int(i)) => Ok(Expr::Literal(Value::Int(i))),
+            Some(Tok::Real(r)) => Ok(Expr::Literal(Value::Real(r))),
+            Some(Tok::Str(s)) => Ok(Expr::Literal(Value::Text(s))),
+            Some(Tok::Op("-")) => match self.bump() {
+                Some(Tok::Int(i)) => Ok(Expr::Literal(Value::Int(-i))),
+                Some(Tok::Real(r)) => Ok(Expr::Literal(Value::Real(-r))),
+                _ => Err(self.err("expected number after unary -")),
+            },
+            Some(Tok::Ident(s)) if s.eq_ignore_ascii_case("TRUE") => {
+                Ok(Expr::Literal(Value::Bool(true)))
+            }
+            Some(Tok::Ident(s)) if s.eq_ignore_ascii_case("FALSE") => {
+                Ok(Expr::Literal(Value::Bool(false)))
+            }
+            Some(Tok::Ident(s)) if s.eq_ignore_ascii_case("NULL") => {
+                Ok(Expr::Literal(Value::Null))
+            }
+            Some(Tok::Ident(s)) => Ok(Expr::Column(s)),
+            Some(Tok::LParen) => {
+                let e = self.parse_or()?;
+                if self.bump() != Some(Tok::RParen) {
+                    return Err(self.err("expected ')'"));
+                }
+                Ok(e)
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+}
+
+// -------------------------------------------------------- evaluation ----
+
+impl Expr {
+    /// Parse a WHERE clause. An empty/whitespace string parses to `TRUE`
+    /// (a job without a `properties` constraint matches every node).
+    pub fn parse(src: &str) -> Result<Expr, ParseError> {
+        if src.trim().is_empty() {
+            return Ok(Expr::Literal(Value::Bool(true)));
+        }
+        let toks = lex(src)?;
+        let mut p = Parser { toks, pos: 0 };
+        let e = p.parse_or()?;
+        if p.pos != p.toks.len() {
+            return Err(p.err("trailing tokens"));
+        }
+        Ok(e)
+    }
+
+    /// Evaluate against a row to a value (missing columns read as NULL).
+    pub fn eval(&self, row: &Row) -> Value {
+        match self {
+            Expr::Literal(v) => v.clone(),
+            Expr::Column(name) => row.get(name).cloned().unwrap_or(Value::Null),
+            Expr::Cmp(op, a, b) => {
+                let (va, vb) = (a.eval(row), b.eval(row));
+                match va.compare(&vb) {
+                    None => {
+                        // Ne on comparable-but-unequal types: still false
+                        // under three-valued logic when NULL is involved.
+                        if matches!(op, CmpOp::Ne)
+                            && !va.is_null()
+                            && !vb.is_null()
+                        {
+                            Value::Bool(true)
+                        } else {
+                            Value::Bool(false)
+                        }
+                    }
+                    Some(ord) => Value::Bool(match op {
+                        CmpOp::Eq => ord == std::cmp::Ordering::Equal,
+                        CmpOp::Ne => ord != std::cmp::Ordering::Equal,
+                        CmpOp::Lt => ord == std::cmp::Ordering::Less,
+                        CmpOp::Le => ord != std::cmp::Ordering::Greater,
+                        CmpOp::Gt => ord == std::cmp::Ordering::Greater,
+                        CmpOp::Ge => ord != std::cmp::Ordering::Less,
+                    }),
+                }
+            }
+            Expr::And(a, b) => {
+                Value::Bool(a.eval(row).is_truthy() && b.eval(row).is_truthy())
+            }
+            Expr::Or(a, b) => {
+                Value::Bool(a.eval(row).is_truthy() || b.eval(row).is_truthy())
+            }
+            Expr::Not(a) => Value::Bool(!a.eval(row).is_truthy()),
+            Expr::Like(a, pat) => match a.eval(row) {
+                Value::Text(s) => Value::Bool(like_match(&s, pat)),
+                _ => Value::Bool(false),
+            },
+            Expr::In(a, items, negated) => {
+                let v = a.eval(row);
+                let found = items.iter().any(|it| v.sql_eq(it));
+                Value::Bool(found != *negated)
+            }
+            Expr::IsNull(a, negated) => Value::Bool(a.eval(row).is_null() != *negated),
+            Expr::Between(a, lo, hi) => {
+                let v = a.eval(row);
+                let (l, h) = (lo.eval(row), hi.eval(row));
+                let ok = matches!(
+                    v.compare(&l),
+                    Some(std::cmp::Ordering::Greater | std::cmp::Ordering::Equal)
+                ) && matches!(
+                    v.compare(&h),
+                    Some(std::cmp::Ordering::Less | std::cmp::Ordering::Equal)
+                );
+                Value::Bool(ok)
+            }
+            Expr::Add(a, b) => num_binop(a.eval(row), b.eval(row), |x, y| x + y),
+            Expr::Sub(a, b) => num_binop(a.eval(row), b.eval(row), |x, y| x - y),
+        }
+    }
+
+    /// WHERE-clause result: truthiness of [`Expr::eval`].
+    pub fn matches(&self, row: &Row) -> bool {
+        self.eval(row).is_truthy()
+    }
+
+    /// Column names referenced by the expression.
+    pub fn columns(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_columns(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_columns(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Literal(_) => {}
+            Expr::Column(c) => out.push(c.clone()),
+            Expr::Cmp(_, a, b)
+            | Expr::And(a, b)
+            | Expr::Or(a, b)
+            | Expr::Add(a, b)
+            | Expr::Sub(a, b) => {
+                a.collect_columns(out);
+                b.collect_columns(out);
+            }
+            Expr::Not(a) | Expr::Like(a, _) | Expr::In(a, _, _) | Expr::IsNull(a, _) => {
+                a.collect_columns(out)
+            }
+            Expr::Between(a, lo, hi) => {
+                a.collect_columns(out);
+                lo.collect_columns(out);
+                hi.collect_columns(out);
+            }
+        }
+    }
+
+    /// Compile a *conjunctive numeric* expression to per-column interval
+    /// constraints `[lo, hi]` — the bridge to the L1 matching kernel.
+    /// Returns `None` when the expression is not interval-expressible
+    /// (OR, NOT, LIKE, text comparisons...), in which case the matcher
+    /// falls back to exact row-by-row evaluation.
+    pub fn to_intervals(&self) -> Option<BTreeMap<String, (f64, f64)>> {
+        let mut map = BTreeMap::new();
+        if self.fill_intervals(&mut map) {
+            Some(map)
+        } else {
+            None
+        }
+    }
+
+    fn fill_intervals(&self, map: &mut BTreeMap<String, (f64, f64)>) -> bool {
+        fn tighten(map: &mut BTreeMap<String, (f64, f64)>, col: &str, lo: f64, hi: f64) {
+            let e = map
+                .entry(col.to_string())
+                .or_insert((f64::NEG_INFINITY, f64::INFINITY));
+            e.0 = e.0.max(lo);
+            e.1 = e.1.min(hi);
+        }
+        match self {
+            Expr::Literal(Value::Bool(true)) => true,
+            Expr::And(a, b) => fill2(a, b, map),
+            Expr::Cmp(op, a, b) => {
+                // Accept `col OP literal` and `literal OP col`.
+                let (col, lit, op) = match (&**a, &**b) {
+                    (Expr::Column(c), Expr::Literal(v)) => (c, v, *op),
+                    (Expr::Literal(v), Expr::Column(c)) => (c, v, flip(*op)),
+                    _ => return false,
+                };
+                let x = match lit.as_f64() {
+                    Some(x) => x,
+                    None => return false,
+                };
+                match op {
+                    CmpOp::Eq => tighten(map, col, x, x),
+                    CmpOp::Le => tighten(map, col, f64::NEG_INFINITY, x),
+                    CmpOp::Lt => tighten(map, col, f64::NEG_INFINITY, x.next_down()),
+                    CmpOp::Ge => tighten(map, col, x, f64::INFINITY),
+                    CmpOp::Gt => tighten(map, col, x.next_up(), f64::INFINITY),
+                    CmpOp::Ne => return false,
+                }
+                true
+            }
+            Expr::Between(a, lo, hi) => {
+                let col = match &**a {
+                    Expr::Column(c) => c,
+                    _ => return false,
+                };
+                let (l, h) = match (&**lo, &**hi) {
+                    (Expr::Literal(l), Expr::Literal(h)) => {
+                        match (l.as_f64(), h.as_f64()) {
+                            (Some(l), Some(h)) => (l, h),
+                            _ => return false,
+                        }
+                    }
+                    _ => return false,
+                };
+                tighten(map, col, l, h);
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+fn fill2(a: &Expr, b: &Expr, map: &mut BTreeMap<String, (f64, f64)>) -> bool {
+    a.fill_intervals(map) && b.fill_intervals(map)
+}
+
+fn flip(op: CmpOp) -> CmpOp {
+    match op {
+        CmpOp::Lt => CmpOp::Gt,
+        CmpOp::Le => CmpOp::Ge,
+        CmpOp::Gt => CmpOp::Lt,
+        CmpOp::Ge => CmpOp::Le,
+        other => other,
+    }
+}
+
+fn num_binop(a: Value, b: Value, f: impl Fn(f64, f64) -> f64) -> Value {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => Value::Real(f(x, y)),
+        _ => Value::Null,
+    }
+}
+
+/// SQL LIKE with `%` (any run) and `_` (any char); case-sensitive.
+fn like_match(s: &str, pat: &str) -> bool {
+    fn rec(s: &[u8], p: &[u8]) -> bool {
+        match p.first() {
+            None => s.is_empty(),
+            Some(b'%') => {
+                (0..=s.len()).any(|k| rec(&s[k..], &p[1..]))
+            }
+            Some(b'_') => !s.is_empty() && rec(&s[1..], &p[1..]),
+            Some(&c) => s.first() == Some(&c) && rec(&s[1..], &p[1..]),
+        }
+    }
+    rec(s.as_bytes(), pat.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(pairs: &[(&str, Value)]) -> Row {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_eval_comparison() {
+        let e = Expr::parse("mem >= 512").unwrap();
+        assert!(e.matches(&row(&[("mem", Value::Int(512))])));
+        assert!(!e.matches(&row(&[("mem", Value::Int(256))])));
+    }
+
+    #[test]
+    fn conjunction_and_disjunction() {
+        let e = Expr::parse("mem >= 512 AND switch = 'sw1' OR cpu_mhz > 2000").unwrap();
+        assert!(e.matches(&row(&[
+            ("mem", Value::Int(1024)),
+            ("switch", Value::Text("sw1".into())),
+            ("cpu_mhz", Value::Int(733)),
+        ])));
+        assert!(e.matches(&row(&[
+            ("mem", Value::Int(0)),
+            ("switch", Value::Text("x".into())),
+            ("cpu_mhz", Value::Int(2400)),
+        ])));
+        assert!(!e.matches(&row(&[
+            ("mem", Value::Int(0)),
+            ("switch", Value::Text("x".into())),
+            ("cpu_mhz", Value::Int(733)),
+        ])));
+    }
+
+    #[test]
+    fn precedence_and_binds_tighter_than_or() {
+        // a OR b AND c === a OR (b AND c)
+        let e = Expr::parse("a = 1 OR b = 1 AND c = 1").unwrap();
+        assert!(e.matches(&row(&[
+            ("a", Value::Int(1)),
+            ("b", Value::Int(0)),
+            ("c", Value::Int(0)),
+        ])));
+        assert!(!e.matches(&row(&[
+            ("a", Value::Int(0)),
+            ("b", Value::Int(1)),
+            ("c", Value::Int(0)),
+        ])));
+    }
+
+    #[test]
+    fn missing_column_is_null_and_never_matches() {
+        let e = Expr::parse("mem >= 0").unwrap();
+        assert!(!e.matches(&row(&[])));
+        let e = Expr::parse("mem IS NULL").unwrap();
+        assert!(e.matches(&row(&[])));
+    }
+
+    #[test]
+    fn like_patterns() {
+        let e = Expr::parse("hostname LIKE 'node-%'").unwrap();
+        assert!(e.matches(&row(&[("hostname", Value::Text("node-17".into()))])));
+        assert!(!e.matches(&row(&[("hostname", Value::Text("server".into()))])));
+        let e = Expr::parse("hostname LIKE 'n_de'").unwrap();
+        assert!(e.matches(&row(&[("hostname", Value::Text("node".into()))])));
+        assert!(!e.matches(&row(&[("hostname", Value::Text("noode".into()))])));
+    }
+
+    #[test]
+    fn in_and_not_in() {
+        let e = Expr::parse("switch IN ('sw1', 'sw2')").unwrap();
+        assert!(e.matches(&row(&[("switch", Value::Text("sw2".into()))])));
+        assert!(!e.matches(&row(&[("switch", Value::Text("sw3".into()))])));
+        let e = Expr::parse("switch NOT IN ('sw1')").unwrap();
+        assert!(e.matches(&row(&[("switch", Value::Text("sw9".into()))])));
+    }
+
+    #[test]
+    fn between() {
+        let e = Expr::parse("mem BETWEEN 256 AND 512").unwrap();
+        assert!(e.matches(&row(&[("mem", Value::Int(256))])));
+        assert!(e.matches(&row(&[("mem", Value::Int(512))])));
+        assert!(!e.matches(&row(&[("mem", Value::Int(513))])));
+    }
+
+    #[test]
+    fn empty_expression_matches_everything() {
+        let e = Expr::parse("  ").unwrap();
+        assert!(e.matches(&row(&[])));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let e = Expr::parse("mem + swap >= 1024").unwrap();
+        assert!(e.matches(&row(&[
+            ("mem", Value::Int(512)),
+            ("swap", Value::Int(512)),
+        ])));
+        assert!(!e.matches(&row(&[
+            ("mem", Value::Int(512)),
+            ("swap", Value::Int(0)),
+        ])));
+    }
+
+    #[test]
+    fn parse_errors_carry_position() {
+        let err = Expr::parse("mem >=").unwrap_err();
+        assert!(err.position > 0);
+        assert!(Expr::parse("mem @@ 3").is_err());
+        assert!(Expr::parse("(mem > 1").is_err());
+        assert!(Expr::parse("mem > 1 extra").is_err());
+    }
+
+    #[test]
+    fn intervals_simple_conjunction() {
+        let e = Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND mem <= 2048").unwrap();
+        let iv = e.to_intervals().unwrap();
+        assert_eq!(iv["mem"].0, 512.0);
+        assert_eq!(iv["mem"].1, 2048.0);
+        assert!(iv["cpu_mhz"].0 > 2000.0);
+        assert_eq!(iv["cpu_mhz"].1, f64::INFINITY);
+    }
+
+    #[test]
+    fn intervals_equality_and_flipped() {
+        let e = Expr::parse("512 <= mem AND nb_procs = 2").unwrap();
+        let iv = e.to_intervals().unwrap();
+        assert_eq!(iv["mem"], (512.0, f64::INFINITY));
+        assert_eq!(iv["nb_procs"], (2.0, 2.0));
+    }
+
+    #[test]
+    fn intervals_reject_disjunction_and_text() {
+        assert!(Expr::parse("mem >= 1 OR mem <= 0").unwrap().to_intervals().is_none());
+        assert!(Expr::parse("switch = 'sw1'").unwrap().to_intervals().is_none());
+        assert!(Expr::parse("NOT mem > 1").unwrap().to_intervals().is_none());
+    }
+
+    #[test]
+    fn intervals_match_eval_semantics() {
+        // For interval-expressible expressions, interval containment must
+        // agree with exact evaluation (this is the kernel-vs-SQL bridge).
+        let e = Expr::parse("mem >= 512 AND cpu_mhz BETWEEN 1000 AND 3000").unwrap();
+        let iv = e.to_intervals().unwrap();
+        for mem in [0i64, 511, 512, 4096] {
+            for mhz in [999i64, 1000, 3000, 3001] {
+                let r = row(&[("mem", Value::Int(mem)), ("cpu_mhz", Value::Int(mhz))]);
+                let exact = e.matches(&r);
+                let via_iv = (mem as f64) >= iv["mem"].0
+                    && (mem as f64) <= iv["mem"].1
+                    && (mhz as f64) >= iv["cpu_mhz"].0
+                    && (mhz as f64) <= iv["cpu_mhz"].1;
+                assert_eq!(exact, via_iv, "mem={mem} mhz={mhz}");
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Event log: the paper's logging requirement ("user-friendly logging
+//! information analysis" is one of the four user needs of §1; a module
+//! handles "errors logging" in §2). Events are rows too, so the same
+//! query machinery analyzes them.
+
+
+use crate::types::{JobId, Time};
+
+/// One logged event.
+#[derive(Debug, Clone)]
+pub struct EventRecord {
+    pub time: Time,
+    /// Event kind, e.g. `SUBMISSION`, `SCHEDULED`, `LAUNCH`, `TERMINATED`,
+    /// `ERROR`, `BESTEFFORT_KILL`, `NODE_SUSPECTED`, `SCHEDULER_ROUND`.
+    pub kind: String,
+    pub job: Option<JobId>,
+    pub detail: String,
+}
+
+/// Append-only event log.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    records: Vec<EventRecord>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn append(&mut self, rec: EventRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn all(&self) -> &[EventRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Events of one kind, in time order.
+    pub fn of_kind(&self, kind: &str) -> Vec<&EventRecord> {
+        self.records.iter().filter(|r| r.kind == kind).collect()
+    }
+
+    /// Events concerning one job.
+    pub fn of_job(&self, job: JobId) -> Vec<&EventRecord> {
+        self.records.iter().filter(|r| r.job == Some(job)).collect()
+    }
+
+    /// Snapshot encoding.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("t", Json::Num(r.time as f64)),
+                        ("k", Json::Str(r.kind.clone())),
+                        (
+                            "j",
+                            r.job.map(|j| Json::Num(j as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("d", Json::Str(r.detail.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Decode the [`EventLog::to_json`] encoding.
+    pub fn from_json(j: &crate::util::Json) -> crate::Result<EventLog> {
+        use crate::util::Json;
+        let mut log = EventLog::new();
+        for item in j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("event log must be an array"))?
+        {
+            log.append(EventRecord {
+                time: item.get("t").and_then(Json::as_i64).unwrap_or(0),
+                kind: item
+                    .get("k")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                job: item.get("j").and_then(Json::as_i64).map(|v| v as JobId),
+                detail: item
+                    .get("d")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filtering() {
+        let mut log = EventLog::new();
+        log.append(EventRecord { time: 1, kind: "SUBMISSION".into(), job: Some(1), detail: "".into() });
+        log.append(EventRecord { time: 2, kind: "SCHEDULED".into(), job: Some(1), detail: "".into() });
+        log.append(EventRecord { time: 3, kind: "SUBMISSION".into(), job: Some(2), detail: "".into() });
+        assert_eq!(log.of_kind("SUBMISSION").len(), 2);
+        assert_eq!(log.of_job(1).len(), 2);
+        assert_eq!(log.len(), 3);
+    }
+}

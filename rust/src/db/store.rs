@@ -1,0 +1,808 @@
+//! The database: OAR's full schema plus typed accessors.
+//!
+//! Tables, as in the paper: `jobs` (fig. 2), `nodes`, `assignments`
+//! ("a table for describing the assignment of nodes to jobs"), `queues`,
+//! `admission_rules` ("rules are stored as Perl code in the database" —
+//! here as rule-DSL source, §2.1) and `events` (logging/accounting).
+//!
+//! Jobs and nodes genuinely live as rows; the typed [`crate::types::Job`]
+//! view is converted on the way in and out, so every module interaction is
+//! an honest table read/write and can be counted — [`QueryStats`]
+//! reproduces the paper's "350 SQL queries for the processing of 10 jobs"
+//! measurement (§3.2.2).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+
+use crate::types::{
+    Job, JobId, JobKind, JobState, Node, NodeId, NodeState, Queue, QueuePolicyKind,
+    ReservationField, Time,
+};
+
+use super::expr::Expr;
+use super::log::{EventLog, EventRecord};
+use super::table::{Row, Table};
+use super::value::Value;
+
+/// Errors surfaced by database operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DbError {
+    JobNotFound(JobId),
+    NodeNotFound(NodeId),
+    QueueNotFound(String),
+    IllegalTransition { job: JobId, from: JobState, to: JobState },
+    Corrupt(String),
+    Parse(String),
+}
+
+impl std::fmt::Display for DbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DbError::JobNotFound(id) => write!(f, "job {id} not found"),
+            DbError::NodeNotFound(id) => write!(f, "node {id} not found"),
+            DbError::QueueNotFound(q) => write!(f, "queue {q:?} not found"),
+            DbError::IllegalTransition { job, from, to } => {
+                write!(f, "job {job}: illegal transition {from} -> {to}")
+            }
+            DbError::Corrupt(m) => write!(f, "corrupt row: {m}"),
+            DbError::Parse(m) => write!(f, "parse: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DbError {}
+
+/// Counters of SQL-equivalent statements, by kind.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueryStats {
+    pub selects: u64,
+    pub inserts: u64,
+    pub updates: u64,
+    pub deletes: u64,
+}
+
+impl QueryStats {
+    pub fn total(&self) -> u64 {
+        self.selects + self.inserts + self.updates + self.deletes
+    }
+}
+
+/// The whole database. Shared between modules as [`DbHandle`] — the only
+/// communication medium, as in the paper.
+#[derive(Debug, Default)]
+pub struct Db {
+    jobs: Table,
+    nodes: Table,
+    assignments: Table,
+    queues: Table,
+    admission_rules: Table,
+    events: EventLog,
+    stats: QueryStats,
+}
+
+/// Shared handle; modules hold this and nothing else.
+pub type DbHandle = Arc<Mutex<Db>>;
+
+impl Db {
+    pub fn new() -> Db {
+        Db {
+            jobs: Table::new("jobs"),
+            nodes: Table::new("nodes"),
+            assignments: Table::new("assignments"),
+            queues: Table::new("queues"),
+            admission_rules: Table::new("admission_rules"),
+            events: EventLog::new(),
+            stats: QueryStats::default(),
+        }
+    }
+
+    /// Fresh database preloaded with the standard queue set.
+    pub fn with_standard_queues() -> Db {
+        let mut db = Db::new();
+        for q in Queue::standard_set() {
+            db.add_queue(q);
+        }
+        db
+    }
+
+    pub fn into_handle(self) -> DbHandle {
+        Arc::new(Mutex::new(self))
+    }
+
+    // ------------------------------------------------------- queries ----
+
+    pub fn stats(&self) -> QueryStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = QueryStats::default();
+    }
+
+    // ---------------------------------------------------------- jobs ----
+
+    /// INSERT a job row; returns the assigned `idJob`.
+    pub fn insert_job(&mut self, mut job: Job) -> JobId {
+        self.stats.inserts += 1;
+        let row = job_to_row(&job);
+        let id = self.jobs.insert(row);
+        job.id = id;
+        id
+    }
+
+    pub fn job(&mut self, id: JobId) -> Result<Job, DbError> {
+        self.stats.selects += 1;
+        let row = self.jobs.get(id).ok_or(DbError::JobNotFound(id))?;
+        job_from_row(row)
+    }
+
+    pub fn job_count(&mut self) -> usize {
+        self.stats.selects += 1;
+        self.jobs.len()
+    }
+
+    /// All jobs matching a WHERE clause over the raw job columns.
+    pub fn jobs_where(&mut self, filter: &Expr) -> Vec<Job> {
+        self.stats.selects += 1;
+        self.jobs
+            .select(filter)
+            .iter()
+            .filter_map(|(_, r)| job_from_row(r).ok())
+            .collect()
+    }
+
+    pub fn jobs_in_state(&mut self, state: JobState) -> Vec<Job> {
+        self.stats.selects += 1;
+        self.jobs
+            .iter()
+            .filter(|(_, r)| r.get("state").and_then(Value::as_str) == Some(state.as_str()))
+            .filter_map(|(_, r)| job_from_row(r).ok())
+            .collect()
+    }
+
+    /// Waiting jobs of one queue, in submission (id) order.
+    pub fn waiting_jobs_in_queue(&mut self, queue: &str) -> Vec<Job> {
+        self.stats.selects += 1;
+        self.jobs
+            .iter()
+            .filter(|(_, r)| {
+                r.get("state").and_then(Value::as_str) == Some("Waiting")
+                    && r.get("queueName").and_then(Value::as_str) == Some(queue)
+            })
+            .filter_map(|(_, r)| job_from_row(r).ok())
+            .collect()
+    }
+
+    /// Validated state transition (fig. 1); the heart of the coherence
+    /// discipline. Also stamps start/stop times at the relevant edges.
+    pub fn set_job_state(
+        &mut self,
+        id: JobId,
+        to: JobState,
+        now: Time,
+    ) -> Result<(), DbError> {
+        self.stats.selects += 1;
+        let row = self.jobs.get_mut(id).ok_or(DbError::JobNotFound(id))?;
+        let from = row
+            .get("state")
+            .and_then(Value::as_str)
+            .and_then(JobState::parse)
+            .ok_or_else(|| DbError::Corrupt(format!("job {id} has bad state")))?;
+        if !from.can_transition_to(to) {
+            return Err(DbError::IllegalTransition { job: id, from, to });
+        }
+        self.stats.updates += 1;
+        row.insert("state".into(), Value::Text(to.as_str().into()));
+        match to {
+            JobState::Running => {
+                row.insert("startTime".into(), Value::Int(now));
+            }
+            JobState::Terminated | JobState::Error => {
+                row.insert("stopTime".into(), Value::Int(now));
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Force the abnormal path from any live state: `* → toError → Error`.
+    pub fn fail_job(&mut self, id: JobId, reason: &str, now: Time) -> Result<(), DbError> {
+        let state = self.job(id)?.state;
+        if state.is_terminal() {
+            return Ok(());
+        }
+        if state != JobState::ToError {
+            self.set_job_state(id, JobState::ToError, now)?;
+        }
+        self.set_job_message(id, reason)?;
+        self.set_job_state(id, JobState::Error, now)
+    }
+
+    pub fn set_job_message(&mut self, id: JobId, message: &str) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        let row = self.jobs.get_mut(id).ok_or(DbError::JobNotFound(id))?;
+        row.insert("message".into(), Value::Text(message.into()));
+        Ok(())
+    }
+
+    pub fn set_job_bpid(&mut self, id: JobId, bpid: Option<u32>) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        let row = self.jobs.get_mut(id).ok_or(DbError::JobNotFound(id))?;
+        row.insert(
+            "bpid".into(),
+            bpid.map(|p| Value::Int(p as i64)).unwrap_or(Value::Null),
+        );
+        Ok(())
+    }
+
+    pub fn set_job_reservation(
+        &mut self,
+        id: JobId,
+        f: ReservationField,
+    ) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        let row = self.jobs.get_mut(id).ok_or(DbError::JobNotFound(id))?;
+        row.insert("reservation".into(), Value::Text(f.as_str().into()));
+        Ok(())
+    }
+
+    // --------------------------------------------------------- nodes ----
+
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        self.stats.inserts += 1;
+        let row = node_to_row(&node);
+        self.nodes.insert(row);
+        node.id
+    }
+
+    pub fn node(&mut self, id: NodeId) -> Result<Node, DbError> {
+        self.stats.selects += 1;
+        self.nodes
+            .iter()
+            .find(|(_, r)| r.get("nodeId").and_then(Value::as_i64) == Some(id as i64))
+            .map(|(_, r)| node_from_row(r))
+            .ok_or(DbError::NodeNotFound(id))?
+    }
+
+    pub fn all_nodes(&mut self) -> Vec<Node> {
+        self.stats.selects += 1;
+        self.nodes
+            .iter()
+            .filter_map(|(_, r)| node_from_row(r).ok())
+            .collect()
+    }
+
+    pub fn alive_nodes(&mut self) -> Vec<Node> {
+        self.stats.selects += 1;
+        self.nodes
+            .iter()
+            .filter_map(|(_, r)| node_from_row(r).ok())
+            .filter(Node::is_alive)
+            .collect()
+    }
+
+    pub fn set_node_state(&mut self, id: NodeId, state: NodeState) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        let row = self
+            .nodes
+            .iter()
+            .find(|(_, r)| r.get("nodeId").and_then(Value::as_i64) == Some(id as i64))
+            .map(|(rid, _)| *rid)
+            .ok_or(DbError::NodeNotFound(id))?;
+        let row = self.nodes.get_mut(row).unwrap();
+        row.insert("state".into(), Value::Text(state.as_str().into()));
+        Ok(())
+    }
+
+    /// Nodes whose property row matches a job's `properties` expression —
+    /// the SQL resource-matching path ("using the rich expressive power of
+    /// sql queries", §2). One SELECT per call.
+    pub fn matching_nodes(&mut self, properties: &str) -> Result<Vec<Node>, DbError> {
+        self.stats.selects += 1;
+        let expr = Expr::parse(properties).map_err(|e| DbError::Parse(e.to_string()))?;
+        Ok(self
+            .nodes
+            .iter()
+            .filter_map(|(_, r)| node_from_row(r).ok())
+            .filter(|n| n.is_alive() && expr.matches(&n.property_row()))
+            .collect())
+    }
+
+    // --------------------------------------------------- assignments ----
+
+    /// Record that `job` runs on `nodes` (`procs_per_node` each).
+    pub fn assign_nodes(&mut self, job: JobId, nodes: &[NodeId], procs_per_node: u32) {
+        for n in nodes {
+            self.stats.inserts += 1;
+            let mut row = Row::new();
+            row.insert("jobId".into(), Value::Int(job as i64));
+            row.insert("nodeId".into(), Value::Int(*n as i64));
+            row.insert("procs".into(), Value::Int(procs_per_node as i64));
+            self.assignments.insert(row);
+        }
+    }
+
+    pub fn assigned_nodes(&mut self, job: JobId) -> Vec<NodeId> {
+        self.stats.selects += 1;
+        self.assignments
+            .iter()
+            .filter(|(_, r)| r.get("jobId").and_then(Value::as_i64) == Some(job as i64))
+            .filter_map(|(_, r)| r.get("nodeId").and_then(Value::as_i64))
+            .map(|n| n as NodeId)
+            .collect()
+    }
+
+    /// Busy processors per node, derived from assignments of live jobs.
+    pub fn busy_procs_by_node(&mut self) -> BTreeMap<NodeId, u32> {
+        self.stats.selects += 2; // join over jobs + assignments
+        let live: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, r)| {
+                r.get("state")
+                    .and_then(Value::as_str)
+                    .and_then(JobState::parse)
+                    .map(JobState::holds_resources)
+                    .unwrap_or(false)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        let mut busy = BTreeMap::new();
+        for (_, r) in self.assignments.iter() {
+            let jid = r.get("jobId").and_then(Value::as_i64).unwrap_or(-1) as JobId;
+            if live.contains(&jid) {
+                let nid = r.get("nodeId").and_then(Value::as_i64).unwrap_or(-1) as NodeId;
+                let procs = r.get("procs").and_then(Value::as_i64).unwrap_or(0) as u32;
+                *busy.entry(nid).or_insert(0) += procs;
+            }
+        }
+        busy
+    }
+
+    // -------------------------------------------------------- queues ----
+
+    pub fn add_queue(&mut self, q: Queue) {
+        self.stats.inserts += 1;
+        let mut row = Row::new();
+        row.insert("name".into(), Value::Text(q.name.clone()));
+        row.insert("priority".into(), Value::Int(q.priority as i64));
+        row.insert("policy".into(), Value::Text(q.policy.as_str().into()));
+        row.insert("defaultMaxTime".into(), Value::Int(q.default_max_time));
+        row.insert(
+            "maxProcsPerJob".into(),
+            Value::Int(q.max_procs_per_job as i64),
+        );
+        row.insert("active".into(), Value::Bool(q.active));
+        self.queues.insert(row);
+    }
+
+    pub fn queue(&mut self, name: &str) -> Result<Queue, DbError> {
+        self.stats.selects += 1;
+        self.queues
+            .iter()
+            .find(|(_, r)| r.get("name").and_then(Value::as_str) == Some(name))
+            .map(|(_, r)| queue_from_row(r))
+            .ok_or_else(|| DbError::QueueNotFound(name.into()))?
+    }
+
+    /// All queues by decreasing priority — the meta-scheduler's iteration
+    /// order (§2.3).
+    pub fn queues_by_priority(&mut self) -> Vec<Queue> {
+        self.stats.selects += 1;
+        let mut qs: Vec<Queue> = self
+            .queues
+            .iter()
+            .filter_map(|(_, r)| queue_from_row(r).ok())
+            .collect();
+        qs.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.name.cmp(&b.name)));
+        qs
+    }
+
+    pub fn set_queue_active(&mut self, name: &str, active: bool) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        let e = Expr::parse(&format!("name = '{name}'")).unwrap();
+        if self.queues.update_where(&e, "active", Value::Bool(active)) == 0 {
+            return Err(DbError::QueueNotFound(name.into()));
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------- admission rules ----
+
+    /// Store an admission rule (rule-DSL source, see [`crate::admission`]).
+    pub fn add_admission_rule(&mut self, priority: i32, source: &str) {
+        self.stats.inserts += 1;
+        let mut row = Row::new();
+        row.insert("priority".into(), Value::Int(priority as i64));
+        row.insert("source".into(), Value::Text(source.into()));
+        self.admission_rules.insert(row);
+    }
+
+    /// Rules in priority order (ascending: lower runs first).
+    pub fn admission_rules(&mut self) -> Vec<(i32, String)> {
+        self.stats.selects += 1;
+        let mut rules: Vec<(i32, String)> = self
+            .admission_rules
+            .iter()
+            .filter_map(|(_, r)| {
+                Some((
+                    r.get("priority")?.as_i64()? as i32,
+                    r.get("source")?.as_str()?.to_string(),
+                ))
+            })
+            .collect();
+        rules.sort_by_key(|(p, _)| *p);
+        rules
+    }
+
+    // -------------------------------------------------------- events ----
+
+    pub fn log_event(&mut self, now: Time, kind: &str, job: Option<JobId>, detail: &str) {
+        self.stats.inserts += 1;
+        self.events.append(EventRecord {
+            time: now,
+            kind: kind.into(),
+            job,
+            detail: detail.into(),
+        });
+    }
+
+    pub fn events(&mut self) -> &[EventRecord] {
+        self.stats.selects += 1;
+        self.events.all()
+    }
+
+    // --------------------------------------------------- persistence ----
+
+    /// Snapshot the entire database to JSON — the paper's §2 argument that
+    /// "the database engine can handle the data safety" as long as modules
+    /// make atomic coherent modifications.
+    pub fn snapshot(&self, path: &Path) -> crate::Result<()> {
+        use crate::util::Json;
+        let doc = Json::obj(vec![
+            ("jobs", self.jobs.to_json()),
+            ("nodes", self.nodes.to_json()),
+            ("assignments", self.assignments.to_json()),
+            ("queues", self.queues.to_json()),
+            ("admission_rules", self.admission_rules.to_json()),
+            ("events", self.events.to_json()),
+        ]);
+        std::fs::write(path, doc.dump())?;
+        Ok(())
+    }
+
+    pub fn restore(path: &Path) -> crate::Result<Db> {
+        use crate::util::Json;
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text)?;
+        let table = |key: &str| -> crate::Result<Table> {
+            Table::from_json(
+                doc.get(key)
+                    .ok_or_else(|| anyhow::anyhow!("snapshot missing {key}"))?,
+            )
+        };
+        Ok(Db {
+            jobs: table("jobs")?,
+            nodes: table("nodes")?,
+            assignments: table("assignments")?,
+            queues: table("queues")?,
+            admission_rules: table("admission_rules")?,
+            events: EventLog::from_json(
+                doc.get("events")
+                    .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
+            )?,
+            stats: QueryStats::default(),
+        })
+    }
+}
+
+// ----------------------------------------------------- row conversion ----
+
+fn job_to_row(job: &Job) -> Row {
+    let mut r = Row::new();
+    r.insert("jobType".into(), Value::Text(job.kind.as_str().into()));
+    r.insert(
+        "infoType".into(),
+        job.info_type
+            .clone()
+            .map(Value::Text)
+            .unwrap_or(Value::Null),
+    );
+    r.insert("state".into(), Value::Text(job.state.as_str().into()));
+    r.insert(
+        "reservation".into(),
+        Value::Text(job.reservation.as_str().into()),
+    );
+    r.insert("message".into(), Value::Text(job.message.clone()));
+    r.insert("user".into(), Value::Text(job.user.clone()));
+    r.insert("nbNodes".into(), Value::Int(job.nb_nodes as i64));
+    r.insert("weight".into(), Value::Int(job.weight as i64));
+    r.insert("command".into(), Value::Text(job.command.clone()));
+    r.insert(
+        "bpid".into(),
+        job.bpid.map(|p| Value::Int(p as i64)).unwrap_or(Value::Null),
+    );
+    r.insert("queueName".into(), Value::Text(job.queue_name.clone()));
+    r.insert("maxTime".into(), Value::Int(job.max_time));
+    r.insert("properties".into(), Value::Text(job.properties.clone()));
+    r.insert(
+        "launchingDirectory".into(),
+        Value::Text(job.launching_directory.clone()),
+    );
+    r.insert("submissionTime".into(), Value::Int(job.submission_time));
+    r.insert(
+        "startTime".into(),
+        job.start_time.map(Value::Int).unwrap_or(Value::Null),
+    );
+    r.insert(
+        "stopTime".into(),
+        job.stop_time.map(Value::Int).unwrap_or(Value::Null),
+    );
+    r.insert("bestEffort".into(), Value::Bool(job.best_effort));
+    r.insert(
+        "reservationStart".into(),
+        job.reservation_start.map(Value::Int).unwrap_or(Value::Null),
+    );
+    r
+}
+
+fn job_from_row(r: &Row) -> Result<Job, DbError> {
+    let corrupt = |f: &str| DbError::Corrupt(format!("jobs.{f}"));
+    Ok(Job {
+        id: r.get("id").and_then(Value::as_i64).ok_or_else(|| corrupt("id"))? as JobId,
+        kind: match r.get("jobType").and_then(Value::as_str) {
+            Some("INTERACTIVE") => JobKind::Interactive,
+            _ => JobKind::Passive,
+        },
+        info_type: r
+            .get("infoType")
+            .and_then(Value::as_str)
+            .map(str::to_string),
+        state: r
+            .get("state")
+            .and_then(Value::as_str)
+            .and_then(JobState::parse)
+            .ok_or_else(|| corrupt("state"))?,
+        reservation: match r.get("reservation").and_then(Value::as_str) {
+            Some("toSchedule") => ReservationField::ToSchedule,
+            Some("Scheduled") => ReservationField::Scheduled,
+            _ => ReservationField::None,
+        },
+        message: r
+            .get("message")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        user: r
+            .get("user")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        nb_nodes: r.get("nbNodes").and_then(Value::as_i64).unwrap_or(1) as u32,
+        weight: r.get("weight").and_then(Value::as_i64).unwrap_or(1) as u32,
+        command: r
+            .get("command")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        bpid: r.get("bpid").and_then(Value::as_i64).map(|p| p as u32),
+        queue_name: r
+            .get("queueName")
+            .and_then(Value::as_str)
+            .unwrap_or("default")
+            .to_string(),
+        max_time: r.get("maxTime").and_then(Value::as_i64).unwrap_or(0),
+        properties: r
+            .get("properties")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        launching_directory: r
+            .get("launchingDirectory")
+            .and_then(Value::as_str)
+            .unwrap_or("/tmp")
+            .to_string(),
+        submission_time: r
+            .get("submissionTime")
+            .and_then(Value::as_i64)
+            .unwrap_or(0),
+        start_time: r.get("startTime").and_then(Value::as_i64),
+        stop_time: r.get("stopTime").and_then(Value::as_i64),
+        best_effort: r
+            .get("bestEffort")
+            .map(Value::is_truthy)
+            .unwrap_or(false),
+        reservation_start: r.get("reservationStart").and_then(Value::as_i64),
+    })
+}
+
+fn node_to_row(node: &Node) -> Row {
+    let mut r = Row::new();
+    r.insert("nodeId".into(), Value::Int(node.id as i64));
+    r.insert("hostname".into(), Value::Text(node.hostname.clone()));
+    r.insert("state".into(), Value::Text(node.state.as_str().into()));
+    r.insert("nbProcs".into(), Value::Int(node.nb_procs as i64));
+    for (k, v) in &node.properties {
+        r.insert(format!("prop_{k}"), v.clone());
+    }
+    r
+}
+
+fn node_from_row(r: &Row) -> Result<Node, DbError> {
+    let corrupt = |f: &str| DbError::Corrupt(format!("nodes.{f}"));
+    let mut properties = BTreeMap::new();
+    for (k, v) in r.iter() {
+        if let Some(name) = k.strip_prefix("prop_") {
+            properties.insert(name.to_string(), v.clone());
+        }
+    }
+    Ok(Node {
+        id: r
+            .get("nodeId")
+            .and_then(Value::as_i64)
+            .ok_or_else(|| corrupt("nodeId"))? as NodeId,
+        hostname: r
+            .get("hostname")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        state: match r.get("state").and_then(Value::as_str) {
+            Some("Alive") => NodeState::Alive,
+            Some("Suspected") => NodeState::Suspected,
+            Some("Absent") => NodeState::Absent,
+            _ => return Err(corrupt("state")),
+        },
+        nb_procs: r.get("nbProcs").and_then(Value::as_i64).unwrap_or(1) as u32,
+        properties,
+    })
+}
+
+fn queue_from_row(r: &Row) -> Result<Queue, DbError> {
+    let corrupt = |f: &str| DbError::Corrupt(format!("queues.{f}"));
+    Ok(Queue {
+        name: r
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| corrupt("name"))?
+            .to_string(),
+        priority: r.get("priority").and_then(Value::as_i64).unwrap_or(0) as i32,
+        policy: r
+            .get("policy")
+            .and_then(Value::as_str)
+            .and_then(QueuePolicyKind::parse)
+            .ok_or_else(|| corrupt("policy"))?,
+        default_max_time: r
+            .get("defaultMaxTime")
+            .and_then(Value::as_i64)
+            .unwrap_or(3600),
+        max_procs_per_job: r
+            .get("maxProcsPerJob")
+            .and_then(Value::as_i64)
+            .unwrap_or(i64::MAX) as u32,
+        active: r.get("active").map(Value::is_truthy).unwrap_or(true),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::JobSpec;
+
+    fn make_job(spec: &JobSpec, now: Time) -> Job {
+        Job::from_spec(spec, now)
+    }
+
+    #[test]
+    fn job_roundtrip_through_rows() {
+        let mut db = Db::with_standard_queues();
+        let spec = JobSpec::batch("alice", "echo hi", 4, 600);
+        let id = db.insert_job(make_job(&spec, 42));
+        let job = db.job(id).unwrap();
+        assert_eq!(job.id, id);
+        assert_eq!(job.user, "alice");
+        assert_eq!(job.nb_nodes, 4);
+        assert_eq!(job.state, JobState::Waiting);
+        assert_eq!(job.submission_time, 42);
+    }
+
+    #[test]
+    fn state_transitions_are_validated() {
+        let mut db = Db::with_standard_queues();
+        let id = db.insert_job(make_job(&JobSpec::default(), 0));
+        // Waiting -> Running is illegal (must pass through toLaunch).
+        let err = db.set_job_state(id, JobState::Running, 1).unwrap_err();
+        assert!(matches!(err, DbError::IllegalTransition { .. }));
+        db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+        db.set_job_state(id, JobState::Launching, 2).unwrap();
+        db.set_job_state(id, JobState::Running, 3).unwrap();
+        db.set_job_state(id, JobState::Terminated, 9).unwrap();
+        let job = db.job(id).unwrap();
+        assert_eq!(job.start_time, Some(3));
+        assert_eq!(job.stop_time, Some(9));
+        assert_eq!(job.response_time(), Some(9));
+    }
+
+    #[test]
+    fn fail_job_reaches_error_from_any_state() {
+        let mut db = Db::with_standard_queues();
+        let id = db.insert_job(make_job(&JobSpec::default(), 0));
+        db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+        db.fail_job(id, "node died", 2).unwrap();
+        let job = db.job(id).unwrap();
+        assert_eq!(job.state, JobState::Error);
+        assert_eq!(job.message, "node died");
+        // idempotent on terminal jobs
+        db.fail_job(id, "again", 3).unwrap();
+    }
+
+    #[test]
+    fn matching_nodes_uses_expressions() {
+        let mut db = Db::new();
+        db.add_node(Node::new(1, "n1", 2).with_prop("mem", Value::Int(256)));
+        db.add_node(Node::new(2, "n2", 2).with_prop("mem", Value::Int(1024)));
+        let got = db.matching_nodes("mem >= 512").unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 2);
+        // empty properties match all alive nodes
+        assert_eq!(db.matching_nodes("").unwrap().len(), 2);
+        // suspected nodes never match
+        db.set_node_state(2, NodeState::Suspected).unwrap();
+        assert!(db.matching_nodes("mem >= 512").unwrap().is_empty());
+    }
+
+    #[test]
+    fn assignments_and_busy_procs() {
+        let mut db = Db::with_standard_queues();
+        db.add_node(Node::new(1, "n1", 2));
+        db.add_node(Node::new(2, "n2", 2));
+        let id = db.insert_job(make_job(&JobSpec::batch("u", "c", 2, 60), 0));
+        db.assign_nodes(id, &[1, 2], 1);
+        db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+        let busy = db.busy_procs_by_node();
+        assert_eq!(busy[&1], 1);
+        assert_eq!(busy[&2], 1);
+        // After termination the procs are free again.
+        db.set_job_state(id, JobState::Launching, 2).unwrap();
+        db.set_job_state(id, JobState::Running, 2).unwrap();
+        db.set_job_state(id, JobState::Terminated, 3).unwrap();
+        assert!(db.busy_procs_by_node().is_empty());
+    }
+
+    #[test]
+    fn queues_by_priority_order() {
+        let mut db = Db::with_standard_queues();
+        db.add_queue(Queue::new("urgent", 100, QueuePolicyKind::FifoConservative));
+        let qs = db.queues_by_priority();
+        assert_eq!(qs[0].name, "urgent");
+        assert_eq!(qs.last().unwrap().name, "besteffort");
+    }
+
+    #[test]
+    fn query_stats_count_statements() {
+        let mut db = Db::with_standard_queues();
+        db.reset_stats();
+        let id = db.insert_job(make_job(&JobSpec::default(), 0));
+        let _ = db.job(id);
+        db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+        let s = db.stats();
+        assert_eq!(s.inserts, 1);
+        assert!(s.selects >= 2);
+        assert_eq!(s.updates, 1);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let dir = std::env::temp_dir().join("oar_db_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let mut db = Db::with_standard_queues();
+        let id = db.insert_job(make_job(&JobSpec::batch("bob", "x", 1, 10), 5));
+        db.snapshot(&path).unwrap();
+        let mut back = Db::restore(&path).unwrap();
+        assert_eq!(back.job(id).unwrap().user, "bob");
+        assert_eq!(back.queues_by_priority().len(), 2);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,245 @@
+//! Generic row-oriented table with WHERE-expression selection — the
+//! storage primitive under all OAR tables (jobs, nodes, assignments,
+//! queues, admission rules, event log).
+
+use std::collections::BTreeMap;
+
+
+use super::expr::Expr;
+use super::value::Value;
+
+/// A row: column name → value. BTreeMap keeps dumps deterministic.
+pub type Row = BTreeMap<String, Value>;
+
+/// A table with an auto-increment primary key, mirroring MySQL's
+/// `AUTO_INCREMENT` id columns (`idJob` is "its index number in the table
+/// of the jobs", §2.1).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub name: String,
+    next_id: u64,
+    rows: BTreeMap<u64, Row>,
+}
+
+impl Table {
+    pub fn new(name: &str) -> Table {
+        Table {
+            name: name.into(),
+            next_id: 1,
+            rows: BTreeMap::new(),
+        }
+    }
+
+    /// Insert a row, assigning and returning its id (also stored in the
+    /// `id` column).
+    pub fn insert(&mut self, mut row: Row) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        row.insert("id".into(), Value::Int(id as i64));
+        self.rows.insert(id, row);
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Row> {
+        self.rows.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Row> {
+        self.rows.get_mut(&id)
+    }
+
+    pub fn delete(&mut self, id: u64) -> bool {
+        self.rows.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// All rows in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &Row)> {
+        self.rows.iter()
+    }
+
+    /// SELECT ... WHERE expr, in id order.
+    pub fn select(&self, filter: &Expr) -> Vec<(u64, Row)> {
+        self.rows
+            .iter()
+            .filter(|(_, r)| filter.matches(r))
+            .map(|(id, r)| (*id, r.clone()))
+            .collect()
+    }
+
+    /// SELECT COUNT(*) WHERE expr.
+    pub fn count_where(&self, filter: &Expr) -> usize {
+        self.rows.values().filter(|r| filter.matches(r)).count()
+    }
+
+    /// UPDATE ... SET col = value WHERE expr; returns affected row count.
+    pub fn update_where(&mut self, filter: &Expr, col: &str, value: Value) -> usize {
+        let mut n = 0;
+        for row in self.rows.values_mut() {
+            if filter.matches(row) {
+                row.insert(col.to_string(), value.clone());
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Aggregate helpers for the accounting queries (§1: "the powerfull sql
+    /// language can be used for data analysis and extraction").
+    pub fn sum_where(&self, filter: &Expr, col: &str) -> f64 {
+        self.rows
+            .values()
+            .filter(|r| filter.matches(r))
+            .filter_map(|r| r.get(col).and_then(Value::as_f64))
+            .sum()
+    }
+
+    pub fn group_count(&self, filter: &Expr, col: &str) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for r in self.rows.values().filter(|r| filter.matches(r)) {
+            let key = r
+                .get(col)
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "NULL".into());
+            *out.entry(key).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Snapshot encoding.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(id, row)| {
+                let cells: BTreeMap<String, Json> =
+                    row.iter().map(|(k, v)| (k.clone(), v.to_json())).collect();
+                Json::obj(vec![
+                    ("id", Json::Num(*id as f64)),
+                    ("row", Json::Obj(cells)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Decode the [`Table::to_json`] encoding.
+    pub fn from_json(j: &crate::util::Json) -> crate::Result<Table> {
+        use crate::util::Json;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("table missing name"))?
+            .to_string();
+        let next_id = j
+            .get("next_id")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("table missing next_id"))? as u64;
+        let mut rows = BTreeMap::new();
+        for item in j
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("table missing rows"))?
+        {
+            let id = item
+                .get("id")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow::anyhow!("row missing id"))? as u64;
+            let cells = match item.get("row") {
+                Some(Json::Obj(m)) => m,
+                _ => anyhow::bail!("row missing cells"),
+            };
+            let mut row = Row::new();
+            for (k, v) in cells {
+                row.insert(k.clone(), Value::from_json(v)?);
+            }
+            rows.insert(id, row);
+        }
+        Ok(Table {
+            name,
+            next_id,
+            rows,
+        })
+    }
+}
+
+/// Tiny helper to build rows inline: `rowvec![ "a" => 1i64, "b" => "x" ]`.
+#[macro_export]
+macro_rules! rowvec {
+    ($($k:expr => $v:expr),* $(,)?) => {{
+        let mut row = $crate::db::Row::new();
+        $( row.insert($k.to_string(), $crate::db::Value::from($v)); )*
+        row
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Table {
+        let mut t = Table::new("nodes");
+        t.insert(rowvec!["hostname" => "n1", "mem" => 256i64]);
+        t.insert(rowvec!["hostname" => "n2", "mem" => 512i64]);
+        t.insert(rowvec!["hostname" => "n3", "mem" => 1024i64]);
+        t
+    }
+
+    #[test]
+    fn insert_assigns_sequential_ids() {
+        let t = fixture();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.get(1).unwrap()["hostname"], Value::Text("n1".into()));
+        assert_eq!(t.get(3).unwrap()["id"], Value::Int(3));
+    }
+
+    #[test]
+    fn select_where() {
+        let t = fixture();
+        let e = Expr::parse("mem >= 512").unwrap();
+        let got = t.select(&e);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 2);
+    }
+
+    #[test]
+    fn update_where() {
+        let mut t = fixture();
+        let e = Expr::parse("mem < 1024").unwrap();
+        let n = t.update_where(&e, "state", Value::Text("old".into()));
+        assert_eq!(n, 2);
+        assert_eq!(t.get(1).unwrap()["state"], Value::Text("old".into()));
+        assert!(t.get(3).unwrap().get("state").is_none());
+    }
+
+    #[test]
+    fn delete_and_ids_not_reused() {
+        let mut t = fixture();
+        assert!(t.delete(2));
+        assert!(!t.delete(2));
+        let id = t.insert(rowvec!["hostname" => "n4"]);
+        assert_eq!(id, 4, "auto-increment must not reuse ids");
+    }
+
+    #[test]
+    fn aggregates() {
+        let t = fixture();
+        let all = Expr::parse("").unwrap();
+        assert_eq!(t.sum_where(&all, "mem"), 1792.0);
+        assert_eq!(t.count_where(&Expr::parse("mem = 512").unwrap()), 1);
+        let g = t.group_count(&all, "hostname");
+        assert_eq!(g.len(), 3);
+    }
+}

@@ -1,0 +1,216 @@
+//! SQL-ish scalar values with MySQL-flavoured comparison semantics.
+
+
+/// A scalar cell value. Comparisons are numeric when both sides are
+/// numeric (Int/Real mix coerces to f64, as MySQL does), lexicographic for
+/// text, and `Null` never compares equal to anything (three-valued logic is
+/// collapsed to false, which is what a WHERE clause observes).
+#[derive(Debug, Clone)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Real(f64),
+    Text(String),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Real(r) => Some(*r),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Real(r) => Some(*r as i64),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Truthiness of a WHERE result: NULL and 0 are false.
+    pub fn is_truthy(&self) -> bool {
+        match self {
+            Value::Null => false,
+            Value::Bool(b) => *b,
+            Value::Int(i) => *i != 0,
+            Value::Real(r) => *r != 0.0,
+            Value::Text(s) => !s.is_empty(),
+        }
+    }
+
+    /// SQL comparison: None when either side is NULL or the types are
+    /// incomparable (text vs number never matches, as with strict modes).
+    pub fn compare(&self, other: &Value) -> Option<std::cmp::Ordering> {
+        use Value::*;
+        match (self, other) {
+            (Null, _) | (_, Null) => None,
+            (Text(a), Text(b)) => Some(a.cmp(b)),
+            (a, b) => {
+                let (x, y) = (a.as_f64()?, b.as_f64()?);
+                x.partial_cmp(&y)
+            }
+        }
+    }
+
+    /// Equality under SQL semantics (NULL = anything is false).
+    pub fn sql_eq(&self, other: &Value) -> bool {
+        self.compare(other) == Some(std::cmp::Ordering::Equal)
+    }
+}
+
+impl PartialEq for Value {
+    /// Structural equality (used by tests and map lookups); distinct from
+    /// [`Value::sql_eq`] in that `Null == Null` is true here.
+    fn eq(&self, other: &Self) -> bool {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => true,
+            (Int(a), Int(b)) => a == b,
+            (Real(a), Real(b)) => a == b,
+            (Text(a), Text(b)) => a == b,
+            (Bool(a), Bool(b)) => a == b,
+            (Int(a), Real(b)) | (Real(b), Int(a)) => *a as f64 == *b,
+            _ => false,
+        }
+    }
+}
+
+impl Value {
+    /// JSON encoding for snapshots (tagged so Int/Real survive).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        match self {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+            Value::Int(i) => Json::obj(vec![("i", Json::Num(*i as f64))]),
+            Value::Real(r) => Json::obj(vec![("r", Json::Num(*r))]),
+            Value::Text(s) => Json::Str(s.clone()),
+        }
+    }
+
+    /// Decode the [`Value::to_json`] encoding.
+    pub fn from_json(j: &crate::util::Json) -> crate::Result<Value> {
+        use crate::util::Json;
+        Ok(match j {
+            Json::Null => Value::Null,
+            Json::Bool(b) => Value::Bool(*b),
+            Json::Str(s) => Value::Text(s.clone()),
+            Json::Obj(_) => {
+                if let Some(i) = j.get("i").and_then(Json::as_f64) {
+                    Value::Int(i as i64)
+                } else if let Some(r) = j.get("r").and_then(Json::as_f64) {
+                    Value::Real(r)
+                } else {
+                    anyhow::bail!("bad value object");
+                }
+            }
+            Json::Num(_) | Json::Arr(_) => anyhow::bail!("bad value encoding"),
+        })
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Null => write!(f, "NULL"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Real(r) => write!(f, "{r}"),
+            Value::Text(s) => write!(f, "'{s}'"),
+            Value::Bool(b) => write!(f, "{}", if *b { "TRUE" } else { "FALSE" }),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Real(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Text(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Text(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Ordering;
+
+    #[test]
+    fn numeric_coercion() {
+        assert_eq!(Value::Int(2).compare(&Value::Real(2.0)), Some(Ordering::Equal));
+        assert_eq!(Value::Int(1).compare(&Value::Real(1.5)), Some(Ordering::Less));
+        assert!(Value::Int(3).sql_eq(&Value::Real(3.0)));
+    }
+
+    #[test]
+    fn null_never_compares() {
+        assert_eq!(Value::Null.compare(&Value::Null), None);
+        assert!(!Value::Null.sql_eq(&Value::Null));
+        assert!(!Value::Null.is_truthy());
+    }
+
+    #[test]
+    fn text_is_lexicographic() {
+        assert_eq!(
+            Value::Text("abc".into()).compare(&Value::Text("abd".into())),
+            Some(Ordering::Less)
+        );
+    }
+
+    #[test]
+    fn text_vs_number_is_incomparable() {
+        assert_eq!(Value::Text("5".into()).compare(&Value::Int(5)), None);
+    }
+
+    #[test]
+    fn truthiness() {
+        assert!(Value::Int(1).is_truthy());
+        assert!(!Value::Int(0).is_truthy());
+        assert!(!Value::Text("".into()).is_truthy());
+        assert!(Value::Text("x".into()).is_truthy());
+    }
+}

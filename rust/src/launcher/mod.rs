@@ -1,0 +1,240 @@
+//! The Taktuk-like parallel launcher (§2.4).
+//!
+//! "Launching, displaying and monitoring ... is performed using Taktuk ...
+//! highly parallelized and distributed ... uses a dynamic work stealing
+//! algorithm to distribute work among working nodes." Deployment therefore
+//! proceeds as an adaptive tree: every already-reached node helps contact
+//! the rest, so reaching `k` nodes costs ~`ceil(log2(k+1))` connection
+//! rounds instead of `k` sequential connections.
+//!
+//! Failure detection is reachability-based: "any node that is not reached
+//! by the time allowed for the initiation of the connection is considered
+//! as failed" — a per-connection timeout, configurable to trade reactivity
+//! against confidence (§2.4 last paragraph).
+//!
+//! The cluster is virtual (see [`crate::cluster`]), so connection costs
+//! are *modeled* (protocol latency × tree rounds) and then actually
+//! awaited, scaled by `time_scale`, so the burst experiments (figs. 9–10)
+//! measure real end-to-end system behaviour with a latency-faithful
+//! launcher in the loop.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::{Protocol, VirtualCluster};
+use crate::types::NodeId;
+
+/// Launcher configuration: fig. 10's four OAR settings are the cross
+/// product of `protocol` × `check_before_launch`.
+#[derive(Debug, Clone)]
+pub struct LauncherConfig {
+    pub protocol: Protocol,
+    /// Reachability-check every node before launching the job ("a simple
+    /// accessibility test using the distant execution of an empty
+    /// command").
+    pub check_before_launch: bool,
+    /// Time allowed for the initiation of one connection.
+    pub connect_timeout: Duration,
+    /// Wall-clock scale applied to modeled latencies (1.0 = real-scale;
+    /// tests use smaller values).
+    pub time_scale: f64,
+}
+
+impl Default for LauncherConfig {
+    fn default() -> Self {
+        LauncherConfig {
+            protocol: Protocol::Ssh,
+            check_before_launch: true,
+            connect_timeout: Duration::from_secs(5),
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Outcome of one deployment.
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    /// Nodes actually reached, in id order.
+    pub deployed: Vec<NodeId>,
+    /// Nodes that failed the connection/timeout.
+    pub failed: Vec<NodeId>,
+    /// Modeled wall time of the deployment (pre-scaling).
+    pub modeled: Duration,
+}
+
+/// The launcher module.
+#[derive(Clone)]
+pub struct Launcher {
+    pub config: LauncherConfig,
+    cluster: Arc<VirtualCluster>,
+}
+
+impl Launcher {
+    pub fn new(cluster: Arc<VirtualCluster>, config: LauncherConfig) -> Launcher {
+        Launcher { cluster, config }
+    }
+
+    /// Deployment rounds of the work-stealing tree for `k` targets: every
+    /// reached node (plus the root) steals work, so coverage doubles each
+    /// round.
+    pub fn deployment_rounds(k: usize) -> u32 {
+        (k + 1).next_power_of_two().trailing_zeros()
+    }
+
+    /// Modeled time to deploy on `k` reachable nodes.
+    pub fn model_deploy(&self, k: usize) -> Duration {
+        let rounds = Self::deployment_rounds(k) as u64;
+        Duration::from_micros(rounds * self.config.protocol.connect_micros())
+    }
+
+    /// Modeled time of the pre-launch check over `k` nodes (parallel: one
+    /// connection round; unreachable nodes cost the timeout).
+    pub fn model_check(&self, any_failed: bool) -> Duration {
+        let base = Duration::from_micros(self.config.protocol.connect_micros());
+        if any_failed {
+            base + self.config.connect_timeout
+        } else {
+            base
+        }
+    }
+
+    fn wait(&self, modeled: Duration) {
+        let scaled = modeled.mul_f64(self.config.time_scale.max(0.0));
+        if !scaled.is_zero() {
+            std::thread::sleep(scaled);
+        }
+    }
+
+    /// Deploy a job on `nodes`. Reachability is taken from the virtual
+    /// cluster; with `check_before_launch`, failed nodes are detected
+    /// *before* deployment (the job can be rescheduled elsewhere), without
+    /// it they surface as deployment failures.
+    pub fn launch(&self, nodes: &[NodeId]) -> LaunchReport {
+        let mut deployed = Vec::new();
+        let mut failed = Vec::new();
+        for n in nodes {
+            if self.cluster.is_reachable(*n) {
+                deployed.push(*n);
+            } else {
+                failed.push(*n);
+            }
+        }
+        deployed.sort_unstable();
+        failed.sort_unstable();
+
+        let mut modeled = Duration::ZERO;
+        if self.config.check_before_launch {
+            modeled += self.model_check(!failed.is_empty());
+        }
+        modeled += self.model_deploy(deployed.len());
+        if !self.config.check_before_launch && !failed.is_empty() {
+            // Failures detected during deployment: the last connection's
+            // timeout bounds the detection latency (§2.4).
+            modeled += self.config.connect_timeout;
+        }
+        self.wait(modeled);
+        LaunchReport {
+            deployed,
+            failed,
+            modeled,
+        }
+    }
+
+    /// Parallel reachability sweep used by the monitoring module: one
+    /// connection round, plus one timeout when anything is down.
+    pub fn ping_all(&self, nodes: &[NodeId]) -> Vec<(NodeId, bool)> {
+        let states: Vec<(NodeId, bool)> = nodes
+            .iter()
+            .map(|n| (*n, self.cluster.is_reachable(*n)))
+            .collect();
+        let any_down = states.iter().any(|(_, up)| !up);
+        let modeled = self.model_check(any_down);
+        self.wait(modeled);
+        states
+    }
+
+    /// Kill a job's processes on its nodes (one parallel round).
+    pub fn kill(&self, nodes: &[NodeId]) {
+        let modeled = Duration::from_micros(self.config.protocol.connect_micros());
+        self.wait(modeled);
+        let _ = nodes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn launcher(protocol: Protocol, check: bool) -> Launcher {
+        Launcher::new(
+            Arc::new(VirtualCluster::tiny(8, 1)),
+            LauncherConfig {
+                protocol,
+                check_before_launch: check,
+                connect_timeout: Duration::from_millis(500),
+                time_scale: 0.0, // no real sleeping in tests
+            },
+        )
+    }
+
+    #[test]
+    fn deployment_rounds_are_logarithmic() {
+        assert_eq!(Launcher::deployment_rounds(0), 0);
+        assert_eq!(Launcher::deployment_rounds(1), 1);
+        assert_eq!(Launcher::deployment_rounds(3), 2);
+        assert_eq!(Launcher::deployment_rounds(7), 3);
+        assert_eq!(Launcher::deployment_rounds(119), 7);
+    }
+
+    #[test]
+    fn launch_reports_reachable_nodes() {
+        let l = launcher(Protocol::Rsh, false);
+        let r = l.launch(&[1, 2, 3]);
+        assert_eq!(r.deployed, vec![1, 2, 3]);
+        assert!(r.failed.is_empty());
+    }
+
+    #[test]
+    fn failed_node_detected_and_costed() {
+        let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+        cluster.inject_failure(3);
+        let l = Launcher::new(
+            cluster,
+            LauncherConfig {
+                protocol: Protocol::Rsh,
+                check_before_launch: false,
+                connect_timeout: Duration::from_millis(500),
+                time_scale: 0.0,
+            },
+        );
+        let r = l.launch(&[1, 3]);
+        assert_eq!(r.deployed, vec![1]);
+        assert_eq!(r.failed, vec![3]);
+        // no-check mode pays the timeout during deployment
+        assert!(r.modeled >= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn ssh_costs_more_than_rsh_and_check_adds_a_round() {
+        let rsh = launcher(Protocol::Rsh, false).launch(&[1, 2, 3, 4]);
+        let ssh = launcher(Protocol::Ssh, false).launch(&[1, 2, 3, 4]);
+        let ssh_check = launcher(Protocol::Ssh, true).launch(&[1, 2, 3, 4]);
+        assert!(ssh.modeled > rsh.modeled);
+        assert!(ssh_check.modeled > ssh.modeled);
+    }
+
+    #[test]
+    fn ping_all_reports_states() {
+        let cluster = Arc::new(VirtualCluster::tiny(3, 1));
+        cluster.inject_failure(2);
+        let l = Launcher::new(
+            cluster,
+            LauncherConfig {
+                time_scale: 0.0,
+                ..Default::default()
+            },
+        );
+        let states = l.ping_all(&[1, 2, 3]);
+        assert_eq!(states, vec![(1, true), (2, false), (3, true)]);
+    }
+}

@@ -1,0 +1,54 @@
+//! # OAR — a batch scheduler with high level components
+//!
+//! Reproduction of Capit et al., *"A batch scheduler with high level
+//! components"* (CS.DC 2005), as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's thesis is architectural: a complete, efficient batch
+//! scheduler can be built from two high-level components — a central
+//! relational database that is the *only* communication medium between
+//! modules, and a set of small executive modules driven by a central
+//! automaton. This crate preserves that discipline:
+//!
+//! * [`db`] — the embedded relational store standing in for MySQL: typed
+//!   tables, a SQL `WHERE`-expression engine (the `properties` matching
+//!   language of fig. 2), event log and accounting. Modules share no state
+//!   except a handle to this store.
+//! * [`types`] — the job model of fig. 2 and the state machine of fig. 1.
+//! * [`central`] — the central module: event buffer + notification listener
+//!   + periodic (redundant) task planner (§2.2).
+//! * [`admission`] — admission rules stored in the database (§2.1).
+//! * [`sched`] — the meta-scheduler: Gantt diagram, per-queue policies
+//!   (FIFO-conservative, SJF, best-effort), reservations, backfilling
+//!   (§2.3), plus the Torque-/Maui-/SGE-like baselines of §3.2.
+//! * [`matching`] — the compute hot-spot: jobs×nodes eligibility and Gantt
+//!   feasibility scan, either through the AOT-compiled JAX/Pallas artifact
+//!   (via [`runtime`]) or a bit-identical pure-Rust reference.
+//! * [`runtime`] — PJRT CPU client loading `artifacts/schedule_step.hlo.txt`.
+//! * [`launcher`] — the Taktuk-like parallel launcher (§2.4): deployment
+//!   tree, rsh/ssh protocol latency models, timeout failure detection.
+//! * [`cluster`] — the virtual cluster substrate (Xeon / Icluster testbeds).
+//! * [`sim`] — discrete-event simulation used by the ESP2 evaluation.
+//! * [`bench`] — workload generators and harnesses for every table and
+//!   figure of §3 (ESP2, submission bursts, complexity, features).
+//! * [`monitor`] — resource monitoring through the launcher (§2.4).
+//! * [`server`] — the live system: wires db + central + scheduler +
+//!   launcher into a running service with a CLI (`oarsub`/`oarstat`/...).
+
+pub mod admission;
+pub mod bench;
+pub mod central;
+pub mod cli;
+pub mod cluster;
+pub mod db;
+pub mod launcher;
+pub mod matching;
+pub mod monitor;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod sim;
+pub mod types;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,15 @@
+//! `oar` — leader entrypoint and CLI.
+//!
+//! See `oar help` for the command list: one evaluation subcommand per
+//! paper table/figure, plus a live demo of the full system.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match oar::cli::run(args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

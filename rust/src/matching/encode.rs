@@ -1,0 +1,469 @@
+//! Encoding: jobs' SQL `properties` expressions + node property rows +
+//! Gantt free capacity → the padded tensors of [`super::StepInput`].
+//!
+//! The encoder builds a *property vocabulary* (up to [`P`] columns) from
+//! the fleet's property keys. Numeric properties map directly; text
+//! properties get a per-column dictionary (value → integer code) so that
+//! text *equality* constraints (`switch = 'sw1'`) become degenerate
+//! intervals `[code, code]` and stay kernel-expressible.
+//!
+//! Jobs whose expression uses anything beyond conjunctive interval logic
+//! (OR, NOT, LIKE, IN, cross-column arithmetic...) are reported in
+//! [`EncodedBatch::fallback`] and resolved by the SQL path instead — so
+//! dense and SQL semantics agree wherever the dense path is used.
+//!
+//! Semantics note: nodes *missing* a vocabulary property encode as
+//! [`LO_UNBOUNDED`], which satisfies only unconstrained columns; clusters
+//! in this repo define every vocabulary property on every node, keeping
+//! the dense path exactly equal to SQL matching (asserted by proptests).
+
+use std::collections::BTreeMap;
+
+use crate::db::{Expr, Value};
+use crate::types::{JobId, Node, NodeId, Time};
+
+use super::shapes::{F, HI_UNBOUNDED, J, LO_UNBOUNDED, N, P, PAD_PROP, T};
+use super::StepInput;
+
+/// What the encoder needs to know about one waiting job.
+#[derive(Debug, Clone)]
+pub struct JobToMatch {
+    pub id: JobId,
+    pub properties: String,
+    /// Total processors required (drives the feasibility scan's `req`).
+    pub total_procs: u32,
+    /// Duration in seconds (rounded *up* to horizon slots).
+    pub duration: Time,
+    /// Feature vector inputs for the priority score.
+    pub wait_time: Time,
+    pub queue_priority: i32,
+    pub best_effort: bool,
+}
+
+/// Result of encoding one batch of ≤ J jobs against ≤ N nodes.
+#[derive(Debug)]
+pub struct EncodedBatch {
+    pub input: StepInput,
+    /// Job ids in tensor row order (row i ↔ jobs[i]).
+    pub job_rows: Vec<JobId>,
+    /// Node ids in tensor column order.
+    pub node_cols: Vec<NodeId>,
+    /// Jobs that must be matched by the SQL path instead.
+    pub fallback: Vec<JobId>,
+}
+
+/// Stateful encoder: owns the vocabulary and text dictionaries so codes
+/// stay stable across rounds.
+#[derive(Debug, Default)]
+pub struct Encoder {
+    /// Property column names, at most P.
+    vocab: Vec<String>,
+    /// Per-column text dictionaries (column name → value → code).
+    dicts: BTreeMap<String, BTreeMap<String, i64>>,
+}
+
+impl Encoder {
+    /// Build the vocabulary from the fleet. Property keys are sorted for
+    /// determinism; numeric-valued keys come first so they win the ≤ P cut.
+    pub fn from_nodes(nodes: &[Node]) -> Encoder {
+        let mut numeric = Vec::new();
+        let mut textual = Vec::new();
+        for node in nodes {
+            for (k, v) in &node.properties {
+                match v {
+                    Value::Int(_) | Value::Real(_) | Value::Bool(_) => {
+                        if !numeric.contains(k) {
+                            numeric.push(k.clone());
+                        }
+                    }
+                    Value::Text(_) => {
+                        if !textual.contains(k) {
+                            textual.push(k.clone());
+                        }
+                    }
+                    Value::Null => {}
+                }
+            }
+        }
+        numeric.sort();
+        textual.sort();
+        let mut vocab: Vec<String> = numeric;
+        vocab.extend(textual.iter().cloned());
+        vocab.truncate(P);
+
+        let mut dicts: BTreeMap<String, BTreeMap<String, i64>> = BTreeMap::new();
+        for col in &vocab {
+            let mut values: Vec<String> = nodes
+                .iter()
+                .filter_map(|n| n.properties.get(col))
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect();
+            if values.is_empty() {
+                continue;
+            }
+            values.sort();
+            values.dedup();
+            let dict = values
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| (v, i as i64))
+                .collect();
+            dicts.insert(col.clone(), dict);
+        }
+        Encoder { vocab, dicts }
+    }
+
+    pub fn vocab(&self) -> &[String] {
+        &self.vocab
+    }
+
+    /// Compile one properties expression into per-vocab-column intervals.
+    /// `None` = not dense-expressible (SQL fallback).
+    pub fn intervals_for(&self, properties: &str) -> Option<Vec<(f32, f32)>> {
+        let expr = Expr::parse(properties).ok()?;
+        let rewritten = self.rewrite_text_eq(&expr)?;
+        let map = rewritten.to_intervals()?;
+        // Every constrained column must be inside the vocabulary, else the
+        // dense path would silently ignore the constraint.
+        for col in map.keys() {
+            if !self.vocab.contains(col) {
+                return None;
+            }
+        }
+        let mut out = vec![(LO_UNBOUNDED, HI_UNBOUNDED); self.vocab.len()];
+        for (i, col) in self.vocab.iter().enumerate() {
+            if let Some((lo, hi)) = map.get(col) {
+                out[i] = (lo_to_f32(*lo), hi_to_f32(*hi));
+            }
+        }
+        Some(out)
+    }
+
+    /// Rewrite `text_col = 'value'` into `text_col = <code>` using the
+    /// dictionaries; unknown values become an empty interval (lo > hi),
+    /// correctly matching no node. Any other use of a text column defeats
+    /// the rewrite (→ None → SQL fallback).
+    fn rewrite_text_eq(&self, expr: &Expr) -> Option<Expr> {
+        use crate::db::Expr::*;
+        Some(match expr {
+            And(a, b) => And(
+                Box::new(self.rewrite_text_eq(a)?),
+                Box::new(self.rewrite_text_eq(b)?),
+            ),
+            Cmp(op, a, b) => {
+                let (col, lit, flipped) = match (&**a, &**b) {
+                    (Column(c), Literal(v)) => (c, v, false),
+                    (Literal(v), Column(c)) => (c, v, true),
+                    _ => return None,
+                };
+                match lit {
+                    Value::Text(s) => {
+                        if *op != crate::db::CmpOp::Eq {
+                            return None; // only equality on text columns
+                        }
+                        let code = self
+                            .dicts
+                            .get(col)
+                            .and_then(|d| d.get(s))
+                            .copied();
+                        match code {
+                            Some(code) => Cmp(
+                                *op,
+                                Box::new(Column(col.clone())),
+                                Box::new(Literal(Value::Int(code))),
+                            ),
+                            // unknown text value: impossible constraint
+                            None => And(
+                                Box::new(Cmp(
+                                    crate::db::CmpOp::Ge,
+                                    Box::new(Column(col.clone())),
+                                    Box::new(Literal(Value::Real(1.0))),
+                                )),
+                                Box::new(Cmp(
+                                    crate::db::CmpOp::Le,
+                                    Box::new(Column(col.clone())),
+                                    Box::new(Literal(Value::Real(0.0))),
+                                )),
+                            ),
+                        }
+                    }
+                    _ => {
+                        let _ = flipped;
+                        expr.clone()
+                    }
+                }
+            }
+            Between(..) | Literal(..) => expr.clone(),
+            _ => return None,
+        })
+    }
+
+    /// Node property row in vocabulary order (text → code, missing → very
+    /// small).
+    pub fn node_row(&self, node: &Node) -> Vec<f32> {
+        self.vocab
+            .iter()
+            .map(|col| match node.properties.get(col) {
+                Some(Value::Int(i)) => *i as f32,
+                Some(Value::Real(r)) => *r as f32,
+                Some(Value::Bool(b)) => *b as i64 as f32,
+                Some(Value::Text(s)) => self
+                    .dicts
+                    .get(col)
+                    .and_then(|d| d.get(s))
+                    .map(|c| *c as f32)
+                    .unwrap_or(LO_UNBOUNDED),
+                _ => LO_UNBOUNDED,
+            })
+            .collect()
+    }
+
+    /// Encode a batch (≤ J jobs, ≤ N nodes) with the given per-node free
+    /// capacity matrix `node_free[n][t]` (from [`crate::sched::Gantt::
+    /// free_matrix`]) and slot length.
+    pub fn encode(
+        &self,
+        jobs: &[JobToMatch],
+        nodes: &[Node],
+        node_free: &[Vec<f32>],
+        slot_secs: Time,
+        weights: [f32; F],
+    ) -> EncodedBatch {
+        assert!(jobs.len() <= J, "chunk jobs to J");
+        assert!(nodes.len() <= N, "cluster exceeds N");
+        let mut input = StepInput::zeros();
+        input.weights = weights.to_vec();
+
+        let mut job_rows = Vec::with_capacity(jobs.len());
+        let mut fallback = Vec::new();
+        for (row, job) in jobs.iter().enumerate() {
+            job_rows.push(job.id);
+            match self.intervals_for(&job.properties) {
+                Some(iv) => {
+                    for (p, (lo, hi)) in iv.iter().enumerate() {
+                        input.job_lo[row * P + p] = *lo;
+                        input.job_hi[row * P + p] = *hi;
+                    }
+                    for p in iv.len()..P {
+                        input.job_lo[row * P + p] = LO_UNBOUNDED;
+                        input.job_hi[row * P + p] = HI_UNBOUNDED;
+                    }
+                }
+                None => {
+                    // SQL fallback: make the dense row match nothing so a
+                    // stale read cannot over-promise.
+                    for p in 0..P {
+                        input.job_lo[row * P + p] = 1.0;
+                        input.job_hi[row * P + p] = 0.0;
+                    }
+                    fallback.push(job.id);
+                }
+            }
+            input.req[row] = job.total_procs as f32;
+            input.dur[row] = ((job.duration + slot_secs - 1) / slot_secs).max(1) as f32;
+            let feats = [
+                (job.wait_time as f32 / 3600.0).min(100.0),
+                job.queue_priority as f32,
+                job.total_procs as f32,
+                (job.duration as f32 / 3600.0).min(1000.0),
+                job.best_effort as i32 as f32,
+                1.0,
+            ];
+            input.job_feats[row * F..(row + 1) * F].copy_from_slice(&feats);
+        }
+        // Padding rows (req = 0) match nothing and scan to 0 harmlessly.
+        for row in jobs.len()..J {
+            for p in 0..P {
+                input.job_lo[row * P + p] = 1.0;
+                input.job_hi[row * P + p] = 0.0;
+            }
+        }
+
+        let mut node_cols = Vec::with_capacity(nodes.len());
+        for (col, node) in nodes.iter().enumerate() {
+            node_cols.push(node.id);
+            let row = self.node_row(node);
+            for (p, v) in row.iter().enumerate() {
+                input.node_props[col * P + p] = *v;
+            }
+            for p in row.len()..P {
+                input.node_props[col * P + p] = LO_UNBOUNDED;
+            }
+            let free = &node_free[col];
+            for t in 0..T.min(free.len()) {
+                input.node_free[col * T + t] = free[t];
+            }
+        }
+        // Padding nodes must match NO job, not even unconstrained ones:
+        // their property value sits below every admissible lower bound.
+        for col in nodes.len()..N {
+            for p in 0..P {
+                input.node_props[col * P + p] = PAD_PROP;
+            }
+        }
+
+        EncodedBatch {
+            input,
+            job_rows,
+            node_cols,
+            fallback,
+        }
+    }
+}
+
+/// Convert an f64 lower bound to f32, rounding *up* (inward) so the f32
+/// interval never admits a node the f64 interval excludes.
+fn lo_to_f32(v: f64) -> f32 {
+    if v.is_infinite() {
+        return LO_UNBOUNDED;
+    }
+    let f = v as f32;
+    if (f as f64) < v {
+        f.next_up()
+    } else {
+        f
+    }
+}
+
+/// Convert an f64 upper bound to f32, rounding *down* (inward).
+fn hi_to_f32(v: f64) -> f32 {
+    if v.is_infinite() {
+        return HI_UNBOUNDED;
+    }
+    let f = v as f32;
+    if (f as f64) > v {
+        f.next_down()
+    } else {
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::reference::run_reference;
+    use crate::matching::SqlMatcher;
+
+    fn fleet() -> Vec<Node> {
+        (0..6)
+            .map(|i| {
+                Node::new(i as NodeId + 1, &format!("n{i}"), 2)
+                    .with_prop("mem", Value::Int(256 * (i as i64 + 1)))
+                    .with_prop("cpu_mhz", Value::Int(2400))
+                    .with_prop("switch", Value::Text(if i < 3 { "sw1" } else { "sw2" }.into()))
+            })
+            .collect()
+    }
+
+    fn jtm(id: JobId, properties: &str) -> JobToMatch {
+        JobToMatch {
+            id,
+            properties: properties.into(),
+            total_procs: 1,
+            duration: 300,
+            wait_time: 0,
+            queue_priority: 1,
+            best_effort: false,
+        }
+    }
+
+    #[test]
+    fn vocabulary_is_deterministic_and_numeric_first() {
+        let enc = Encoder::from_nodes(&fleet());
+        // numeric: cpu_mhz, mem, nb_procs; text: switch
+        assert_eq!(enc.vocab(), &["cpu_mhz", "mem", "nb_procs", "switch"]);
+    }
+
+    #[test]
+    fn numeric_intervals() {
+        let enc = Encoder::from_nodes(&fleet());
+        let iv = enc.intervals_for("mem >= 512 AND cpu_mhz >= 2000").unwrap();
+        assert_eq!(iv[1].0, 512.0); // mem column
+        assert!(iv[0].0 >= 2000.0); // cpu_mhz column
+    }
+
+    #[test]
+    fn text_equality_becomes_code_interval() {
+        let enc = Encoder::from_nodes(&fleet());
+        let iv = enc.intervals_for("switch = 'sw2'").unwrap();
+        let sw = iv[3];
+        assert_eq!(sw.0, sw.1, "degenerate interval");
+        // unknown switch value matches nothing
+        let iv = enc.intervals_for("switch = 'sw9'").unwrap();
+        assert!(iv[3].0 > iv[3].1, "empty interval");
+    }
+
+    #[test]
+    fn disjunction_falls_back() {
+        let enc = Encoder::from_nodes(&fleet());
+        assert!(enc.intervals_for("mem >= 512 OR cpu_mhz >= 9000").is_none());
+        assert!(enc.intervals_for("hostname LIKE 'n%'").is_none());
+        assert!(enc.intervals_for("switch != 'sw1'").is_none());
+    }
+
+    #[test]
+    fn unknown_column_falls_back() {
+        let enc = Encoder::from_nodes(&fleet());
+        assert!(enc.intervals_for("gpus >= 2").is_none());
+    }
+
+    #[test]
+    fn dense_path_agrees_with_sql_path() {
+        let nodes = fleet();
+        let enc = Encoder::from_nodes(&nodes);
+        let free = vec![vec![2.0f32; T]; nodes.len()];
+        let exprs = [
+            "",
+            "mem >= 512",
+            "mem >= 512 AND switch = 'sw1'",
+            "switch = 'sw2'",
+            "mem BETWEEN 256 AND 768",
+            "cpu_mhz > 2400",
+        ];
+        let jobs: Vec<JobToMatch> = exprs
+            .iter()
+            .enumerate()
+            .map(|(i, e)| jtm(i as JobId + 1, e))
+            .collect();
+        let batch = enc.encode(&jobs, &nodes, &free, 300, [0.0; F]);
+        assert!(batch.fallback.is_empty());
+        let out = run_reference(&batch.input);
+        for (row, job) in jobs.iter().enumerate() {
+            let want = SqlMatcher::eligible_nodes(&job.properties, &nodes).unwrap();
+            let got: Vec<NodeId> = batch
+                .node_cols
+                .iter()
+                .enumerate()
+                .filter(|(col, _)| out.elig[row * N + col] == 1.0)
+                .map(|(_, id)| *id)
+                .collect();
+            assert_eq!(got, want, "expr {:?}", job.properties);
+        }
+    }
+
+    #[test]
+    fn padding_rows_and_cols_are_inert() {
+        let nodes = fleet();
+        let enc = Encoder::from_nodes(&nodes);
+        let free = vec![vec![2.0f32; T]; nodes.len()];
+        let batch = enc.encode(&[jtm(1, "")], &nodes, &free, 300, [0.0; F]);
+        let out = run_reference(&batch.input);
+        // row 0 matches the 6 real nodes and none of the padding columns
+        assert_eq!(out.elig[..N].iter().sum::<f32>(), 6.0);
+        // padding rows match nothing
+        for row in 1..J {
+            assert_eq!(out.elig[row * N..(row + 1) * N].iter().sum::<f32>(), 0.0);
+        }
+    }
+
+    #[test]
+    fn duration_rounds_up_to_slots() {
+        let nodes = fleet();
+        let enc = Encoder::from_nodes(&nodes);
+        let free = vec![vec![2.0f32; T]; nodes.len()];
+        let mut job = jtm(1, "");
+        job.duration = 301; // just over one slot
+        let batch = enc.encode(&[job], &nodes, &free, 300, [0.0; F]);
+        assert_eq!(batch.input.dur[0], 2.0);
+    }
+}

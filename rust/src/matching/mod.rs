@@ -1,0 +1,116 @@
+//! The resource-matching compute path.
+//!
+//! OAR matches resources by evaluating each job's `properties` SQL
+//! expression against the nodes table (§2). That is the scheduler's hot
+//! loop once queues get deep, so this reproduction also expresses it as a
+//! dense batched computation (the L1/L2 JAX+Pallas artifact): jobs'
+//! constraints are compiled to per-property intervals, nodes to property
+//! vectors, and one `schedule_step` evaluation yields the full J×N
+//! eligibility matrix, per-job free-count timelines, earliest feasible
+//! start estimates and priority scores.
+//!
+//! Three interchangeable engines:
+//! * [`SqlMatcher`] — row-at-a-time expression evaluation (the paper's
+//!   semantics, ground truth).
+//! * [`ReferenceStep`] — pure-Rust dense path, bit-identical to the Pallas
+//!   kernels' semantics (`python/compile/kernels/ref.py`).
+//! * `runtime::HloStep` — the AOT artifact through PJRT (the production
+//!   hot path).
+//!
+//! Jobs whose expressions are not interval-expressible (disjunctions,
+//! LIKE, NOT...) are flagged by the [`encode::Encoder`] and fall back to
+//! the SQL path; the dense engines only ever see interval-expressible
+//! constraints, so dense and SQL semantics agree wherever both apply.
+
+pub mod encode;
+pub mod reference;
+pub mod shapes;
+
+pub use encode::{EncodedBatch, Encoder};
+pub use reference::ReferenceStep;
+pub use shapes::{F, J, N, P, T};
+
+use crate::Result;
+
+/// Flat row-major tensors for one `schedule_step` evaluation, padded to
+/// the AOT shapes ([`shapes`]).
+#[derive(Debug, Clone)]
+pub struct StepInput {
+    pub job_lo: Vec<f32>,     // [J, P]
+    pub job_hi: Vec<f32>,     // [J, P]
+    pub node_props: Vec<f32>, // [N, P]
+    pub node_free: Vec<f32>,  // [N, T]
+    pub req: Vec<f32>,        // [J]
+    pub dur: Vec<f32>,        // [J]
+    pub job_feats: Vec<f32>,  // [J, F]
+    pub weights: Vec<f32>,    // [F]
+}
+
+impl StepInput {
+    /// Zero-filled input at the canonical shapes.
+    pub fn zeros() -> StepInput {
+        StepInput {
+            job_lo: vec![0.0; J * P],
+            job_hi: vec![0.0; J * P],
+            node_props: vec![0.0; N * P],
+            node_free: vec![0.0; N * T],
+            req: vec![0.0; J],
+            dur: vec![1.0; J],
+            job_feats: vec![0.0; J * F],
+            weights: vec![0.0; F],
+        }
+    }
+}
+
+/// Outputs of one `schedule_step` evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutput {
+    pub elig: Vec<f32>,      // [J, N]
+    pub freecount: Vec<f32>, // [J, T]
+    pub earliest: Vec<f32>,  // [J]
+    pub scores: Vec<f32>,    // [J]
+}
+
+/// An engine that evaluates one scheduling round's dense compute.
+pub trait ScheduleStep {
+    fn run(&mut self, input: &StepInput) -> Result<StepOutput>;
+
+    /// Human-readable engine name (benchmark labels).
+    fn engine_name(&self) -> &'static str;
+}
+
+/// Row-at-a-time SQL matching: ground truth for eligibility.
+pub struct SqlMatcher;
+
+impl SqlMatcher {
+    /// Eligible alive nodes for one properties expression.
+    pub fn eligible_nodes(
+        properties: &str,
+        nodes: &[crate::types::Node],
+    ) -> Result<Vec<crate::types::NodeId>> {
+        let expr = crate::db::Expr::parse(properties)
+            .map_err(|e| anyhow::anyhow!("bad properties expression: {e}"))?;
+        Ok(nodes
+            .iter()
+            .filter(|n| n.is_alive() && expr.matches(&n.property_row()))
+            .map(|n| n.id)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Value;
+    use crate::types::Node;
+
+    #[test]
+    fn sql_matcher_filters_alive_and_expr() {
+        let mut n1 = Node::new(1, "n1", 2).with_prop("mem", Value::Int(256));
+        let n2 = Node::new(2, "n2", 2).with_prop("mem", Value::Int(2048));
+        n1.state = crate::types::NodeState::Suspected;
+        let nodes = vec![n1, n2];
+        let got = SqlMatcher::eligible_nodes("mem >= 128", &nodes).unwrap();
+        assert_eq!(got, vec![2], "suspected node excluded");
+    }
+}

@@ -1,0 +1,162 @@
+//! Pure-Rust reference implementation of `schedule_step` — semantically
+//! identical to `python/compile/kernels/ref.py` (and therefore to the
+//! Pallas kernels, which are pytest-pinned to that oracle). Used when the
+//! AOT artifact is absent and as the comparison side of the
+//! runtime-vs-reference integration tests.
+
+use crate::Result;
+
+use super::shapes::{F, J, N, P, T};
+use super::{ScheduleStep, StepInput, StepOutput};
+
+/// CPU reference engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReferenceStep;
+
+impl ScheduleStep for ReferenceStep {
+    fn run(&mut self, input: &StepInput) -> Result<StepOutput> {
+        Ok(run_reference(input))
+    }
+
+    fn engine_name(&self) -> &'static str {
+        "rust_reference"
+    }
+}
+
+/// The dense computation, mirroring `schedule_step_ref`:
+/// `elig = all_p(lo <= prop <= hi)`, `freecount = elig @ node_free`,
+/// `earliest = first window of dur slots with freecount >= req`,
+/// `scores = feats @ weights`.
+pub fn run_reference(input: &StepInput) -> StepOutput {
+    let mut elig = vec![0.0f32; J * N];
+    for j in 0..J {
+        let lo = &input.job_lo[j * P..(j + 1) * P];
+        let hi = &input.job_hi[j * P..(j + 1) * P];
+        for n in 0..N {
+            let props = &input.node_props[n * P..(n + 1) * P];
+            let ok = (0..P).all(|p| lo[p] <= props[p] && props[p] <= hi[p]);
+            elig[j * N + n] = if ok { 1.0 } else { 0.0 };
+        }
+    }
+
+    // freecount = elig @ node_free ([J,N] @ [N,T])
+    let mut freecount = vec![0.0f32; J * T];
+    for j in 0..J {
+        for n in 0..N {
+            let e = elig[j * N + n];
+            if e == 0.0 {
+                continue;
+            }
+            let row = &input.node_free[n * T..(n + 1) * T];
+            let out = &mut freecount[j * T..(j + 1) * T];
+            for t in 0..T {
+                out[t] += e * row[t];
+            }
+        }
+    }
+
+    // earliest: consecutive-run scan
+    let mut earliest = vec![-1.0f32; J];
+    for j in 0..J {
+        let req = input.req[j];
+        let dur = input.dur[j];
+        let fc = &freecount[j * T..(j + 1) * T];
+        let mut run = 0.0f32;
+        for (t, &v) in fc.iter().enumerate() {
+            run = if v >= req { run + 1.0 } else { 0.0 };
+            if run >= dur && earliest[j] < 0.0 {
+                earliest[j] = t as f32 - dur + 1.0;
+            }
+        }
+    }
+
+    // scores = feats @ weights
+    let mut scores = vec![0.0f32; J];
+    for j in 0..J {
+        let feats = &input.job_feats[j * F..(j + 1) * F];
+        scores[j] = feats
+            .iter()
+            .zip(&input.weights)
+            .map(|(a, b)| a * b)
+            .sum();
+    }
+
+    StepOutput {
+        elig,
+        freecount,
+        earliest,
+        scores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::shapes::{HI_UNBOUNDED, LO_UNBOUNDED};
+
+    #[test]
+    fn unconstrained_job_matches_all_nodes() {
+        let mut input = StepInput::zeros();
+        for p in 0..P {
+            input.job_lo[p] = LO_UNBOUNDED;
+            input.job_hi[p] = HI_UNBOUNDED;
+        }
+        let out = run_reference(&input);
+        assert_eq!(out.elig[..N].iter().sum::<f32>(), N as f32);
+    }
+
+    #[test]
+    fn freecount_sums_eligible_nodes_only() {
+        let mut input = StepInput::zeros();
+        // job 0: eligible iff prop0 >= 1; nodes 0..4 have prop0 = 1.
+        input.job_lo[0] = 1.0;
+        input.job_hi[0] = HI_UNBOUNDED;
+        for p in 1..P {
+            input.job_lo[p] = LO_UNBOUNDED;
+            input.job_hi[p] = HI_UNBOUNDED;
+        }
+        for n in 0..4 {
+            input.node_props[n * P] = 1.0;
+            for t in 0..T {
+                input.node_free[n * T + t] = 2.0;
+            }
+        }
+        // node 5 has capacity but prop0 = 0 -> ineligible.
+        for t in 0..T {
+            input.node_free[5 * T + t] = 2.0;
+        }
+        let out = run_reference(&input);
+        assert_eq!(out.elig[..N].iter().sum::<f32>(), 4.0);
+        assert_eq!(out.freecount[0], 8.0);
+    }
+
+    #[test]
+    fn earliest_and_scores() {
+        let mut input = StepInput::zeros();
+        for p in 0..P {
+            input.job_lo[p] = LO_UNBOUNDED;
+            input.job_hi[p] = HI_UNBOUNDED;
+        }
+        // node 0 free from slot 10 onward with 4 procs
+        for t in 10..T {
+            input.node_free[t] = 4.0;
+        }
+        input.req[0] = 4.0;
+        input.dur[0] = 5.0;
+        input.job_feats[0] = 2.0;
+        input.weights[0] = 3.0;
+        let out = run_reference(&input);
+        assert_eq!(out.earliest[0], 10.0);
+        assert_eq!(out.scores[0], 6.0);
+        // job 1 (padding, req=0) starts at 0
+        assert_eq!(out.earliest[1], 0.0);
+    }
+
+    #[test]
+    fn infeasible_job_gets_minus_one() {
+        let mut input = StepInput::zeros();
+        input.req[0] = 1.0; // no node has capacity and none matched
+        let out = run_reference(&input);
+        assert_eq!(out.earliest[0], -1.0);
+    }
+}

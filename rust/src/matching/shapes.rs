@@ -1,0 +1,44 @@
+//! Canonical AOT compile shapes — keep in sync with
+//! `python/compile/model.py` and `artifacts/manifest.json`.
+
+/// Jobs per scheduling-round chunk (larger queues are chunked).
+pub const J: usize = 64;
+/// Max nodes (covers the Xeon 17-node and Icluster 119-node testbeds).
+pub const N: usize = 128;
+/// Matchable numeric properties per node.
+pub const P: usize = 8;
+/// Gantt horizon slots fed to the feasibility scan.
+pub const T: usize = 96;
+/// Priority features per job.
+pub const F: usize = 6;
+
+/// Default wall-seconds per horizon slot (96 slots × 300 s = 8 h window).
+pub const DEFAULT_SLOT_SECS: i64 = 300;
+
+/// "Unbounded" sentinels for interval constraints. Finite (not ±inf) so
+/// no NaN can leak out of downstream arithmetic.
+pub const LO_UNBOUNDED: f32 = -1.0e30;
+pub const HI_UNBOUNDED: f32 = 1.0e30;
+
+/// Property value assigned to *padding* node columns: strictly below
+/// [`LO_UNBOUNDED`], so even an unconstrained job rejects padding nodes.
+pub const PAD_PROP: f32 = -2.0e30;
+
+#[cfg(test)]
+mod tests {
+    /// Guard: shapes must match the python manifest when artifacts exist.
+    #[test]
+    fn matches_manifest_when_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return; // artifacts not built yet; covered by integration tests
+        };
+        let v = crate::util::Json::parse(&text).unwrap();
+        let get = |k: &str| v.get(k).and_then(crate::util::Json::as_i64).unwrap() as usize;
+        assert_eq!(get("J"), super::J);
+        assert_eq!(get("N"), super::N);
+        assert_eq!(get("P"), super::P);
+        assert_eq!(get("T"), super::T);
+        assert_eq!(get("F"), super::F);
+    }
+}

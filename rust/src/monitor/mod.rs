@@ -1,0 +1,109 @@
+//! The monitoring module (§2.4): node-state surveillance through the
+//! launcher's reachability sweep, recorded in the database (so the
+//! scheduler simply stops matching `Suspected` nodes) and in the event
+//! log.
+
+use std::sync::Arc;
+
+use crate::db::Db;
+use crate::launcher::Launcher;
+use crate::types::{NodeState, Time};
+use crate::Result;
+
+/// Outcome of one monitoring round.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MonitorReport {
+    /// Nodes newly marked `Suspected`.
+    pub suspected: Vec<crate::types::NodeId>,
+    /// Nodes that recovered to `Alive`.
+    pub recovered: Vec<crate::types::NodeId>,
+}
+
+/// Run one monitoring round: ping every node, reconcile database state.
+pub fn monitor_round(
+    db: &std::sync::Mutex<Db>,
+    launcher: &Launcher,
+    now: Time,
+) -> Result<MonitorReport> {
+    let nodes = {
+        let mut db = db.lock().unwrap();
+        db.all_nodes()
+    };
+    let ids: Vec<_> = nodes.iter().map(|n| n.id).collect();
+    let states = launcher.ping_all(&ids);
+
+    let mut report = MonitorReport::default();
+    let mut db = db.lock().unwrap();
+    for (node, reachable) in states {
+        let current = nodes.iter().find(|n| n.id == node).unwrap();
+        match (current.state, reachable) {
+            (NodeState::Alive, false) => {
+                db.set_node_state(node, NodeState::Suspected)?;
+                db.log_event(now, "NODE_SUSPECTED", None, &current.hostname);
+                report.suspected.push(node);
+            }
+            (NodeState::Suspected, true) => {
+                db.set_node_state(node, NodeState::Alive)?;
+                db.log_event(now, "NODE_RECOVERED", None, &current.hostname);
+                report.recovered.push(node);
+            }
+            // Absent nodes are administratively off: never auto-changed.
+            _ => {}
+        }
+    }
+    Ok(report)
+}
+
+/// Helper used by `oarnodes`: summarize fleet state.
+pub fn fleet_summary(db: &mut Db) -> Vec<(String, String, u32)> {
+    db.all_nodes()
+        .into_iter()
+        .map(|n| (n.hostname.clone(), n.state.as_str().to_string(), n.nb_procs))
+        .collect()
+}
+
+pub use std::sync::Mutex as DbMutex;
+
+/// Convenience alias used by the server.
+pub type SharedDb = Arc<std::sync::Mutex<Db>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::VirtualCluster;
+    use crate::launcher::LauncherConfig;
+
+    #[test]
+    fn suspect_and_recover_cycle() {
+        let cluster = Arc::new(VirtualCluster::tiny(3, 1));
+        let mut db = Db::new();
+        cluster.register(&mut db);
+        let db = std::sync::Mutex::new(db);
+        let launcher = Launcher::new(
+            cluster.clone(),
+            LauncherConfig {
+                time_scale: 0.0,
+                ..Default::default()
+            },
+        );
+
+        cluster.inject_failure(2);
+        let r = monitor_round(&db, &launcher, 100).unwrap();
+        assert_eq!(r.suspected, vec![2]);
+        assert!(r.recovered.is_empty());
+        {
+            let mut d = db.lock().unwrap();
+            assert_eq!(d.alive_nodes().len(), 2);
+            assert_eq!(d.events().iter().filter(|e| e.kind == "NODE_SUSPECTED").count(), 1);
+        }
+
+        // repeated round: no duplicate transitions
+        let r = monitor_round(&db, &launcher, 101).unwrap();
+        assert_eq!(r, MonitorReport::default());
+
+        cluster.repair(2);
+        let r = monitor_round(&db, &launcher, 102).unwrap();
+        assert_eq!(r.recovered, vec![2]);
+        assert_eq!(db.lock().unwrap().alive_nodes().len(), 3);
+    }
+}

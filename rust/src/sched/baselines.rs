@@ -1,0 +1,197 @@
+//! Baseline schedulers of the evaluation (§3.2.1).
+//!
+//! The paper compares OAR against Torque, Maui(+Torque) and SGE in their
+//! *default scheduling configurations* and characterizes their behaviour:
+//! "the schedulers of Torque and SGE ... all the jobs requiring few
+//! processors are scheduled first while all the big parallel jobs are
+//! delayed until the end" (greedy throughput packers, famine for big
+//! jobs); Maui adds priority scheduling with backfill. We implement those
+//! *policies* on our own substrate so the shape of figs. 4–8 and Table 3
+//! is reproducible — see DESIGN.md's substitution table.
+
+use crate::types::Time;
+
+use super::gantt::Gantt;
+use super::policies::{PolicyJob, QueuePolicy, Start};
+
+/// Greedy first-fit in FIFO order, no reservation for blocked jobs —
+/// Torque's (OpenPBS 2.3) default `pbs_sched`. A blocked big job is simply
+/// passed over, so small jobs flow past it for as long as they keep the
+/// machine busy (the famine structure of fig. 4).
+pub struct TorqueLike;
+
+impl QueuePolicy for TorqueLike {
+    fn name(&self) -> &'static str {
+        "torque_like"
+    }
+
+    fn schedule(&self, now: Time, jobs: &[PolicyJob], gantt: &mut Gantt) -> Vec<Start> {
+        let mut order: Vec<&PolicyJob> = jobs.iter().collect();
+        order.sort_by_key(|j| (j.submission_time, j.id));
+        fit_now_else_skip(now, &order, gantt)
+    }
+}
+
+/// Greedy first-fit in *increasing-resource* order — SGE's default sort
+/// favours small jobs even harder than Torque, which is why it posts the
+/// best raw throughput in Table 3 (and the worst famine).
+pub struct SgeLike;
+
+impl QueuePolicy for SgeLike {
+    fn name(&self) -> &'static str {
+        "sge_like"
+    }
+
+    fn schedule(&self, now: Time, jobs: &[PolicyJob], gantt: &mut Gantt) -> Vec<Start> {
+        let mut order: Vec<&PolicyJob> = jobs.iter().collect();
+        order.sort_by_key(|j| (j.total_procs(), j.submission_time, j.id));
+        fit_now_else_skip(now, &order, gantt)
+    }
+}
+
+/// Priority (FIFO) order with EASY backfilling — Maui's default: the first
+/// blocked job gets a reservation at its earliest feasible time; later
+/// jobs may start now only if they do not delay that reservation (which
+/// the Gantt placement enforces structurally).
+pub struct MauiLike;
+
+impl QueuePolicy for MauiLike {
+    fn name(&self) -> &'static str {
+        "maui_like"
+    }
+
+    fn schedule(&self, now: Time, jobs: &[PolicyJob], gantt: &mut Gantt) -> Vec<Start> {
+        let mut order: Vec<&PolicyJob> = jobs.iter().collect();
+        order.sort_by_key(|j| (j.submission_time, j.id));
+
+        let mut starts = Vec::new();
+        let mut head_reserved = false;
+        for job in order {
+            let avail = gantt.available_nodes_at(&job.eligible, job.weight, now, job.duration);
+            if avail.len() >= job.nb_nodes as usize {
+                let nodes = avail[..job.nb_nodes as usize].to_vec();
+                for n in &nodes {
+                    gantt.occupy(job.id, *n, job.weight, now, now + job.duration);
+                }
+                starts.push((job.id, nodes));
+            } else if !head_reserved {
+                // EASY: exactly one reservation, for the first blocked job.
+                if let Some((t, nodes)) = gantt.find_earliest(
+                    &job.eligible,
+                    job.nb_nodes,
+                    job.weight,
+                    job.duration,
+                    now,
+                ) {
+                    for n in &nodes {
+                        gantt.occupy(job.id, *n, job.weight, t, t + job.duration);
+                    }
+                    head_reserved = true;
+                }
+            }
+            // further blocked jobs: no reservation (aggressive backfill)
+        }
+        starts
+    }
+}
+
+/// Shared body of the greedy packers.
+fn fit_now_else_skip(now: Time, order: &[&PolicyJob], gantt: &mut Gantt) -> Vec<Start> {
+    let mut starts = Vec::new();
+    for job in order {
+        let avail = gantt.available_nodes_at(&job.eligible, job.weight, now, job.duration);
+        if avail.len() >= job.nb_nodes as usize {
+            let nodes = avail[..job.nb_nodes as usize].to_vec();
+            for n in &nodes {
+                gantt.occupy(job.id, *n, job.weight, now, now + job.duration);
+            }
+            starts.push((job.id, nodes));
+        }
+    }
+    starts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::JobId;
+
+    fn job(id: JobId, nb_nodes: u32, dur: Time, sub: Time) -> PolicyJob {
+        PolicyJob {
+            id,
+            nb_nodes,
+            weight: 1,
+            duration: dur,
+            submission_time: sub,
+            eligible: vec![1, 2, 3, 4],
+            best_effort: false,
+            score: 0.0,
+        }
+    }
+
+    fn gantt4() -> Gantt {
+        Gantt::new(&[(1, 1), (2, 1), (3, 1), (4, 1)])
+    }
+
+    #[test]
+    fn torque_passes_over_blocked_big_job() {
+        let mut g = gantt4();
+        g.occupy(99, 1, 1, 0, 50);
+        // j1 (4 nodes) blocked; j2 (1 node) flows past it.
+        let jobs = vec![job(1, 4, 100, 0), job(2, 1, 100, 1)];
+        let starts = TorqueLike.schedule(0, &jobs, &mut g);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].0, 2, "small job overtakes the blocked big one");
+        // and no reservation exists for j1:
+        assert!(g.allocations().iter().all(|(_, a)| a.job != 1));
+    }
+
+    #[test]
+    fn sge_sorts_small_first_even_when_submitted_later() {
+        let mut g = gantt4();
+        // 3 free procs; FIFO would start j1 (3 nodes) and starve j2/j3.
+        g.occupy(99, 4, 1, 0, 1000);
+        let jobs = vec![job(1, 3, 100, 0), job(2, 1, 100, 1), job(3, 1, 100, 2)];
+        let starts = SgeLike.schedule(0, &jobs, &mut g);
+        let ids: Vec<JobId> = starts.iter().map(|s| s.0).collect();
+        // j2, j3 (1 node each) start first; j1 then still fits? only 1 proc
+        // left, so no.
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn maui_reserves_head_and_backfills_behind_it() {
+        let mut g = Gantt::new(&[(1, 1), (2, 1)]);
+        g.occupy(99, 1, 1, 0, 100);
+        // j1 needs both nodes -> EASY reservation at t=100.
+        // j2 (1 node, 60s) fits in node 2's hole before t=100 -> backfills.
+        // j3 (1 node, 200s) would delay j1 -> must NOT start.
+        let jobs = vec![job(1, 2, 50, 0), job(2, 1, 60, 1), job(3, 1, 200, 2)];
+        let starts = MauiLike.schedule(0, &jobs, &mut g);
+        assert_eq!(starts, vec![(2, vec![2])]);
+        // j1's reservation exists at exactly t=100:
+        let j1: Vec<_> = g
+            .allocations()
+            .into_iter()
+            .filter(|(_, a)| a.job == 1)
+            .collect();
+        assert_eq!(j1.len(), 2);
+        assert!(j1.iter().all(|(_, a)| a.start == 100));
+    }
+
+    #[test]
+    fn maui_only_first_blocked_job_gets_reservation() {
+        let mut g = Gantt::new(&[(1, 1), (2, 1)]);
+        g.occupy(99, 1, 1, 0, 100);
+        g.occupy(99, 2, 1, 0, 100);
+        let jobs = vec![job(1, 2, 50, 0), job(2, 2, 50, 1)];
+        let _ = MauiLike.schedule(0, &jobs, &mut g);
+        let reserved: Vec<JobId> = g
+            .allocations()
+            .into_iter()
+            .filter(|(_, a)| a.job != 99)
+            .map(|(_, a)| a.job)
+            .collect();
+        assert!(reserved.iter().all(|&j| j == 1), "only the head reserves: {reserved:?}");
+    }
+}

@@ -1,0 +1,475 @@
+//! The Gantt diagram: "an internal representation of the available
+//! ressources similar to a Gantt diagram" (§2.3). The meta-scheduler
+//! initializes it with the currently-executing jobs and the accepted
+//! reservations, then each queue's scheduler carves its jobs into the
+//! remaining holes.
+//!
+//! The representation is per-*node* processor-count timelines: each node
+//! holds a list of `(start, stop, procs)` allocations; a job asking for
+//! `nb_nodes` nodes × `weight` procs/node fits at time `t` on a node iff
+//! the node's free processor count stays ≥ `weight` over `[t, t + dur)`.
+
+use std::collections::BTreeMap;
+
+
+use crate::types::{JobId, NodeId, Time};
+
+/// One placed allocation (a rectangle of the Gantt).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub job: JobId,
+    pub start: Time,
+    pub stop: Time,
+    pub procs: u32,
+}
+
+/// Per-node timeline.
+#[derive(Debug, Clone)]
+struct NodeTimeline {
+    nb_procs: u32,
+    /// Allocations, kept sorted by start time.
+    allocs: Vec<Allocation>,
+}
+
+impl NodeTimeline {
+    /// Free processors at instant `t`. Allocations are kept sorted by
+    /// start, so only the prefix with `start <= t` can be active.
+    fn free_at(&self, t: Time) -> i64 {
+        let hi = self.allocs.partition_point(|a| a.start <= t);
+        let busy: i64 = self.allocs[..hi]
+            .iter()
+            .filter(|a| t < a.stop)
+            .map(|a| a.procs as i64)
+            .sum();
+        self.nb_procs as i64 - busy
+    }
+
+    /// Minimum free processors over the window `[t, t + dur)`: one sweep
+    /// over the allocations overlapping the window (perf: this is the
+    /// innermost loop of every placement — see EXPERIMENTS.md §Perf).
+    /// Events live in a stack buffer for the common few-overlaps case
+    /// (§Perf iteration 3: a heap allocation here doubled the greedy
+    /// baselines' whole-run cost).
+    fn min_free_over(&self, t: Time, dur: Time) -> i64 {
+        const STACK: usize = 32;
+        let end = t.saturating_add(dur);
+        let hi = self.allocs.partition_point(|a| a.start < end);
+        let mut busy_at_t: i64 = 0;
+        let mut buf = [(0 as Time, 0i64); STACK];
+        let mut n = 0;
+        let mut spill: Vec<(Time, i64)> = Vec::new();
+        let mut push = |ev: (Time, i64), buf: &mut [(Time, i64); STACK], n: &mut usize, spill: &mut Vec<(Time, i64)>| {
+            if *n < STACK {
+                buf[*n] = ev;
+                *n += 1;
+            } else {
+                spill.push(ev);
+            }
+        };
+        for a in &self.allocs[..hi] {
+            if a.stop <= t {
+                continue;
+            }
+            if a.start <= t {
+                busy_at_t += a.procs as i64;
+            } else {
+                push((a.start, a.procs as i64), &mut buf, &mut n, &mut spill);
+            }
+            if a.stop < end {
+                push((a.stop, -(a.procs as i64)), &mut buf, &mut n, &mut spill);
+            }
+        }
+        if n == 0 && spill.is_empty() {
+            return self.nb_procs as i64 - busy_at_t;
+        }
+        // Sort by (time, delta): releases (-) apply before acquisitions (+)
+        // at the same instant, matching the exclusive-stop semantics.
+        let events: &mut [(Time, i64)] = if spill.is_empty() {
+            &mut buf[..n]
+        } else {
+            spill.extend_from_slice(&buf[..n]);
+            &mut spill[..]
+        };
+        events.sort_unstable();
+        let mut busy = busy_at_t;
+        let mut max_busy = busy;
+        for (_, d) in events.iter() {
+            busy += *d;
+            max_busy = max_busy.max(busy);
+        }
+        self.nb_procs as i64 - max_busy
+    }
+
+    /// Time ranges `[lo, hi]` (inclusive, `hi` may be `FAR_FUTURE`) from
+    /// which a `(weight, dur)` job could *start* on this node: every hole
+    /// of the busy profile with `free >= weight` lasting at least `dur`,
+    /// shrunk by `dur` at the tail. Single sweep over the allocations.
+    fn feasible_starts(&self, weight: u32, dur: Time, not_before: Time) -> Vec<(Time, Time)> {
+        if weight > self.nb_procs {
+            return Vec::new();
+        }
+        // busy-profile events
+        let mut events: Vec<(Time, i64)> = Vec::with_capacity(self.allocs.len() * 2);
+        for a in &self.allocs {
+            events.push((a.start, a.procs as i64));
+            events.push((a.stop, -(a.procs as i64)));
+        }
+        events.sort_unstable();
+        let cap = self.nb_procs as i64;
+        let need = weight as i64;
+        let mut out = Vec::new();
+        let mut busy = 0i64;
+        let mut ok_since: Option<Time> = Some(Time::MIN / 4); // free before first event
+        let mut close = |since: Option<Time>, until: Time, out: &mut Vec<(Time, Time)>| {
+            if let Some(lo) = since {
+                // hole is [lo, until): valid starts are [lo, until - dur]
+                let hi = until - dur;
+                let lo = lo.max(not_before);
+                if hi >= lo {
+                    out.push((lo, hi));
+                }
+            }
+        };
+        let mut i = 0;
+        while i < events.len() {
+            let t = events[i].0;
+            while i < events.len() && events[i].0 == t {
+                busy += events[i].1;
+                i += 1;
+            }
+            let ok = cap - busy >= need;
+            match (ok_since, ok) {
+                (Some(_), true) | (None, false) => {}
+                (Some(_), false) => {
+                    close(ok_since, t, &mut out);
+                    ok_since = None;
+                }
+                (None, true) => ok_since = Some(t),
+            }
+        }
+        // trailing hole extends forever
+        if let Some(lo) = ok_since {
+            out.push((lo.max(not_before), FAR_FUTURE));
+        }
+        out
+    }
+}
+
+/// Sentinel for "unbounded" interval ends (far enough that `+ dur` cannot
+/// overflow).
+pub const FAR_FUTURE: Time = Time::MAX / 4;
+
+/// The whole diagram.
+#[derive(Debug, Clone)]
+pub struct Gantt {
+    nodes: BTreeMap<NodeId, NodeTimeline>,
+}
+
+impl Gantt {
+    /// Build an empty diagram over `(node, nb_procs)` resources.
+    pub fn new(nodes: &[(NodeId, u32)]) -> Gantt {
+        Gantt {
+            nodes: nodes
+                .iter()
+                .map(|(id, procs)| {
+                    (
+                        *id,
+                        NodeTimeline {
+                            nb_procs: *procs,
+                            allocs: Vec::new(),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        self.nodes.keys().copied().collect()
+    }
+
+    pub fn total_procs(&self) -> u32 {
+        self.nodes.values().map(|n| n.nb_procs).sum()
+    }
+
+    /// Occupy `procs` processors of `node` over `[start, stop)`.
+    /// Fails (returning `false`, placing nothing) on oversubscription or an
+    /// unknown node — the invariant the proptests lean on.
+    pub fn occupy(&mut self, job: JobId, node: NodeId, procs: u32, start: Time, stop: Time) -> bool {
+        if stop <= start {
+            return false;
+        }
+        let Some(tl) = self.nodes.get(&node) else {
+            return false;
+        };
+        if tl.min_free_over(start, stop - start) < procs as i64 {
+            return false;
+        }
+        let tl = self.nodes.get_mut(&node).unwrap();
+        let alloc = Allocation { job, start, stop, procs };
+        let pos = tl.allocs.partition_point(|a| a.start <= start);
+        tl.allocs.insert(pos, alloc);
+        true
+    }
+
+    /// Remove every allocation of `job` (used when a best-effort job is
+    /// cancelled or a running job terminates early).
+    pub fn release_job(&mut self, job: JobId) {
+        for tl in self.nodes.values_mut() {
+            tl.allocs.retain(|a| a.job != job);
+        }
+    }
+
+    /// Free processors of `node` at `t` (0 for unknown nodes).
+    pub fn free_at(&self, node: NodeId, t: Time) -> i64 {
+        self.nodes.get(&node).map(|tl| tl.free_at(t)).unwrap_or(0)
+    }
+
+    /// Nodes from `eligible` that can host `weight` procs over
+    /// `[t, t + dur)`, in id order.
+    pub fn available_nodes_at(
+        &self,
+        eligible: &[NodeId],
+        weight: u32,
+        t: Time,
+        dur: Time,
+    ) -> Vec<NodeId> {
+        eligible
+            .iter()
+            .filter(|id| {
+                self.nodes
+                    .get(id)
+                    .map(|tl| tl.min_free_over(t, dur) >= weight as i64)
+                    .unwrap_or(false)
+            })
+            .copied()
+            .collect()
+    }
+
+    /// Earliest `t >= not_before` at which `nb_nodes` of the eligible nodes
+    /// each have `weight` free procs for `dur` seconds; returns the chosen
+    /// nodes. This is the per-job hole-finding walk the L1 kernel
+    /// accelerates in bulk (the kernel prunes+orders, this gives the exact
+    /// placement).
+    ///
+    /// Implementation (EXPERIMENTS.md §Perf iteration 2): each node's
+    /// feasible-start ranges are computed with one sweep of its own
+    /// allocation list, then one global event sweep finds the earliest
+    /// instant covered by ≥ `nb_nodes` ranges — O(Σ_n A_n log A_n) per
+    /// placement instead of the previous per-candidate × per-node rescan.
+    pub fn find_earliest(
+        &self,
+        eligible: &[NodeId],
+        nb_nodes: u32,
+        weight: u32,
+        dur: Time,
+        not_before: Time,
+    ) -> Option<(Time, Vec<NodeId>)> {
+        if nb_nodes == 0 || dur <= 0 {
+            return Some((not_before, Vec::new()));
+        }
+        // Coverage events over feasible-start ranges [lo, hi] (inclusive).
+        let mut events: Vec<(Time, i64)> = Vec::new();
+        for id in eligible {
+            if let Some(tl) = self.nodes.get(id) {
+                for (lo, hi) in tl.feasible_starts(weight, dur, not_before) {
+                    events.push((lo, 1));
+                    events.push((hi.saturating_add(1), -1));
+                }
+            }
+        }
+        events.sort_unstable();
+        let mut covered = 0i64;
+        let mut i = 0;
+        let mut t = None;
+        while i < events.len() {
+            let at = events[i].0;
+            while i < events.len() && events[i].0 == at {
+                covered += events[i].1;
+                i += 1;
+            }
+            if covered >= nb_nodes as i64 {
+                t = Some(at);
+                break;
+            }
+        }
+        let t = t?;
+        // Materialize the node choice at t (id order, as before).
+        let avail = self.available_nodes_at(eligible, weight, t, dur);
+        debug_assert!(avail.len() >= nb_nodes as usize);
+        Some((t, avail[..nb_nodes as usize].to_vec()))
+    }
+
+    /// Busy processors summed over all nodes at instant `t` — the
+    /// utilization curve of figs. 4–8.
+    pub fn busy_procs_at(&self, t: Time) -> u32 {
+        self.nodes
+            .values()
+            .map(|tl| tl.nb_procs as i64 - tl.free_at(t))
+            .sum::<i64>() as u32
+    }
+
+    /// All allocations (for rendering and invariant checks).
+    pub fn allocations(&self) -> Vec<(NodeId, Allocation)> {
+        let mut out = Vec::new();
+        for (id, tl) in &self.nodes {
+            for a in &tl.allocs {
+                out.push((*id, a.clone()));
+            }
+        }
+        out
+    }
+
+    /// Latest allocation stop time (makespan of the planned schedule).
+    pub fn makespan(&self) -> Time {
+        self.nodes
+            .values()
+            .flat_map(|tl| tl.allocs.iter().map(|a| a.stop))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Discretize free capacity into the `node_free[N, T]` tensor consumed
+    /// by the L1 kernel path: entry `(n, t)` is the node's *minimum* free
+    /// proc count over slot `t` (conservative: a slot partially busy counts
+    /// as its worst instant, so the kernel never over-promises).
+    pub fn free_matrix(
+        &self,
+        nodes: &[NodeId],
+        origin: Time,
+        slot_secs: Time,
+        slots: usize,
+    ) -> Vec<Vec<f32>> {
+        nodes
+            .iter()
+            .map(|id| {
+                (0..slots)
+                    .map(|s| {
+                        let t = origin + s as Time * slot_secs;
+                        self.nodes
+                            .get(id)
+                            .map(|tl| tl.min_free_over(t, slot_secs).max(0) as f32)
+                            .unwrap_or(0.0)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gantt2() -> Gantt {
+        // two nodes, 2 procs each
+        Gantt::new(&[(1, 2), (2, 2)])
+    }
+
+    #[test]
+    fn occupy_and_free() {
+        let mut g = gantt2();
+        assert!(g.occupy(10, 1, 2, 0, 100));
+        assert_eq!(g.free_at(1, 50), 0);
+        assert_eq!(g.free_at(1, 100), 2, "stop is exclusive");
+        assert_eq!(g.free_at(2, 50), 2);
+        assert_eq!(g.busy_procs_at(50), 2);
+    }
+
+    #[test]
+    fn oversubscription_is_rejected() {
+        let mut g = gantt2();
+        assert!(g.occupy(1, 1, 2, 0, 10));
+        assert!(!g.occupy(2, 1, 1, 5, 15), "node 1 is full over [0,10)");
+        assert!(g.occupy(2, 1, 1, 10, 15), "free after the first stops");
+    }
+
+    #[test]
+    fn zero_length_and_unknown_node_rejected() {
+        let mut g = gantt2();
+        assert!(!g.occupy(1, 1, 1, 10, 10));
+        assert!(!g.occupy(1, 99, 1, 0, 10));
+    }
+
+    #[test]
+    fn find_earliest_immediately() {
+        let g = gantt2();
+        let (t, nodes) = g.find_earliest(&[1, 2], 2, 1, 60, 0).unwrap();
+        assert_eq!(t, 0);
+        assert_eq!(nodes, vec![1, 2]);
+    }
+
+    #[test]
+    fn find_earliest_after_release() {
+        let mut g = gantt2();
+        g.occupy(1, 1, 2, 0, 100);
+        g.occupy(1, 2, 2, 0, 40);
+        // wants both nodes fully: must wait for node 1 at t=100
+        let (t, nodes) = g.find_earliest(&[1, 2], 2, 2, 10, 0).unwrap();
+        assert_eq!(t, 100);
+        assert_eq!(nodes.len(), 2);
+        // a 1-node job fits at t=40 on node 2
+        let (t, nodes) = g.find_earliest(&[1, 2], 1, 2, 10, 0).unwrap();
+        assert_eq!(t, 40);
+        assert_eq!(nodes, vec![2]);
+    }
+
+    #[test]
+    fn find_earliest_respects_window_interior() {
+        let mut g = gantt2();
+        // node 1 busy over [50, 60): a 100s job starting at 0 cannot use it
+        g.occupy(1, 1, 2, 50, 60);
+        let (t, nodes) = g.find_earliest(&[1], 1, 1, 100, 0).unwrap();
+        assert_eq!(t, 60);
+        assert_eq!(nodes, vec![1]);
+    }
+
+    #[test]
+    fn find_earliest_none_for_impossible() {
+        let g = gantt2();
+        assert!(g.find_earliest(&[1, 2], 3, 1, 10, 0).is_none());
+        assert!(g.find_earliest(&[1], 1, 3, 10, 0).is_none());
+    }
+
+    #[test]
+    fn weight_aware_packing() {
+        let mut g = gantt2();
+        // one proc of node 1 taken forever
+        g.occupy(7, 1, 1, 0, 1_000_000);
+        // weight-2 job cannot use node 1
+        let (t, nodes) = g.find_earliest(&[1, 2], 1, 2, 10, 0).unwrap();
+        assert_eq!((t, nodes), (0, vec![2]));
+        // weight-1 job still can
+        let (_, nodes) = g.find_earliest(&[1, 2], 2, 1, 10, 0).unwrap();
+        assert_eq!(nodes, vec![1, 2]);
+    }
+
+    #[test]
+    fn release_job_frees_everything() {
+        let mut g = gantt2();
+        g.occupy(5, 1, 2, 0, 100);
+        g.occupy(5, 2, 2, 0, 100);
+        assert_eq!(g.busy_procs_at(10), 4);
+        g.release_job(5);
+        assert_eq!(g.busy_procs_at(10), 0);
+        assert!(g.allocations().is_empty());
+    }
+
+    #[test]
+    fn makespan() {
+        let mut g = gantt2();
+        assert_eq!(g.makespan(), 0);
+        g.occupy(1, 1, 1, 0, 30);
+        g.occupy(2, 2, 1, 10, 70);
+        assert_eq!(g.makespan(), 70);
+    }
+
+    #[test]
+    fn free_matrix_is_conservative() {
+        let mut g = gantt2();
+        g.occupy(1, 1, 2, 5, 15); // busy inside slot 0 (0..10) and slot 1
+        let m = g.free_matrix(&[1, 2], 0, 10, 3);
+        assert_eq!(m[0], vec![0.0, 0.0, 2.0], "partially-busy slots count 0");
+        assert_eq!(m[1], vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! The scheduling layer: Gantt resource diagram, per-queue policies, the
+//! meta-scheduler (§2.3), and the baseline schedulers of the evaluation
+//! (§3.2).
+
+pub mod baselines;
+pub mod gantt;
+pub mod meta;
+pub mod policies;
+
+pub use gantt::{Allocation, Gantt};
+pub use meta::{policy_for, MetaScheduler, SchedulerConfig, SchedulerDecision};
+pub use policies::{PolicyJob, QueuePolicy};

@@ -1,0 +1,738 @@
+//! The live system: database + central automaton + meta-scheduler +
+//! launcher + monitoring wired together, with the submission interface of
+//! §2.1 (`oarsub`/`oardel`/`oarstat` semantics).
+//!
+//! Threading model (the paper's §2.2 structure): ONE automaton thread runs
+//! all executive modules sequentially, reading work from the
+//! [`NotificationHub`]; submissions and job-end events only touch the
+//! database and then notify the hub. Job execution gets a thread per
+//! launched job (the paper forks per-job execution processes), which
+//! drives the launcher, simulates the command's runtime on the virtual
+//! cluster, and reports termination as an event.
+//!
+//! Clock: the server counts **milliseconds** since startup (`Time` is
+//! unit-agnostic; the discrete-event simulator uses seconds). `maxTime`
+//! given in seconds by `submit` is converted. Modeled latencies (launcher)
+//! and simulated command runtimes are scaled by `time_scale`, so the burst
+//! benchmarks (figs. 9–10) can run a latency-faithful stack quickly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::admission::{self, Admission};
+use crate::central::{JobEvent, NotificationHub, Planner, Task, Work};
+use crate::cluster::VirtualCluster;
+use crate::db::{Accounting, Db, Expr};
+use crate::launcher::{Launcher, LauncherConfig};
+use crate::matching::ScheduleStep;
+use crate::monitor;
+use crate::sched::{MetaScheduler, SchedulerConfig, SchedulerDecision};
+use crate::types::{Job, JobId, JobSpec, JobState, NodeId, Time};
+use crate::Result;
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub launcher: LauncherConfig,
+    pub sched: SchedulerConfig,
+    /// Periodic (redundant) re-execution periods, §2.2.
+    pub schedule_every: Duration,
+    pub monitor_every: Duration,
+    pub check_jobs_every: Duration,
+    /// Scale applied to simulated command runtimes (`sleep N`).
+    pub time_scale: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            launcher: LauncherConfig::default(),
+            sched: SchedulerConfig::default(),
+            schedule_every: Duration::from_secs(30),
+            monitor_every: Duration::from_secs(60),
+            check_jobs_every: Duration::from_secs(30),
+            time_scale: 1.0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Fast configuration for tests and benchmarks: modeled latencies are
+    /// compressed by `scale`.
+    pub fn fast(scale: f64) -> ServerConfig {
+        ServerConfig {
+            launcher: LauncherConfig {
+                time_scale: scale,
+                ..Default::default()
+            },
+            schedule_every: Duration::from_millis(200),
+            monitor_every: Duration::from_millis(500),
+            check_jobs_every: Duration::from_millis(200),
+            time_scale: scale,
+            ..Default::default()
+        }
+    }
+}
+
+/// Shared innards handed to execution threads.
+struct Inner {
+    db: Mutex<Db>,
+    hub: NotificationHub,
+    launcher: Launcher,
+    epoch: Instant,
+    time_scale: f64,
+    running: AtomicBool,
+}
+
+impl Inner {
+    /// Milliseconds since server start.
+    fn now(&self) -> Time {
+        self.epoch.elapsed().as_millis() as Time
+    }
+}
+
+/// The OAR server.
+pub struct Server {
+    inner: Arc<Inner>,
+    cluster: Arc<VirtualCluster>,
+    automaton: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Build a server over a virtual cluster. The database is created,
+    /// populated with the standard queues, default admission rules and the
+    /// cluster inventory.
+    pub fn new(cluster: Arc<VirtualCluster>, config: ServerConfig) -> Server {
+        let mut db = Db::with_standard_queues();
+        admission::install_default_rules(&mut db);
+        cluster.register(&mut db);
+        Self::from_db(db, cluster, config)
+    }
+
+    /// Build over an existing database (e.g. restored from a snapshot).
+    pub fn from_db(db: Db, cluster: Arc<VirtualCluster>, config: ServerConfig) -> Server {
+        let launcher = Launcher::new(cluster.clone(), config.launcher.clone());
+        let inner = Arc::new(Inner {
+            db: Mutex::new(db),
+            hub: NotificationHub::new(),
+            launcher,
+            epoch: Instant::now(),
+            time_scale: config.time_scale,
+            running: AtomicBool::new(true),
+        });
+
+        let planner = Planner::new(
+            config.schedule_every,
+            config.monitor_every,
+            config.check_jobs_every,
+        );
+
+        // The PJRT executable is not Send: build the engine (and therefore
+        // the meta-scheduler) *inside* the automaton thread.
+        let sched_cfg = config.sched.clone();
+        let automaton = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("oar-central".into())
+                .spawn(move || {
+                    let engine: Box<dyn ScheduleStep> = if sched_cfg.dense_matching {
+                        crate::runtime::HloStep::best_available()
+                    } else {
+                        Box::new(crate::matching::ReferenceStep)
+                    };
+                    let meta = MetaScheduler::new(sched_cfg, engine);
+                    automaton_loop(inner, meta, planner)
+                })
+                .expect("spawn automaton")
+        };
+
+        Server {
+            inner,
+            cluster,
+            automaton: Some(automaton),
+        }
+    }
+
+    /// Milliseconds since server start (the server's `Time`).
+    pub fn now(&self) -> Time {
+        self.inner.now()
+    }
+
+    pub fn cluster(&self) -> &Arc<VirtualCluster> {
+        &self.cluster
+    }
+
+    /// Run `f` against the database (the only shared state there is).
+    pub fn with_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
+        f(&mut self.inner.db.lock().unwrap())
+    }
+
+    // ------------------------------------------------------ commands ----
+
+    /// `oarsub`: run admission, insert the job, notify the central module
+    /// (§2.1 fig. 3). `max_time` in the spec is in *seconds*.
+    pub fn submit(&self, spec: &JobSpec) -> Result<std::result::Result<JobId, String>> {
+        let now = self.inner.now();
+        let mut db = self.inner.db.lock().unwrap();
+        let admitted = match admission::admit(&mut db, spec)? {
+            Admission::Accepted(s) => s,
+            Admission::Rejected(reason) => return Ok(Err(reason)),
+        };
+        let mut job = Job::from_spec(&admitted, now);
+        job.max_time = admitted.max_time.unwrap_or(3600) * 1000; // s → ms
+        if let Some(r) = job.reservation_start {
+            job.reservation_start = Some(r * 1000);
+        }
+        let id = db.insert_job(job);
+        db.log_event(now, "SUBMISSION", Some(id), &admitted.user);
+        drop(db);
+        self.inner.hub.notify(Task::Schedule);
+        Ok(Ok(id))
+    }
+
+    /// `oarsub --array N`: multi-parametric campaign submission (the §1
+    /// user need OAR was built for: "support for multi-parametric
+    /// applications (for large simulations composed of many small
+    /// independent computations)"). Submits `n` copies of `spec`; every
+    /// occurrence of `{i}` in the command is replaced by the task index.
+    /// One admission pass per task (rules may depend on the command).
+    pub fn submit_array(
+        &self,
+        spec: &JobSpec,
+        n: u32,
+    ) -> Result<std::result::Result<Vec<JobId>, String>> {
+        let mut ids = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            let task = JobSpec {
+                command: spec.command.replace("{i}", &i.to_string()),
+                ..spec.clone()
+            };
+            match self.submit(&task)? {
+                Ok(id) => ids.push(id),
+                Err(reason) => {
+                    // all-or-nothing: cancel what was already inserted
+                    for id in ids {
+                        let _ = self.delete(id);
+                    }
+                    return Ok(Err(format!("task {i}: {reason}")));
+                }
+            }
+        }
+        Ok(Ok(ids))
+    }
+
+    /// `oardel`: cancel a job (waiting → Error; running → killed).
+    pub fn delete(&self, id: JobId) -> Result<()> {
+        let now = self.inner.now();
+        let mut db = self.inner.db.lock().unwrap();
+        let job = db.job(id)?;
+        if job.state.is_terminal() {
+            return Ok(());
+        }
+        let nodes = db.assigned_nodes(id);
+        db.fail_job(id, "cancelled by user", now)?;
+        db.log_event(now, "DELETION", Some(id), &job.user);
+        drop(db);
+        if !nodes.is_empty() {
+            self.inner.launcher.kill(&nodes);
+        }
+        self.inner.hub.notify(Task::Schedule);
+        Ok(())
+    }
+
+    /// `oarstat`: all jobs (optionally filtered by a WHERE clause over the
+    /// raw job columns, e.g. `state = 'Running' AND user = 'alice'`).
+    pub fn stat(&self, filter: Option<&str>) -> Result<Vec<Job>> {
+        let expr = Expr::parse(filter.unwrap_or(""))
+            .map_err(|e| anyhow::anyhow!("bad filter: {e}"))?;
+        Ok(self.with_db(|db| db.jobs_where(&expr)))
+    }
+
+    /// `oarstat --accounting`: aggregate usage report.
+    pub fn accounting(&self) -> Accounting {
+        self.with_db(|db| {
+            let jobs = db.jobs_where(&Expr::parse("").unwrap());
+            Accounting::compute(&jobs)
+        })
+    }
+
+    /// `oarnodes`: fleet state.
+    pub fn nodes(&self) -> Vec<(String, String, u32)> {
+        self.with_db(monitor::fleet_summary)
+    }
+
+    /// `oarhold` / `oarresume`.
+    pub fn hold(&self, id: JobId) -> Result<()> {
+        let now = self.inner.now();
+        self.with_db(|db| db.set_job_state(id, JobState::Hold, now))?;
+        Ok(())
+    }
+
+    pub fn resume(&self, id: JobId) -> Result<()> {
+        let now = self.inner.now();
+        self.with_db(|db| db.set_job_state(id, JobState::Waiting, now))?;
+        self.inner.hub.notify(Task::Schedule);
+        Ok(())
+    }
+
+    /// Force a scheduling round soon (used by tests/benches).
+    pub fn kick(&self) {
+        self.inner.hub.notify(Task::Schedule);
+    }
+
+    /// Notification telemetry: (accepted, discarded-as-redundant).
+    pub fn hub_stats(&self) -> (u64, u64) {
+        (
+            self.inner.hub.accepted.load(Ordering::Relaxed),
+            self.inner.hub.discarded.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Block until every job is terminal (or `timeout`); returns success.
+    pub fn wait_all_terminal(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let pending = self.with_db(|db| {
+                JobState::ALL
+                    .iter()
+                    .filter(|s| !s.is_terminal())
+                    .map(|s| db.jobs_in_state(*s).len())
+                    .sum::<usize>()
+            });
+            if pending == 0 {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Stop the automaton and join it; returns the final database for
+    /// inspection (reports, snapshots).
+    pub fn shutdown(mut self) -> Db {
+        self.inner.running.store(false, Ordering::SeqCst);
+        self.inner.hub.notify(Task::Shutdown);
+        if let Some(h) = self.automaton.take() {
+            let _ = h.join();
+        }
+        let inner = self.inner.clone();
+        drop(self);
+        match Arc::try_unwrap(inner) {
+            Ok(i) => i.db.into_inner().unwrap(),
+            Err(shared) => {
+                // Execution threads may still hold clones briefly: go
+                // through a snapshot instead of waiting on them.
+                let db = shared.db.lock().unwrap();
+                let tmp = std::env::temp_dir().join(format!(
+                    "oar-shutdown-{}-{:?}.json",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                db.snapshot(&tmp).expect("snapshot");
+                drop(db);
+                let restored = Db::restore(&tmp).expect("restore");
+                let _ = std::fs::remove_file(tmp);
+                restored
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.inner.running.store(false, Ordering::SeqCst);
+        self.inner.hub.notify(Task::Shutdown);
+        if let Some(h) = self.automaton.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// -------------------------------------------------------- automaton ----
+
+fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Planner) {
+    while inner.running.load(Ordering::SeqCst) {
+        planner.tick(Instant::now(), &inner.hub);
+        while let Some(work) = inner.hub.poll() {
+            match work {
+                Work::Task(Task::Shutdown) => return,
+                Work::Task(Task::Schedule) => run_schedule(&inner, &mut meta),
+                Work::Task(Task::Monitor) => {
+                    let now = inner.now();
+                    let _ = monitor::monitor_round(&inner.db, &inner.launcher, now);
+                }
+                Work::Task(Task::CheckJobs) => check_jobs(&inner),
+                Work::Event(JobEvent::Ended { job, at, ok }) => finish_job(&inner, job, at, ok),
+                Work::Event(JobEvent::LaunchFailed { job, at }) => {
+                    let mut db = inner.db.lock().unwrap();
+                    let _ = db.fail_job(job, "launch failed", at);
+                    db.log_event(at, "LAUNCH_FAILED", Some(job), "");
+                    drop(db);
+                    inner.hub.notify(Task::Schedule);
+                }
+            }
+        }
+        inner.hub.wait_timeout(planner.min_period());
+    }
+}
+
+fn run_schedule(inner: &Arc<Inner>, meta: &mut MetaScheduler) {
+    let now = inner.now();
+    let decision = {
+        let mut db = inner.db.lock().unwrap();
+        match meta.round(&mut db, now) {
+            Ok(d) => d,
+            Err(e) => {
+                db.log_event(now, "SCHEDULER_ERROR", None, &e.to_string());
+                return;
+            }
+        }
+    };
+    apply_decision(inner, &decision, now);
+}
+
+fn apply_decision(inner: &Arc<Inner>, decision: &SchedulerDecision, now: Time) {
+    let mut db = inner.db.lock().unwrap();
+
+    for id in &decision.reservations_confirmed {
+        // fig. 1: Waiting → toAckReservation → (user ack) → Waiting.
+        let _ = db.set_job_state(*id, JobState::ToAckReservation, now);
+        let _ = db.set_job_state(*id, JobState::Waiting, now);
+        db.log_event(now, "RESERVATION_CONFIRMED", Some(*id), "");
+    }
+    for id in &decision.reservations_rejected {
+        let _ = db.fail_job(*id, "reservation slot unavailable", now);
+        db.log_event(now, "RESERVATION_REJECTED", Some(*id), "");
+    }
+    for (id, why) in &decision.rejected {
+        let _ = db.fail_job(*id, why, now);
+        db.log_event(now, "REJECTED", Some(*id), why);
+    }
+
+    let mut kills: Vec<(JobId, Vec<NodeId>)> = Vec::new();
+    for id in &decision.cancellations {
+        let nodes = db.assigned_nodes(*id);
+        let _ = db.fail_job(*id, "best-effort resources reclaimed", now);
+        db.log_event(now, "BESTEFFORT_KILL", Some(*id), "");
+        kills.push((*id, nodes));
+    }
+
+    let mut launches: Vec<(JobId, Vec<NodeId>, Time)> = Vec::new();
+    for (id, nodes) in &decision.starts {
+        let Ok(job) = db.job(*id) else { continue };
+        if job.state != JobState::Waiting {
+            continue; // stale decision (job deleted meanwhile)
+        }
+        if db.assigned_nodes(*id).is_empty() {
+            db.assign_nodes(*id, nodes, job.weight);
+        }
+        if db.set_job_state(*id, JobState::ToLaunch, now).is_ok() {
+            db.log_event(now, "SCHEDULED", Some(*id), &format!("{nodes:?}"));
+            let runtime = command_runtime(&job.command);
+            launches.push((*id, nodes.clone(), runtime));
+        }
+    }
+    drop(db);
+
+    for (_id, nodes) in &kills {
+        inner.launcher.kill(nodes);
+    }
+    if !decision.cancellations.is_empty() {
+        inner.hub.notify(Task::Schedule);
+    }
+    for (id, nodes, runtime_ms) in launches {
+        spawn_execution(inner.clone(), id, nodes, runtime_ms);
+    }
+}
+
+/// The execution module: one thread per launched job (§2: "a module ...
+/// for launching and controlling the execution of jobs").
+fn spawn_execution(inner: Arc<Inner>, id: JobId, nodes: Vec<NodeId>, runtime_ms: Time) {
+    std::thread::Builder::new()
+        .name(format!("oar-exec-{id}"))
+        .spawn(move || {
+            let now = inner.now();
+            {
+                let mut db = inner.db.lock().unwrap();
+                if db.set_job_state(id, JobState::Launching, now).is_err() {
+                    return; // cancelled before we started
+                }
+            }
+            let report = inner.launcher.launch(&nodes);
+            let now = inner.now();
+            if report.deployed.len() < nodes.len() {
+                // The launcher's reachability/timeout detection (§2.4):
+                // suspect the unreachable nodes right away so the next
+                // scheduling round avoids them (the monitor will recover
+                // them when they answer again).
+                {
+                    let mut db = inner.db.lock().unwrap();
+                    for n in &report.failed {
+                        let _ = db.set_node_state(*n, crate::types::NodeState::Suspected);
+                        db.log_event(now, "NODE_SUSPECTED", Some(id), &format!("node {n}"));
+                    }
+                }
+                inner.hub.push_event(JobEvent::LaunchFailed { job: id, at: now });
+                return;
+            }
+            {
+                let mut db = inner.db.lock().unwrap();
+                if db.set_job_state(id, JobState::Running, now).is_err() {
+                    return; // killed during deployment
+                }
+                let _ = db.set_job_bpid(id, Some((id % u32::MAX as u64) as u32));
+                db.log_event(now, "RUNNING", Some(id), "");
+            }
+            // Simulate the command's execution on the virtual cluster.
+            let scaled = Duration::from_millis(runtime_ms.max(0) as u64)
+                .mul_f64(inner.time_scale.max(0.0));
+            if !scaled.is_zero() {
+                std::thread::sleep(scaled);
+            }
+            let at = inner.now();
+            inner.hub.push_event(JobEvent::Ended { job: id, at, ok: true });
+        })
+        .expect("spawn execution thread");
+}
+
+fn finish_job(inner: &Arc<Inner>, id: JobId, at: Time, ok: bool) {
+    let mut db = inner.db.lock().unwrap();
+    let Ok(job) = db.job(id) else { return };
+    if job.state.is_terminal() {
+        return; // already failed/cancelled
+    }
+    let res = if ok {
+        db.set_job_state(id, JobState::Terminated, at)
+    } else {
+        db.fail_job(id, "execution failed", at)
+    };
+    if res.is_ok() {
+        db.log_event(at, "TERMINATED", Some(id), "");
+    }
+    drop(db);
+    inner.hub.notify(Task::Schedule);
+}
+
+/// Redundant safety net (§2.2): re-drive jobs that a lost notification or
+/// a crashed execution thread left behind. `Running` past its
+/// `maxTime` + grace is failed; `toLaunch`/`Launching` are left to their
+/// execution threads (they always emit an event).
+fn check_jobs(inner: &Arc<Inner>) {
+    let now = inner.now();
+    let mut db = inner.db.lock().unwrap();
+    let overdue: Vec<JobId> = db
+        .jobs_in_state(JobState::Running)
+        .into_iter()
+        .filter(|j| {
+            let started = j.start_time.unwrap_or(j.submission_time);
+            now - started > j.max_time + 60_000
+        })
+        .map(|j| j.id)
+        .collect();
+    for id in overdue {
+        let _ = db.fail_job(id, "walltime exceeded", now);
+        db.log_event(now, "WALLTIME_KILL", Some(id), "");
+    }
+}
+
+/// Simulated runtime of a job command, in milliseconds: `sleep N` runs N
+/// seconds; anything else (`date`, `/bin/true`...) is instantaneous. This
+/// is the virtual-cluster substitute for actually executing user binaries.
+pub fn command_runtime(command: &str) -> Time {
+    let mut parts = command.split_whitespace();
+    match parts.next() {
+        Some("sleep") => parts
+            .next()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(|secs| (secs * 1000.0) as Time)
+            .unwrap_or(0),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_server() -> Server {
+        test_server_scaled(0.0)
+    }
+
+    /// `scale` compresses modeled latencies and simulated runtimes.
+    fn test_server_scaled(scale: f64) -> Server {
+        let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+        let mut cfg = ServerConfig::fast(scale);
+        cfg.sched.dense_matching = false; // keep unit tests artifact-free
+        Server::new(cluster, cfg)
+    }
+
+    #[test]
+    fn command_runtime_parses() {
+        assert_eq!(command_runtime("date"), 0);
+        assert_eq!(command_runtime("sleep 2"), 2000);
+        assert_eq!(command_runtime("sleep 0.25"), 250);
+        assert_eq!(command_runtime("sleep"), 0);
+    }
+
+    #[test]
+    fn submit_runs_and_terminates() {
+        let server = test_server();
+        let id = server
+            .submit(&JobSpec::batch("alice", "date", 2, 60))
+            .unwrap()
+            .unwrap();
+        assert!(server.wait_all_terminal(Duration::from_secs(10)));
+        let job = server.with_db(|db| db.job(id)).unwrap();
+        assert_eq!(job.state, JobState::Terminated);
+        assert!(job.response_time().is_some());
+        let kinds: Vec<String> = server.with_db(|db| {
+            db.events().iter().map(|e| e.kind.clone()).collect()
+        });
+        assert!(kinds.iter().any(|k| k == "SUBMISSION"));
+        assert!(kinds.iter().any(|k| k == "SCHEDULED"));
+        assert!(kinds.iter().any(|k| k == "TERMINATED"));
+    }
+
+    #[test]
+    fn admission_rejection_is_reported() {
+        let server = test_server();
+        let res = server
+            .submit(&JobSpec {
+                queue: Some("nope".into()),
+                ..JobSpec::default()
+            })
+            .unwrap();
+        assert!(res.is_err());
+        assert_eq!(server.with_db(|db| db.job_count()), 0);
+    }
+
+    #[test]
+    fn delete_waiting_job() {
+        // Non-zero scale: the blocker really occupies the cluster for
+        // ~1.5 s, so job b is deterministically still Waiting when deleted.
+        let server = test_server_scaled(0.05);
+        let _block = server
+            .submit(&JobSpec::batch("a", "sleep 30", 4, 60))
+            .unwrap()
+            .unwrap();
+        let id = server
+            .submit(&JobSpec::batch("b", "date", 4, 60))
+            .unwrap()
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            server.with_db(|db| db.job(id)).unwrap().state,
+            JobState::Waiting
+        );
+        server.delete(id).unwrap();
+        let job = server.with_db(|db| db.job(id)).unwrap();
+        assert_eq!(job.state, JobState::Error);
+        assert!(server.wait_all_terminal(Duration::from_secs(20)));
+    }
+
+    #[test]
+    fn impossible_job_becomes_error() {
+        let server = test_server();
+        let id = server
+            .submit(&JobSpec::batch("a", "date", 64, 60))
+            .unwrap()
+            .unwrap();
+        assert!(server.wait_all_terminal(Duration::from_secs(10)));
+        let job = server.with_db(|db| db.job(id)).unwrap();
+        assert_eq!(job.state, JobState::Error);
+        assert!(job.message.contains("unsatisfiable"));
+    }
+
+    #[test]
+    fn burst_of_jobs_all_terminate() {
+        let server = test_server();
+        let ids: Vec<JobId> = (0..50)
+            .map(|i| {
+                server
+                    .submit(&JobSpec::batch(&format!("u{i}"), "date", 1, 60))
+                    .unwrap()
+                    .unwrap()
+            })
+            .collect();
+        assert!(server.wait_all_terminal(Duration::from_secs(30)));
+        let db_jobs = server.stat(Some("state = 'Terminated'")).unwrap();
+        assert_eq!(db_jobs.len(), ids.len());
+        let (_accepted, discarded) = server.hub_stats();
+        // coalescing must have absorbed part of the submission storm
+        assert!(discarded > 0, "expected redundant notifications");
+    }
+
+    #[test]
+    fn hold_and_resume() {
+        let server = test_server_scaled(0.05);
+        let blocker = server
+            .submit(&JobSpec::batch("a", "sleep 30", 4, 60))
+            .unwrap()
+            .unwrap();
+        let id = server
+            .submit(&JobSpec::batch("b", "date", 4, 60))
+            .unwrap()
+            .unwrap();
+        server.hold(id).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let job = server.with_db(|db| db.job(id)).unwrap();
+        assert_eq!(job.state, JobState::Hold);
+        server.resume(id).unwrap();
+        assert!(server.wait_all_terminal(Duration::from_secs(20)));
+        assert_eq!(
+            server.with_db(|db| db.job(id)).unwrap().state,
+            JobState::Terminated
+        );
+        let _ = blocker;
+    }
+
+    #[test]
+    fn array_submission_expands_parameters() {
+        let server = test_server();
+        let ids = server
+            .submit_array(&JobSpec::batch("sweep", "date --param {i}", 1, 60), 5)
+            .unwrap()
+            .unwrap();
+        assert_eq!(ids.len(), 5);
+        assert!(server.wait_all_terminal(Duration::from_secs(20)));
+        let cmds: Vec<String> = ids
+            .iter()
+            .map(|id| server.with_db(|db| db.job(*id)).unwrap().command)
+            .collect();
+        assert_eq!(cmds[0], "date --param 0");
+        assert_eq!(cmds[4], "date --param 4");
+    }
+
+    #[test]
+    fn array_submission_is_all_or_nothing() {
+        let server = test_server();
+        server.with_db(|db| {
+            db.add_admission_rule(5, "IF command = 'date --p 3' THEN REJECT 'banned'")
+        });
+        let res = server
+            .submit_array(&JobSpec::batch("sweep", "date --p {i}", 1, 60), 5)
+            .unwrap();
+        assert!(res.is_err(), "{res:?}");
+        // earlier tasks were cancelled: nothing stays live, and anything
+        // that slipped into execution before the rejection is at most the
+        // 3 tasks submitted before the banned one.
+        assert!(server.wait_all_terminal(Duration::from_secs(10)));
+        assert!(server.stat(Some("state = 'Waiting'")).unwrap().is_empty());
+        let cancelled = server.stat(Some("state = 'Error'")).unwrap();
+        assert!(!cancelled.is_empty(), "at least one task must be cancelled");
+    }
+
+    #[test]
+    fn shutdown_returns_database() {
+        let server = test_server();
+        let id = server
+            .submit(&JobSpec::batch("a", "date", 1, 60))
+            .unwrap()
+            .unwrap();
+        server.wait_all_terminal(Duration::from_secs(10));
+        let mut db = server.shutdown();
+        assert_eq!(db.job(id).unwrap().state, JobState::Terminated);
+    }
+}

@@ -1,0 +1,361 @@
+//! Discrete-event simulation of a whole scheduler run.
+//!
+//! The ESP2 evaluation (§3.2.1) runs 230 jobs over hours of wall time; the
+//! simulator executes the same scheduler *policies* over simulated time so
+//! the full benchmark takes milliseconds. The scheduling code under test
+//! is exactly the production code ([`crate::sched::policies`] /
+//! [`crate::sched::baselines`]): the simulator only replaces wall-clock,
+//! job execution and the launcher with event bookkeeping.
+//!
+//! Model, mirroring the real system's behaviour:
+//! * a scheduling round fires at every event (arrival or completion) —
+//!   the notification-driven reactivity of §2.2;
+//! * started jobs complete after their *actual* runtime (≤ `maxTime`);
+//! * per-job launch overhead is charged to the start time, reproducing
+//!   "the overhead of launching each individual job" that ESP measures.
+
+use std::collections::BinaryHeap;
+
+use crate::sched::gantt::Gantt;
+use crate::sched::policies::{PolicyJob, QueuePolicy};
+use crate::types::{JobId, NodeId, Time};
+
+/// One workload job for the simulator.
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    pub id: JobId,
+    /// Nodes requested (simulation treats processors as 1-proc nodes).
+    pub nb_nodes: u32,
+    pub weight: u32,
+    /// Actual execution time.
+    pub runtime: Time,
+    /// Requested limit (what the scheduler plans with).
+    pub max_time: Time,
+    pub submit: Time,
+}
+
+impl SimJob {
+    pub fn total_procs(&self) -> u32 {
+        self.nb_nodes * self.weight
+    }
+}
+
+/// Per-job outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub submit: Time,
+    pub start: Time,
+    pub stop: Time,
+    pub procs: u32,
+}
+
+impl JobRecord {
+    pub fn response_time(&self) -> Time {
+        self.stop - self.submit
+    }
+
+    pub fn wait_time(&self) -> Time {
+        self.start - self.submit
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub records: Vec<JobRecord>,
+    /// (time, busy processors) at every change point — the plain line of
+    /// figs. 4–8.
+    pub utilization: Vec<(Time, u32)>,
+    /// (start time, procs) per started job — the dashed markers of the
+    /// figures.
+    pub starts: Vec<(Time, u32)>,
+    pub total_procs: u32,
+}
+
+impl SimResult {
+    /// Time the last job completes (ESP's "Elapsed Time").
+    pub fn elapsed(&self) -> Time {
+        self.records.iter().map(|r| r.stop).max().unwrap_or(0)
+    }
+
+    /// Σ procs·runtime — the jobmix work in CPU-seconds.
+    pub fn total_work(&self) -> i64 {
+        self.records
+            .iter()
+            .map(|r| (r.stop - r.start) * r.procs as i64)
+            .sum()
+    }
+
+    /// ESP efficiency: work / (procs × elapsed).
+    pub fn efficiency(&self) -> f64 {
+        let e = self.elapsed();
+        if e == 0 {
+            return 0.0;
+        }
+        self.total_work() as f64 / (self.total_procs as f64 * e as f64)
+    }
+
+    pub fn mean_response_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(JobRecord::response_time).sum::<Time>() as f64
+            / self.records.len() as f64
+    }
+
+    pub fn mean_wait_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(JobRecord::wait_time).sum::<Time>() as f64
+            / self.records.len() as f64
+    }
+
+    /// Maximum wait time — the famine indicator of §3.2.1.
+    pub fn max_wait_time(&self) -> Time {
+        self.records.iter().map(JobRecord::wait_time).max().unwrap_or(0)
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum Event {
+    Arrival(usize),
+    Completion(JobId),
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimConfig {
+    /// Fixed overhead added to every job start (scheduler + launcher cost
+    /// per job, the quantity ESP stresses).
+    pub launch_overhead: Time,
+}
+
+/// Run `policy` over `jobs` on a cluster of `nodes`.
+pub fn simulate(
+    policy: &dyn QueuePolicy,
+    nodes: &[(NodeId, u32)],
+    jobs: &[SimJob],
+    config: SimConfig,
+) -> SimResult {
+    // Event queue keyed by (time, seq) for determinism.
+    let mut heap: BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> = BinaryHeap::new();
+    let mut event_payload: Vec<Event> = Vec::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>>,
+                    payload: &mut Vec<Event>,
+                    t: Time,
+                    ev: Event,
+                    seq: &mut u64| {
+        payload.push(ev);
+        heap.push(std::cmp::Reverse((t, *seq, payload.len() - 1)));
+        *seq += 1;
+    };
+
+    for (i, j) in jobs.iter().enumerate() {
+        push(&mut heap, &mut event_payload, j.submit, Event::Arrival(i), &mut seq);
+    }
+
+    let total_procs: u32 = nodes.iter().map(|(_, p)| p).sum();
+    let mut waiting: Vec<usize> = Vec::new();
+    let mut running: Vec<(JobId, Vec<NodeId>, Time, Time)> = Vec::new(); // id, nodes, start, stop
+    let mut records = Vec::with_capacity(jobs.len());
+    let mut utilization = vec![(0, 0u32)];
+    let mut starts = Vec::new();
+    let mut busy = 0u32;
+
+    let by_id = |id: JobId| jobs.iter().position(|j| j.id == id).unwrap();
+
+    while let Some(std::cmp::Reverse((now, _, idx))) = heap.pop() {
+        match &event_payload[idx] {
+            Event::Arrival(i) => waiting.push(*i),
+            Event::Completion(id) => {
+                let pos = running.iter().position(|(jid, ..)| jid == id).unwrap();
+                let (jid, _nodes, start, stop) = running.remove(pos);
+                let job = &jobs[by_id(jid)];
+                busy -= job.total_procs();
+                utilization.push((now, busy));
+                records.push(JobRecord {
+                    id: jid,
+                    submit: job.submit,
+                    start,
+                    stop,
+                    procs: job.total_procs(),
+                });
+            }
+        }
+
+        // Drain simultaneous events before scheduling.
+        if let Some(std::cmp::Reverse((t, ..))) = heap.peek() {
+            if *t == now {
+                continue;
+            }
+        }
+
+        if waiting.is_empty() {
+            continue;
+        }
+
+        // Scheduling round: rebuild the Gantt from running jobs (the
+        // meta-scheduler's behaviour — no hidden state between rounds).
+        let mut gantt = Gantt::new(nodes);
+        for (jid, nids, _start, stop) in &running {
+            let job = &jobs[by_id(*jid)];
+            for n in nids {
+                gantt.occupy(*jid, *n, job.weight, now, (*stop).max(now + 1));
+            }
+        }
+        let node_ids: Vec<NodeId> = nodes.iter().map(|(id, _)| *id).collect();
+        let policy_jobs: Vec<PolicyJob> = waiting
+            .iter()
+            .map(|&i| {
+                let j = &jobs[i];
+                PolicyJob {
+                    id: j.id,
+                    nb_nodes: j.nb_nodes,
+                    weight: j.weight,
+                    duration: j.max_time.max(1),
+                    submission_time: j.submit,
+                    eligible: node_ids.clone(),
+                    best_effort: false,
+                    score: 0.0,
+                }
+            })
+            .collect();
+        let started = policy.schedule(now, &policy_jobs, &mut gantt);
+        for (id, nids) in started {
+            let i = by_id(id);
+            let job = &jobs[i];
+            let start = now;
+            let stop = now + config.launch_overhead + job.runtime;
+            running.push((id, nids, start, stop));
+            waiting.retain(|&w| w != i);
+            busy += job.total_procs();
+            utilization.push((now, busy));
+            starts.push((now, job.total_procs()));
+            push(&mut heap, &mut event_payload, stop, Event::Completion(id), &mut seq);
+        }
+    }
+
+    records.sort_by_key(|r| r.id);
+    SimResult {
+        records,
+        utilization,
+        starts,
+        total_procs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::baselines::{MauiLike, SgeLike, TorqueLike};
+    use crate::sched::policies::{FifoConservative, SjfConservative};
+
+    fn nodes(n: u32) -> Vec<(NodeId, u32)> {
+        (1..=n).map(|i| (i, 1)).collect()
+    }
+
+    fn job(id: JobId, procs: u32, runtime: Time, submit: Time) -> SimJob {
+        SimJob {
+            id,
+            nb_nodes: procs,
+            weight: 1,
+            runtime,
+            max_time: runtime,
+            submit,
+        }
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let r = simulate(&FifoConservative, &nodes(2), &[job(1, 2, 100, 0)], SimConfig::default());
+        assert_eq!(r.records.len(), 1);
+        assert_eq!(r.records[0].start, 0);
+        assert_eq!(r.records[0].stop, 100);
+        assert_eq!(r.elapsed(), 100);
+        assert!((r.efficiency() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_when_machine_too_small() {
+        let js = [job(1, 2, 100, 0), job(2, 2, 100, 0)];
+        let r = simulate(&FifoConservative, &nodes(2), &js, SimConfig::default());
+        assert_eq!(r.elapsed(), 200);
+        assert_eq!(r.records[1].start, 100);
+    }
+
+    #[test]
+    fn parallel_when_room() {
+        let js = [job(1, 1, 100, 0), job(2, 1, 100, 0)];
+        let r = simulate(&FifoConservative, &nodes(2), &js, SimConfig::default());
+        assert_eq!(r.elapsed(), 100);
+    }
+
+    #[test]
+    fn launch_overhead_extends_completion() {
+        let r = simulate(
+            &FifoConservative,
+            &nodes(1),
+            &[job(1, 1, 100, 0)],
+            SimConfig { launch_overhead: 5 },
+        );
+        assert_eq!(r.records[0].stop, 105);
+    }
+
+    #[test]
+    fn all_policies_complete_all_jobs() {
+        let js: Vec<SimJob> = (0..20)
+            .map(|i| job(i + 1, 1 + (i % 4) as u32, 50 + 10 * (i % 3) as Time, 0))
+            .collect();
+        let policies: Vec<Box<dyn QueuePolicy>> = vec![
+            Box::new(FifoConservative),
+            Box::new(SjfConservative),
+            Box::new(TorqueLike),
+            Box::new(SgeLike),
+            Box::new(MauiLike),
+        ];
+        for p in policies {
+            let r = simulate(p.as_ref(), &nodes(4), &js, SimConfig::default());
+            assert_eq!(r.records.len(), js.len(), "{}", p.name());
+            // conservation: work is invariant across schedulers
+            assert_eq!(
+                r.total_work(),
+                js.iter().map(|j| j.runtime * j.total_procs() as i64).sum::<i64>(),
+                "{}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fifo_avoids_famine_better_than_sge() {
+        // A stream of small jobs + one big job early: greedy small-first
+        // (SGE) delays the big job far longer than FIFO-conservative.
+        let mut js = vec![job(1, 4, 50, 0)]; // big
+        for i in 0..40 {
+            js.push(job(i + 2, 1, 50, 1 + i as Time));
+        }
+        let fifo = simulate(&FifoConservative, &nodes(4), &js, SimConfig::default());
+        let sge = simulate(&SgeLike, &nodes(4), &js, SimConfig::default());
+        let fifo_big = fifo.records.iter().find(|r| r.id == 1).unwrap();
+        let sge_big = sge.records.iter().find(|r| r.id == 1).unwrap();
+        assert!(
+            fifo_big.start <= sge_big.start,
+            "fifo {} vs sge {}",
+            fifo_big.start,
+            sge_big.start
+        );
+    }
+
+    #[test]
+    fn utilization_trace_is_consistent() {
+        let js = [job(1, 2, 100, 0), job(2, 1, 50, 0)];
+        let r = simulate(&FifoConservative, &nodes(3), &js, SimConfig::default());
+        // trace never exceeds capacity and ends at 0
+        assert!(r.utilization.iter().all(|(_, b)| *b <= 3));
+        assert_eq!(r.utilization.last().unwrap().1, 0);
+        assert_eq!(r.starts.len(), 2);
+    }
+}

@@ -1,0 +1,242 @@
+//! The job record of fig. 2, verbatim fields plus the best-effort flag of
+//! §3.3 (the Global-computing extension adds "a property to the submitted
+//! jobs (best effort or not)").
+
+
+use super::{JobId, JobState, Time};
+
+/// `jobType` field: INTERACTIVE jobs report back to a user terminal,
+/// PASSIVE (batch) jobs just run their command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Interactive,
+    Passive,
+}
+
+impl JobKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobKind::Interactive => "INTERACTIVE",
+            JobKind::Passive => "PASSIVE",
+        }
+    }
+}
+
+/// `reservation` field: substates of the reservation negotiation (§2).
+/// `None` is the general case; a precise-time-slot reservation walks
+/// `ToSchedule` → `Scheduled` while the job stays `Waiting` for the rest of
+/// the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReservationField {
+    None,
+    ToSchedule,
+    Scheduled,
+}
+
+impl ReservationField {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReservationField::None => "None",
+            ReservationField::ToSchedule => "toSchedule",
+            ReservationField::Scheduled => "Scheduled",
+        }
+    }
+}
+
+/// What a user hands to `oarsub`: the subset of fig. 2 the submitter
+/// controls. Missing values are filled by the admission rules (§2.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub user: String,
+    pub command: String,
+    /// Number of nodes required (`nbNodes`).
+    pub nb_nodes: u32,
+    /// Processors per node (`weight`).
+    pub weight: u32,
+    /// Maximal execution time in seconds (`maxTime`); None = let admission
+    /// rules pick the queue default.
+    pub max_time: Option<Time>,
+    /// SQL expression to match compatible resources (`properties`).
+    pub properties: Option<String>,
+    pub queue: Option<String>,
+    pub kind: JobKind,
+    /// Requested precise time slot (reservation start), if any.
+    pub reservation_start: Option<Time>,
+    pub launching_directory: String,
+    /// §3.3: job may be cancelled when its resources are reclaimed.
+    pub best_effort: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            user: "nobody".into(),
+            command: "/bin/true".into(),
+            nb_nodes: 1,
+            weight: 1,
+            max_time: None,
+            properties: None,
+            queue: None,
+            kind: JobKind::Passive,
+            reservation_start: None,
+            launching_directory: "/tmp".into(),
+            best_effort: false,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Convenience constructor for the common batch case.
+    pub fn batch(user: &str, command: &str, nb_nodes: u32, max_time: Time) -> Self {
+        JobSpec {
+            user: user.into(),
+            command: command.into(),
+            nb_nodes,
+            max_time: Some(max_time),
+            ..Default::default()
+        }
+    }
+
+    /// Total processors requested (`nbNodes * weight`).
+    pub fn total_procs(&self) -> u32 {
+        self.nb_nodes * self.weight
+    }
+}
+
+/// A full row of the jobs table (fig. 2).
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// `idJob`: numeric identifier (index number in the table).
+    pub id: JobId,
+    pub kind: JobKind,
+    /// `infoType`: machine to contact for interactive jobs.
+    pub info_type: Option<String>,
+    pub state: JobState,
+    pub reservation: ReservationField,
+    /// `message`: warnings, reason for termination...
+    pub message: String,
+    pub user: String,
+    pub nb_nodes: u32,
+    /// `weight`: processors required on each node.
+    pub weight: u32,
+    pub command: String,
+    /// `bpid`: PID used to kill the job when needed.
+    pub bpid: Option<u32>,
+    pub queue_name: String,
+    pub max_time: Time,
+    /// `properties`: SQL expression used to match compatible resources.
+    pub properties: String,
+    pub launching_directory: String,
+    pub submission_time: Time,
+    pub start_time: Option<Time>,
+    pub stop_time: Option<Time>,
+    /// §3.3 extension: best-effort (Global computing) job.
+    pub best_effort: bool,
+    /// Requested reservation slot, when `reservation != None`.
+    pub reservation_start: Option<Time>,
+}
+
+impl Job {
+    /// Materialize a submission into a `Waiting` job row (the admission
+    /// rules have already filled any missing spec fields).
+    pub fn from_spec(spec: &JobSpec, now: Time) -> Job {
+        Job {
+            id: 0, // assigned by the jobs table on insert
+            kind: spec.kind,
+            info_type: None,
+            state: JobState::Waiting,
+            reservation: if spec.reservation_start.is_some() {
+                ReservationField::ToSchedule
+            } else {
+                ReservationField::None
+            },
+            message: String::new(),
+            user: spec.user.clone(),
+            nb_nodes: spec.nb_nodes,
+            weight: spec.weight,
+            command: spec.command.clone(),
+            bpid: None,
+            queue_name: spec.queue.clone().unwrap_or_else(|| "default".into()),
+            max_time: spec.max_time.unwrap_or(3600),
+            properties: spec.properties.clone().unwrap_or_default(),
+            launching_directory: spec.launching_directory.clone(),
+            submission_time: now,
+            start_time: None,
+            stop_time: None,
+            best_effort: spec.best_effort,
+            reservation_start: spec.reservation_start,
+        }
+    }
+
+    /// Total processors this job occupies.
+    pub fn total_procs(&self) -> u32 {
+        self.nb_nodes * self.weight
+    }
+
+    /// Response time as defined by the paper's §3.2.2 burst evaluation:
+    /// "the difference between the termination date and the submission
+    /// date of a job". None until the job terminates.
+    pub fn response_time(&self) -> Option<Time> {
+        self.stop_time.map(|st| st - self.submission_time)
+    }
+
+    /// Wait time: scheduling + queueing delay before execution started.
+    pub fn wait_time(&self) -> Option<Time> {
+        self.start_time.map(|st| st - self.submission_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job {
+            id: 1,
+            kind: JobKind::Passive,
+            info_type: None,
+            state: JobState::Waiting,
+            reservation: ReservationField::None,
+            message: String::new(),
+            user: "alice".into(),
+            nb_nodes: 4,
+            weight: 2,
+            command: "mpirun app".into(),
+            bpid: None,
+            queue_name: "default".into(),
+            max_time: 3600,
+            properties: "mem >= 512".into(),
+            launching_directory: "/home/alice".into(),
+            submission_time: 100,
+            start_time: None,
+            stop_time: None,
+            best_effort: false,
+            reservation_start: None,
+        }
+    }
+
+    #[test]
+    fn total_procs_is_nodes_times_weight() {
+        assert_eq!(job().total_procs(), 8);
+        assert_eq!(JobSpec::batch("u", "c", 3, 60).total_procs(), 3);
+    }
+
+    #[test]
+    fn response_and_wait_times() {
+        let mut j = job();
+        assert_eq!(j.response_time(), None);
+        j.start_time = Some(150);
+        j.stop_time = Some(400);
+        assert_eq!(j.wait_time(), Some(50));
+        assert_eq!(j.response_time(), Some(300));
+    }
+
+    #[test]
+    fn spec_defaults_are_minimal_single_node() {
+        let s = JobSpec::default();
+        assert_eq!(s.nb_nodes, 1);
+        assert_eq!(s.weight, 1);
+        assert!(!s.best_effort);
+        assert!(s.queue.is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! Core domain types: jobs (fig. 2), the job state machine (fig. 1),
+//! nodes, queues and reservations.
+
+mod job;
+mod node;
+mod queue;
+mod state;
+
+pub use job::{Job, JobKind, JobSpec, ReservationField};
+pub use node::{Node, NodeState};
+pub use queue::{Queue, QueuePolicyKind};
+pub use state::JobState;
+
+/// Seconds since the (simulated or real) epoch. All scheduling arithmetic
+/// is done on this type; the paper's tables store dates the same way.
+pub type Time = i64;
+
+/// Job identifier: the index number in the jobs table (§2.1).
+pub type JobId = u64;
+
+/// Node identifier.
+pub type NodeId = u32;

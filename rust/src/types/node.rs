@@ -1,0 +1,102 @@
+//! Node (resource) records: the paper's nodes table ("a table for
+//! describing nodes"), with free-form properties matched by the jobs'
+//! `properties` SQL expression.
+
+use std::collections::BTreeMap;
+
+
+use super::NodeId;
+use crate::db::Value;
+
+/// Administrative / monitored state of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Reachable and accepting jobs.
+    Alive,
+    /// Failed the reachability test (§2.4 failure detection).
+    Suspected,
+    /// Administratively removed from scheduling.
+    Absent,
+}
+
+impl NodeState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NodeState::Alive => "Alive",
+            NodeState::Suspected => "Suspected",
+            NodeState::Absent => "Absent",
+        }
+    }
+}
+
+/// A row of the nodes table.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub hostname: String,
+    pub state: NodeState,
+    /// Processors on this node (the paper's bi-Xeon nodes have 2).
+    pub nb_procs: u32,
+    /// Free-form properties matched by job `properties` expressions:
+    /// e.g. `mem` (MB), `switch`, `cpu_mhz`. Stored as DB values so the
+    /// expression engine can compare them directly.
+    pub properties: BTreeMap<String, Value>,
+}
+
+impl Node {
+    /// Build a node with the standard property set used throughout the
+    /// evaluation (mem, cpu_mhz, switch, nb_procs mirrored as a property).
+    pub fn new(id: NodeId, hostname: &str, nb_procs: u32) -> Node {
+        let mut properties = BTreeMap::new();
+        properties.insert("nb_procs".into(), Value::Int(nb_procs as i64));
+        Node {
+            id,
+            hostname: hostname.into(),
+            state: NodeState::Alive,
+            nb_procs,
+            properties,
+        }
+    }
+
+    /// Set a property, returning self for builder-style construction.
+    pub fn with_prop(mut self, key: &str, value: Value) -> Node {
+        self.properties.insert(key.into(), value);
+        self
+    }
+
+    /// The property row the expression engine evaluates against: all node
+    /// properties plus the implicit `hostname` and `state` columns.
+    pub fn property_row(&self) -> BTreeMap<String, Value> {
+        let mut row = self.properties.clone();
+        row.insert("hostname".into(), Value::Text(self.hostname.clone()));
+        row.insert("state".into(), Value::Text(self.state.as_str().into()));
+        row
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.state == NodeState::Alive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_properties() {
+        let n = Node::new(1, "node-1", 2)
+            .with_prop("mem", Value::Int(512))
+            .with_prop("switch", Value::Text("sw1".into()));
+        assert_eq!(n.properties.get("mem"), Some(&Value::Int(512)));
+        assert_eq!(n.nb_procs, 2);
+        let row = n.property_row();
+        assert_eq!(row.get("hostname"), Some(&Value::Text("node-1".into())));
+        assert_eq!(row.get("state"), Some(&Value::Text("Alive".into())));
+    }
+
+    #[test]
+    fn nb_procs_is_mirrored_as_property() {
+        let n = Node::new(3, "n3", 4);
+        assert_eq!(n.properties.get("nb_procs"), Some(&Value::Int(4)));
+    }
+}

@@ -1,0 +1,108 @@
+//! Submission queues (§2.3): each queue has its own admission rules,
+//! scheduling policy and priority; queues partition jobs into groups and
+//! the meta-scheduler schedules each queue in turn by decreasing priority.
+
+
+use super::Time;
+
+/// Which per-queue scheduler the meta-scheduler runs for this queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicyKind {
+    /// OAR default: FIFO order with *conservative* backfilling — no job may
+    /// be delayed by a later one within the queue (§3.2.1 "we do not allow
+    /// jobs to be delayed within a given queue").
+    FifoConservative,
+    /// OAR(2) of Table 3: within-queue order changed to increasing number
+    /// of required resources, still conservative.
+    SjfConservative,
+    /// Best-effort queue (§3.3): jobs are placed only on otherwise-idle
+    /// resources and may be cancelled when those are reclaimed.
+    BestEffort,
+}
+
+impl QueuePolicyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QueuePolicyKind::FifoConservative => "fifo",
+            QueuePolicyKind::SjfConservative => "sjf",
+            QueuePolicyKind::BestEffort => "best_effort",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fifo" => QueuePolicyKind::FifoConservative,
+            "sjf" => QueuePolicyKind::SjfConservative,
+            "best_effort" => QueuePolicyKind::BestEffort,
+            _ => return None,
+        })
+    }
+}
+
+/// A row of the queues table.
+#[derive(Debug, Clone)]
+pub struct Queue {
+    pub name: String,
+    /// Higher priority queues are scheduled first (§2.3).
+    pub priority: i32,
+    pub policy: QueuePolicyKind,
+    /// Default `maxTime` applied by admission when the user gives none.
+    pub default_max_time: Time,
+    /// Admission cap: max resources one job may request in this queue
+    /// ("the default admission rules ... ensure that no user ask for too
+    /// much resources at once", §2.1).
+    pub max_procs_per_job: u32,
+    /// Whether the queue is currently accepting/scheduling jobs (an entire
+    /// queue "can be interrupted for some time or cancelled if needed").
+    pub active: bool,
+}
+
+impl Queue {
+    pub fn new(name: &str, priority: i32, policy: QueuePolicyKind) -> Queue {
+        Queue {
+            name: name.into(),
+            priority,
+            policy,
+            default_max_time: 3600,
+            max_procs_per_job: u32::MAX,
+            active: true,
+        }
+    }
+
+    /// The standard queue set used by the evaluation: `default` (FIFO),
+    /// plus a `besteffort` queue at the lowest priority (§3.3).
+    pub fn standard_set() -> Vec<Queue> {
+        vec![
+            Queue::new("default", 10, QueuePolicyKind::FifoConservative),
+            Queue {
+                default_max_time: 7 * 24 * 3600,
+                ..Queue::new("besteffort", 0, QueuePolicyKind::BestEffort)
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_set_orders_besteffort_last() {
+        let qs = Queue::standard_set();
+        assert_eq!(qs.len(), 2);
+        assert!(qs[0].priority > qs[1].priority);
+        assert_eq!(qs[1].policy, QueuePolicyKind::BestEffort);
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in [
+            QueuePolicyKind::FifoConservative,
+            QueuePolicyKind::SjfConservative,
+            QueuePolicyKind::BestEffort,
+        ] {
+            assert_eq!(QueuePolicyKind::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(QueuePolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,203 @@
+//! The job state machine of fig. 1.
+//!
+//! Jobs are `Waiting` at submission, may be `Hold` on user demand, move to
+//! `toLaunch` once scheduled, then walk the launch sequence
+//! (`Launching` → `Running` → `Terminated`). Any abnormal termination
+//! (including removal of the submission) places the job in `Error` via
+//! `toError`. `toAckReservation` is the intermediate state of the
+//! reservation negotiation (§2, fig. 1).
+
+
+/// All states a job can be in (field `state` of the jobs table, fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// Submitted, not yet scheduled.
+    Waiting,
+    /// Held on user demand; excluded from scheduling until released.
+    Hold,
+    /// Scheduled; the execution module must pick it up.
+    ToLaunch,
+    /// Abnormal-termination path entry (cancellation, launch failure...).
+    ToError,
+    /// Reservation accepted by the scheduler, awaiting user acknowledgment.
+    ToAckReservation,
+    /// The launcher is deploying the job on its nodes.
+    Launching,
+    /// Executing on the nodes.
+    Running,
+    /// Finished normally.
+    Terminated,
+    /// Finished abnormally (terminal).
+    Error,
+}
+
+impl JobState {
+    /// Legal transitions of fig. 1. Every state-changing write to the jobs
+    /// table is validated against this relation, which is what keeps the
+    /// database "in a coherent state" so that module crashes are harmless
+    /// (§2: robustness only depends on modules leaving coherent state).
+    pub fn can_transition_to(self, next: JobState) -> bool {
+        use JobState::*;
+        matches!(
+            (self, next),
+            (Waiting, Hold)
+                | (Waiting, ToLaunch)
+                | (Waiting, ToError)
+                | (Waiting, ToAckReservation)
+                | (Hold, Waiting)
+                | (Hold, ToError)
+                | (ToAckReservation, Waiting)
+                | (ToAckReservation, ToError)
+                | (ToLaunch, Launching)
+                | (ToLaunch, ToError)
+                | (Launching, Running)
+                | (Launching, ToError)
+                | (Running, Terminated)
+                | (Running, ToError)
+                | (ToError, Error)
+        )
+    }
+
+    /// Terminal states: no further transition is legal.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Terminated | JobState::Error)
+    }
+
+    /// States in which the job occupies (or is about to occupy) resources.
+    pub fn holds_resources(self) -> bool {
+        matches!(
+            self,
+            JobState::ToLaunch | JobState::Launching | JobState::Running
+        )
+    }
+
+    /// States from which the scheduler may still place the job.
+    pub fn is_schedulable(self) -> bool {
+        matches!(self, JobState::Waiting)
+    }
+
+    /// Database string encoding (matches the paper's field values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Waiting => "Waiting",
+            JobState::Hold => "Hold",
+            JobState::ToLaunch => "toLaunch",
+            JobState::ToError => "toError",
+            JobState::ToAckReservation => "toAckReservation",
+            JobState::Launching => "Launching",
+            JobState::Running => "Running",
+            JobState::Terminated => "Terminated",
+            JobState::Error => "Error",
+        }
+    }
+
+    /// Parse the database string encoding.
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "Waiting" => JobState::Waiting,
+            "Hold" => JobState::Hold,
+            "toLaunch" => JobState::ToLaunch,
+            "toError" => JobState::ToError,
+            "toAckReservation" => JobState::ToAckReservation,
+            "Launching" => JobState::Launching,
+            "Running" => JobState::Running,
+            "Terminated" => JobState::Terminated,
+            "Error" => JobState::Error,
+            _ => return None,
+        })
+    }
+
+    /// All states, for enumeration in tests and reports.
+    pub const ALL: [JobState; 9] = [
+        JobState::Waiting,
+        JobState::Hold,
+        JobState::ToLaunch,
+        JobState::ToError,
+        JobState::ToAckReservation,
+        JobState::Launching,
+        JobState::Running,
+        JobState::Terminated,
+        JobState::Error,
+    ];
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_lifecycle() {
+        let path = [
+            JobState::Waiting,
+            JobState::ToLaunch,
+            JobState::Launching,
+            JobState::Running,
+            JobState::Terminated,
+        ];
+        for w in path.windows(2) {
+            assert!(w[0].can_transition_to(w[1]), "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn hold_and_release() {
+        assert!(JobState::Waiting.can_transition_to(JobState::Hold));
+        assert!(JobState::Hold.can_transition_to(JobState::Waiting));
+        // A held job cannot be launched directly.
+        assert!(!JobState::Hold.can_transition_to(JobState::ToLaunch));
+    }
+
+    #[test]
+    fn reservation_negotiation() {
+        assert!(JobState::Waiting.can_transition_to(JobState::ToAckReservation));
+        assert!(JobState::ToAckReservation.can_transition_to(JobState::Waiting));
+        assert!(JobState::ToAckReservation.can_transition_to(JobState::ToError));
+    }
+
+    #[test]
+    fn every_abnormal_exit_goes_through_to_error() {
+        use JobState::*;
+        for s in [Waiting, Hold, ToAckReservation, ToLaunch, Launching, Running] {
+            assert!(s.can_transition_to(ToError), "{s} must be cancellable");
+        }
+        assert!(ToError.can_transition_to(Error));
+    }
+
+    #[test]
+    fn terminal_states_have_no_exit() {
+        for s in [JobState::Terminated, JobState::Error] {
+            for next in JobState::ALL {
+                assert!(!s.can_transition_to(next), "{s} -> {next} must be illegal");
+            }
+        }
+    }
+
+    #[test]
+    fn no_transition_to_self() {
+        for s in JobState::ALL {
+            assert!(!s.can_transition_to(s));
+        }
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        for s in JobState::ALL {
+            assert_eq!(JobState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(JobState::parse("bogus"), None);
+    }
+
+    #[test]
+    fn resource_holding_states() {
+        assert!(JobState::Running.holds_resources());
+        assert!(JobState::ToLaunch.holds_resources());
+        assert!(!JobState::Waiting.holds_resources());
+        assert!(!JobState::Terminated.holds_resources());
+    }
+}

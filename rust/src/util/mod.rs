@@ -1,0 +1,15 @@
+//! Small self-contained utilities: a JSON codec (persistence, manifests,
+//! reports), a deterministic PRNG (workload generation, property tests)
+//! and simple summary statistics (benchmark harnesses).
+//!
+//! All hand-rolled: the build is fully offline, so the crate depends on
+//! nothing beyond `xla` + `anyhow` — in the spirit of the paper's
+//! low-software-complexity argument (Table 1).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,409 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! batching, state), using the crate's seeded PRNG as generator (the
+//! proptest crate is unavailable offline — shrinkless random property
+//! testing with fixed seeds and many cases serves the same role; failures
+//! print the case seed for reproduction).
+
+use oar::db::{Db, Expr, Value};
+use oar::matching::encode::{Encoder, JobToMatch};
+use oar::matching::reference::run_reference;
+use oar::matching::SqlMatcher;
+use oar::sched::baselines::{MauiLike, SgeLike, TorqueLike};
+use oar::sched::policies::{FifoConservative, PolicyJob, QueuePolicy, SjfConservative};
+use oar::sched::Gantt;
+use oar::sim::{simulate, SimConfig, SimJob};
+use oar::types::{Job, JobSpec, JobState, Node, NodeId};
+use oar::util::Rng;
+
+const CASES: u64 = 200;
+
+// ---------------------------------------------------------------- gantt ----
+
+/// Random occupy/release sequences never oversubscribe any node.
+#[test]
+fn prop_gantt_never_oversubscribes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n_nodes = rng.range_i64(1, 6) as u32;
+        let procs = rng.range_i64(1, 4) as u32;
+        let nodes: Vec<(NodeId, u32)> = (1..=n_nodes).map(|i| (i, procs)).collect();
+        let mut g = Gantt::new(&nodes);
+        for job in 0..rng.range_i64(1, 40) as u64 {
+            let node = rng.range_i64(1, n_nodes as i64 + 1) as NodeId;
+            let p = rng.range_i64(1, procs as i64 + 2) as u32; // may exceed
+            let start = rng.range_i64(0, 500);
+            let stop = start + rng.range_i64(1, 200);
+            g.occupy(job, node, p, start, stop);
+            if rng.chance(0.2) {
+                g.release_job(rng.range_i64(0, job as i64 + 1) as u64);
+            }
+        }
+        // Invariant: at every allocation edge, usage <= capacity.
+        for (node, alloc) in g.allocations() {
+            for t in [alloc.start, alloc.stop - 1] {
+                let free = g.free_at(node, t);
+                assert!(free >= 0, "seed {seed}: node {node} oversubscribed at {t}");
+            }
+        }
+    }
+}
+
+/// find_earliest always returns a placement that occupy() accepts, and
+/// there is never an earlier feasible instant among allocation edges.
+#[test]
+fn prop_find_earliest_is_feasible_and_minimal() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let n_nodes = rng.range_i64(2, 6) as u32;
+        let nodes: Vec<(NodeId, u32)> = (1..=n_nodes).map(|i| (i, 2)).collect();
+        let mut g = Gantt::new(&nodes);
+        for job in 0..rng.range_i64(0, 15) as u64 {
+            let node = rng.range_i64(1, n_nodes as i64 + 1) as NodeId;
+            let start = rng.range_i64(0, 300);
+            g.occupy(job, node, rng.range_i64(1, 3) as u32, start, start + rng.range_i64(1, 150));
+        }
+        let eligible: Vec<NodeId> = (1..=n_nodes).collect();
+        let nb = rng.range_i64(1, n_nodes as i64 + 1) as u32;
+        let weight = rng.range_i64(1, 3) as u32;
+        let dur = rng.range_i64(1, 100);
+        if let Some((t, chosen)) = g.find_earliest(&eligible, nb, weight, dur, 0) {
+            assert_eq!(chosen.len(), nb as usize, "seed {seed}");
+            // feasibility: occupy must succeed on a copy
+            let mut copy = g.clone();
+            for n in &chosen {
+                assert!(
+                    copy.occupy(999, *n, weight, t, t + dur),
+                    "seed {seed}: infeasible placement at {t}"
+                );
+            }
+            // minimality: no feasible start strictly earlier at any edge
+            for cand in 0..t {
+                let avail = g.available_nodes_at(&eligible, weight, cand, dur);
+                assert!(
+                    (avail.len() as u32) < nb,
+                    "seed {seed}: earlier start {cand} < {t} was feasible"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- policies ----
+
+fn random_policy_jobs(rng: &mut Rng, n_nodes: u32) -> Vec<PolicyJob> {
+    let count = rng.range_i64(1, 25) as u64;
+    (0..count)
+        .map(|i| PolicyJob {
+            id: i + 1,
+            nb_nodes: rng.range_i64(1, n_nodes as i64 + 1) as u32,
+            weight: 1,
+            duration: rng.range_i64(1, 300),
+            submission_time: rng.range_i64(0, 10),
+            eligible: (1..=n_nodes).collect(),
+            best_effort: false,
+            score: 0.0,
+        })
+        .collect()
+}
+
+/// Every policy: started jobs are mutually feasible (the gantt accepted
+/// them), and no job is started twice.
+#[test]
+fn prop_policies_start_feasible_disjoint_sets() {
+    let policies: Vec<Box<dyn QueuePolicy>> = vec![
+        Box::new(FifoConservative),
+        Box::new(SjfConservative),
+        Box::new(TorqueLike),
+        Box::new(SgeLike),
+        Box::new(MauiLike),
+    ];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let n_nodes = rng.range_i64(1, 8) as u32;
+        let jobs = random_policy_jobs(&mut rng, n_nodes);
+        for policy in &policies {
+            let mut g = Gantt::new(&(1..=n_nodes).map(|i| (i, 1)).collect::<Vec<_>>());
+            let starts = policy.schedule(0, &jobs, &mut g);
+            let mut seen = std::collections::HashSet::new();
+            let mut used_now: std::collections::HashMap<NodeId, u32> = Default::default();
+            for (id, nodes) in &starts {
+                assert!(seen.insert(*id), "seed {seed} {}: dup start", policy.name());
+                let job = jobs.iter().find(|j| j.id == *id).unwrap();
+                assert_eq!(nodes.len(), job.nb_nodes as usize);
+                for n in nodes {
+                    *used_now.entry(*n).or_default() += job.weight;
+                }
+            }
+            for (node, used) in used_now {
+                assert!(used <= 1, "seed {seed} {}: node {node} double-started", policy.name());
+            }
+        }
+    }
+}
+
+/// Conservative invariant (the paper's "no job delayed by later ones"):
+/// adding a NEW later job never makes any earlier job's planned start
+/// later under FifoConservative.
+#[test]
+fn prop_fifo_conservative_no_delay_by_later_submission() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let n_nodes = rng.range_i64(1, 6) as u32;
+        let mut jobs = random_policy_jobs(&mut rng, n_nodes);
+        jobs.sort_by_key(|j| (j.submission_time, j.id));
+        let node_list: Vec<(NodeId, u32)> = (1..=n_nodes).map(|i| (i, 1)).collect();
+
+        let planned_starts = |jobs: &[PolicyJob]| -> std::collections::HashMap<u64, i64> {
+            let mut g = Gantt::new(&node_list);
+            FifoConservative.schedule(0, jobs, &mut g);
+            let mut firsts: std::collections::HashMap<u64, i64> = Default::default();
+            for (_, a) in g.allocations() {
+                firsts
+                    .entry(a.job)
+                    .and_modify(|s| *s = (*s).min(a.start))
+                    .or_insert(a.start);
+            }
+            firsts
+        };
+
+        let before = planned_starts(&jobs);
+        // append one more job with the latest submission time
+        let mut extended = jobs.clone();
+        extended.push(PolicyJob {
+            id: 9999,
+            nb_nodes: rng.range_i64(1, n_nodes as i64 + 1) as u32,
+            weight: 1,
+            duration: rng.range_i64(1, 300),
+            submission_time: 100,
+            eligible: (1..=n_nodes).collect(),
+            best_effort: false,
+            score: 0.0,
+        });
+        let after = planned_starts(&extended);
+        for (id, start) in &before {
+            assert!(
+                after.get(id).map(|s| s <= start).unwrap_or(false),
+                "seed {seed}: job {id} delayed {start} -> {:?}",
+                after.get(id)
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- sim ----
+
+/// Work conservation + capacity respect across all policies on random
+/// workloads.
+#[test]
+fn prop_simulation_conserves_work_and_capacity() {
+    let policies: Vec<Box<dyn QueuePolicy>> = vec![
+        Box::new(FifoConservative),
+        Box::new(SjfConservative),
+        Box::new(TorqueLike),
+        Box::new(SgeLike),
+        Box::new(MauiLike),
+    ];
+    for seed in 0..50 {
+        let mut rng = Rng::new(4000 + seed);
+        let procs = rng.range_i64(2, 10) as u32;
+        let nodes: Vec<(NodeId, u32)> = (1..=procs).map(|i| (i, 1)).collect();
+        let jobs: Vec<SimJob> = (0..rng.range_i64(1, 60) as u64)
+            .map(|i| {
+                let runtime = rng.range_i64(1, 100);
+                SimJob {
+                    id: i + 1,
+                    // range_i64 is inclusive: [1, procs] keeps jobs feasible
+                    // (infeasible requests are the meta-scheduler's job to
+                    // reject before a policy ever sees them)
+                    nb_nodes: rng.range_i64(1, procs as i64) as u32,
+                    weight: 1,
+                    runtime,
+                    max_time: runtime,
+                    submit: rng.range_i64(0, 50),
+                }
+            })
+            .collect();
+        let want_work: i64 = jobs.iter().map(|j| j.runtime * j.total_procs() as i64).sum();
+        for policy in &policies {
+            let r = simulate(policy.as_ref(), &nodes, &jobs, SimConfig::default());
+            assert_eq!(r.records.len(), jobs.len(), "seed {seed} {}", policy.name());
+            assert_eq!(r.total_work(), want_work, "seed {seed} {}", policy.name());
+            assert!(
+                r.utilization.iter().all(|(_, b)| *b <= procs),
+                "seed {seed} {}: capacity exceeded",
+                policy.name()
+            );
+            for rec in &r.records {
+                assert!(rec.start >= rec.submit, "seed {seed}: started before submit");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- matching ----
+
+fn random_fleet(rng: &mut Rng, n: u32) -> Vec<Node> {
+    (1..=n)
+        .map(|i| {
+            Node::new(i, &format!("n{i}"), 2)
+                .with_prop("mem", Value::Int(rng.range_i64(128, 4096)))
+                .with_prop("cpu_mhz", Value::Int(rng.range_i64(500, 3000)))
+                .with_prop(
+                    "switch",
+                    Value::Text(format!("sw{}", rng.range_i64(1, 4))),
+                )
+        })
+        .collect()
+}
+
+fn random_interval_expr(rng: &mut Rng) -> String {
+    let mut clauses = Vec::new();
+    for _ in 0..rng.range_i64(0, 4) {
+        let c = match rng.range_i64(0, 5) {
+            0 => format!("mem >= {}", rng.range_i64(0, 4500)),
+            1 => format!("mem <= {}", rng.range_i64(0, 4500)),
+            2 => format!("cpu_mhz > {}", rng.range_i64(0, 3200)),
+            3 => format!("switch = 'sw{}'", rng.range_i64(1, 5)),
+            _ => format!(
+                "mem BETWEEN {} AND {}",
+                rng.range_i64(0, 2000),
+                rng.range_i64(2000, 4500)
+            ),
+        };
+        clauses.push(c);
+    }
+    clauses.join(" AND ")
+}
+
+/// The dense (kernel-semantics) matching path agrees exactly with SQL
+/// row-at-a-time evaluation on every interval-expressible expression.
+#[test]
+fn prop_dense_matching_equals_sql_matching() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let fleet_size = rng.range_i64(1, 30) as u32;
+        let nodes = random_fleet(&mut rng, fleet_size);
+        let encoder = Encoder::from_nodes(&nodes);
+        let free = vec![vec![1.0f32; oar::matching::T]; nodes.len()];
+        let jobs: Vec<JobToMatch> = (0..rng.range_i64(1, 20) as u64)
+            .map(|i| JobToMatch {
+                id: i + 1,
+                properties: random_interval_expr(&mut rng),
+                total_procs: 1,
+                duration: 300,
+                wait_time: 0,
+                queue_priority: 1,
+                best_effort: false,
+            })
+            .collect();
+        let batch = encoder.encode(&jobs, &nodes, &free, 300, [0.0; oar::matching::F]);
+        let out = run_reference(&batch.input);
+        for (row, job) in jobs.iter().enumerate() {
+            if batch.fallback.contains(&job.id) {
+                continue; // SQL path handles it by construction
+            }
+            let want = SqlMatcher::eligible_nodes(&job.properties, &nodes).unwrap();
+            let got: Vec<NodeId> = batch
+                .node_cols
+                .iter()
+                .enumerate()
+                .filter(|(col, _)| out.elig[row * oar::matching::N + col] == 1.0)
+                .map(|(_, id)| *id)
+                .collect();
+            assert_eq!(got, want, "seed {seed} expr {:?}", job.properties);
+        }
+    }
+}
+
+// ------------------------------------------------------------ expr/db ----
+
+/// Parser totality on random well-formed comparisons + evaluation matches
+/// a direct check.
+#[test]
+fn prop_expr_eval_matches_direct_comparison() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let threshold = rng.range_i64(-100, 100);
+        let value = rng.range_i64(-100, 100);
+        let ops: [(&str, fn(i64, i64) -> bool); 6] = [
+            ("=", |a, b| a == b),
+            ("!=", |a, b| a != b),
+            ("<", |a, b| a < b),
+            ("<=", |a, b| a <= b),
+            (">", |a, b| a > b),
+            (">=", |a, b| a >= b),
+        ];
+        let (op, f) = ops[rng.below(6) as usize];
+        let expr = Expr::parse(&format!("x {op} {threshold}")).unwrap();
+        let mut row = oar::db::Row::new();
+        row.insert("x".into(), Value::Int(value));
+        assert_eq!(
+            expr.matches(&row),
+            f(value, threshold),
+            "seed {seed}: {value} {op} {threshold}"
+        );
+    }
+}
+
+/// State machine safety on random event sequences against a live Db: a
+/// rejected transition never corrupts the stored state, and every
+/// reachable state is a legal fig.-1 state.
+#[test]
+fn prop_state_machine_safety_under_random_transitions() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let mut db = Db::with_standard_queues();
+        let id = db.insert_job(Job::from_spec(&JobSpec::default(), 0));
+        for step in 0..30 {
+            let target = *rng.pick(&JobState::ALL);
+            let before = db.job(id).unwrap().state;
+            let result = db.set_job_state(id, target, step);
+            let after = db.job(id).unwrap().state;
+            match result {
+                Ok(()) => assert!(
+                    before.can_transition_to(target) && after == target,
+                    "seed {seed}: illegal accepted {before} -> {target}"
+                ),
+                Err(_) => assert_eq!(
+                    before, after,
+                    "seed {seed}: failed transition mutated state"
+                ),
+            }
+        }
+    }
+}
+
+/// Snapshot → restore is lossless for random databases.
+#[test]
+fn prop_snapshot_roundtrip() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(8000 + seed);
+        let mut db = Db::with_standard_queues();
+        let fleet_size = rng.range_i64(1, 10) as u32;
+        for n in random_fleet(&mut rng, fleet_size) {
+            db.add_node(n);
+        }
+        let mut ids = Vec::new();
+        for i in 0..rng.range_i64(0, 30) {
+            let spec = JobSpec {
+                properties: Some(random_interval_expr(&mut rng)),
+                ..JobSpec::batch(&format!("u{}", rng.below(5)), "date", 1, 60)
+            };
+            ids.push(db.insert_job(Job::from_spec(&spec, i)));
+        }
+        db.log_event(1, "TEST", ids.first().copied(), "detail");
+        let path = std::env::temp_dir().join(format!("oar_prop_snap_{seed}.json"));
+        db.snapshot(&path).unwrap();
+        let mut back = Db::restore(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.job_count(), ids.len(), "seed {seed}");
+        for id in ids {
+            let a = db.job(id).unwrap();
+            let b = back.job(id).unwrap();
+            assert_eq!(a.user, b.user, "seed {seed}");
+            assert_eq!(a.properties, b.properties, "seed {seed}");
+            assert_eq!(a.state, b.state, "seed {seed}");
+        }
+        assert_eq!(back.events().len(), 1);
+    }
+}

@@ -1,0 +1,128 @@
+//! The three-layer seam: the AOT-compiled JAX/Pallas artifact executed
+//! through PJRT must agree exactly with the pure-Rust reference (which is
+//! itself pytest-pinned to the pure-jnp oracle). Requires
+//! `make artifacts`; every test skips cleanly when the artifact is absent
+//! so `cargo test` stays green pre-build.
+
+use oar::matching::encode::{Encoder, JobToMatch};
+use oar::matching::{reference::run_reference, ScheduleStep, StepInput};
+use oar::matching::{F, J, N, P, T};
+use oar::runtime::HloStep;
+use oar::util::Rng;
+
+fn hlo() -> Option<HloStep> {
+    match HloStep::load_default() {
+        Ok(h) => Some(h),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn random_input(seed: u64) -> StepInput {
+    let mut rng = Rng::new(seed);
+    let mut input = StepInput::zeros();
+    for j in 0..J {
+        for p in 0..P {
+            let lo = rng.range_f64(-2.0, 1.0) as f32;
+            input.job_lo[j * P + p] = lo;
+            input.job_hi[j * P + p] = lo + rng.range_f64(0.0, 2.5) as f32;
+        }
+        input.req[j] = rng.range_i64(0, 8) as f32;
+        input.dur[j] = rng.range_i64(1, T as i64) as f32;
+        for f in 0..F {
+            input.job_feats[j * F + f] = rng.range_f64(0.0, 10.0) as f32;
+        }
+    }
+    for n in 0..N {
+        for p in 0..P {
+            input.node_props[n * P + p] = rng.range_f64(-2.0, 2.0) as f32;
+        }
+        for t in 0..T {
+            input.node_free[n * T + t] = rng.range_i64(0, 3) as f32;
+        }
+    }
+    for f in 0..F {
+        input.weights[f] = rng.range_f64(0.0, 1.0) as f32;
+    }
+    input
+}
+
+#[test]
+fn artifact_matches_reference_on_random_inputs() {
+    let Some(mut hlo) = hlo() else { return };
+    for seed in 0..10 {
+        let input = random_input(seed);
+        let got = hlo.run(&input).unwrap();
+        let want = run_reference(&input);
+        assert_eq!(got.elig, want.elig, "seed {seed}: elig");
+        assert_eq!(got.earliest, want.earliest, "seed {seed}: earliest");
+        for (i, (g, w)) in got.freecount.iter().zip(&want.freecount).enumerate() {
+            assert!((g - w).abs() < 1e-3, "seed {seed}: freecount[{i}] {g} vs {w}");
+        }
+        for (i, (g, w)) in got.scores.iter().zip(&want.scores).enumerate() {
+            assert!((g - w).abs() < 1e-3, "seed {seed}: scores[{i}] {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn artifact_matches_reference_on_encoded_cluster_batches() {
+    let Some(mut hlo) = hlo() else { return };
+    // Realistic inputs: the icluster fleet + SQL-derived constraints.
+    let cluster = oar::cluster::VirtualCluster::icluster();
+    let nodes = cluster.nodes().to_vec();
+    let encoder = Encoder::from_nodes(&nodes);
+    let free = vec![vec![1.0f32; T]; nodes.len()];
+    let jobs: Vec<JobToMatch> = (0..40)
+        .map(|i| JobToMatch {
+            id: i + 1,
+            properties: match i % 5 {
+                0 => String::new(),
+                1 => "mem >= 256".into(),
+                2 => "cpu_mhz > 700".into(),
+                3 => "switch = 'sw3'".into(),
+                _ => "mem BETWEEN 128 AND 512 AND cpu_mhz >= 733".into(),
+            },
+            total_procs: 1 + (i % 6) as u32,
+            duration: 300 * (1 + (i % 5) as i64),
+            wait_time: i as i64 * 10,
+            queue_priority: 10,
+            best_effort: i % 7 == 0,
+        })
+        .collect();
+    let batch = encoder.encode(&jobs, &nodes, &free, 300, [1.0, 10.0, 0.0, 0.0, -5.0, 0.0]);
+    assert!(batch.fallback.is_empty());
+    let got = hlo.run(&batch.input).unwrap();
+    let want = run_reference(&batch.input);
+    assert_eq!(got.elig, want.elig);
+    assert_eq!(got.earliest, want.earliest);
+}
+
+#[test]
+fn artifact_edge_cases() {
+    let Some(mut hlo) = hlo() else { return };
+    // all-zero input
+    let out = hlo.run(&StepInput::zeros()).unwrap();
+    assert_eq!(out, run_reference(&StepInput::zeros()));
+
+    // unbounded intervals + sentinel padding values
+    let mut input = StepInput::zeros();
+    for p in 0..P {
+        input.job_lo[p] = oar::matching::shapes::LO_UNBOUNDED;
+        input.job_hi[p] = oar::matching::shapes::HI_UNBOUNDED;
+    }
+    for n in 0..N {
+        for p in 0..P {
+            input.node_props[n * P + p] = if n % 2 == 0 {
+                oar::matching::shapes::PAD_PROP
+            } else {
+                0.0
+            };
+        }
+    }
+    let got = hlo.run(&input).unwrap();
+    let want = run_reference(&input);
+    assert_eq!(got.elig, want.elig, "sentinel handling must match");
+}

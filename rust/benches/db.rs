@@ -1,74 +1,218 @@
 //! Ablation A5 (DESIGN.md §6): the cost of the paper's core design choice
 //! — all module communication through the database. Measures the
 //! SQL-equivalent operations on the jobs path at realistic table sizes,
-//! plus WHERE-expression evaluation throughput.
+//! WHERE-expression evaluation throughput, and — since the query engine
+//! gained secondary indexes — the probe-vs-scan gap on identical data,
+//! with the planner's access-path counters printed as proof.
+//!
+//! Emits machine-readable results to `BENCH_db.json` at the repo root so
+//! the perf trajectory is diffable across PRs.
 
 mod common;
 
-use common::bench;
-use oar::db::{Db, Expr};
-use oar::types::{Job, JobSpec, JobState, Node};
+use std::collections::BTreeMap;
+use std::path::Path;
 
+use common::{bench, BenchResult};
+use oar::db::{Db, Expr, Value};
+use oar::types::{Job, JobSpec, JobState, Node};
+use oar::util::Json;
+
+/// Populate: 64 nodes + `jobs` jobs with a realistic state mix — ~1%
+/// Waiting, ~1% Running, the rest Terminated — the shape of a long-lived
+/// scheduler database, where state-filtered queries are selective.
 fn filled_db(jobs: usize) -> Db {
     let mut db = Db::with_standard_queues();
     for i in 1..=64u32 {
         db.add_node(
             Node::new(i, &format!("n{i}"), 2)
-                .with_prop("mem", oar::db::Value::Int(256 * (1 + i as i64 % 4))),
+                .with_prop("mem", Value::Int(256 * (1 + i as i64 % 4))),
         );
     }
     for i in 0..jobs {
         let spec = JobSpec::batch(&format!("u{}", i % 10), "date", 1 + (i % 4) as u32, 600);
-        db.insert_job(Job::from_spec(&spec, i as i64));
+        let id = db.insert_job(Job::from_spec(&spec, i as i64));
+        match i % 100 {
+            0 => {} // stays Waiting
+            1 => {
+                db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+                db.set_job_state(id, JobState::Launching, 2).unwrap();
+                db.set_job_state(id, JobState::Running, 3).unwrap();
+            }
+            _ => {
+                db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+                db.set_job_state(id, JobState::Launching, 2).unwrap();
+                db.set_job_state(id, JobState::Running, 3).unwrap();
+                db.set_job_state(id, JobState::Terminated, 4).unwrap();
+            }
+        }
     }
     db
 }
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut plans: BTreeMap<String, Json> = BTreeMap::new();
+    let mut speedups: BTreeMap<String, f64> = BTreeMap::new();
+
     println!("== db: table ops at realistic sizes ==");
-    for size in [100usize, 1000, 10_000] {
+    for size in [100usize, 1000, 10_000, 100_000] {
         let mut db = filled_db(size);
 
-        bench(&format!("insert_job/{size}_existing"), 10, 100, || {
+        results.push(bench(&format!("insert_job/{size}_existing"), 10, 100, || {
             db.insert_job(Job::from_spec(&JobSpec::default(), 0))
-        });
+        }));
 
-        bench(&format!("jobs_in_state_waiting/{size}"), 3, 50, || {
-            db.jobs_in_state(JobState::Waiting).len()
-        });
-
-        bench(&format!("set_job_state/{size}"), 0, 100, || {
+        results.push(bench(&format!("set_job_state/{size}"), 0, 100, || {
             // walk a fresh job through its lifecycle each iteration
             let id = db.insert_job(Job::from_spec(&JobSpec::default(), 0));
             db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
             db.set_job_state(id, JobState::Launching, 2).unwrap();
             db.set_job_state(id, JobState::Running, 3).unwrap();
             db.set_job_state(id, JobState::Terminated, 4).unwrap();
-        });
+        }));
 
-        bench(&format!("matching_nodes_expr/{size}"), 3, 50, || {
+        results.push(bench(&format!("matching_nodes_expr/{size}"), 3, 50, || {
             db.matching_nodes("mem >= 512").unwrap().len()
-        });
+        }));
+    }
+
+    println!("\n== indexed vs scan (predicate pushdown) ==");
+    for size in [10_000usize, 100_000] {
+        let mut db = filled_db(size);
+
+        // --- probe path (the engine's default: standard indexes on) ---
+        db.reset_stats();
+        let indexed = [
+            bench(&format!("jobs_in_state_waiting/{size}"), 3, 50, || {
+                db.jobs_in_state(JobState::Waiting).len()
+            }),
+            bench(&format!("waiting_in_queue_default/{size}"), 3, 50, || {
+                db.waiting_jobs_in_queue("default").len()
+            }),
+            bench(&format!("count_waiting/{size}"), 3, 200, || {
+                db.count_jobs_in_state(JobState::Waiting)
+            }),
+            bench(&format!("jobs_where_state_eq/{size}"), 3, 50, || {
+                db.jobs_where(&Expr::parse("state = 'Waiting'").unwrap()).len()
+            }),
+        ];
+        let s = db.stats();
+        println!(
+            "  plan proof ({size} rows, indexed): {} index probes, {} full scans",
+            s.index_probes, s.full_scans
+        );
+        plans.insert(
+            format!("{size}/indexed"),
+            Json::obj(vec![
+                ("index_probes", Json::Num(s.index_probes as f64)),
+                ("full_scans", Json::Num(s.full_scans as f64)),
+            ]),
+        );
+
+        // --- scan path: same data, indexes dropped ---
+        db.drop_all_indexes();
+        db.reset_stats();
+        let scanned = [
+            bench(&format!("jobs_in_state_waiting_scan/{size}"), 3, 50, || {
+                db.jobs_in_state(JobState::Waiting).len()
+            }),
+            bench(&format!("waiting_in_queue_default_scan/{size}"), 3, 50, || {
+                db.waiting_jobs_in_queue("default").len()
+            }),
+            bench(&format!("count_waiting_scan/{size}"), 3, 200, || {
+                db.count_jobs_in_state(JobState::Waiting)
+            }),
+            bench(&format!("jobs_where_state_eq_scan/{size}"), 3, 50, || {
+                db.jobs_where(&Expr::parse("state = 'Waiting'").unwrap()).len()
+            }),
+        ];
+        let s = db.stats();
+        println!(
+            "  plan proof ({size} rows, dropped):  {} index probes, {} full scans",
+            s.index_probes, s.full_scans
+        );
+        plans.insert(
+            format!("{size}/scan"),
+            Json::obj(vec![
+                ("index_probes", Json::Num(s.index_probes as f64)),
+                ("full_scans", Json::Num(s.full_scans as f64)),
+            ]),
+        );
+
+        for (probe, scan) in indexed.iter().zip(scanned.iter()) {
+            let ratio = scan.mean.as_nanos() as f64 / probe.mean.as_nanos().max(1) as f64;
+            println!("  {:<44} {ratio:>8.1}x faster with index", probe.name);
+            speedups.insert(probe.name.clone(), ratio);
+        }
+        results.extend(indexed);
+        results.extend(scanned);
     }
 
     println!("\n== expression engine ==");
     let expr = Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND switch = 'sw1'").unwrap();
     let row = {
         let n = Node::new(1, "n1", 2)
-            .with_prop("mem", oar::db::Value::Int(1024))
-            .with_prop("cpu_mhz", oar::db::Value::Int(2400))
-            .with_prop("switch", oar::db::Value::Text("sw1".into()));
+            .with_prop("mem", Value::Int(1024))
+            .with_prop("cpu_mhz", Value::Int(2400))
+            .with_prop("switch", Value::Text("sw1".into()));
         n.property_row()
     };
-    bench("expr_parse/3_clauses", 100, 1000, || {
+    results.push(bench("expr_parse/3_clauses", 100, 1000, || {
         Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND switch = 'sw1'").unwrap()
-    });
-    bench("expr_eval/3_clauses", 100, 1000, || expr.matches(&row));
+    }));
+    results.push(bench("expr_eval/3_clauses", 100, 1000, || expr.matches(&row)));
 
     println!("\n== snapshot/restore (data-safety path) ==");
     let db = filled_db(1000);
     let path = std::env::temp_dir().join("oar_bench_snapshot.json");
-    bench("snapshot/1000_jobs", 1, 20, || db.snapshot(&path).unwrap());
-    bench("restore/1000_jobs", 1, 20, || Db::restore(&path).unwrap());
+    results.push(bench("snapshot/1000_jobs", 1, 20, || db.snapshot(&path).unwrap()));
+    results.push(bench("restore/1000_jobs", 1, 20, || Db::restore(&path).unwrap()));
     let _ = std::fs::remove_file(path);
+
+    write_report(&results, plans, speedups);
+}
+
+/// Machine-readable results at the repo root: the perf trajectory file.
+fn write_report(
+    results: &[BenchResult],
+    plans: BTreeMap<String, Json>,
+    speedups: BTreeMap<String, f64>,
+) {
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_db.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("db".into())),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::Str(r.name.clone())),
+                            ("iters", Json::Num(r.iters as f64)),
+                            ("mean_ns", Json::Num(r.mean.as_nanos() as f64)),
+                            ("p50_ns", Json::Num(r.p50.as_nanos() as f64)),
+                            ("p95_ns", Json::Num(r.p95.as_nanos() as f64)),
+                            ("min_ns", Json::Num(r.min.as_nanos() as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("plans", Json::Obj(plans)),
+        (
+            "speedups",
+            Json::Obj(
+                speedups
+                    .into_iter()
+                    .map(|(k, v)| (k, Json::Num(v)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write(&out, doc.dump()) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
 }

@@ -138,7 +138,7 @@ pub fn admit(db: &mut Db, spec: &JobSpec) -> Result<Admission> {
             let row = spec_row(&spec);
             match rule {
                 Rule::Default { field, value } => {
-                    if row.get(&field).map(Value::is_null).unwrap_or(true) {
+                    if row.get(field.as_str()).map(Value::is_null).unwrap_or(true) {
                         apply_field(&mut spec, &field, &value)?;
                     }
                 }

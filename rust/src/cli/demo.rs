@@ -115,6 +115,10 @@ pub fn run_demo(scale: f64) -> Result<i32> {
         stats.inserts,
         stats.updates
     );
+    println!(
+        "  access paths: {} index probes, {} full scans",
+        stats.index_probes, stats.full_scans
+    );
     Ok(0)
 }
 

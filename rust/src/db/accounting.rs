@@ -31,40 +31,82 @@ pub struct Accounting {
 
 impl Accounting {
     /// Build the report from job rows (typically `db.jobs_where(TRUE)`).
+    /// `Db::accounting` computes the same report in one zero-copy pass
+    /// over the raw rows through [`AccountingBuilder`].
     pub fn compute(jobs: &[Job]) -> Accounting {
-        let mut acc = Accounting::default();
-        let mut resp_sum: i64 = 0;
-        let mut resp_n: i64 = 0;
+        let mut b = AccountingBuilder::new();
         for j in jobs {
-            let u = acc.by_user.entry(j.user.clone()).or_default();
-            u.jobs_submitted += 1;
-            *acc.by_queue.entry(j.queue_name.clone()).or_default() += 1;
-            match j.state {
-                JobState::Terminated => {
-                    u.jobs_terminated += 1;
-                    if let (Some(start), Some(stop)) = (j.start_time, j.stop_time) {
-                        let cpu = (stop - start) * j.total_procs() as Time;
-                        u.cpu_seconds += cpu;
-                        acc.total_cpu_seconds += cpu;
-                    }
-                    if let Some(r) = j.response_time() {
-                        resp_sum += r;
-                        resp_n += 1;
-                    }
-                }
-                JobState::Error => u.jobs_error += 1,
-                _ => {}
-            }
-            if let Some(w) = j.wait_time() {
-                u.total_wait += w;
-            }
+            b.add(
+                &j.user,
+                &j.queue_name,
+                j.state,
+                j.submission_time,
+                j.start_time,
+                j.stop_time,
+                j.total_procs(),
+            );
         }
-        acc.mean_response_time = if resp_n > 0 {
-            resp_sum as f64 / resp_n as f64
+        b.finish()
+    }
+}
+
+/// Streaming accumulator behind [`Accounting::compute`]: takes one job's
+/// raw cells at a time, so the database can feed it straight from the
+/// stored rows without materializing `Job` values.
+#[derive(Debug, Clone, Default)]
+pub struct AccountingBuilder {
+    acc: Accounting,
+    resp_sum: i64,
+    resp_n: i64,
+}
+
+impl AccountingBuilder {
+    pub fn new() -> AccountingBuilder {
+        AccountingBuilder::default()
+    }
+
+    /// Fold one job into the report.
+    pub fn add(
+        &mut self,
+        user: &str,
+        queue: &str,
+        state: JobState,
+        submission: Time,
+        start: Option<Time>,
+        stop: Option<Time>,
+        procs: u32,
+    ) {
+        let u = self.acc.by_user.entry(user.to_string()).or_default();
+        u.jobs_submitted += 1;
+        *self.acc.by_queue.entry(queue.to_string()).or_default() += 1;
+        match state {
+            JobState::Terminated => {
+                u.jobs_terminated += 1;
+                if let (Some(start), Some(stop)) = (start, stop) {
+                    let cpu = (stop - start) * procs as Time;
+                    u.cpu_seconds += cpu;
+                    self.acc.total_cpu_seconds += cpu;
+                }
+                if let Some(stop) = stop {
+                    self.resp_sum += stop - submission;
+                    self.resp_n += 1;
+                }
+            }
+            JobState::Error => u.jobs_error += 1,
+            _ => {}
+        }
+        if let Some(start) = start {
+            u.total_wait += start - submission;
+        }
+    }
+
+    pub fn finish(mut self) -> Accounting {
+        self.acc.mean_response_time = if self.resp_n > 0 {
+            self.resp_sum as f64 / self.resp_n as f64
         } else {
             0.0
         };
-        acc
+        self.acc
     }
 }
 

@@ -30,6 +30,20 @@ use std::fmt;
 use super::value::Value;
 use super::table::Row;
 
+/// Column lookup abstraction: evaluation reads cells through this trait,
+/// so callers can expose *virtual* rows — e.g. the node-property view the
+/// resource matcher uses — without materializing a [`Row`]. This is what
+/// makes zero-copy evaluation possible on stored rows of any shape.
+pub trait Columns {
+    fn col(&self, name: &str) -> Option<&Value>;
+}
+
+impl Columns for Row {
+    fn col(&self, name: &str) -> Option<&Value> {
+        self.get(name)
+    }
+}
+
 /// Binary comparison operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CmpOp {
@@ -453,11 +467,16 @@ impl Expr {
 
     /// Evaluate against a row to a value (missing columns read as NULL).
     pub fn eval(&self, row: &Row) -> Value {
+        self.eval_cols(row)
+    }
+
+    /// Evaluate against any column source (missing columns read as NULL).
+    pub fn eval_cols<C: Columns + ?Sized>(&self, row: &C) -> Value {
         match self {
             Expr::Literal(v) => v.clone(),
-            Expr::Column(name) => row.get(name).cloned().unwrap_or(Value::Null),
+            Expr::Column(name) => row.col(name).cloned().unwrap_or(Value::Null),
             Expr::Cmp(op, a, b) => {
-                let (va, vb) = (a.eval(row), b.eval(row));
+                let (va, vb) = (a.eval_cols(row), b.eval_cols(row));
                 match va.compare(&vb) {
                     None => {
                         // Ne on comparable-but-unequal types: still false
@@ -482,25 +501,25 @@ impl Expr {
                 }
             }
             Expr::And(a, b) => {
-                Value::Bool(a.eval(row).is_truthy() && b.eval(row).is_truthy())
+                Value::Bool(a.eval_cols(row).is_truthy() && b.eval_cols(row).is_truthy())
             }
             Expr::Or(a, b) => {
-                Value::Bool(a.eval(row).is_truthy() || b.eval(row).is_truthy())
+                Value::Bool(a.eval_cols(row).is_truthy() || b.eval_cols(row).is_truthy())
             }
-            Expr::Not(a) => Value::Bool(!a.eval(row).is_truthy()),
-            Expr::Like(a, pat) => match a.eval(row) {
+            Expr::Not(a) => Value::Bool(!a.eval_cols(row).is_truthy()),
+            Expr::Like(a, pat) => match a.eval_cols(row) {
                 Value::Text(s) => Value::Bool(like_match(&s, pat)),
                 _ => Value::Bool(false),
             },
             Expr::In(a, items, negated) => {
-                let v = a.eval(row);
+                let v = a.eval_cols(row);
                 let found = items.iter().any(|it| v.sql_eq(it));
                 Value::Bool(found != *negated)
             }
-            Expr::IsNull(a, negated) => Value::Bool(a.eval(row).is_null() != *negated),
+            Expr::IsNull(a, negated) => Value::Bool(a.eval_cols(row).is_null() != *negated),
             Expr::Between(a, lo, hi) => {
-                let v = a.eval(row);
-                let (l, h) = (lo.eval(row), hi.eval(row));
+                let v = a.eval_cols(row);
+                let (l, h) = (lo.eval_cols(row), hi.eval_cols(row));
                 let ok = matches!(
                     v.compare(&l),
                     Some(std::cmp::Ordering::Greater | std::cmp::Ordering::Equal)
@@ -510,14 +529,19 @@ impl Expr {
                 );
                 Value::Bool(ok)
             }
-            Expr::Add(a, b) => num_binop(a.eval(row), b.eval(row), |x, y| x + y),
-            Expr::Sub(a, b) => num_binop(a.eval(row), b.eval(row), |x, y| x - y),
+            Expr::Add(a, b) => num_binop(a.eval_cols(row), b.eval_cols(row), |x, y| x + y),
+            Expr::Sub(a, b) => num_binop(a.eval_cols(row), b.eval_cols(row), |x, y| x - y),
         }
     }
 
     /// WHERE-clause result: truthiness of [`Expr::eval`].
     pub fn matches(&self, row: &Row) -> bool {
-        self.eval(row).is_truthy()
+        self.eval_cols(row).is_truthy()
+    }
+
+    /// WHERE-clause result against any column source.
+    pub fn matches_cols<C: Columns + ?Sized>(&self, row: &C) -> bool {
+        self.eval_cols(row).is_truthy()
     }
 
     /// Column names referenced by the expression.
@@ -661,10 +685,11 @@ mod tests {
     use super::*;
 
     fn row(pairs: &[(&str, Value)]) -> Row {
-        pairs
-            .iter()
-            .map(|(k, v)| (k.to_string(), v.clone()))
-            .collect()
+        let mut r = Row::new();
+        for (k, v) in pairs {
+            r.insert(k.to_string().into(), v.clone());
+        }
+        r
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Secondary indexes for [`super::table::Table`].
+//!
+//! One [`ColumnIndex`] maps the *key form* of a column's values to the set
+//! of row ids holding that value, kept incrementally consistent by every
+//! mutation path of the table (insert / delete / `set_cell` /
+//! `update_where`). The key form ([`IndexKey`]) mirrors
+//! [`Value::compare`]'s semantics exactly, so an index probe and a full
+//! scan always agree:
+//!
+//! * all numeric values (`Int`/`Real`/`Bool`) collapse into one
+//!   f64-ordered key space (MySQL-style numeric coercion);
+//! * text is its own lexicographic key space (`Num` sorts before `Text`
+//!   in the tree, and probes never cross spaces — text never equals a
+//!   number, as in `Value::compare`);
+//! * `NULL` (and the never-parsed `NaN`) are unindexable: rows holding
+//!   them are simply absent, which is the WHERE semantics (`col = x`,
+//!   ranges, `BETWEEN` and non-negated `IN` are never true for `NULL`).
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Bound;
+
+use super::value::Value;
+
+/// f64 with a total order; construction normalizes `-0.0` to `0.0` (so
+/// key equality matches `partial_cmp` equality) and rejects `NaN`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(f64);
+
+impl OrdF64 {
+    fn new(x: f64) -> Option<OrdF64> {
+        if x.is_nan() {
+            None
+        } else {
+            Some(OrdF64(if x == 0.0 { 0.0 } else { x }))
+        }
+    }
+}
+
+impl Eq for OrdF64 {}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Totally-ordered key form of a cell value (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IndexKey {
+    Num(OrdF64),
+    Text(String),
+}
+
+impl IndexKey {
+    /// Key form of a value, or `None` when the value is unindexable
+    /// (`NULL`, `NaN`).
+    pub fn of(v: &Value) -> Option<IndexKey> {
+        match v {
+            Value::Text(s) => Some(IndexKey::Text(s.clone())),
+            Value::Null => None,
+            other => other.as_f64().and_then(OrdF64::new).map(IndexKey::Num),
+        }
+    }
+
+    /// Smallest key of the numeric key space.
+    pub fn num_min() -> IndexKey {
+        IndexKey::Num(OrdF64(f64::NEG_INFINITY))
+    }
+
+    /// Largest key of the numeric key space (everything above is text).
+    pub fn num_max() -> IndexKey {
+        IndexKey::Num(OrdF64(f64::INFINITY))
+    }
+
+    /// Smallest key of the text key space.
+    pub fn text_min() -> IndexKey {
+        IndexKey::Text(String::new())
+    }
+}
+
+/// `true` when the key range can contain no key at all (contradictory
+/// bounds like `x > 5 AND x < 3` compile to such ranges).
+pub fn range_empty(lo: &Bound<IndexKey>, hi: &Bound<IndexKey>) -> bool {
+    fn key(b: &Bound<IndexKey>) -> Option<(&IndexKey, bool)> {
+        match b {
+            Bound::Included(k) => Some((k, true)),
+            Bound::Excluded(k) => Some((k, false)),
+            Bound::Unbounded => None,
+        }
+    }
+    match (key(lo), key(hi)) {
+        (Some((l, l_inc)), Some((h, h_inc))) => match l.cmp(h) {
+            Ordering::Greater => true,
+            Ordering::Equal => !(l_inc && h_inc),
+            Ordering::Less => false,
+        },
+        _ => false,
+    }
+}
+
+/// One column's secondary index: value key → sorted set of row ids.
+#[derive(Debug, Clone, Default)]
+pub struct ColumnIndex {
+    map: BTreeMap<IndexKey, BTreeSet<u64>>,
+    entries: usize,
+}
+
+impl ColumnIndex {
+    /// Register `id` under the key of `v` (no-op for unindexable values).
+    pub fn add(&mut self, v: &Value, id: u64) {
+        if let Some(k) = IndexKey::of(v) {
+            if self.map.entry(k).or_default().insert(id) {
+                self.entries += 1;
+            }
+        }
+    }
+
+    /// Remove `id` from the key of `v` (no-op for unindexable values).
+    pub fn remove(&mut self, v: &Value, id: u64) {
+        if let Some(k) = IndexKey::of(v) {
+            if let Some(set) = self.map.get_mut(&k) {
+                if set.remove(&id) {
+                    self.entries -= 1;
+                }
+                if set.is_empty() {
+                    self.map.remove(&k);
+                }
+            }
+        }
+    }
+
+    /// Rows currently indexed (rows with `NULL` in the column are absent).
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    /// Distinct keys currently present.
+    pub fn distinct_keys(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Ids holding exactly this value's key, in ascending id order.
+    pub fn eq_ids(&self, v: &Value) -> Option<&BTreeSet<u64>> {
+        IndexKey::of(v).and_then(|k| self.map.get(&k))
+    }
+
+    /// Number of rows holding exactly this value's key.
+    pub fn eq_count(&self, v: &Value) -> usize {
+        self.eq_ids(v).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Number of rows inside a key range (cost estimation).
+    pub fn range_count(&self, lo: &Bound<IndexKey>, hi: &Bound<IndexKey>) -> usize {
+        if range_empty(lo, hi) {
+            return 0;
+        }
+        self.map
+            .range((lo.clone(), hi.clone()))
+            .map(|(_, s)| s.len())
+            .sum()
+    }
+
+    /// Ids inside a key range, in ascending id order.
+    pub fn range_ids(&self, lo: &Bound<IndexKey>, hi: &Bound<IndexKey>) -> Vec<u64> {
+        if range_empty(lo, hi) {
+            return Vec::new();
+        }
+        let mut out: Vec<u64> = self
+            .map
+            .range((lo.clone(), hi.clone()))
+            .flat_map(|(_, s)| s.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_values_share_one_key_space() {
+        assert_eq!(
+            IndexKey::of(&Value::Int(2)),
+            IndexKey::of(&Value::Real(2.0))
+        );
+        assert_eq!(
+            IndexKey::of(&Value::Bool(true)),
+            IndexKey::of(&Value::Int(1))
+        );
+        assert_ne!(
+            IndexKey::of(&Value::Text("2".into())),
+            IndexKey::of(&Value::Int(2))
+        );
+        assert_eq!(IndexKey::of(&Value::Null), None);
+        assert_eq!(
+            IndexKey::of(&Value::Real(-0.0)),
+            IndexKey::of(&Value::Real(0.0))
+        );
+    }
+
+    #[test]
+    fn num_sorts_before_text() {
+        assert!(IndexKey::num_max() < IndexKey::text_min());
+        assert!(IndexKey::of(&Value::Int(i64::MAX)).unwrap() < IndexKey::text_min());
+    }
+
+    #[test]
+    fn add_remove_and_probe() {
+        let mut idx = ColumnIndex::default();
+        idx.add(&Value::Text("Waiting".into()), 1);
+        idx.add(&Value::Text("Waiting".into()), 2);
+        idx.add(&Value::Text("Running".into()), 3);
+        idx.add(&Value::Null, 4); // unindexable
+        assert_eq!(idx.entries(), 3);
+        assert_eq!(idx.eq_count(&Value::Text("Waiting".into())), 2);
+        assert_eq!(idx.eq_count(&Value::Text("Running".into())), 1);
+        assert_eq!(idx.eq_count(&Value::Text("Hold".into())), 0);
+        idx.remove(&Value::Text("Waiting".into()), 1);
+        assert_eq!(idx.eq_count(&Value::Text("Waiting".into())), 1);
+        assert_eq!(idx.entries(), 2);
+    }
+
+    #[test]
+    fn ranges_stay_inside_their_key_space() {
+        let mut idx = ColumnIndex::default();
+        idx.add(&Value::Int(1), 1);
+        idx.add(&Value::Int(5), 2);
+        idx.add(&Value::Int(9), 3);
+        idx.add(&Value::Text("zzz".into()), 4);
+        // x > 4 numerically must not leak into the text keys
+        let lo = Bound::Excluded(IndexKey::of(&Value::Int(4)).unwrap());
+        let hi = Bound::Included(IndexKey::num_max());
+        assert_eq!(idx.range_ids(&lo, &hi), vec![2, 3]);
+        assert_eq!(idx.range_count(&lo, &hi), 2);
+        // text range from the bottom of the text space excludes numbers
+        let lo = Bound::Included(IndexKey::text_min());
+        let hi = Bound::Unbounded;
+        assert_eq!(idx.range_ids(&lo, &hi), vec![4]);
+    }
+
+    #[test]
+    fn contradictory_range_is_empty_not_panicking() {
+        let mut idx = ColumnIndex::default();
+        idx.add(&Value::Int(4), 1);
+        let five = IndexKey::of(&Value::Int(5)).unwrap();
+        let three = IndexKey::of(&Value::Int(3)).unwrap();
+        let lo = Bound::Excluded(five.clone());
+        let hi = Bound::Excluded(three);
+        assert!(range_empty(&lo, &hi));
+        assert_eq!(idx.range_ids(&lo, &hi), Vec::<u64>::new());
+        // equal bounds, one exclusive -> empty
+        let lo = Bound::Included(five.clone());
+        let hi = Bound::Excluded(five);
+        assert!(range_empty(&lo, &hi));
+        assert_eq!(idx.range_count(&lo, &hi), 0);
+    }
+}

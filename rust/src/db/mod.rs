@@ -16,14 +16,18 @@
 
 mod accounting;
 mod expr;
+mod index;
 mod log;
+mod plan;
 mod store;
 mod table;
 mod value;
 
-pub use accounting::{Accounting, UserUsage};
-pub use expr::{CmpOp, Expr, ParseError};
+pub use accounting::{Accounting, AccountingBuilder, UserUsage};
+pub use expr::{CmpOp, Columns, Expr, ParseError};
+pub use index::{ColumnIndex, IndexKey};
 pub use log::{EventLog, EventRecord};
+pub use plan::{PlanKind, QueryPlan};
 pub use store::{Db, DbHandle, DbError, QueryStats};
-pub use table::{Row, Table};
+pub use table::{ColName, Row, Table};
 pub use value::Value;

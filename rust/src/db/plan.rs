@@ -1,0 +1,238 @@
+//! Predicate pushdown: turn the sargable part of a WHERE expression into
+//! index probes.
+//!
+//! The planner walks an [`Expr`]'s top-level `AND` chain and extracts
+//! every conjunct an index could answer — equalities, ranges, `BETWEEN`
+//! and (non-negated) `IN` over `column OP literal` shapes. The table then
+//! scores each candidate against its secondary indexes and drives the
+//! query off the most selective one, re-checking the *full* original
+//! expression on every candidate row (residual filtering). That makes
+//! correctness local: a probe only has to be a *superset* of the matching
+//! rows, never an exact answer, so `OR`, `LIKE`, `NOT`, arithmetic and
+//! columns without indexes all work unchanged — they just scan.
+//!
+//! [`QueryPlan`] is the `EXPLAIN` surface: which access path a filter
+//! would take and how many rows it would touch.
+
+use std::ops::Bound;
+
+use super::expr::{CmpOp, Expr};
+use super::index::IndexKey;
+use super::value::Value;
+
+/// How a statement's WHERE clause fetches its candidate rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Single-key probe of a secondary index (`col = literal`).
+    IndexEq,
+    /// Union of single-key probes (`col IN (...)`).
+    IndexIn,
+    /// Ordered walk of a key range (`<`, `<=`, `>`, `>=`, `BETWEEN`).
+    IndexRange,
+    /// No usable index: every row is visited.
+    FullScan,
+}
+
+impl PlanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanKind::IndexEq => "index_eq",
+            PlanKind::IndexIn => "index_in",
+            PlanKind::IndexRange => "index_range",
+            PlanKind::FullScan => "full_scan",
+        }
+    }
+}
+
+/// `EXPLAIN` output: the access path chosen for one WHERE clause.
+#[derive(Debug, Clone)]
+pub struct QueryPlan {
+    pub kind: PlanKind,
+    /// Index column driving the plan (`None` for full scans).
+    pub column: Option<String>,
+    /// Rows the access path will touch (table size for full scans).
+    pub estimated_rows: usize,
+}
+
+/// One sargable conjunct: a single-column constraint an index can answer.
+#[derive(Debug, Clone)]
+pub(crate) enum Sarg {
+    /// `col = literal` (also `literal = col`).
+    Eq(String, Value),
+    /// `col IN (v1, v2, ...)`, non-negated.
+    In(String, Vec<Value>),
+    /// `col` inside a key range (from `<`/`<=`/`>`/`>=`/`BETWEEN`).
+    Range(String, Bound<IndexKey>, Bound<IndexKey>),
+}
+
+impl Sarg {
+    pub(crate) fn column(&self) -> &str {
+        match self {
+            Sarg::Eq(c, _) | Sarg::In(c, _) | Sarg::Range(c, _, _) => c,
+        }
+    }
+
+    pub(crate) fn kind(&self) -> PlanKind {
+        match self {
+            Sarg::Eq(_, _) => PlanKind::IndexEq,
+            Sarg::In(_, _) => PlanKind::IndexIn,
+            Sarg::Range(_, _, _) => PlanKind::IndexRange,
+        }
+    }
+}
+
+/// Split `e` into its top-level AND conjuncts.
+fn conjuncts<'e>(e: &'e Expr, out: &mut Vec<&'e Expr>) {
+    if let Expr::And(a, b) = e {
+        conjuncts(a, out);
+        conjuncts(b, out);
+    } else {
+        out.push(e);
+    }
+}
+
+/// `column OP literal` in either order (flipping the operator when the
+/// literal is on the left).
+fn col_op_lit(op: CmpOp, a: &Expr, b: &Expr) -> Option<(String, CmpOp, Value)> {
+    match (a, b) {
+        (Expr::Column(c), Expr::Literal(v)) => Some((c.clone(), op, v.clone())),
+        (Expr::Literal(v), Expr::Column(c)) => {
+            let flipped = match op {
+                CmpOp::Lt => CmpOp::Gt,
+                CmpOp::Le => CmpOp::Ge,
+                CmpOp::Gt => CmpOp::Lt,
+                CmpOp::Ge => CmpOp::Le,
+                other => other,
+            };
+            Some((c.clone(), flipped, v.clone()))
+        }
+        _ => None,
+    }
+}
+
+/// Key-range form of `col OP v`, staying inside the value's key space
+/// (see [`super::index`]: numbers and text never compare across spaces).
+fn range_of(op: CmpOp, v: &Value) -> Option<(Bound<IndexKey>, Bound<IndexKey>)> {
+    let key = IndexKey::of(v)?;
+    let (space_min, space_max) = match key {
+        IndexKey::Num(_) => (
+            Bound::Included(IndexKey::num_min()),
+            Bound::Included(IndexKey::num_max()),
+        ),
+        IndexKey::Text(_) => (Bound::Included(IndexKey::text_min()), Bound::Unbounded),
+    };
+    Some(match op {
+        CmpOp::Lt => (space_min, Bound::Excluded(key)),
+        CmpOp::Le => (space_min, Bound::Included(key)),
+        CmpOp::Gt => (Bound::Excluded(key), space_max),
+        CmpOp::Ge => (Bound::Included(key), space_max),
+        CmpOp::Eq | CmpOp::Ne => return None, // Eq handled separately; Ne unsargable
+    })
+}
+
+/// Every sargable conjunct of `e`. The caller is responsible for residual
+/// filtering: these are candidate *supersets* per conjunct, not the query
+/// answer.
+pub(crate) fn sargs(e: &Expr) -> Vec<Sarg> {
+    let mut parts = Vec::new();
+    conjuncts(e, &mut parts);
+    let mut out = Vec::new();
+    for part in parts {
+        match part {
+            Expr::Cmp(op, a, b) => {
+                if let Some((col, op, v)) = col_op_lit(*op, a, b) {
+                    if op == CmpOp::Eq {
+                        // `col = NULL` is never true: Eq with an
+                        // unindexable key probes to the empty set, which
+                        // is exact here.
+                        out.push(Sarg::Eq(col, v));
+                    } else if let Some((lo, hi)) = range_of(op, &v) {
+                        out.push(Sarg::Range(col, lo, hi));
+                    }
+                }
+            }
+            Expr::Between(a, lo, hi) => {
+                if let (Expr::Column(c), Expr::Literal(l), Expr::Literal(h)) =
+                    (&**a, &**lo, &**hi)
+                {
+                    if let (Some(kl), Some(kh)) = (IndexKey::of(l), IndexKey::of(h)) {
+                        // Mixed-space bounds (e.g. `BETWEEN 1 AND 'x'`)
+                        // still yield a correct superset: the range is
+                        // simply clamped by the tree order.
+                        out.push(Sarg::Range(
+                            c.clone(),
+                            Bound::Included(kl),
+                            Bound::Included(kh),
+                        ));
+                    }
+                }
+            }
+            Expr::In(a, items, false) => {
+                if let Expr::Column(c) = &**a {
+                    out.push(Sarg::In(c.clone(), items.clone()));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Expr {
+        Expr::parse(s).unwrap()
+    }
+
+    #[test]
+    fn extracts_equalities_from_and_chains() {
+        let got = sargs(&parse("state = 'Waiting' AND queueName = 'default'"));
+        assert_eq!(got.len(), 2);
+        assert!(matches!(&got[0], Sarg::Eq(c, Value::Text(v)) if c == "state" && v == "Waiting"));
+        assert!(
+            matches!(&got[1], Sarg::Eq(c, Value::Text(v)) if c == "queueName" && v == "default")
+        );
+    }
+
+    #[test]
+    fn flips_literal_on_the_left() {
+        let got = sargs(&parse("512 <= mem"));
+        assert_eq!(got.len(), 1);
+        match &got[0] {
+            Sarg::Range(c, lo, hi) => {
+                assert_eq!(c, "mem");
+                assert_eq!(*lo, Bound::Included(IndexKey::of(&Value::Int(512)).unwrap()));
+                assert_eq!(*hi, Bound::Included(IndexKey::num_max()));
+            }
+            other => panic!("expected range, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn between_and_in_are_sargable() {
+        let got = sargs(&parse("mem BETWEEN 256 AND 512 AND switch IN ('sw1', 'sw2')"));
+        assert_eq!(got.len(), 2);
+        assert!(matches!(&got[0], Sarg::Range(c, _, _) if c == "mem"));
+        assert!(matches!(&got[1], Sarg::In(c, items) if c == "switch" && items.len() == 2));
+    }
+
+    #[test]
+    fn disjunctions_and_negations_yield_nothing() {
+        assert!(sargs(&parse("a = 1 OR b = 2")).is_empty());
+        assert!(sargs(&parse("NOT a = 1")).is_empty());
+        assert!(sargs(&parse("a != 1")).is_empty());
+        assert!(sargs(&parse("switch NOT IN ('sw1')")).is_empty());
+        assert!(sargs(&parse("")).is_empty());
+        assert!(sargs(&parse("a + b = 3")).is_empty());
+    }
+
+    #[test]
+    fn mixed_conjunction_keeps_the_sargable_part() {
+        let got = sargs(&parse("state = 'Waiting' AND (a = 1 OR b = 2) AND mem > 10"));
+        assert_eq!(got.len(), 2);
+        assert!(matches!(&got[0], Sarg::Eq(c, _) if c == "state"));
+        assert!(matches!(&got[1], Sarg::Range(c, _, _) if c == "mem"));
+    }
+}

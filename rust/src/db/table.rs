@@ -1,41 +1,97 @@
 //! Generic row-oriented table with WHERE-expression selection — the
 //! storage primitive under all OAR tables (jobs, nodes, assignments,
 //! queues, admission rules, event log).
+//!
+//! This is a real (if small) query engine, not a bag of rows:
+//!
+//! * **Secondary indexes** ([`Table::create_index`]) are maintained
+//!   incrementally by every mutation path. Direct `&mut Row` access is
+//!   deliberately not offered — cells change through [`Table::set_cell`]
+//!   or [`Table::update_where`], which keep the indexes coherent.
+//! * **Predicate pushdown**: every WHERE-driven read plans its access
+//!   path ([`Table::plan`] is the `EXPLAIN` surface), probing the most
+//!   selective index for the sargable part of the expression and applying
+//!   the full expression as a residual filter. Probe/scan counts are kept
+//!   per table and surfaced through `QueryStats`.
+//! * **Zero-copy reads**: [`Table::for_each_where`], [`Table::select_map`]
+//!   and [`Table::select_ids`] visit borrowed rows; only what the caller
+//!   keeps is allocated. The historical cloning [`Table::select`] remains
+//!   for callers that genuinely want owned rows.
 
+use std::borrow::Cow;
+use std::cell::Cell;
 use std::collections::BTreeMap;
 
-
 use super::expr::Expr;
+use super::index::{range_empty, ColumnIndex};
+use super::plan::{sargs, PlanKind, QueryPlan, Sarg};
 use super::value::Value;
 
+/// Interned column name: the fixed schema columns are `'static` borrows
+/// (building a row allocates nothing per column name), dynamic ones
+/// (e.g. the nodes' free-form `prop_*` columns) own their string.
+pub type ColName = Cow<'static, str>;
+
 /// A row: column name → value. BTreeMap keeps dumps deterministic.
-pub type Row = BTreeMap<String, Value>;
+pub type Row = BTreeMap<ColName, Value>;
 
 /// A table with an auto-increment primary key, mirroring MySQL's
 /// `AUTO_INCREMENT` id columns (`idJob` is "its index number in the table
 /// of the jobs", §2.1).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Table {
     pub name: String,
     next_id: u64,
     rows: BTreeMap<u64, Row>,
+    indexes: BTreeMap<ColName, ColumnIndex>,
+    /// Access-path telemetry: WHERE-driven statements answered via an
+    /// index probe vs. by visiting every row. `Cell` so reads can record
+    /// their plan without `&mut` (the table sits behind the Db mutex).
+    probes: Cell<u64>,
+    scans: Cell<u64>,
+}
+
+impl Default for Table {
+    /// Empty table with MySQL `AUTO_INCREMENT` semantics: ids start at 1.
+    fn default() -> Table {
+        Table {
+            name: String::new(),
+            next_id: 1,
+            rows: BTreeMap::new(),
+            indexes: BTreeMap::new(),
+            probes: Cell::new(0),
+            scans: Cell::new(0),
+        }
+    }
+}
+
+/// Candidate rows a plan will visit.
+enum Candidates {
+    /// No usable index: every row.
+    All,
+    /// Index probe result, in ascending id order.
+    Ids(Vec<u64>),
 }
 
 impl Table {
     pub fn new(name: &str) -> Table {
         Table {
             name: name.into(),
-            next_id: 1,
-            rows: BTreeMap::new(),
+            ..Table::default()
         }
     }
 
     /// Insert a row, assigning and returning its id (also stored in the
-    /// `id` column).
+    /// `id` column). All indexes are updated.
     pub fn insert(&mut self, mut row: Row) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         row.insert("id".into(), Value::Int(id as i64));
+        for (col, idx) in &mut self.indexes {
+            if let Some(v) = row.get(col.as_ref()) {
+                idx.add(v, id);
+            }
+        }
         self.rows.insert(id, row);
         id
     }
@@ -44,12 +100,48 @@ impl Table {
         self.rows.get(&id)
     }
 
-    pub fn get_mut(&mut self, id: u64) -> Option<&mut Row> {
-        self.rows.get_mut(&id)
+    /// Write one cell, keeping the column's index (if any) coherent.
+    /// Returns `false` when the row does not exist. This replaces the old
+    /// raw `get_mut` escape hatch, which could silently corrupt indexes.
+    pub fn set_cell(&mut self, id: u64, col: impl Into<ColName>, value: Value) -> bool {
+        self.set_cell_inner(id, &col.into(), value)
     }
 
+    /// The one index-maintenance write path (shared by [`Table::set_cell`]
+    /// and [`Table::update_where`]). Clones the column name only when the
+    /// row gains a new column.
+    fn set_cell_inner(&mut self, id: u64, col: &ColName, value: Value) -> bool {
+        let Some(row) = self.rows.get_mut(&id) else {
+            return false;
+        };
+        if let Some(idx) = self.indexes.get_mut(col) {
+            if let Some(old) = row.get(col.as_ref()) {
+                idx.remove(old, id);
+            }
+            idx.add(&value, id);
+        }
+        match row.get_mut(col.as_ref()) {
+            Some(slot) => *slot = value,
+            None => {
+                row.insert(col.clone(), value);
+            }
+        }
+        true
+    }
+
+    /// Delete a row; all indexes are updated.
     pub fn delete(&mut self, id: u64) -> bool {
-        self.rows.remove(&id).is_some()
+        match self.rows.remove(&id) {
+            None => false,
+            Some(row) => {
+                for (col, idx) in &mut self.indexes {
+                    if let Some(v) = row.get(col.as_ref()) {
+                        idx.remove(v, id);
+                    }
+                }
+                true
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -60,68 +152,320 @@ impl Table {
         self.rows.is_empty()
     }
 
-    /// All rows in id order.
+    /// All rows in id order (raw iteration; not counted as a query).
     pub fn iter(&self) -> impl Iterator<Item = (&u64, &Row)> {
         self.rows.iter()
     }
 
-    /// SELECT ... WHERE expr, in id order.
+    // ------------------------------------------------------- indexes ----
+
+    /// Create (or rebuild) a secondary index on `col`.
+    pub fn create_index(&mut self, col: impl Into<ColName>) {
+        let col = col.into();
+        let mut idx = ColumnIndex::default();
+        for (id, row) in &self.rows {
+            if let Some(v) = row.get(col.as_ref()) {
+                idx.add(v, *id);
+            }
+        }
+        self.indexes.insert(col, idx);
+    }
+
+    /// Drop the index on `col`; returns whether one existed.
+    pub fn drop_index(&mut self, col: &str) -> bool {
+        self.indexes.remove(col).is_some()
+    }
+
+    /// Drop every secondary index (benchmarks use this to compare the
+    /// scan path against the probe path on identical data).
+    pub fn drop_all_indexes(&mut self) {
+        self.indexes.clear();
+    }
+
+    /// Indexed column names, in order.
+    pub fn indexed_columns(&self) -> Vec<&str> {
+        self.indexes.keys().map(|c| c.as_ref()).collect()
+    }
+
+    /// `(index probes, full scans)` recorded since the last reset.
+    pub fn plan_counters(&self) -> (u64, u64) {
+        (self.probes.get(), self.scans.get())
+    }
+
+    pub fn reset_plan_counters(&self) {
+        self.probes.set(0);
+        self.scans.set(0);
+    }
+
+    // ------------------------------------------------------ planning ----
+
+    /// `EXPLAIN`: the access path a WHERE clause would take, without
+    /// executing it or touching the counters.
+    pub fn plan(&self, filter: &Expr) -> QueryPlan {
+        match self.choose(filter) {
+            Some((sarg, est)) => QueryPlan {
+                kind: sarg.kind(),
+                column: Some(sarg.column().to_string()),
+                estimated_rows: est,
+            },
+            None => QueryPlan {
+                kind: PlanKind::FullScan,
+                column: None,
+                estimated_rows: self.rows.len(),
+            },
+        }
+    }
+
+    /// Most selective sargable conjunct that has an index, with its
+    /// estimated candidate count.
+    fn choose(&self, filter: &Expr) -> Option<(Sarg, usize)> {
+        let mut best: Option<(Sarg, usize)> = None;
+        for sarg in sargs(filter) {
+            let Some(idx) = self.indexes.get(sarg.column()) else {
+                continue;
+            };
+            let est = match &sarg {
+                Sarg::Eq(_, v) => idx.eq_count(v),
+                Sarg::In(_, items) => items.iter().map(|v| idx.eq_count(v)).sum(),
+                Sarg::Range(_, lo, hi) => idx.range_count(lo, hi),
+            };
+            if best.as_ref().map(|(_, b)| est < *b).unwrap_or(true) {
+                best = Some((sarg, est));
+            }
+        }
+        best
+    }
+
+    /// Execute the access-path decision for `filter`, recording it in the
+    /// plan counters. One logical statement = one probe or one scan.
+    fn candidates(&self, filter: &Expr) -> Candidates {
+        match self.choose(filter) {
+            None => {
+                self.scans.set(self.scans.get() + 1);
+                Candidates::All
+            }
+            Some((sarg, _)) => {
+                self.probes.set(self.probes.get() + 1);
+                let idx = &self.indexes[sarg.column()];
+                let ids = match &sarg {
+                    Sarg::Eq(_, v) => idx
+                        .eq_ids(v)
+                        .map(|s| s.iter().copied().collect())
+                        .unwrap_or_default(),
+                    Sarg::In(_, items) => {
+                        let mut set = std::collections::BTreeSet::new();
+                        for v in items {
+                            if let Some(s) = idx.eq_ids(v) {
+                                set.extend(s.iter().copied());
+                            }
+                        }
+                        set.into_iter().collect()
+                    }
+                    Sarg::Range(_, lo, hi) => {
+                        if range_empty(lo, hi) {
+                            Vec::new()
+                        } else {
+                            idx.range_ids(lo, hi)
+                        }
+                    }
+                };
+                Candidates::Ids(ids)
+            }
+        }
+    }
+
+    // --------------------------------------------------------- reads ----
+
+    /// Visit every row matching `filter`, in id order, without cloning —
+    /// the zero-copy workhorse under all SELECT-shaped reads.
+    pub fn for_each_where(&self, filter: &Expr, mut f: impl FnMut(u64, &Row)) {
+        match self.candidates(filter) {
+            Candidates::All => {
+                for (id, row) in &self.rows {
+                    if filter.matches(row) {
+                        f(*id, row);
+                    }
+                }
+            }
+            Candidates::Ids(ids) => {
+                for id in ids {
+                    if let Some(row) = self.rows.get(&id) {
+                        if filter.matches(row) {
+                            f(id, row);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Visit every row (a logical full-table SELECT; counts as one scan).
+    pub fn for_each_all(&self, mut f: impl FnMut(u64, &Row)) {
+        self.scans.set(self.scans.get() + 1);
+        for (id, row) in &self.rows {
+            f(*id, row);
+        }
+    }
+
+    /// Rows with `col = value` (SQL equality), in id order. Probes the
+    /// column's index when one exists; a residual equality check keeps
+    /// the result exact either way.
+    pub fn for_each_eq(&self, col: &str, value: &Value, mut f: impl FnMut(u64, &Row)) {
+        let residual =
+            |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
+        if let Some(idx) = self.indexes.get(col) {
+            self.probes.set(self.probes.get() + 1);
+            if let Some(ids) = idx.eq_ids(value) {
+                for id in ids {
+                    if let Some(row) = self.rows.get(id) {
+                        if residual(row) {
+                            f(*id, row);
+                        }
+                    }
+                }
+            }
+        } else {
+            self.scans.set(self.scans.get() + 1);
+            for (id, row) in &self.rows {
+                if residual(row) {
+                    f(*id, row);
+                }
+            }
+        }
+    }
+
+    /// First row with `col = value`, by id order.
+    pub fn find_eq(&self, col: &str, value: &Value) -> Option<(u64, &Row)> {
+        let residual =
+            |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
+        if let Some(idx) = self.indexes.get(col) {
+            self.probes.set(self.probes.get() + 1);
+            for id in idx.eq_ids(value)? {
+                if let Some(row) = self.rows.get(id) {
+                    if residual(row) {
+                        return Some((*id, row));
+                    }
+                }
+            }
+            None
+        } else {
+            self.scans.set(self.scans.get() + 1);
+            self.rows
+                .iter()
+                .find(|(_, row)| residual(row))
+                .map(|(id, row)| (*id, row))
+        }
+    }
+
+    /// `SELECT COUNT(*) WHERE col = value` straight off the index when
+    /// one exists (no row is touched at all).
+    pub fn count_eq(&self, col: &str, value: &Value) -> usize {
+        if let Some(idx) = self.indexes.get(col) {
+            self.probes.set(self.probes.get() + 1);
+            idx.eq_count(value)
+        } else {
+            self.scans.set(self.scans.get() + 1);
+            self.rows
+                .values()
+                .filter(|row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false))
+                .count()
+        }
+    }
+
+    /// Index-only cardinality estimate for `col = value`; `None` when the
+    /// column has no index. Does not count as a statement (planning aid).
+    pub fn eq_estimate(&self, col: &str, value: &Value) -> Option<usize> {
+        self.indexes.get(col).map(|idx| idx.eq_count(value))
+    }
+
+    /// Ids of rows matching `filter`, in id order, without cloning rows.
+    pub fn select_ids(&self, filter: &Expr) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.for_each_where(filter, |id, _| out.push(id));
+        out
+    }
+
+    /// Map over matching rows without cloning them; `None` results are
+    /// dropped (typed-accessor pattern: `|_, r| job_from_row(r).ok()`).
+    pub fn select_map<T>(
+        &self,
+        filter: &Expr,
+        mut f: impl FnMut(u64, &Row) -> Option<T>,
+    ) -> Vec<T> {
+        let mut out = Vec::new();
+        self.for_each_where(filter, |id, row| {
+            if let Some(v) = f(id, row) {
+                out.push(v);
+            }
+        });
+        out
+    }
+
+    /// SELECT ... WHERE expr, in id order (clones every matched row; use
+    /// the `for_each_where` / `select_map` family for zero-copy reads).
     pub fn select(&self, filter: &Expr) -> Vec<(u64, Row)> {
-        self.rows
-            .iter()
-            .filter(|(_, r)| filter.matches(r))
-            .map(|(id, r)| (*id, r.clone()))
-            .collect()
+        let mut out = Vec::new();
+        self.for_each_where(filter, |id, row| out.push((id, row.clone())));
+        out
     }
 
     /// SELECT COUNT(*) WHERE expr.
     pub fn count_where(&self, filter: &Expr) -> usize {
-        self.rows.values().filter(|r| filter.matches(r)).count()
+        let mut n = 0;
+        self.for_each_where(filter, |_, _| n += 1);
+        n
     }
 
     /// UPDATE ... SET col = value WHERE expr; returns affected row count.
+    /// Routed through the planner like any read, and through the shared
+    /// `set_cell` write path so indexes stay coherent (the column name is
+    /// built once, not per matched row).
     pub fn update_where(&mut self, filter: &Expr, col: &str, value: Value) -> usize {
-        let mut n = 0;
-        for row in self.rows.values_mut() {
-            if filter.matches(row) {
-                row.insert(col.to_string(), value.clone());
-                n += 1;
-            }
+        let ids = self.select_ids(filter);
+        let col: ColName = col.to_string().into();
+        for id in &ids {
+            self.set_cell_inner(*id, &col, value.clone());
         }
-        n
+        ids.len()
     }
 
     /// Aggregate helpers for the accounting queries (§1: "the powerfull sql
     /// language can be used for data analysis and extraction").
     pub fn sum_where(&self, filter: &Expr, col: &str) -> f64 {
-        self.rows
-            .values()
-            .filter(|r| filter.matches(r))
-            .filter_map(|r| r.get(col).and_then(Value::as_f64))
-            .sum()
+        let mut sum = 0.0;
+        self.for_each_where(filter, |_, row| {
+            if let Some(x) = row.get(col).and_then(Value::as_f64) {
+                sum += x;
+            }
+        });
+        sum
     }
 
     pub fn group_count(&self, filter: &Expr, col: &str) -> BTreeMap<String, usize> {
         let mut out = BTreeMap::new();
-        for r in self.rows.values().filter(|r| filter.matches(r)) {
-            let key = r
+        self.for_each_where(filter, |_, row| {
+            let key = row
                 .get(col)
                 .map(|v| v.to_string())
                 .unwrap_or_else(|| "NULL".into());
             *out.entry(key).or_insert(0) += 1;
-        }
+        });
         out
     }
 
-    /// Snapshot encoding.
+    // ------------------------------------------------------ snapshot ----
+
+    /// Snapshot encoding (indexes are derived state and not serialized).
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
         let rows: Vec<Json> = self
             .rows
             .iter()
             .map(|(id, row)| {
-                let cells: BTreeMap<String, Json> =
-                    row.iter().map(|(k, v)| (k.clone(), v.to_json())).collect();
+                let cells: BTreeMap<String, Json> = row
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.to_json()))
+                    .collect();
                 Json::obj(vec![
                     ("id", Json::Num(*id as f64)),
                     ("row", Json::Obj(cells)),
@@ -135,7 +479,9 @@ impl Table {
         ])
     }
 
-    /// Decode the [`Table::to_json`] encoding.
+    /// Decode the [`Table::to_json`] encoding. The restored table has no
+    /// indexes; callers recreate them (`Db::restore` re-applies the
+    /// standard schema's indexes).
     pub fn from_json(j: &crate::util::Json) -> crate::Result<Table> {
         use crate::util::Json;
         let name = j
@@ -163,7 +509,7 @@ impl Table {
             };
             let mut row = Row::new();
             for (k, v) in cells {
-                row.insert(k.clone(), Value::from_json(v)?);
+                row.insert(k.clone().into(), Value::from_json(v)?);
             }
             rows.insert(id, row);
         }
@@ -171,6 +517,7 @@ impl Table {
             name,
             next_id,
             rows,
+            ..Table::default()
         })
     }
 }
@@ -180,7 +527,7 @@ impl Table {
 macro_rules! rowvec {
     ($($k:expr => $v:expr),* $(,)?) => {{
         let mut row = $crate::db::Row::new();
-        $( row.insert($k.to_string(), $crate::db::Value::from($v)); )*
+        $( row.insert($k.into(), $crate::db::Value::from($v)); )*
         row
     }};
 }
@@ -241,5 +588,170 @@ mod tests {
         assert_eq!(t.count_where(&Expr::parse("mem = 512").unwrap()), 1);
         let g = t.group_count(&all, "hostname");
         assert_eq!(g.len(), 3);
+    }
+
+    // ------------------------------------------------ query engine ----
+
+    #[test]
+    fn index_probe_answers_equality() {
+        let mut t = fixture();
+        t.create_index("mem");
+        t.reset_plan_counters();
+        let e = Expr::parse("mem = 512").unwrap();
+        let plan = t.plan(&e);
+        assert_eq!(plan.kind, PlanKind::IndexEq);
+        assert_eq!(plan.column.as_deref(), Some("mem"));
+        assert_eq!(plan.estimated_rows, 1);
+        let got = t.select(&e);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 2);
+        let (probes, scans) = t.plan_counters();
+        assert_eq!((probes, scans), (1, 0), "the select must probe, not scan");
+    }
+
+    #[test]
+    fn unindexed_query_scans() {
+        let t = fixture();
+        let e = Expr::parse("mem = 512").unwrap();
+        assert_eq!(t.plan(&e).kind, PlanKind::FullScan);
+        let got = t.select(&e);
+        assert_eq!(got.len(), 1);
+        let (probes, scans) = t.plan_counters();
+        assert_eq!((probes, scans), (0, 1));
+    }
+
+    #[test]
+    fn range_and_in_plans() {
+        let mut t = fixture();
+        t.create_index("mem");
+        t.create_index("hostname");
+        let e = Expr::parse("mem >= 512").unwrap();
+        assert_eq!(t.plan(&e).kind, PlanKind::IndexRange);
+        assert_eq!(t.select_ids(&e), vec![2, 3]);
+        let e = Expr::parse("hostname IN ('n1', 'n3')").unwrap();
+        assert_eq!(t.plan(&e).kind, PlanKind::IndexIn);
+        assert_eq!(t.select_ids(&e), vec![1, 3]);
+        let e = Expr::parse("mem BETWEEN 256 AND 512").unwrap();
+        assert_eq!(t.plan(&e).kind, PlanKind::IndexRange);
+        assert_eq!(t.select_ids(&e), vec![1, 2]);
+    }
+
+    #[test]
+    fn planner_picks_most_selective_index() {
+        let mut t = Table::new("jobs");
+        for i in 0..100i64 {
+            t.insert(rowvec![
+                "state" => if i < 99 { "Terminated" } else { "Waiting" },
+                "queueName" => "default"
+            ]);
+        }
+        t.create_index("state");
+        t.create_index("queueName");
+        let e = Expr::parse("state = 'Waiting' AND queueName = 'default'").unwrap();
+        let plan = t.plan(&e);
+        assert_eq!(plan.column.as_deref(), Some("state"), "1 row beats 100");
+        assert_eq!(plan.estimated_rows, 1);
+        assert_eq!(t.select_ids(&e).len(), 1);
+    }
+
+    #[test]
+    fn residual_filter_keeps_nonsargable_conjuncts_exact() {
+        let mut t = fixture();
+        t.create_index("hostname");
+        // hostname probe narrows to one row; the LIKE conjunct is residual
+        let e = Expr::parse("hostname = 'n2' AND hostname LIKE 'n%'").unwrap();
+        assert_eq!(t.select_ids(&e), vec![2]);
+        let e = Expr::parse("hostname = 'n2' AND mem > 9999").unwrap();
+        assert!(t.select_ids(&e).is_empty());
+    }
+
+    #[test]
+    fn indexes_follow_all_mutation_paths() {
+        let mut t = fixture();
+        t.create_index("mem");
+        // insert
+        let id = t.insert(rowvec!["hostname" => "n4", "mem" => 512i64]);
+        let e512 = Expr::parse("mem = 512").unwrap();
+        assert_eq!(t.select_ids(&e512), vec![2, id]);
+        // set_cell moves the row between keys
+        assert!(t.set_cell(2, "mem", Value::Int(2048)));
+        assert_eq!(t.select_ids(&e512), vec![id]);
+        assert_eq!(t.select_ids(&Expr::parse("mem = 2048").unwrap()), vec![2]);
+        // update_where through the engine
+        t.update_where(&e512, "mem", Value::Int(1));
+        assert!(t.select_ids(&e512).is_empty());
+        assert_eq!(t.select_ids(&Expr::parse("mem = 1").unwrap()), vec![id]);
+        // delete
+        t.delete(id);
+        assert!(t.select_ids(&Expr::parse("mem = 1").unwrap()).is_empty());
+        // every plan above still returns exactly what a scan would
+        t.drop_all_indexes();
+        assert!(t.select_ids(&Expr::parse("mem = 1").unwrap()).is_empty());
+        assert_eq!(t.select_ids(&Expr::parse("mem = 2048").unwrap()), vec![2]);
+    }
+
+    #[test]
+    fn index_and_scan_agree_on_mixed_expressions() {
+        let mut indexed = Table::new("t");
+        for i in 0..40i64 {
+            indexed.insert(rowvec![
+                "state" => if i % 4 == 0 { "Waiting" } else { "Running" },
+                "mem" => (i % 7) * 128,
+                "host" => format!("n{}", i % 3)
+            ]);
+        }
+        let mut scanned = indexed.clone();
+        scanned.drop_all_indexes();
+        indexed.create_index("state");
+        indexed.create_index("mem");
+        for src in [
+            "state = 'Waiting'",
+            "state = 'Waiting' AND mem >= 256",
+            "mem BETWEEN 128 AND 384",
+            "mem > 100 AND mem < 600 AND host LIKE 'n1'",
+            "state IN ('Waiting', 'Running') AND mem = 0",
+            "state = 'Waiting' OR mem = 128",
+            "mem > 500 AND mem < 100",
+            "state = 'Gone'",
+        ] {
+            let e = Expr::parse(src).unwrap();
+            assert_eq!(
+                indexed.select_ids(&e),
+                scanned.select_ids(&e),
+                "expr {src:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn find_and_count_eq() {
+        let mut t = fixture();
+        t.create_index("hostname");
+        let (id, row) = t.find_eq("hostname", &Value::Text("n2".into())).unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(row["mem"], Value::Int(512));
+        assert!(t.find_eq("hostname", &Value::Text("nope".into())).is_none());
+        assert_eq!(t.count_eq("hostname", &Value::Text("n3".into())), 1);
+        // numeric coercion: Int column probed with Real
+        t.create_index("mem");
+        assert_eq!(t.count_eq("mem", &Value::Real(512.0)), 1);
+        assert_eq!(t.eq_estimate("mem", &Value::Int(512)), Some(1));
+        assert_eq!(t.eq_estimate("absent", &Value::Int(0)), None);
+    }
+
+    #[test]
+    fn zero_copy_visitors() {
+        let t = fixture();
+        let e = Expr::parse("mem >= 512").unwrap();
+        let mut hosts = Vec::new();
+        t.for_each_where(&e, |_, row| {
+            hosts.push(row["hostname"].to_string());
+        });
+        assert_eq!(hosts, vec!["'n2'", "'n3'"]);
+        let mems: Vec<i64> = t.select_map(&e, |_, row| row["mem"].as_i64());
+        assert_eq!(mems, vec![512, 1024]);
+        let mut n = 0;
+        t.for_each_all(|_, _| n += 1);
+        assert_eq!(n, 3);
     }
 }

@@ -4,136 +4,210 @@
 //! this module compiles it on the in-process PJRT CPU client at startup.
 //!
 //! Interchange is HLO *text* (see `python/compile/aot.py` for why).
+//!
+//! The PJRT client comes from the `xla` crate, which is not available in
+//! offline builds: everything touching it is behind the `pjrt` cargo
+//! feature. Without the feature, [`HloStep`] is a stub whose loaders
+//! always fail, and [`HloStep::best_available`] falls back to the
+//! bit-identical pure-Rust [`crate::matching::ReferenceStep`].
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use crate::matching::shapes::{F, J, N, P, T};
-use crate::matching::{ScheduleStep, StepInput, StepOutput};
-use crate::Result;
-
-/// The dense engine backed by the AOT artifact.
-pub struct HloStep {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact path, for diagnostics.
-    pub path: PathBuf,
+/// Conventional artifact location relative to the crate root.
+fn artifact_path() -> PathBuf {
+    PathBuf::from(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts/schedule_step.hlo.txt"
+    ))
 }
 
-impl HloStep {
-    /// Conventional artifact location relative to the repo root.
-    pub fn default_artifact() -> PathBuf {
-        PathBuf::from(concat!(
-            env!("CARGO_MANIFEST_DIR"),
-            "/artifacts/schedule_step.hlo.txt"
-        ))
+#[cfg(feature = "pjrt")]
+pub use pjrt::HloStep;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::HloStep;
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::path::{Path, PathBuf};
+
+    use crate::matching::shapes::{F, J, N, P, T};
+    use crate::matching::{ScheduleStep, StepInput, StepOutput};
+    use crate::Result;
+
+    /// The dense engine backed by the AOT artifact.
+    pub struct HloStep {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact path, for diagnostics.
+        pub path: PathBuf,
     }
 
-    /// Load + compile the artifact on the PJRT CPU client.
-    pub fn load(path: &Path) -> Result<HloStep> {
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(wrap)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(wrap)?;
-        Ok(HloStep {
-            exe,
-            path: path.to_path_buf(),
-        })
-    }
-
-    /// Load from the default location; `Err` when artifacts are not built.
-    pub fn load_default() -> Result<HloStep> {
-        Self::load(&Self::default_artifact())
-    }
-
-    /// Best engine available: the HLO artifact when present, otherwise the
-    /// pure-Rust reference (bit-identical semantics).
-    pub fn best_available() -> Box<dyn ScheduleStep> {
-        match Self::load_default() {
-            Ok(h) => Box::new(h),
-            Err(_) => Box::new(crate::matching::ReferenceStep),
+    impl HloStep {
+        /// Conventional artifact location relative to the repo root.
+        pub fn default_artifact() -> PathBuf {
+            super::artifact_path()
         }
-    }
-}
 
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
-
-fn literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(
-        expect as usize == data.len(),
-        "shape {:?} != len {}",
-        dims,
-        data.len()
-    );
-    if dims.len() == 1 {
-        return Ok(xla::Literal::vec1(data));
-    }
-    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
-}
-
-impl ScheduleStep for HloStep {
-    fn run(&mut self, input: &StepInput) -> Result<StepOutput> {
-        let args = [
-            literal(&input.job_lo, &[J as i64, P as i64])?,
-            literal(&input.job_hi, &[J as i64, P as i64])?,
-            literal(&input.node_props, &[N as i64, P as i64])?,
-            literal(&input.node_free, &[N as i64, T as i64])?,
-            literal(&input.req, &[J as i64])?,
-            literal(&input.dur, &[J as i64])?,
-            literal(&input.job_feats, &[J as i64, F as i64])?,
-            literal(&input.weights, &[F as i64])?,
-        ];
-        let result = self.exe.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
-            .to_literal_sync()
+        /// Load + compile the artifact on the PJRT CPU client.
+        pub fn load(path: &Path) -> Result<HloStep> {
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
             .map_err(wrap)?;
-        // Lowered with return_tuple=True: one tuple of 4 arrays.
-        let parts = result.to_tuple().map_err(wrap)?;
-        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
-        let mut it = parts.into_iter();
-        let elig = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
-        let freecount = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
-        let earliest = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
-        let scores = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
-        anyhow::ensure!(elig.len() == J * N, "elig shape");
-        anyhow::ensure!(freecount.len() == J * T, "freecount shape");
-        anyhow::ensure!(earliest.len() == J, "earliest shape");
-        anyhow::ensure!(scores.len() == J, "scores shape");
-        Ok(StepOutput {
-            elig,
-            freecount,
-            earliest,
-            scores,
-        })
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            Ok(HloStep {
+                exe,
+                path: path.to_path_buf(),
+            })
+        }
+
+        /// Load from the default location; `Err` when artifacts are not built.
+        pub fn load_default() -> Result<HloStep> {
+            Self::load(&Self::default_artifact())
+        }
+
+        /// Best engine available: the HLO artifact when present, otherwise the
+        /// pure-Rust reference (bit-identical semantics).
+        pub fn best_available() -> Box<dyn ScheduleStep> {
+            match Self::load_default() {
+                Ok(h) => Box::new(h),
+                Err(_) => Box::new(crate::matching::ReferenceStep),
+            }
+        }
     }
 
-    fn engine_name(&self) -> &'static str {
-        "hlo_pjrt"
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e}")
+    }
+
+    fn literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let expect: i64 = dims.iter().product();
+        anyhow::ensure!(
+            expect as usize == data.len(),
+            "shape {:?} != len {}",
+            dims,
+            data.len()
+        );
+        if dims.len() == 1 {
+            return Ok(xla::Literal::vec1(data));
+        }
+        xla::Literal::vec1(data).reshape(dims).map_err(wrap)
+    }
+
+    impl ScheduleStep for HloStep {
+        fn run(&mut self, input: &StepInput) -> Result<StepOutput> {
+            let args = [
+                literal(&input.job_lo, &[J as i64, P as i64])?,
+                literal(&input.job_hi, &[J as i64, P as i64])?,
+                literal(&input.node_props, &[N as i64, P as i64])?,
+                literal(&input.node_free, &[N as i64, T as i64])?,
+                literal(&input.req, &[J as i64])?,
+                literal(&input.dur, &[J as i64])?,
+                literal(&input.job_feats, &[J as i64, F as i64])?,
+                literal(&input.weights, &[F as i64])?,
+            ];
+            let result = self.exe.execute::<xla::Literal>(&args).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            // Lowered with return_tuple=True: one tuple of 4 arrays.
+            let parts = result.to_tuple().map_err(wrap)?;
+            anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+            let mut it = parts.into_iter();
+            let elig = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
+            let freecount = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
+            let earliest = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
+            let scores = it.next().unwrap().to_vec::<f32>().map_err(wrap)?;
+            anyhow::ensure!(elig.len() == J * N, "elig shape");
+            anyhow::ensure!(freecount.len() == J * T, "freecount shape");
+            anyhow::ensure!(earliest.len() == J, "earliest shape");
+            anyhow::ensure!(scores.len() == J, "scores shape");
+            Ok(StepOutput {
+                elig,
+                freecount,
+                earliest,
+                scores,
+            })
+        }
+
+        fn engine_name(&self) -> &'static str {
+            "hlo_pjrt"
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// Runs only when `make artifacts` has produced the HLO file; the
+        /// dedicated integration test (`runtime_vs_reference`) does the full
+        /// numeric comparison.
+        #[test]
+        fn loads_and_runs_artifact_when_present() {
+            let path = HloStep::default_artifact();
+            if !path.exists() {
+                eprintln!("skipping: {} not built", path.display());
+                return;
+            }
+            let mut step = HloStep::load(&path).unwrap();
+            let out = step.run(&StepInput::zeros()).unwrap();
+            assert_eq!(out.elig.len(), J * N);
+            // zero input: padding jobs have lo=0 <= prop=0 <= hi=0 -> all
+            // eligible; freecount all 0; req=0 -> earliest 0.
+            assert!(out.earliest.iter().all(|&e| e == 0.0));
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::{Path, PathBuf};
 
-    /// Runs only when `make artifacts` has produced the HLO file; the
-    /// dedicated integration test (`runtime_vs_reference`) does the full
-    /// numeric comparison.
-    #[test]
-    fn loads_and_runs_artifact_when_present() {
-        let path = HloStep::default_artifact();
-        if !path.exists() {
-            eprintln!("skipping: {} not built", path.display());
-            return;
+    use crate::matching::{ScheduleStep, StepInput, StepOutput};
+    use crate::Result;
+
+    /// Stub standing in for the PJRT-backed engine when the crate is built
+    /// without the `pjrt` feature. Loading always fails cleanly, so every
+    /// caller takes its documented artifact-absent fallback path.
+    pub struct HloStep {
+        /// Artifact path, for diagnostics.
+        pub path: PathBuf,
+    }
+
+    impl HloStep {
+        /// Conventional artifact location relative to the repo root.
+        pub fn default_artifact() -> PathBuf {
+            super::artifact_path()
         }
-        let mut step = HloStep::load(&path).unwrap();
-        let out = step.run(&StepInput::zeros()).unwrap();
-        assert_eq!(out.elig.len(), J * N);
-        // zero input: padding jobs have lo=0 <= prop=0 <= hi=0 -> all
-        // eligible; freecount all 0; req=0 -> earliest 0.
-        assert!(out.earliest.iter().all(|&e| e == 0.0));
+
+        /// Always fails: the PJRT client is not compiled in.
+        pub fn load(path: &Path) -> Result<HloStep> {
+            anyhow::bail!(
+                "built without the `pjrt` feature: cannot load {}",
+                path.display()
+            )
+        }
+
+        /// Always fails: the PJRT client is not compiled in.
+        pub fn load_default() -> Result<HloStep> {
+            Self::load(&Self::default_artifact())
+        }
+
+        /// Without PJRT the best engine is the pure-Rust reference
+        /// (bit-identical semantics to the AOT artifact).
+        pub fn best_available() -> Box<dyn ScheduleStep> {
+            Box::new(crate::matching::ReferenceStep)
+        }
+    }
+
+    impl ScheduleStep for HloStep {
+        fn run(&mut self, _input: &StepInput) -> Result<StepOutput> {
+            anyhow::bail!("built without the `pjrt` feature")
+        }
+
+        fn engine_name(&self) -> &'static str {
+            "hlo_unavailable"
+        }
     }
 }

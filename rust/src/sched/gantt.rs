@@ -464,6 +464,89 @@ mod tests {
         assert_eq!(g.makespan(), 70);
     }
 
+    /// Build a timeline directly (allocations sorted by start, as the
+    /// `occupy` path maintains) to probe `min_free_over` boundaries.
+    fn timeline(nb_procs: u32, allocs: &[(Time, Time, u32)]) -> NodeTimeline {
+        let mut sorted = allocs.to_vec();
+        sorted.sort_by_key(|a| a.0);
+        NodeTimeline {
+            nb_procs,
+            allocs: sorted
+                .into_iter()
+                .enumerate()
+                .map(|(i, (start, stop, procs))| Allocation {
+                    job: i as JobId,
+                    start,
+                    stop,
+                    procs,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn min_free_allocation_meeting_exactly_at_t() {
+        // Alloc ends exactly at t: stop is exclusive, so [t, t+dur) is free.
+        let tl = timeline(2, &[(0, 10, 2)]);
+        assert_eq!(tl.min_free_over(10, 10), 2);
+        // One instant earlier it still overlaps.
+        assert_eq!(tl.min_free_over(9, 10), 0);
+    }
+
+    #[test]
+    fn min_free_allocation_meeting_exactly_at_t_plus_dur() {
+        // Alloc starts exactly at t+dur: outside the window [t, t+dur).
+        let tl = timeline(2, &[(10, 20, 2)]);
+        assert_eq!(tl.min_free_over(0, 10), 2);
+        // Window extended by one instant now overlaps.
+        assert_eq!(tl.min_free_over(0, 11), 0);
+        // Alloc exactly covering the window.
+        let tl = timeline(2, &[(5, 15, 1)]);
+        assert_eq!(tl.min_free_over(5, 10), 1);
+        assert_eq!(tl.min_free_over(14, 1), 1);
+        assert_eq!(tl.min_free_over(15, 1), 2);
+    }
+
+    #[test]
+    fn min_free_release_before_acquire_at_same_instant() {
+        // A releases at 50 exactly where B acquires: exclusive-stop
+        // semantics mean they never coexist — the min must be 0, not -2.
+        let tl = timeline(2, &[(0, 50, 2), (50, 100, 2)]);
+        assert_eq!(tl.min_free_over(0, 100), 0);
+        assert_eq!(tl.min_free_over(49, 2), 0);
+        // Back-to-back with capacity to spare on one side.
+        let tl = timeline(2, &[(0, 50, 1), (50, 100, 2)]);
+        assert_eq!(tl.min_free_over(0, 100), 0);
+        assert_eq!(tl.min_free_over(0, 50), 1);
+        // The same boundary through the public occupy path: a job slotting
+        // exactly between two full allocations must be accepted.
+        let mut g = Gantt::new(&[(1, 2)]);
+        assert!(g.occupy(1, 1, 2, 0, 50));
+        assert!(g.occupy(2, 1, 2, 50, 100));
+        assert!(g.occupy(3, 1, 2, 100, 150), "handoff instants stay free");
+        assert!(!g.occupy(4, 1, 1, 49, 51), "straddling the handoff fails");
+    }
+
+    #[test]
+    fn min_free_spill_path_beyond_stack_buffer() {
+        // 40 staggered allocations inside the window contribute 80 events,
+        // far past the 32-slot stack buffer: the spill path must agree
+        // with the exact peak (40 concurrent over [40, 150)).
+        let allocs: Vec<(Time, Time, u32)> = (1..=40).map(|i| (i as Time, 150, 1)).collect();
+        let tl = timeline(64, &allocs);
+        assert_eq!(tl.min_free_over(0, 200), 64 - 40);
+        // A narrower window sees only the prefix (19 starts, no stops) and
+        // stays on the stack path — same accounting, different code path.
+        assert_eq!(tl.min_free_over(0, 20), 64 - 19);
+        // Occupy-level check across the spill path.
+        let mut g = Gantt::new(&[(1, 64)]);
+        for (i, (start, stop, procs)) in allocs.iter().enumerate() {
+            assert!(g.occupy(100 + i as JobId, 1, *procs, *start, *stop));
+        }
+        assert!(g.occupy(9000, 1, 24, 0, 200));
+        assert!(!g.occupy(9001, 1, 1, 0, 200), "exactly full at the peak");
+    }
+
     #[test]
     fn free_matrix_is_conservative() {
         let mut g = gantt2();

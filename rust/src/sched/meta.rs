@@ -166,6 +166,13 @@ impl MetaScheduler {
 
         // 4. Schedule each regular queue in decreasing priority.
         let queues = db.queues_by_priority();
+        // Minimal-preemption heuristic input, hoisted out of the queue
+        // loop: the nodes hosting running best-effort work (one indexed
+        // assignments probe per best-effort job, once per round).
+        let be_nodes: std::collections::BTreeSet<NodeId> = running_best_effort
+            .iter()
+            .flat_map(|j| db.assigned_nodes(j.id))
+            .collect();
         let mut best_effort_queues = Vec::new();
         for queue in &queues {
             if !queue.active {
@@ -188,10 +195,6 @@ impl MetaScheduler {
             // Minimal-preemption heuristic: prefer nodes that do not host
             // running best-effort work, so reclamation (§3.3) only happens
             // when genuinely necessary.
-            let be_nodes: std::collections::BTreeSet<NodeId> = running_best_effort
-                .iter()
-                .flat_map(|j| db.assigned_nodes(j.id))
-                .collect();
             if !be_nodes.is_empty() {
                 for pj in &mut policy_jobs {
                     pj.eligible.sort_by_key(|n| (be_nodes.contains(n), *n));
@@ -346,12 +349,13 @@ fn split_impossible(
 ) -> (Vec<PolicyJob>, Vec<(JobId, String)>) {
     let mut feasible = Vec::with_capacity(jobs.len());
     let mut impossible = Vec::new();
+    // id → properties lookup once, instead of an O(jobs²) find per job.
+    let props: std::collections::BTreeMap<JobId, &str> = waiting
+        .iter()
+        .map(|w| (w.id, w.properties.as_str()))
+        .collect();
     for job in jobs {
-        let properties = waiting
-            .iter()
-            .find(|w| w.id == job.id)
-            .map(|w| w.properties.as_str())
-            .unwrap_or("");
+        let properties = props.get(&job.id).copied().unwrap_or("");
         let capable = match crate::db::Expr::parse(properties) {
             Ok(expr) => fleet
                 .iter()

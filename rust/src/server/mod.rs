@@ -248,12 +248,10 @@ impl Server {
         Ok(self.with_db(|db| db.jobs_where(&expr)))
     }
 
-    /// `oarstat --accounting`: aggregate usage report.
+    /// `oarstat --accounting`: aggregate usage report, computed in one
+    /// zero-copy pass over the jobs table.
     pub fn accounting(&self) -> Accounting {
-        self.with_db(|db| {
-            let jobs = db.jobs_where(&Expr::parse("").unwrap());
-            Accounting::compute(&jobs)
-        })
+        self.with_db(|db| db.accounting())
     }
 
     /// `oarnodes`: fleet state.
@@ -292,11 +290,13 @@ impl Server {
     pub fn wait_all_terminal(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         loop {
+            // Index-only counts: this poll loop used to materialize every
+            // live job on each tick.
             let pending = self.with_db(|db| {
                 JobState::ALL
                     .iter()
                     .filter(|s| !s.is_terminal())
-                    .map(|s| db.jobs_in_state(*s).len())
+                    .map(|s| db.count_jobs_in_state(*s))
                     .sum::<usize>()
             });
             if pending == 0 {

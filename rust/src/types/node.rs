@@ -65,9 +65,15 @@ impl Node {
     }
 
     /// The property row the expression engine evaluates against: all node
-    /// properties plus the implicit `hostname` and `state` columns.
-    pub fn property_row(&self) -> BTreeMap<String, Value> {
-        let mut row = self.properties.clone();
+    /// properties plus the implicit `hostname` and `state` columns. (The
+    /// database's matcher avoids this materialization entirely by
+    /// evaluating expressions over the stored rows through a view; this
+    /// remains for callers holding typed `Node`s.)
+    pub fn property_row(&self) -> crate::db::Row {
+        let mut row = crate::db::Row::new();
+        for (k, v) in &self.properties {
+            row.insert(k.clone().into(), v.clone());
+        }
         row.insert("hostname".into(), Value::Text(self.hostname.clone()));
         row.insert("state".into(), Value::Text(self.state.as_str().into()));
         row

@@ -6,16 +6,18 @@
 //! with the planner's access-path counters printed as proof.
 //!
 //! Emits machine-readable results to `BENCH_db.json` at the repo root so
-//! the perf trajectory is diffable across PRs.
+//! the perf trajectory is diffable across PRs, plus `BENCH_wal.json` for
+//! the durability path (WAL append throughput, recovery time).
 
 mod common;
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 
 use common::{bench, BenchResult};
 use oar::db::{Db, Expr, Value};
-use oar::types::{Job, JobSpec, JobState, Node};
+use oar::types::{Job, JobSpec, JobState, Node, Queue};
 use oar::util::Json;
 
 /// Populate: 64 nodes + `jobs` jobs with a realistic state mix — ~1%
@@ -170,7 +172,122 @@ fn main() {
     results.push(bench("restore/1000_jobs", 1, 20, || Db::restore(&path).unwrap()));
     let _ = std::fs::remove_file(path);
 
+    let wal = bench_wal();
+
     write_report(&results, plans, speedups);
+    write_wal_report(&wal);
+}
+
+/// One WAL measurement row.
+struct WalPoint {
+    mutations: u64,
+    records: u64,
+    append_secs: f64,
+    replay_recover_secs: f64,
+    replay_records: u64,
+    snapshot_recover_secs: f64,
+}
+
+/// Durability-path benchmark: WAL append throughput and recovery time
+/// (pure WAL replay vs. snapshot + empty tail) at 10k/100k mutations.
+fn bench_wal() -> Vec<WalPoint> {
+    println!("\n== WAL durability (append throughput, recovery time) ==");
+    let mut out = Vec::new();
+    for mutations in [10_000u64, 100_000] {
+        let dir = std::env::temp_dir().join(format!("oar_bench_wal_{mutations}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (mut db, _) = Db::recover(&dir).unwrap();
+        for q in Queue::standard_set() {
+            db.add_queue(q);
+        }
+        let base = db.wal_records();
+
+        // Mutation mix: insert + the toLaunch/Launching/Running/Terminated
+        // walk — the live jobs path, one WAL record per logical write.
+        let t0 = Instant::now();
+        let mut done = 0u64;
+        while done < mutations {
+            let id = db.insert_job(Job::from_spec(&JobSpec::default(), done as i64));
+            db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+            db.set_job_state(id, JobState::Launching, 2).unwrap();
+            done += 3;
+        }
+        let append_secs = t0.elapsed().as_secs_f64();
+        let records = db.wal_records() - base;
+        drop(db);
+
+        // Recovery 1: no snapshot — the whole history replays.
+        let t0 = Instant::now();
+        let (mut rec, replay_stats) = Db::recover(&dir).unwrap();
+        let replay_recover_secs = t0.elapsed().as_secs_f64();
+        assert!(replay_stats.replayed >= records, "replay lost records");
+
+        // Recovery 2: after a checkpoint — snapshot load + empty tail.
+        rec.checkpoint().unwrap();
+        drop(rec);
+        let t0 = Instant::now();
+        let (_rec, stats) = Db::recover(&dir).unwrap();
+        let snapshot_recover_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(stats.replayed, 0, "tail must be empty after checkpoint");
+        assert!(stats.snapshot_loaded);
+
+        println!(
+            "  {mutations:>7} mutations: append {:>10.0} rec/s, replay-recover {:>7.1} ms, snapshot-recover {:>7.1} ms",
+            records as f64 / append_secs,
+            replay_recover_secs * 1e3,
+            snapshot_recover_secs * 1e3,
+        );
+        out.push(WalPoint {
+            mutations,
+            records,
+            append_secs,
+            replay_recover_secs,
+            replay_records: replay_stats.replayed,
+            snapshot_recover_secs,
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    out
+}
+
+/// `BENCH_wal.json` at the repo root: the durability perf trajectory.
+fn write_wal_report(points: &[WalPoint]) {
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_wal.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("wal".into())),
+        (
+            "results",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("mutations", Json::Num(p.mutations as f64)),
+                            ("wal_records", Json::Num(p.records as f64)),
+                            ("append_secs", Json::Num(p.append_secs)),
+                            (
+                                "append_records_per_sec",
+                                Json::Num(p.records as f64 / p.append_secs.max(1e-12)),
+                            ),
+                            (
+                                "recover_replay_ms",
+                                Json::Num(p.replay_recover_secs * 1e3),
+                            ),
+                            ("replayed_records", Json::Num(p.replay_records as f64)),
+                            (
+                                "recover_snapshot_ms",
+                                Json::Num(p.snapshot_recover_secs * 1e3),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write(&out, doc.dump()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
 }
 
 /// Machine-readable results at the repo root: the perf trajectory file.

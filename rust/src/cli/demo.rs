@@ -8,14 +8,52 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::cluster::VirtualCluster;
-use crate::server::{Server, ServerConfig};
-use crate::types::{JobSpec, JobState};
+use crate::server::{RecoveryReport, Server, ServerConfig};
+use crate::types::{JobSpec, JobState, RecoveryPolicy};
 use crate::Result;
 
-pub fn run_demo(scale: f64) -> Result<i32> {
+fn print_recovery(report: &RecoveryReport) {
+    println!(
+        "• recovery: generation {} ({}), {} WAL records replayed{}",
+        report.generation,
+        if report.snapshot_loaded {
+            "snapshot + WAL tail"
+        } else {
+            "WAL only"
+        },
+        report.replayed_records,
+        if report.torn_tail {
+            ", torn tail truncated"
+        } else {
+            ""
+        }
+    );
+    for (id, state) in &report.reconciled {
+        println!("    job {id}: stranded in {state}, reconciled");
+    }
+}
+
+pub fn run_demo(scale: f64, data_dir: Option<PathBuf>, policy: RecoveryPolicy) -> Result<i32> {
     println!("── oar demo: virtual Xeon cluster (17 bi-Xeon nodes), scale={scale} ──\n");
     let cluster = Arc::new(VirtualCluster::xeon());
-    let server = Server::new(cluster.clone(), ServerConfig::fast(scale));
+    let server = match &data_dir {
+        Some(dir) => {
+            println!("• durable mode: WAL + snapshots under {}\n", dir.display());
+            let server = Server::open(
+                cluster.clone(),
+                ServerConfig {
+                    data_dir: Some(dir.clone()),
+                    recovery: policy,
+                    ..ServerConfig::fast(scale)
+                },
+            )?;
+            if let Some(report) = server.recovery_report() {
+                print_recovery(report);
+            }
+            server
+        }
+        None => Server::new(cluster.clone(), ServerConfig::fast(scale)),
+    };
 
     println!("• oarsub: 6 batch jobs (mixed sizes), one with a property constraint");
     let mut ids = Vec::new();
@@ -119,6 +157,55 @@ pub fn run_demo(scale: f64) -> Result<i32> {
         "  access paths: {} index probes, {} full scans",
         stats.index_probes, stats.full_scans
     );
+    if let Some(dir) = data_dir {
+        let _ = server.shutdown(); // clean shutdown checkpoints the WAL
+        println!(
+            "• durable state checkpointed under {} (rerun with --data-dir to recover)",
+            dir.display()
+        );
+    }
+    Ok(0)
+}
+
+/// `oar recover`: bring a durable server back from its data directory,
+/// print the recovery + restart-reconciliation report, and drain whatever
+/// workload survived the crash.
+pub fn run_recover(dir: PathBuf, policy: RecoveryPolicy, scale: f64) -> Result<i32> {
+    println!(
+        "── oar recover: data dir {}, policy {} ──\n",
+        dir.display(),
+        policy.as_str()
+    );
+    let cluster = Arc::new(VirtualCluster::xeon());
+    let server = Server::open(
+        cluster,
+        ServerConfig {
+            data_dir: Some(dir),
+            recovery: policy,
+            ..ServerConfig::fast(scale)
+        },
+    )?;
+    let report = server.recovery_report().cloned();
+    if let Some(report) = &report {
+        print_recovery(report);
+    }
+    println!("• draining the recovered workload...");
+    let drained = server.wait_all_terminal(Duration::from_secs(120));
+    println!("    drained: {drained}\n");
+    println!("• oarstat:");
+    for job in server.stat(None)? {
+        println!(
+            "    job {:>3}  {:<8} {:<10} msg={:?}",
+            job.id,
+            job.user,
+            job.state.to_string(),
+            job.message
+        );
+    }
+    let recovery_events =
+        server.with_db(|db| db.events_with_kind_prefix("RECOVERY_").len());
+    println!("\n• {recovery_events} RECOVERY_* events logged");
+    let _ = server.shutdown();
     Ok(0)
 }
 

@@ -84,6 +84,11 @@ Evaluation commands (one per paper artifact):
 System commands:
   demo        Run a live server on the virtual Xeon cluster: submissions,
               reservations, best-effort, failure injection [--scale 0.01]
+              [--data-dir DIR] [--policy fail|requeue] (durable: WAL +
+              snapshots under DIR; re-run to exercise recovery)
+  recover     Recover a durable server from --data-dir DIR, print the
+              recovery/reconciliation report, drain the remaining workload
+              [--policy fail|requeue] [--scale 0.01]
   snapshot    Run a short demo and write a database snapshot [--out PATH]
 
 All evaluation outputs are printed as tables/ASCII figures; --csv writes
@@ -103,7 +108,19 @@ pub fn run(args: Vec<String>) -> Result<i32> {
         "parallel" => cmd_parallel(&flags),
         "complexity" => cmd_complexity(),
         "features" => cmd_features(),
-        "demo" => crate::cli::demo::run_demo(flags.get_f64("scale", 0.01)),
+        "demo" => crate::cli::demo::run_demo(
+            flags.get_f64("scale", 0.01),
+            flags.values.get("data-dir").map(PathBuf::from),
+            parse_policy(&flags)?,
+        ),
+        "recover" => {
+            let dir = flags
+                .values
+                .get("data-dir")
+                .map(PathBuf::from)
+                .ok_or_else(|| anyhow::anyhow!("recover requires --data-dir DIR"))?;
+            crate::cli::demo::run_recover(dir, parse_policy(&flags)?, flags.get_f64("scale", 0.01))
+        }
         "snapshot" => crate::cli::demo::run_snapshot(
             flags
                 .values
@@ -119,6 +136,14 @@ pub fn run(args: Vec<String>) -> Result<i32> {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
             Ok(2)
         }
+    }
+}
+
+fn parse_policy(flags: &Flags) -> Result<crate::types::RecoveryPolicy> {
+    match flags.values.get("policy") {
+        None => Ok(crate::types::RecoveryPolicy::default()),
+        Some(s) => crate::types::RecoveryPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--policy must be 'fail' or 'requeue', got {s:?}")),
     }
 }
 

@@ -106,7 +106,7 @@ pub fn range_empty(lo: &Bound<IndexKey>, hi: &Bound<IndexKey>) -> bool {
 }
 
 /// One column's secondary index: value key → sorted set of row ids.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ColumnIndex {
     map: BTreeMap<IndexKey, BTreeSet<u64>>,
     entries: usize,

@@ -54,6 +54,15 @@ impl EventLog {
         self.records.iter().filter(|r| r.job == Some(job)).collect()
     }
 
+    /// Events whose kind starts with `prefix` (e.g. `RECOVERY_` — the
+    /// restart-reconciliation audit trail), in time order.
+    pub fn of_kind_prefix(&self, prefix: &str) -> Vec<&EventRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.kind.starts_with(prefix))
+            .collect()
+    }
+
     /// Snapshot encoding.
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;

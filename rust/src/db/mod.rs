@@ -13,6 +13,11 @@
 //! submission module, the central module, the scheduler and the launcher
 //! goes through these tables. A query counter reproduces the paper's
 //! "350 SQL queries for the processing of 10 jobs" measurement.
+//!
+//! Durability ("the database engine can handle the data safety", §2) is
+//! provided by the write-ahead log: every logical mutation is logged before it is
+//! applied, snapshots compact the log in atomic generations, and
+//! [`Db::recover`] replays the tail deterministically after a crash.
 
 mod accounting;
 mod expr;
@@ -22,6 +27,7 @@ mod plan;
 mod store;
 mod table;
 mod value;
+mod wal;
 
 pub use accounting::{Accounting, AccountingBuilder, UserUsage};
 pub use expr::{CmpOp, Columns, Expr, ParseError};
@@ -31,3 +37,4 @@ pub use plan::{PlanKind, QueryPlan};
 pub use store::{Db, DbHandle, DbError, QueryStats};
 pub use table::{ColName, Row, Table};
 pub use value::Value;
+pub use wal::{AppendError, Mutation, RecoverStats, TableId, Wal};

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::types::{
     Job, JobId, JobKind, JobState, Node, NodeId, NodeState, Queue, QueuePolicyKind,
-    ReservationField, Time,
+    RecoveryPolicy, ReservationField, Time,
 };
 
 use super::accounting::{Accounting, AccountingBuilder};
@@ -37,6 +37,7 @@ use super::log::{EventLog, EventRecord};
 use super::plan::QueryPlan;
 use super::table::{Row, Table};
 use super::value::Value;
+use super::wal::{AppendError, Mutation, RecoverStats, TableId, Wal};
 
 /// Errors surfaced by database operations.
 #[derive(Debug, Clone, PartialEq)]
@@ -102,6 +103,12 @@ pub struct Db {
     admission_rules: Table,
     events: EventLog,
     stats: QueryStats,
+    /// Durability: when present, every logical mutation is WAL-logged
+    /// before it is applied (see [`super::wal`]). `None` = volatile.
+    wal: Option<Wal>,
+    /// Test hook: abort the next snapshot write after this many bytes
+    /// (atomicity proof for the crash-injection harness).
+    snapshot_fail_after: Option<usize>,
 }
 
 /// Shared handle; modules hold this and nothing else.
@@ -145,6 +152,8 @@ impl Db {
             admission_rules: Table::new("admission_rules"),
             events: EventLog::new(),
             stats: QueryStats::default(),
+            wal: None,
+            snapshot_fail_after: None,
         };
         db.create_standard_indexes();
         db
@@ -204,6 +213,288 @@ impl Db {
         }
     }
 
+    fn table_mut(&mut self, t: TableId) -> &mut Table {
+        match t {
+            TableId::Jobs => &mut self.jobs,
+            TableId::Nodes => &mut self.nodes,
+            TableId::Assignments => &mut self.assignments,
+            TableId::Queues => &mut self.queues,
+            TableId::AdmissionRules => &mut self.admission_rules,
+        }
+    }
+
+    // ---------------------------------------------------- durability ----
+
+    /// The single durable write path: WAL-append first, apply second.
+    /// When the WAL is poisoned (a simulated or injected crash), the
+    /// mutation is neither logged nor applied — the process is dead, and
+    /// the in-memory state stays exactly the durable prefix. Volatile
+    /// databases (no WAL) apply directly.
+    fn mutate(&mut self, m: Mutation) -> u64 {
+        if let Some(wal) = &mut self.wal {
+            match wal.append(&m) {
+                Ok(()) => {}
+                // Injected crash (or a log it already poisoned): the
+                // process is conceptually dead — silently drop, like
+                // `kill -9` would.
+                Err(AppendError::Injected) => return 0,
+                // A genuine I/O failure must not be swallowed: a server
+                // that keeps acknowledging unlogged, unapplied writes is
+                // a data black hole. Die loudly instead, which is also
+                // what preserves the write-ahead invariant.
+                Err(AppendError::Io(e)) => {
+                    panic!("WAL append failed, refusing to acknowledge further mutations: {e}")
+                }
+            }
+        }
+        let result = self.apply(&m);
+        if self.wal.as_ref().map(Wal::due_checkpoint).unwrap_or(false) {
+            // Auto-compaction is best-effort: a failed snapshot leaves the
+            // WAL growing, never loses state.
+            let _ = self.checkpoint();
+        }
+        result
+    }
+
+    /// Apply one logical mutation to the in-memory state. Deterministic:
+    /// recovery replays the WAL through this exact function. Returns the
+    /// assigned id for inserts, the affected-row count otherwise.
+    fn apply(&mut self, m: &Mutation) -> u64 {
+        match m {
+            Mutation::Insert { table, row } => self.table_mut(*table).insert(row.clone()),
+            Mutation::Delete { table, id } => self.table_mut(*table).delete(*id) as u64,
+            Mutation::SetCell {
+                table,
+                id,
+                col,
+                value,
+            } => self.table_mut(*table).set_cell(*id, col.clone(), value.clone()) as u64,
+            Mutation::UpdateWhere {
+                table,
+                filter,
+                col,
+                value,
+            } => match Expr::parse(filter) {
+                Ok(e) => self.table_mut(*table).update_where(&e, col, value.clone()) as u64,
+                Err(_) => 0,
+            },
+            Mutation::LogEvent {
+                time,
+                kind,
+                job,
+                detail,
+            } => {
+                self.events.append(EventRecord {
+                    time: *time,
+                    kind: kind.clone(),
+                    job: *job,
+                    detail: detail.clone(),
+                });
+                1
+            }
+        }
+    }
+
+    /// Recover a durable database from `dir`: load the newest snapshot
+    /// generation (fresh base if none), deterministically replay the
+    /// matching WAL tail, truncate any torn record, rebuild the standard
+    /// indexes and reopen the log for appending. An empty or missing
+    /// directory yields a fresh durable database.
+    pub fn recover(dir: &Path) -> crate::Result<(Db, RecoverStats)> {
+        std::fs::create_dir_all(dir)?;
+        let generation = Wal::latest_generation(dir)?;
+        let snap = Wal::snapshot_path(dir, generation);
+        let (mut db, snapshot_loaded) = if snap.exists() {
+            let text = std::fs::read_to_string(&snap)?;
+            (Db::from_snapshot_doc(&crate::util::Json::parse(&text)?)?, true)
+        } else if generation == 0 {
+            (Db::new(), false)
+        } else {
+            anyhow::bail!(
+                "generation {generation} has a WAL but no snapshot {}",
+                snap.display()
+            );
+        };
+        let (records, torn_tail) = Wal::read_records(dir, generation)?;
+        for m in &records {
+            db.apply(m);
+        }
+        let replayed = records.len() as u64;
+        db.wal = Some(Wal::open(dir, generation, replayed)?);
+        Ok((
+            db,
+            RecoverStats {
+                generation,
+                snapshot_loaded,
+                replayed,
+                torn_tail,
+            },
+        ))
+    }
+
+    /// Checkpoint (compaction): atomically write the next snapshot
+    /// generation (temp file + rename — a crash mid-write can never
+    /// corrupt the previous generation), then rotate to an empty WAL and
+    /// drop the old generation's files. On any error the WAL keeps
+    /// growing and nothing is lost.
+    pub fn checkpoint(&mut self) -> crate::Result<()> {
+        let Some(wal) = &self.wal else {
+            anyhow::bail!("checkpoint on a volatile database");
+        };
+        anyhow::ensure!(!wal.crashed(), "wal is poisoned");
+        let next = wal.generation() + 1;
+        let snap = Wal::snapshot_path(wal.dir(), next);
+        self.write_snapshot_atomic(&snap)?;
+        if let Err(e) = self.wal.as_mut().unwrap().rotate(next) {
+            // Roll the generation bump back: leaving snapshot-(next) in
+            // place while appends continue on the old log would make the
+            // next recovery load that snapshot, treat the missing new log
+            // as an empty tail, and sweep the still-growing old one —
+            // silently losing every mutation acknowledged since.
+            if std::fs::remove_file(&snap).is_err() {
+                panic!(
+                    "checkpoint rotation failed and snapshot {} could not be rolled back: {e}",
+                    snap.display()
+                );
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Whether this database WAL-logs its mutations.
+    pub fn is_durable(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    /// Whether the WAL is poisoned (the simulated process is dead).
+    pub fn wal_crashed(&self) -> bool {
+        self.wal.as_ref().map(Wal::crashed).unwrap_or(false)
+    }
+
+    /// Simulate `kill -9` right now: every mutation from this instant is
+    /// neither logged nor applied.
+    pub fn crash_wal(&mut self) {
+        if let Some(wal) = &mut self.wal {
+            wal.crash();
+        }
+    }
+
+    /// Records appended since the WAL was opened (crash-boundary unit).
+    pub fn wal_records(&self) -> u64 {
+        self.wal.as_ref().map(Wal::total_records).unwrap_or(0)
+    }
+
+    /// Arm the WAL fail point: `after` more appends succeed, then the
+    /// next record is torn at `partial` bytes and the log is poisoned.
+    pub fn wal_inject_failure(&mut self, after: u64, partial: usize) {
+        if let Some(wal) = &mut self.wal {
+            wal.inject_failure(after, partial);
+        }
+    }
+
+    /// Abort the next snapshot write after `fail_after` bytes (`None`
+    /// disarms) — the mid-snapshot crash of the recovery test harness.
+    pub fn inject_snapshot_failure(&mut self, fail_after: Option<usize>) {
+        self.snapshot_fail_after = fail_after;
+    }
+
+    /// WAL records between automatic checkpoints (0 = manual only).
+    pub fn set_checkpoint_every(&mut self, every: u64) {
+        if let Some(wal) = &mut self.wal {
+            wal.set_checkpoint_every(every);
+        }
+    }
+
+    /// Recovery invariant: every secondary index agrees with a fresh
+    /// rebuild from the rows it indexes.
+    pub fn verify_indexes(&self) -> bool {
+        [
+            &self.jobs,
+            &self.nodes,
+            &self.assignments,
+            &self.queues,
+            &self.admission_rules,
+        ]
+        .iter()
+        .all(|t| t.indexes_consistent())
+    }
+
+    // ------------------------------------------------- reconciliation ----
+
+    /// Restart reconciliation (run once after [`Db::recover`], before
+    /// scheduling resumes): jobs stranded in states whose driving threads
+    /// died with the process are either failed through the abnormal path
+    /// or stripped and requeued, per `policy`; every touched job gets a
+    /// logged `RECOVERY_*` event. Returns `(job, stranded state)` pairs.
+    pub fn reconcile_in_flight(
+        &mut self,
+        policy: RecoveryPolicy,
+        now: Time,
+    ) -> Vec<(JobId, JobState)> {
+        let mut out = Vec::new();
+        // Half-finished abnormal paths always complete to Error.
+        for job in self.jobs_in_state(JobState::ToError) {
+            let _ = self.set_job_state(job.id, JobState::Error, now);
+            self.log_event(now, "RECOVERY_FAIL", Some(job.id), "toError at crash");
+            out.push((job.id, JobState::ToError));
+        }
+        // A lost reservation acknowledgment goes back to Waiting (the
+        // scheduler re-confirms it on the next round).
+        for job in self.jobs_in_state(JobState::ToAckReservation) {
+            let _ = self.set_job_state(job.id, JobState::Waiting, now);
+            self.log_event(now, "RECOVERY_REQUEUE", Some(job.id), "ack lost at crash");
+            out.push((job.id, JobState::ToAckReservation));
+        }
+        // In-flight jobs: their launcher/execution threads are gone.
+        for state in [JobState::ToLaunch, JobState::Launching, JobState::Running] {
+            for job in self.jobs_in_state(state) {
+                match policy {
+                    RecoveryPolicy::FailInFlight => {
+                        let _ = self.fail_job(job.id, "in-flight at crash", now);
+                        self.log_event(now, "RECOVERY_FAIL", Some(job.id), state.as_str());
+                    }
+                    RecoveryPolicy::Requeue => {
+                        self.remove_assignments(job.id);
+                        // Administrative override of fig. 1 (Running →
+                        // Waiting is deliberately not a user transition):
+                        // primitive cell writes, audited by the event.
+                        self.stats.updates += 1;
+                        for (col, value) in [
+                            ("state", Value::Text("Waiting".into())),
+                            ("startTime", Value::Null),
+                            ("bpid", Value::Null),
+                        ] {
+                            self.mutate(Mutation::SetCell {
+                                table: TableId::Jobs,
+                                id: job.id,
+                                col: col.into(),
+                                value,
+                            });
+                        }
+                        if job.reservation == ReservationField::Scheduled {
+                            // Its slot assignment was just stripped: send
+                            // the reservation back through negotiation,
+                            // or a Scheduled-but-assignment-less job
+                            // would "start" on zero nodes.
+                            self.mutate(Mutation::SetCell {
+                                table: TableId::Jobs,
+                                id: job.id,
+                                col: "reservation".into(),
+                                value: Value::Text(
+                                    ReservationField::ToSchedule.as_str().into(),
+                                ),
+                            });
+                        }
+                        self.log_event(now, "RECOVERY_REQUEUE", Some(job.id), state.as_str());
+                    }
+                }
+                out.push((job.id, state));
+            }
+        }
+        out
+    }
+
     // ------------------------------------------------------- queries ----
 
     /// Statement counters plus access-path telemetry aggregated over all
@@ -243,7 +534,10 @@ impl Db {
     pub fn insert_job(&mut self, mut job: Job) -> JobId {
         self.stats.inserts += 1;
         let row = job_to_row(&job);
-        let id = self.jobs.insert(row);
+        let id = self.mutate(Mutation::Insert {
+            table: TableId::Jobs,
+            row,
+        });
         job.id = id;
         id
     }
@@ -341,18 +635,27 @@ impl Db {
             return Err(DbError::IllegalTransition { job: id, from, to });
         }
         self.stats.updates += 1;
-        self.jobs
-            .set_cell(id, "state", Value::Text(to.as_str().into()));
+        self.set_job_cell(id, "state", Value::Text(to.as_str().into()));
         match to {
             JobState::Running => {
-                self.jobs.set_cell(id, "startTime", Value::Int(now));
+                self.set_job_cell(id, "startTime", Value::Int(now));
             }
             JobState::Terminated | JobState::Error => {
-                self.jobs.set_cell(id, "stopTime", Value::Int(now));
+                self.set_job_cell(id, "stopTime", Value::Int(now));
             }
             _ => {}
         }
         Ok(())
+    }
+
+    /// One logged cell write into the jobs table.
+    fn set_job_cell(&mut self, id: JobId, col: &str, value: Value) -> bool {
+        self.mutate(Mutation::SetCell {
+            table: TableId::Jobs,
+            id,
+            col: col.into(),
+            value,
+        }) != 0
     }
 
     /// Force the abnormal path from any live state: `* → toError → Error`.
@@ -370,18 +673,20 @@ impl Db {
 
     pub fn set_job_message(&mut self, id: JobId, message: &str) -> Result<(), DbError> {
         self.stats.updates += 1;
-        if !self.jobs.set_cell(id, "message", Value::Text(message.into())) {
+        if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
+        self.set_job_cell(id, "message", Value::Text(message.into()));
         Ok(())
     }
 
     pub fn set_job_bpid(&mut self, id: JobId, bpid: Option<u32>) -> Result<(), DbError> {
         self.stats.updates += 1;
-        let value = bpid.map(|p| Value::Int(p as i64)).unwrap_or(Value::Null);
-        if !self.jobs.set_cell(id, "bpid", value) {
+        if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
+        let value = bpid.map(|p| Value::Int(p as i64)).unwrap_or(Value::Null);
+        self.set_job_cell(id, "bpid", value);
         Ok(())
     }
 
@@ -391,13 +696,29 @@ impl Db {
         f: ReservationField,
     ) -> Result<(), DbError> {
         self.stats.updates += 1;
-        if !self
-            .jobs
-            .set_cell(id, "reservation", Value::Text(f.as_str().into()))
-        {
+        if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
+        self.set_job_cell(id, "reservation", Value::Text(f.as_str().into()));
         Ok(())
+    }
+
+    /// `UPDATE jobs SET col = value WHERE filter` — the logged bulk
+    /// update path; the filter source replays deterministically.
+    pub fn update_jobs_where(
+        &mut self,
+        filter: &str,
+        col: &str,
+        value: Value,
+    ) -> Result<usize, DbError> {
+        Expr::parse(filter).map_err(|e| DbError::Parse(e.to_string()))?;
+        self.stats.updates += 1;
+        Ok(self.mutate(Mutation::UpdateWhere {
+            table: TableId::Jobs,
+            filter: filter.into(),
+            col: col.into(),
+            value,
+        }) as usize)
     }
 
     // --------------------------------------------------------- nodes ----
@@ -405,7 +726,10 @@ impl Db {
     pub fn add_node(&mut self, node: Node) -> NodeId {
         self.stats.inserts += 1;
         let row = node_to_row(&node);
-        self.nodes.insert(row);
+        self.mutate(Mutation::Insert {
+            table: TableId::Nodes,
+            row,
+        });
         node.id
     }
 
@@ -449,8 +773,12 @@ impl Db {
             .find_eq("nodeId", &Value::Int(id as i64))
             .map(|(rid, _)| rid)
             .ok_or(DbError::NodeNotFound(id))?;
-        self.nodes
-            .set_cell(rid, "state", Value::Text(state.as_str().into()));
+        self.mutate(Mutation::SetCell {
+            table: TableId::Nodes,
+            id: rid,
+            col: "state".into(),
+            value: Value::Text(state.as_str().into()),
+        });
         Ok(())
     }
 
@@ -486,8 +814,27 @@ impl Db {
             row.insert("jobId".into(), Value::Int(job as i64));
             row.insert("nodeId".into(), Value::Int(*n as i64));
             row.insert("procs".into(), Value::Int(procs_per_node as i64));
-            self.assignments.insert(row);
+            self.mutate(Mutation::Insert {
+                table: TableId::Assignments,
+                row,
+            });
         }
+    }
+
+    /// DELETE a job's assignment rows (requeue/cleanup path); returns the
+    /// number removed.
+    pub fn remove_assignments(&mut self, job: JobId) -> usize {
+        self.stats.deletes += 1;
+        let mut rids = Vec::new();
+        self.assignments
+            .for_each_eq("jobId", &Value::Int(job as i64), |rid, _| rids.push(rid));
+        for rid in &rids {
+            self.mutate(Mutation::Delete {
+                table: TableId::Assignments,
+                id: *rid,
+            });
+        }
+        rids.len()
     }
 
     pub fn assigned_nodes(&mut self, job: JobId) -> Vec<NodeId> {
@@ -540,7 +887,10 @@ impl Db {
             Value::Int(q.max_procs_per_job as i64),
         );
         row.insert("active".into(), Value::Bool(q.active));
-        self.queues.insert(row);
+        self.mutate(Mutation::Insert {
+            table: TableId::Queues,
+            row,
+        });
     }
 
     pub fn queue(&mut self, name: &str) -> Result<Queue, DbError> {
@@ -574,7 +924,12 @@ impl Db {
             .find_eq("name", &Value::Text(name.to_string()))
             .map(|(rid, _)| rid)
             .ok_or_else(|| DbError::QueueNotFound(name.into()))?;
-        self.queues.set_cell(rid, "active", Value::Bool(active));
+        self.mutate(Mutation::SetCell {
+            table: TableId::Queues,
+            id: rid,
+            col: "active".into(),
+            value: Value::Bool(active),
+        });
         Ok(())
     }
 
@@ -586,7 +941,10 @@ impl Db {
         let mut row = Row::new();
         row.insert("priority".into(), Value::Int(priority as i64));
         row.insert("source".into(), Value::Text(source.into()));
-        self.admission_rules.insert(row);
+        self.mutate(Mutation::Insert {
+            table: TableId::AdmissionRules,
+            row,
+        });
     }
 
     /// Rules in priority order (ascending: lower runs first).
@@ -609,7 +967,7 @@ impl Db {
 
     pub fn log_event(&mut self, now: Time, kind: &str, job: Option<JobId>, detail: &str) {
         self.stats.inserts += 1;
-        self.events.append(EventRecord {
+        self.mutate(Mutation::LogEvent {
             time: now,
             kind: kind.into(),
             job,
@@ -620,6 +978,13 @@ impl Db {
     pub fn events(&mut self) -> &[EventRecord] {
         self.stats.selects += 1;
         self.events.all()
+    }
+
+    /// Events whose kind starts with `prefix` (e.g. `RECOVERY_` — the
+    /// restart-reconciliation audit trail), in time order.
+    pub fn events_with_kind_prefix(&mut self, prefix: &str) -> Vec<&EventRecord> {
+        self.stats.selects += 1;
+        self.events.of_kind_prefix(prefix)
     }
 
     // ---------------------------------------------------- accounting ----
@@ -654,29 +1019,60 @@ impl Db {
 
     // --------------------------------------------------- persistence ----
 
-    /// Snapshot the entire database to JSON — the paper's §2 argument that
-    /// "the database engine can handle the data safety" as long as modules
-    /// make atomic coherent modifications.
-    pub fn snapshot(&self, path: &Path) -> crate::Result<()> {
+    /// The snapshot document (also the canonical state comparison form
+    /// used by the crash tests: two databases are equal iff their dumps
+    /// are byte-identical — BTreeMaps make the encoding deterministic).
+    fn snapshot_doc(&self) -> crate::util::Json {
         use crate::util::Json;
-        let doc = Json::obj(vec![
+        Json::obj(vec![
             ("jobs", self.jobs.to_json()),
             ("nodes", self.nodes.to_json()),
             ("assignments", self.assignments.to_json()),
             ("queues", self.queues.to_json()),
             ("admission_rules", self.admission_rules.to_json()),
             ("events", self.events.to_json()),
-        ]);
-        std::fs::write(path, doc.dump())?;
+        ])
+    }
+
+    /// Serialized state (volatile counters and the WAL excluded).
+    pub fn dump(&self) -> String {
+        self.snapshot_doc().dump()
+    }
+
+    /// Snapshot the entire database to JSON — the paper's §2 argument that
+    /// "the database engine can handle the data safety" as long as modules
+    /// make atomic coherent modifications. Atomic: the document is written
+    /// to a temp file and renamed over `path`, so a crash mid-write can
+    /// never corrupt an existing snapshot.
+    pub fn snapshot(&self, path: &Path) -> crate::Result<()> {
+        self.write_snapshot_atomic(path)
+    }
+
+    fn write_snapshot_atomic(&self, path: &Path) -> crate::Result<()> {
+        use std::io::Write as _;
+        let doc = self.dump();
+        let tmp = path.with_extension("tmp");
+        if let Some(n) = self.snapshot_fail_after {
+            // Injected mid-write crash: leave a partial temp file behind
+            // and never rename — the previous generation stays intact.
+            let cut = n.min(doc.len().saturating_sub(1));
+            std::fs::write(&tmp, &doc.as_bytes()[..cut])?;
+            anyhow::bail!("injected snapshot failure after {cut} bytes");
+        }
+        let mut file = std::fs::File::create(&tmp)?;
+        file.write_all(doc.as_bytes())?;
+        // The rename must never become visible before its contents are on
+        // disk, or a power cut could leave a complete-looking but empty
+        // snapshot as the newest generation.
+        file.sync_all()?;
+        drop(file);
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Restore a snapshot; the standard schema's secondary indexes are
-    /// rebuilt (they are derived state and never serialized).
-    pub fn restore(path: &Path) -> crate::Result<Db> {
-        use crate::util::Json;
-        let text = std::fs::read_to_string(path)?;
-        let doc = Json::parse(&text)?;
+    /// Decode a snapshot document; the standard schema's secondary
+    /// indexes are rebuilt (they are derived state and never serialized).
+    fn from_snapshot_doc(doc: &crate::util::Json) -> crate::Result<Db> {
         let table = |key: &str| -> crate::Result<Table> {
             Table::from_json(
                 doc.get(key)
@@ -694,9 +1090,18 @@ impl Db {
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
             )?,
             stats: QueryStats::default(),
+            wal: None,
+            snapshot_fail_after: None,
         };
         db.create_standard_indexes();
         Ok(db)
+    }
+
+    /// Restore a snapshot file (volatile — no WAL attached; durable
+    /// recovery goes through [`Db::recover`]).
+    pub fn restore(path: &Path) -> crate::Result<Db> {
+        let text = std::fs::read_to_string(path)?;
+        Db::from_snapshot_doc(&crate::util::Json::parse(&text)?)
     }
 }
 
@@ -1102,6 +1507,27 @@ mod tests {
         db.set_queue_active("o'brien", false).unwrap();
         assert!(!db.queue("o'brien").unwrap().active);
         assert!(db.set_queue_active("missing", true).is_err());
+    }
+
+    #[test]
+    fn bulk_update_and_assignment_removal() {
+        let mut db = Db::with_standard_queues();
+        let a = db.insert_job(make_job(&JobSpec::default(), 0));
+        let b = db.insert_job(make_job(&JobSpec::default(), 1));
+        db.set_job_state(a, JobState::ToLaunch, 1).unwrap();
+        let n = db
+            .update_jobs_where("state = 'Waiting'", "message", Value::Text("queued".into()))
+            .unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(db.job(b).unwrap().message, "queued");
+        assert_eq!(db.job(a).unwrap().message, "");
+        assert!(db.update_jobs_where("state = '", "x", Value::Null).is_err());
+
+        db.assign_nodes(a, &[1, 2], 1);
+        assert_eq!(db.assigned_nodes(a).len(), 2);
+        assert_eq!(db.remove_assignments(a), 2);
+        assert!(db.assigned_nodes(a).is_empty());
+        assert!(db.verify_indexes());
     }
 
     #[test]

@@ -187,6 +187,20 @@ impl Table {
         self.indexes.keys().map(|c| c.as_ref()).collect()
     }
 
+    /// Every secondary index agrees with a fresh rebuild from the rows —
+    /// the index-coherence invariant the crash-recovery tests assert.
+    pub fn indexes_consistent(&self) -> bool {
+        self.indexes.iter().all(|(col, idx)| {
+            let mut fresh = ColumnIndex::default();
+            for (id, row) in &self.rows {
+                if let Some(v) = row.get(col.as_ref()) {
+                    fresh.add(v, *id);
+                }
+            }
+            *idx == fresh
+        })
+    }
+
     /// `(index probes, full scans)` recorded since the last reset.
     pub fn plan_counters(&self) -> (u64, u64) {
         (self.probes.get(), self.scans.get())

@@ -1,0 +1,672 @@
+//! Write-ahead log: the durability subsystem under [`super::store::Db`].
+//!
+//! The paper's robustness argument (§1, §2) rests on the database being
+//! the single durable source of truth — "the database engine can handle
+//! the data safety" — so that any module can crash and be re-run. A purely
+//! in-memory store with occasional snapshots does not actually provide
+//! that: a crash between snapshots loses every mutation since the last
+//! one. This module closes the gap with a classic WAL design:
+//!
+//! * every **logical mutation** (`insert` / `delete` / `set_cell` /
+//!   `update_where` / `log_event`) is serialized as a [`Mutation`] record
+//!   and appended to the log *before* it is applied in memory
+//!   (write-ahead discipline);
+//! * records are framed as `LLLLLLLL CCCCCCCCCCCCCCCC payload\n` — an
+//!   8-hex-digit payload length, a 16-hex-digit FNV-1a checksum, the JSON
+//!   payload, a newline — so a torn tail (a crash mid-write) is detected
+//!   at *any* byte boundary and never replayed;
+//! * periodically the store **checkpoints**: it writes a new snapshot
+//!   generation atomically (temp file + rename) and rotates to an empty
+//!   log, bounding recovery time;
+//! * [`super::store::Db::recover`] loads the newest snapshot generation,
+//!   replays the matching log tail deterministically (mutations are
+//!   *physical-logical*: they carry resolved row ids, so replay never
+//!   re-runs validation logic), truncates any torn tail, and rebuilds the
+//!   secondary indexes, which are derived state and never logged.
+//!
+//! Crash injection for the test harness: [`Wal::inject_failure`] arms a
+//! fail point that, after N successful appends, writes only a prefix of
+//! the next framed record (possibly zero bytes), flushes it, and poisons
+//! the log. A poisoned log models a dead process: every later mutation is
+//! neither logged nor applied, so the in-memory state at "death" is
+//! exactly the prefix of fully-written records — which is exactly what
+//! recovery must reproduce.
+//!
+//! **Durability model**: appends reach the kernel via `write(2)` but are
+//! not fsynced per record, so the guarantee covers *process* death
+//! (crash, `kill -9`, the injected fail points) — what the paper's
+//! module-robustness argument needs — not power loss or kernel panic.
+//! Snapshots, being rare, *are* fsynced before the rename that publishes
+//! them. Per-record (or batched) `sync_data` would extend the guarantee
+//! to power failure at a large append-throughput cost.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::types::{JobId, Time};
+use crate::util::Json;
+
+use super::table::Row;
+use super::value::Value;
+
+/// The tables a [`Mutation`] can address (the standard schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableId {
+    Jobs,
+    Nodes,
+    Assignments,
+    Queues,
+    AdmissionRules,
+}
+
+impl TableId {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TableId::Jobs => "jobs",
+            TableId::Nodes => "nodes",
+            TableId::Assignments => "assignments",
+            TableId::Queues => "queues",
+            TableId::AdmissionRules => "admission_rules",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TableId> {
+        Some(match s {
+            "jobs" => TableId::Jobs,
+            "nodes" => TableId::Nodes,
+            "assignments" => TableId::Assignments,
+            "queues" => TableId::Queues,
+            "admission_rules" => TableId::AdmissionRules,
+            _ => return None,
+        })
+    }
+}
+
+/// One logical mutation, as logged. Inserts carry the row *without* its
+/// id (the table assigns it; `next_id` is monotonic and snapshotted, so
+/// replay assigns identical ids). Cell writes and deletes carry resolved
+/// row ids — replay is pure application, no validation re-runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mutation {
+    Insert {
+        table: TableId,
+        row: Row,
+    },
+    Delete {
+        table: TableId,
+        id: u64,
+    },
+    SetCell {
+        table: TableId,
+        id: u64,
+        col: String,
+        value: Value,
+    },
+    UpdateWhere {
+        table: TableId,
+        filter: String,
+        col: String,
+        value: Value,
+    },
+    LogEvent {
+        time: Time,
+        kind: String,
+        job: Option<JobId>,
+        detail: String,
+    },
+}
+
+fn row_to_json(row: &Row) -> Json {
+    Json::Obj(
+        row.iter()
+            .map(|(k, v)| (k.to_string(), v.to_json()))
+            .collect(),
+    )
+}
+
+fn row_from_json(j: &Json) -> crate::Result<Row> {
+    let Json::Obj(m) = j else {
+        anyhow::bail!("row must be an object");
+    };
+    let mut row = Row::new();
+    for (k, v) in m {
+        row.insert(k.clone().into(), Value::from_json(v)?);
+    }
+    Ok(row)
+}
+
+impl Mutation {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Mutation::Insert { table, row } => Json::obj(vec![
+                ("op", Json::Str("insert".into())),
+                ("t", Json::Str(table.as_str().into())),
+                ("row", row_to_json(row)),
+            ]),
+            Mutation::Delete { table, id } => Json::obj(vec![
+                ("op", Json::Str("delete".into())),
+                ("t", Json::Str(table.as_str().into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            Mutation::SetCell {
+                table,
+                id,
+                col,
+                value,
+            } => Json::obj(vec![
+                ("op", Json::Str("set".into())),
+                ("t", Json::Str(table.as_str().into())),
+                ("id", Json::Num(*id as f64)),
+                ("c", Json::Str(col.clone())),
+                ("v", value.to_json()),
+            ]),
+            Mutation::UpdateWhere {
+                table,
+                filter,
+                col,
+                value,
+            } => Json::obj(vec![
+                ("op", Json::Str("update".into())),
+                ("t", Json::Str(table.as_str().into())),
+                ("f", Json::Str(filter.clone())),
+                ("c", Json::Str(col.clone())),
+                ("v", value.to_json()),
+            ]),
+            Mutation::LogEvent {
+                time,
+                kind,
+                job,
+                detail,
+            } => Json::obj(vec![
+                ("op", Json::Str("event".into())),
+                ("time", Json::Num(*time as f64)),
+                ("k", Json::Str(kind.clone())),
+                (
+                    "j",
+                    job.map(|j| Json::Num(j as f64)).unwrap_or(Json::Null),
+                ),
+                ("d", Json::Str(detail.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Mutation> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("mutation missing op"))?;
+        let table = || -> crate::Result<TableId> {
+            j.get("t")
+                .and_then(Json::as_str)
+                .and_then(TableId::parse)
+                .ok_or_else(|| anyhow::anyhow!("mutation has bad table"))
+        };
+        let text = |key: &str| -> crate::Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("mutation missing {key}"))?
+                .to_string())
+        };
+        Ok(match op {
+            "insert" => Mutation::Insert {
+                table: table()?,
+                row: row_from_json(
+                    j.get("row")
+                        .ok_or_else(|| anyhow::anyhow!("insert missing row"))?,
+                )?,
+            },
+            "delete" => Mutation::Delete {
+                table: table()?,
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("delete missing id"))?
+                    as u64,
+            },
+            "set" => Mutation::SetCell {
+                table: table()?,
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("set missing id"))? as u64,
+                col: text("c")?,
+                value: Value::from_json(
+                    j.get("v").ok_or_else(|| anyhow::anyhow!("set missing v"))?,
+                )?,
+            },
+            "update" => Mutation::UpdateWhere {
+                table: table()?,
+                filter: text("f")?,
+                col: text("c")?,
+                value: Value::from_json(
+                    j.get("v")
+                        .ok_or_else(|| anyhow::anyhow!("update missing v"))?,
+                )?,
+            },
+            "event" => Mutation::LogEvent {
+                time: j.get("time").and_then(Json::as_i64).unwrap_or(0),
+                kind: text("k")?,
+                job: j.get("j").and_then(Json::as_i64).map(|v| v as JobId),
+                detail: text("d")?,
+            },
+            other => anyhow::bail!("unknown mutation op {other:?}"),
+        })
+    }
+}
+
+// ----------------------------------------------------------- framing ----
+
+/// FNV-1a 64-bit: tiny, dependency-free, and plenty to reject torn or
+/// bit-rotted records (this is corruption *detection*, not security).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// `8-hex len` + space + `16-hex checksum` + space.
+const HEADER_LEN: usize = 8 + 1 + 16 + 1;
+
+fn frame(payload: &str) -> Vec<u8> {
+    format!(
+        "{:08x} {:016x} {}\n",
+        payload.len(),
+        fnv1a(payload.as_bytes()),
+        payload
+    )
+    .into_bytes()
+}
+
+fn parse_hex(bytes: &[u8]) -> Option<u64> {
+    let s = std::str::from_utf8(bytes).ok()?;
+    if !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Decode every complete record; returns `(records, valid_bytes, torn)`.
+/// `valid_bytes` is the clean prefix length; anything past it is a torn
+/// tail (crash mid-write) and must be truncated, never applied.
+fn decode_all(bytes: &[u8]) -> (Vec<Mutation>, usize, bool) {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    loop {
+        if at == bytes.len() {
+            return (out, at, false);
+        }
+        let torn = |out: Vec<Mutation>, at: usize| (out, at, true);
+        let Some(header) = bytes.get(at..at + HEADER_LEN) else {
+            return torn(out, at);
+        };
+        if header[8] != b' ' || header[25] != b' ' {
+            return torn(out, at);
+        }
+        let (Some(len), Some(crc)) = (parse_hex(&header[..8]), parse_hex(&header[9..25]))
+        else {
+            return torn(out, at);
+        };
+        let start = at + HEADER_LEN;
+        let end = start + len as usize;
+        if bytes.len() < end + 1 || bytes[end] != b'\n' {
+            return torn(out, at);
+        }
+        let payload = &bytes[start..end];
+        if fnv1a(payload) != crc {
+            return torn(out, at);
+        }
+        let Some(m) = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| Mutation::from_json(&j).ok())
+        else {
+            return torn(out, at);
+        };
+        out.push(m);
+        at = end + 1;
+    }
+}
+
+// --------------------------------------------------------------- wal ----
+
+/// Crash fail point: after `after` more successful appends, write only
+/// `partial` bytes of the next framed record (clamped below the full
+/// frame, so an injected crash always leaves nothing or a torn record —
+/// never a silently-complete one) and poison the log.
+#[derive(Debug, Clone, Copy)]
+struct FailPoint {
+    after: u64,
+    partial: usize,
+}
+
+/// Why an append did not happen. The distinction matters: an *injected*
+/// crash (or a log already poisoned by one) models a dead process — the
+/// store silently stops, exactly like `kill -9` — while a *real* I/O
+/// failure (disk full, permission lost) must never be swallowed, or a
+/// live server would keep acknowledging writes that are neither durable
+/// nor applied.
+#[derive(Debug)]
+pub enum AppendError {
+    /// The crash harness tore this write (or poisoned the log earlier).
+    Injected,
+    /// The underlying file write genuinely failed.
+    Io(std::io::Error),
+}
+
+/// What [`super::store::Db::recover`] found on disk.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoverStats {
+    /// Snapshot/log generation recovered from.
+    pub generation: u64,
+    /// Whether a snapshot file seeded the state (false: replayed from
+    /// an empty base — a database that never checkpointed).
+    pub snapshot_loaded: bool,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed: u64,
+    /// Whether a torn tail (crash mid-append) was detected and truncated.
+    pub torn_tail: bool,
+}
+
+/// The open write-ahead log of one durable database.
+#[derive(Debug)]
+pub struct Wal {
+    dir: PathBuf,
+    generation: u64,
+    file: File,
+    /// Records successfully appended over this object's lifetime
+    /// (including the replayed tail it was opened with) — the crash
+    /// harness counts boundaries in this unit.
+    total: u64,
+    since_checkpoint: u64,
+    checkpoint_every: u64,
+    failpoint: Option<FailPoint>,
+    crashed: bool,
+}
+
+impl Wal {
+    pub fn snapshot_path(dir: &Path, generation: u64) -> PathBuf {
+        dir.join(format!("snapshot-{generation:06}.json"))
+    }
+
+    pub fn log_path(dir: &Path, generation: u64) -> PathBuf {
+        dir.join(format!("wal-{generation:06}.log"))
+    }
+
+    /// Newest generation present in `dir` (snapshot or log file), or 0.
+    pub fn latest_generation(dir: &Path) -> crate::Result<u64> {
+        let mut latest = 0u64;
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let generation = name
+                .strip_prefix("snapshot-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .or_else(|| {
+                    name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log"))
+                })
+                .and_then(|s| s.parse::<u64>().ok());
+            if let Some(g) = generation {
+                latest = latest.max(g);
+            }
+        }
+        Ok(latest)
+    }
+
+    /// Read and decode generation `generation`'s log; a torn tail is
+    /// truncated off the file so the reopened log appends cleanly after
+    /// the last valid record. Returns `(records, torn_tail_found)`.
+    pub fn read_records(dir: &Path, generation: u64) -> crate::Result<(Vec<Mutation>, bool)> {
+        let path = Self::log_path(dir, generation);
+        if !path.exists() {
+            return Ok((Vec::new(), false));
+        }
+        let bytes = std::fs::read(&path)?;
+        let (records, valid, torn) = decode_all(&bytes);
+        if valid < bytes.len() {
+            OpenOptions::new().write(true).open(&path)?.set_len(valid as u64)?;
+        }
+        Ok((records, torn))
+    }
+
+    /// Open generation `generation` for appending (creating the file if
+    /// missing); `replayed` seeds the record counters. Older generations
+    /// and stale checkpoint temp files are swept — recovery is the other
+    /// point (besides rotation) where crash debris gets cleaned up.
+    pub fn open(dir: &Path, generation: u64, replayed: u64) -> crate::Result<Wal> {
+        Self::sweep_older_than(dir, generation);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(Self::log_path(dir, generation))?;
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            generation,
+            file,
+            total: replayed,
+            since_checkpoint: replayed,
+            checkpoint_every: 0,
+            failpoint: None,
+            crashed: false,
+        })
+    }
+
+    /// Append one record (write-ahead: callers apply only after `Ok`).
+    /// Any failure poisons the log; see [`AppendError`] for how callers
+    /// must treat the two failure classes differently.
+    pub fn append(&mut self, m: &Mutation) -> Result<(), AppendError> {
+        if self.crashed {
+            return Err(AppendError::Injected);
+        }
+        let framed = frame(&m.to_json().dump());
+        if let Some(fp) = self.failpoint {
+            if fp.after == 0 {
+                let cut = fp.partial.min(framed.len().saturating_sub(1));
+                let _ = self.file.write_all(&framed[..cut]);
+                let _ = self.file.flush();
+                self.crashed = true;
+                return Err(AppendError::Injected);
+            }
+            self.failpoint = Some(FailPoint {
+                after: fp.after - 1,
+                ..fp
+            });
+        }
+        if let Err(e) = self.file.write_all(&framed) {
+            self.crashed = true;
+            return Err(AppendError::Io(e));
+        }
+        self.total += 1;
+        self.since_checkpoint += 1;
+        Ok(())
+    }
+
+    /// Rotate to a fresh log for `new_generation` (called after that
+    /// generation's snapshot has been durably renamed into place); every
+    /// older generation's files are swept best-effort — including debris
+    /// from checkpoints that crashed between rename and rotation.
+    pub fn rotate(&mut self, new_generation: u64) -> crate::Result<()> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(Self::log_path(&self.dir, new_generation))?;
+        self.file = file;
+        self.generation = new_generation;
+        self.since_checkpoint = 0;
+        Self::sweep_older_than(&self.dir, new_generation);
+        Ok(())
+    }
+
+    /// Remove snapshot/log files of every generation below `keep`, plus
+    /// stale snapshot temp files (a crash mid-checkpoint leaves either a
+    /// `.tmp` that was never renamed, or — when it died between rename
+    /// and rotation — a whole previous generation). Best-effort: sweep
+    /// failures never affect correctness, only disk usage.
+    pub fn sweep_older_than(dir: &Path, keep: u64) {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let generation = name
+                .strip_prefix("snapshot-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .or_else(|| {
+                    name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log"))
+                })
+                .and_then(|s| s.parse::<u64>().ok());
+            let stale = match generation {
+                Some(g) => g < keep,
+                None => name.starts_with("snapshot-") && name.ends_with(".tmp"),
+            };
+            if stale {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    /// Arm the crash fail point: `after` more appends succeed, then the
+    /// next one writes only `partial` bytes (clamped to frame length − 1)
+    /// and poisons the log.
+    pub fn inject_failure(&mut self, after: u64, partial: usize) {
+        self.failpoint = Some(FailPoint { after, partial });
+    }
+
+    /// Poison the log immediately — models `kill -9` right now.
+    pub fn crash(&mut self) {
+        self.crashed = true;
+    }
+
+    pub fn crashed(&self) -> bool {
+        self.crashed
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records appended over this log's lifetime (crash-harness unit).
+    pub fn total_records(&self) -> u64 {
+        self.total
+    }
+
+    pub fn set_checkpoint_every(&mut self, every: u64) {
+        self.checkpoint_every = every;
+    }
+
+    /// Whether the store should checkpoint now (auto-compaction cadence).
+    pub fn due_checkpoint(&self) -> bool {
+        self.checkpoint_every > 0
+            && self.since_checkpoint >= self.checkpoint_every
+            && !self.crashed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Mutation> {
+        let mut row = Row::new();
+        row.insert("user".into(), Value::Text("alice".into()));
+        row.insert("nbNodes".into(), Value::Int(4));
+        vec![
+            Mutation::Insert {
+                table: TableId::Jobs,
+                row,
+            },
+            Mutation::SetCell {
+                table: TableId::Jobs,
+                id: 1,
+                col: "state".into(),
+                value: Value::Text("toLaunch".into()),
+            },
+            Mutation::Delete {
+                table: TableId::Assignments,
+                id: 7,
+            },
+            Mutation::UpdateWhere {
+                table: TableId::Jobs,
+                filter: "state = 'Waiting'".into(),
+                col: "message".into(),
+                value: Value::Text("bulk".into()),
+            },
+            Mutation::LogEvent {
+                time: 42,
+                kind: "TEST".into(),
+                job: Some(3),
+                detail: "d\"e\n".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn mutation_json_roundtrip() {
+        for m in sample() {
+            let back = Mutation::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn frames_decode_back() {
+        let mut bytes = Vec::new();
+        for m in sample() {
+            bytes.extend(frame(&m.to_json().dump()));
+        }
+        let (records, valid, torn) = decode_all(&bytes);
+        assert_eq!(records, sample());
+        assert_eq!(valid, bytes.len());
+        assert!(!torn);
+    }
+
+    #[test]
+    fn torn_tail_is_detected_at_every_cut_point() {
+        let mut bytes = Vec::new();
+        for m in sample() {
+            bytes.extend(frame(&m.to_json().dump()));
+        }
+        let boundaries: Vec<usize> = {
+            let mut at = 0;
+            let mut b = vec![0];
+            for m in sample() {
+                at += frame(&m.to_json().dump()).len();
+                b.push(at);
+            }
+            b
+        };
+        for cut in 0..bytes.len() {
+            let (records, valid, torn) = decode_all(&bytes[..cut]);
+            // the decoded prefix is exactly the whole records before the cut
+            let whole = boundaries.iter().filter(|b| **b <= cut).count() - 1;
+            assert_eq!(records.len(), whole, "cut {cut}");
+            assert_eq!(valid, boundaries[whole], "cut {cut}");
+            assert_eq!(torn, cut != boundaries[whole], "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupted_byte_stops_replay() {
+        let mut bytes = Vec::new();
+        for m in sample() {
+            bytes.extend(frame(&m.to_json().dump()));
+        }
+        let first = frame(&sample()[0].to_json().dump()).len();
+        // flip one payload byte of the second record
+        let mut bad = bytes.clone();
+        bad[first + HEADER_LEN + 2] ^= 0x20;
+        let (records, valid, torn) = decode_all(&bad);
+        assert_eq!(records.len(), 1, "only the intact prefix replays");
+        assert_eq!(valid, first);
+        assert!(torn);
+    }
+}

@@ -16,6 +16,7 @@
 //! and simulated command runtimes are scaled by `time_scale`, so the burst
 //! benchmarks (figs. 9–10) can run a latency-faithful stack quickly.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -28,7 +29,7 @@ use crate::launcher::{Launcher, LauncherConfig};
 use crate::matching::ScheduleStep;
 use crate::monitor;
 use crate::sched::{MetaScheduler, SchedulerConfig, SchedulerDecision};
-use crate::types::{Job, JobId, JobSpec, JobState, NodeId, Time};
+use crate::types::{Job, JobId, JobSpec, JobState, NodeId, Queue, RecoveryPolicy, Time};
 use crate::Result;
 
 /// Server configuration.
@@ -41,6 +42,15 @@ pub struct ServerConfig {
     pub check_jobs_every: Duration,
     /// Scale applied to simulated command runtimes (`sleep N`).
     pub time_scale: f64,
+    /// Durable state directory. When set, [`Server::open`] recovers the
+    /// database (snapshot + WAL replay) from it at startup and every
+    /// mutation is WAL-logged before it is applied.
+    pub data_dir: Option<PathBuf>,
+    /// What restart reconciliation does with jobs stranded in-flight.
+    pub recovery: RecoveryPolicy,
+    /// WAL records between automatic snapshot+truncate checkpoints
+    /// (0 = checkpoint only at shutdown).
+    pub checkpoint_every: u64,
 }
 
 impl Default for ServerConfig {
@@ -52,8 +62,24 @@ impl Default for ServerConfig {
             monitor_every: Duration::from_secs(60),
             check_jobs_every: Duration::from_secs(30),
             time_scale: 1.0,
+            data_dir: None,
+            recovery: RecoveryPolicy::default(),
+            checkpoint_every: 4096,
         }
     }
+}
+
+/// What [`Server::open`] found and did while bringing the durable
+/// database back: the recovery path (generation, snapshot, replayed WAL
+/// tail) and the restart reconciliation (stranded jobs and the state each
+/// was stranded in).
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    pub generation: u64,
+    pub snapshot_loaded: bool,
+    pub replayed_records: u64,
+    pub torn_tail: bool,
+    pub reconciled: Vec<(JobId, JobState)>,
 }
 
 impl ServerConfig {
@@ -96,6 +122,7 @@ pub struct Server {
     inner: Arc<Inner>,
     cluster: Arc<VirtualCluster>,
     automaton: Option<std::thread::JoinHandle<()>>,
+    recovery: Option<RecoveryReport>,
 }
 
 impl Server {
@@ -107,6 +134,65 @@ impl Server {
         admission::install_default_rules(&mut db);
         cluster.register(&mut db);
         Self::from_db(db, cluster, config)
+    }
+
+    /// Build a **durable** server: recover the database from
+    /// `config.data_dir` (fresh directory → fresh database, every
+    /// mutation WAL-logged), populate the standard schema if this is the
+    /// first boot, reconcile jobs stranded in-flight by the previous
+    /// process per `config.recovery`, then start the automaton.
+    /// [`Server::recovery_report`] describes what happened.
+    pub fn open(cluster: Arc<VirtualCluster>, config: ServerConfig) -> Result<Server> {
+        let dir = config
+            .data_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("Server::open requires config.data_dir"))?;
+        let (mut db, stats) = Db::recover(&dir)?;
+        db.set_checkpoint_every(config.checkpoint_every);
+        // First boot of this directory: install the standard schema (all
+        // of it WAL-logged, so even a crash before the first checkpoint
+        // recovers a complete database).
+        if db.queues_by_priority().is_empty() {
+            for q in Queue::standard_set() {
+                db.add_queue(q);
+            }
+        }
+        if db.admission_rules().is_empty() {
+            admission::install_default_rules(&mut db);
+        }
+        if db.all_nodes().is_empty() {
+            cluster.register(&mut db);
+        }
+        // Reconcile before scheduling resumes; recovered timestamps are
+        // from the previous epoch, so stamp recovery events just after
+        // the last logged instant.
+        let now = db.events().last().map(|e| e.time).unwrap_or(0);
+        let reconciled = db.reconcile_in_flight(config.recovery, now);
+        let report = RecoveryReport {
+            generation: stats.generation,
+            snapshot_loaded: stats.snapshot_loaded,
+            replayed_records: stats.replayed,
+            torn_tail: stats.torn_tail,
+            reconciled,
+        };
+        let mut server = Self::from_db(db, cluster, config);
+        server.recovery = Some(report);
+        server.kick();
+        Ok(server)
+    }
+
+    /// The recovery/reconciliation report of a [`Server::open`] boot.
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
+    }
+
+    /// Simulate a whole-process crash (`kill -9`): the WAL stops
+    /// accepting writes — every mutation from this instant is lost, as it
+    /// would be with a real crash — and the server is torn down without a
+    /// checkpoint. Bring the system back with [`Server::open`] on the
+    /// same `data_dir`.
+    pub fn simulate_crash(self) {
+        self.with_db(|db| db.crash_wal());
     }
 
     /// Build over an existing database (e.g. restored from a snapshot).
@@ -150,6 +236,7 @@ impl Server {
             inner,
             cluster,
             automaton: Some(automaton),
+            recovery: None,
         }
     }
 
@@ -320,11 +407,22 @@ impl Server {
         let inner = self.inner.clone();
         drop(self);
         match Arc::try_unwrap(inner) {
-            Ok(i) => i.db.into_inner().unwrap(),
+            Ok(i) => {
+                let mut db = i.db.into_inner().unwrap();
+                if db.is_durable() {
+                    // Clean shutdown = checkpoint: compact the WAL into a
+                    // snapshot generation so the next boot replays nothing.
+                    let _ = db.checkpoint();
+                }
+                db
+            }
             Err(shared) => {
                 // Execution threads may still hold clones briefly: go
                 // through a snapshot instead of waiting on them.
-                let db = shared.db.lock().unwrap();
+                let mut db = shared.db.lock().unwrap();
+                if db.is_durable() {
+                    let _ = db.checkpoint();
+                }
                 let tmp = std::env::temp_dir().join(format!(
                     "oar-shutdown-{}-{:?}.json",
                     std::process::id(),

@@ -9,7 +9,7 @@ mod state;
 pub use job::{Job, JobKind, JobSpec, ReservationField};
 pub use node::{Node, NodeState};
 pub use queue::{Queue, QueuePolicyKind};
-pub use state::JobState;
+pub use state::{JobState, RecoveryPolicy};
 
 /// Seconds since the (simulated or real) epoch. All scheduling arithmetic
 /// is done on this type; the paper's tables store dates the same way.

@@ -127,6 +127,40 @@ impl std::fmt::Display for JobState {
     }
 }
 
+/// Restart-reconciliation policy: what recovery does with jobs stranded
+/// in-flight (`toLaunch`/`Launching`/`Running`) when the process crashed
+/// — their launcher/execution threads died with it, so the database alone
+/// cannot finish them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Fail the stranded job through the abnormal path (`toError` →
+    /// `Error`) with a `RECOVERY_FAIL` event — conservative: the user
+    /// resubmits, nothing runs twice.
+    #[default]
+    FailInFlight,
+    /// Strip the job's execution state (assignments, start time, bpid)
+    /// and requeue it as `Waiting` with a `RECOVERY_REQUEUE` event — the
+    /// job runs again; appropriate for idempotent workloads.
+    Requeue,
+}
+
+impl RecoveryPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RecoveryPolicy::FailInFlight => "fail",
+            RecoveryPolicy::Requeue => "requeue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RecoveryPolicy> {
+        Some(match s {
+            "fail" => RecoveryPolicy::FailInFlight,
+            "requeue" => RecoveryPolicy::Requeue,
+            _ => return None,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

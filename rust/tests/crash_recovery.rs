@@ -1,0 +1,519 @@
+//! Crash-injection harness for the durability subsystem.
+//!
+//! The write-ahead discipline (`db::wal`) makes one strong promise: at
+//! any instant, the recoverable state is exactly the prefix of
+//! fully-written WAL records — which, because records are appended
+//! *before* they are applied and a failed append poisons the store, is
+//! also exactly the in-memory state of the crashed process. The property
+//! tests here check that promise exhaustively: for randomized workloads,
+//! a crash is injected at **every** record boundary (and, within the
+//! boundary record, at several torn byte offsets); recovery must then
+//! reproduce the crashed process's state byte-for-byte — no acknowledged
+//! mutation lost, no torn record applied — with secondary indexes
+//! consistent with the rows and accounting aggregates unchanged.
+//!
+//! The integration tests at the bottom do the same to a *live server*:
+//! crash mid-workload, restart from the data directory, reconcile the
+//! stranded in-flight jobs per policy, and drain to the same terminal
+//! job-state multiset as an uninterrupted run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oar::cluster::VirtualCluster;
+use oar::db::{Db, Value};
+use oar::server::{Server, ServerConfig};
+use oar::types::{Job, JobSpec, JobState, Node, Queue, QueuePolicyKind, RecoveryPolicy};
+use oar::util::Rng;
+
+// ------------------------------------------------- workload generator ----
+
+/// One logical operation of a randomized workload. Ops address jobs by
+/// *index* into the submitted-so-far list, so the sequence is meaningful
+/// on any database replaying it.
+#[derive(Debug, Clone)]
+enum Op {
+    Submit { user: String, nodes: u32 },
+    Transition { job: usize, to: JobState },
+    Message { job: usize },
+    AddNode { id: u32 },
+    Assign { job: usize, node: u32 },
+    Unassign { job: usize },
+    Event,
+    AddQueue { name: String },
+    QueueActive { name: String, active: bool },
+    BulkMessage,
+    Rule { prio: i32 },
+}
+
+fn gen_ops(seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = vec![
+        Op::AddQueue {
+            name: "default".into(),
+        },
+        Op::AddNode { id: 1 },
+        Op::AddNode { id: 2 },
+    ];
+    for i in 0..40u64 {
+        let op = match rng.below(12) {
+            0..=3 => Op::Submit {
+                user: format!("u{}", rng.below(4)),
+                nodes: rng.range_i64(1, 4) as u32,
+            },
+            4..=6 => Op::Transition {
+                job: rng.below(16) as usize,
+                to: *rng.pick(&JobState::ALL),
+            },
+            7 => Op::Message {
+                job: rng.below(16) as usize,
+            },
+            8 => Op::Assign {
+                job: rng.below(16) as usize,
+                node: rng.range_i64(1, 3) as u32,
+            },
+            9 => Op::Unassign {
+                job: rng.below(16) as usize,
+            },
+            10 => Op::Event,
+            _ => match rng.below(4) {
+                0 => Op::AddNode { id: 10 + i as u32 },
+                1 => Op::AddQueue {
+                    name: format!("q{i}"),
+                },
+                2 => Op::QueueActive {
+                    name: "default".into(),
+                    active: rng.chance(0.5),
+                },
+                _ => {
+                    if rng.chance(0.5) {
+                        Op::BulkMessage
+                    } else {
+                        Op::Rule {
+                            prio: rng.range_i64(1, 9) as i32,
+                        }
+                    }
+                }
+            },
+        };
+        ops.push(op);
+    }
+    ops
+}
+
+fn apply_op(db: &mut Db, op: &Op, jobs: &mut Vec<u64>) {
+    let pick = |jobs: &[u64], i: usize| -> Option<u64> {
+        if jobs.is_empty() {
+            None
+        } else {
+            Some(jobs[i % jobs.len()])
+        }
+    };
+    match op {
+        Op::Submit { user, nodes } => {
+            let spec = JobSpec::batch(user, "date", *nodes, 60);
+            let id = db.insert_job(Job::from_spec(&spec, jobs.len() as i64));
+            db.log_event(jobs.len() as i64, "SUBMISSION", Some(id), user);
+            jobs.push(id);
+        }
+        Op::Transition { job, to } => {
+            if let Some(id) = pick(jobs, *job) {
+                // Illegal transitions are rejected without a mutation —
+                // exactly as in production.
+                let _ = db.set_job_state(id, *to, 5);
+            }
+        }
+        Op::Message { job } => {
+            if let Some(id) = pick(jobs, *job) {
+                let _ = db.set_job_message(id, "touched");
+            }
+        }
+        Op::AddNode { id } => {
+            db.add_node(Node::new(*id, &format!("n{id}"), 2).with_prop("mem", Value::Int(512)));
+        }
+        Op::Assign { job, node } => {
+            if let Some(id) = pick(jobs, *job) {
+                db.assign_nodes(id, &[*node], 1);
+            }
+        }
+        Op::Unassign { job } => {
+            if let Some(id) = pick(jobs, *job) {
+                db.remove_assignments(id);
+            }
+        }
+        Op::Event => db.log_event(7, "TEST_EVENT", None, "detail"),
+        Op::AddQueue { name } => {
+            db.add_queue(Queue::new(name, 10, QueuePolicyKind::FifoConservative));
+        }
+        Op::QueueActive { name, active } => {
+            let _ = db.set_queue_active(name, *active);
+        }
+        Op::BulkMessage => {
+            let bulk = Value::Text("bulk".into());
+            let _ = db.update_jobs_where("state = 'Waiting'", "message", bulk);
+        }
+        Op::Rule { prio } => {
+            db.add_admission_rule(*prio, "IF nb_nodes > 64 THEN REJECT 'too big'");
+        }
+    }
+}
+
+/// Run ops until completion or until the WAL reports the process dead;
+/// returns how many ops were *acknowledged* (completed before the crash).
+fn drive(db: &mut Db, ops: &[Op]) -> usize {
+    let mut jobs = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        apply_op(db, op, &mut jobs);
+        if db.wal_crashed() {
+            return i;
+        }
+    }
+    ops.len()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("oar_crash_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn seeds() -> Vec<u64> {
+    match std::env::var("OAR_CRASH_SEED") {
+        Ok(s) => vec![s.parse().expect("OAR_CRASH_SEED must be a u64")],
+        Err(_) => vec![11, 42],
+    }
+}
+
+/// The recovered database must match the crashed process's in-memory
+/// state exactly, with coherent indexes and unchanged aggregates.
+fn assert_recovered_matches(dir: &Path, crashed: &mut Db, ctx: &str) {
+    let mem = crashed.dump();
+    let mem_accounting = format!("{:?}", crashed.accounting());
+    let (mut rec, _) = Db::recover(dir).expect(ctx);
+    assert_eq!(rec.dump(), mem, "{ctx}: state diverged");
+    assert!(rec.verify_indexes(), "{ctx}: indexes inconsistent");
+    assert_eq!(
+        format!("{:?}", rec.accounting()),
+        mem_accounting,
+        "{ctx}: accounting diverged"
+    );
+}
+
+// -------------------------------------------------- property: boundaries ----
+
+#[test]
+fn crash_at_every_wal_boundary_recovers_exactly() {
+    for seed in seeds() {
+        let ops = gen_ops(seed);
+
+        // Reference run: count WAL records and prove clean recovery.
+        let dir = fresh_dir(&format!("ref_{seed}"));
+        let (mut db, _) = Db::recover(&dir).unwrap();
+        assert_eq!(drive(&mut db, &ops), ops.len());
+        let total = db.wal_records();
+        assert!(total > ops.len() as u64 / 2, "workload too thin: {total}");
+        assert_recovered_matches(&dir, &mut db, &format!("seed {seed} clean"));
+        drop(db);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Crash at every record boundary; at each boundary, tear the
+        // record at several byte offsets (0 = crash exactly at the
+        // boundary, 7 = inside the frame header, MAX = one byte short of
+        // a complete record).
+        for boundary in 0..total {
+            for partial in [0usize, 7, usize::MAX] {
+                let dir = fresh_dir(&format!("b_{seed}_{boundary}_{partial:x}"));
+                let (mut db, _) = Db::recover(&dir).unwrap();
+                db.wal_inject_failure(boundary, partial);
+                let acked = drive(&mut db, &ops);
+                assert!(db.wal_crashed(), "seed {seed} b{boundary}: no crash fired");
+                assert!(acked < ops.len());
+                assert_recovered_matches(
+                    &dir,
+                    &mut db,
+                    &format!("seed {seed} boundary {boundary} partial {partial}"),
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_with_checkpointing_recovers_exactly() {
+    // Same property across snapshot generations: auto-checkpoint every 7
+    // records, so crashes land before, between and after compactions.
+    let seed = seeds()[0];
+    let ops = gen_ops(seed);
+    let dir = fresh_dir("ckpt_ref");
+    let (mut db, _) = Db::recover(&dir).unwrap();
+    db.set_checkpoint_every(7);
+    drive(&mut db, &ops);
+    let total = db.wal_records();
+    drop(db);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    for boundary in 0..total {
+        for partial in [0usize, usize::MAX] {
+            let dir = fresh_dir(&format!("ckpt_{boundary}_{partial:x}"));
+            let (mut db, _) = Db::recover(&dir).unwrap();
+            db.set_checkpoint_every(7);
+            db.wal_inject_failure(boundary, partial);
+            drive(&mut db, &ops);
+            assert!(db.wal_crashed());
+            assert_recovered_matches(
+                &dir,
+                &mut db,
+                &format!("ckpt boundary {boundary} partial {partial}"),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+// ----------------------------------------------------- atomic snapshots ----
+
+#[test]
+fn torn_snapshot_never_corrupts_previous_generation() {
+    let dir = fresh_dir("snapfail");
+    let (mut db, _) = Db::recover(&dir).unwrap();
+    for q in Queue::standard_set() {
+        db.add_queue(q);
+    }
+    let a = db.insert_job(Job::from_spec(&JobSpec::batch("alice", "date", 1, 60), 0));
+    db.checkpoint().unwrap(); // generation 1 snapshot exists
+    let b = db.insert_job(Job::from_spec(&JobSpec::batch("bob", "date", 2, 60), 1));
+
+    // The next checkpoint dies mid-snapshot-write: the temp file is left
+    // partial, nothing is renamed, the WAL keeps growing.
+    db.inject_snapshot_failure(Some(40));
+    assert!(db.checkpoint().is_err());
+    db.inject_snapshot_failure(None);
+    let c = db.insert_job(Job::from_spec(&JobSpec::batch("carol", "date", 3, 60), 2));
+
+    let mem = db.dump();
+    drop(db);
+    let (mut rec, stats) = Db::recover(&dir).unwrap();
+    assert_eq!(rec.dump(), mem, "recovery must use generation 1 + WAL tail");
+    assert!(stats.snapshot_loaded, "generation-1 snapshot must seed recovery");
+    assert_eq!(stats.generation, 1);
+    for id in [a, b, c] {
+        assert!(rec.job(id).is_ok(), "job {id} lost");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plain_snapshot_is_atomic_over_existing_file() {
+    let dir = fresh_dir("snapatomic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("snap.json");
+    let mut db = Db::with_standard_queues();
+    let id = db.insert_job(Job::from_spec(&JobSpec::batch("alice", "date", 1, 60), 0));
+    db.snapshot(&path).unwrap();
+
+    db.insert_job(Job::from_spec(&JobSpec::batch("bob", "date", 1, 60), 1));
+    db.inject_snapshot_failure(Some(10));
+    assert!(db.snapshot(&path).is_err(), "injected failure must surface");
+
+    // The original snapshot file is untouched by the torn write.
+    let mut back = Db::restore(&path).unwrap();
+    assert_eq!(back.job_count(), 1);
+    assert_eq!(back.job(id).unwrap().user, "alice");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------ live-server restart ----
+
+fn durable_config(dir: &Path, policy: RecoveryPolicy, scale: f64) -> ServerConfig {
+    let mut cfg = ServerConfig::fast(scale);
+    cfg.sched.dense_matching = false;
+    cfg.data_dir = Some(dir.to_path_buf());
+    cfg.recovery = policy;
+    cfg
+}
+
+/// Submit the restart-test workload: 2 × 2-node `sleep` blockers that
+/// occupy the whole 4-node cluster, plus 6 quick 1-node jobs behind them.
+fn submit_workload(server: &Server) -> Vec<u64> {
+    let mut ids = Vec::new();
+    for i in 0..2 {
+        ids.push(
+            server
+                .submit(&JobSpec::batch(&format!("block{i}"), "sleep 10", 2, 600))
+                .unwrap()
+                .unwrap(),
+        );
+    }
+    for i in 0..6 {
+        ids.push(
+            server
+                .submit(&JobSpec::batch(&format!("u{i}"), "date", 1, 60))
+                .unwrap()
+                .unwrap(),
+        );
+    }
+    ids
+}
+
+fn terminal_multiset(server: &Server, ids: &[u64]) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for id in ids {
+        let state = server.with_db(|db| db.job(*id)).unwrap().state;
+        *out.entry(state.to_string()).or_insert(0) += 1;
+    }
+    out
+}
+
+/// Wait until at least one job is Running (a genuine in-flight victim for
+/// the crash), or panic after `timeout`.
+fn wait_for_running(server: &Server, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let running = server.with_db(|db| db.count_jobs_in_state(JobState::Running));
+        if running > 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "no job reached Running in time");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn server_restart_requeue_drains_to_same_terminal_multiset() {
+    // Baseline: the same workload, uninterrupted, on a volatile server.
+    let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+    let mut cfg = ServerConfig::fast(0.02);
+    cfg.sched.dense_matching = false;
+    let baseline = Server::new(cluster, cfg);
+    let base_ids = submit_workload(&baseline);
+    assert!(baseline.wait_all_terminal(Duration::from_secs(60)));
+    let want = terminal_multiset(&baseline, &base_ids);
+    drop(baseline);
+
+    // Crashy run: same workload, crash while the blockers are Running.
+    let dir = fresh_dir("restart_requeue");
+    let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+    let server = Server::open(
+        cluster.clone(),
+        durable_config(&dir, RecoveryPolicy::Requeue, 0.02),
+    )
+    .unwrap();
+    let ids = submit_workload(&server);
+    wait_for_running(&server, Duration::from_secs(20));
+    server.simulate_crash();
+
+    // Restart: recover, reconcile (requeue), drain.
+    let server = Server::open(
+        cluster,
+        durable_config(&dir, RecoveryPolicy::Requeue, 0.02),
+    )
+    .unwrap();
+    let report = server.recovery_report().cloned().unwrap();
+    assert!(report.replayed_records > 0, "nothing replayed: {report:?}");
+    assert!(
+        !report.reconciled.is_empty(),
+        "a Running job must have been stranded"
+    );
+    assert!(server.wait_all_terminal(Duration::from_secs(60)));
+
+    // Requeued in-flight jobs run again: the drained terminal multiset
+    // matches the uninterrupted run exactly.
+    assert_eq!(terminal_multiset(&server, &ids), want);
+    // ...and every reconciled job carries its RECOVERY_* audit event.
+    for (id, _) in &report.reconciled {
+        let kinds: Vec<String> = server.with_db(|db| {
+            db.events_with_kind_prefix("RECOVERY_")
+                .iter()
+                .filter(|e| e.job == Some(*id))
+                .map(|e| e.kind.clone())
+                .collect()
+        });
+        assert!(
+            kinds.contains(&"RECOVERY_REQUEUE".to_string()),
+            "job {id}: {kinds:?}"
+        );
+    }
+    let _ = server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn server_restart_fail_policy_marks_inflight_error() {
+    let dir = fresh_dir("restart_fail");
+    let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+    let server = Server::open(
+        cluster.clone(),
+        durable_config(&dir, RecoveryPolicy::FailInFlight, 0.02),
+    )
+    .unwrap();
+    let ids = submit_workload(&server);
+    wait_for_running(&server, Duration::from_secs(20));
+    server.simulate_crash();
+
+    let server = Server::open(
+        cluster,
+        durable_config(&dir, RecoveryPolicy::FailInFlight, 0.02),
+    )
+    .unwrap();
+    let report = server.recovery_report().cloned().unwrap();
+    assert!(!report.reconciled.is_empty());
+    assert!(server.wait_all_terminal(Duration::from_secs(60)));
+
+    let reconciled: Vec<u64> = report.reconciled.iter().map(|(id, _)| *id).collect();
+    for id in &ids {
+        let job = server.with_db(|db| db.job(*id)).unwrap();
+        if reconciled.contains(id) {
+            // Failed through the abnormal path, with the audit event.
+            assert_eq!(job.state, JobState::Error, "job {id}");
+            let has_event = server.with_db(|db| {
+                db.events()
+                    .iter()
+                    .any(|e| e.job == Some(*id) && e.kind == "RECOVERY_FAIL")
+            });
+            assert!(has_event, "job {id} missing RECOVERY_FAIL event");
+        } else {
+            // Everything not stranded drains to normal termination.
+            assert_eq!(job.state, JobState::Terminated, "job {id}");
+        }
+    }
+    let _ = server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------- durable server reboots ----
+
+#[test]
+fn clean_shutdown_checkpoints_and_reboots_with_empty_tail() {
+    let dir = fresh_dir("clean_reboot");
+    let cluster = Arc::new(VirtualCluster::tiny(2, 1));
+    let server = Server::open(
+        cluster.clone(),
+        durable_config(&dir, RecoveryPolicy::FailInFlight, 0.0),
+    )
+    .unwrap();
+    let id = server
+        .submit(&JobSpec::batch("alice", "date", 1, 60))
+        .unwrap()
+        .unwrap();
+    assert!(server.wait_all_terminal(Duration::from_secs(20)));
+    let _ = server.shutdown(); // checkpoints
+
+    let server = Server::open(
+        cluster,
+        durable_config(&dir, RecoveryPolicy::FailInFlight, 0.0),
+    )
+    .unwrap();
+    let report = server.recovery_report().cloned().unwrap();
+    assert!(report.snapshot_loaded, "clean shutdown must leave a snapshot");
+    assert_eq!(report.replayed_records, 0, "tail must be empty: {report:?}");
+    assert!(report.reconciled.is_empty());
+    assert_eq!(
+        server.with_db(|db| db.job(id)).unwrap().state,
+        JobState::Terminated
+    );
+    let _ = server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

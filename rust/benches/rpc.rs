@@ -1,0 +1,192 @@
+//! RPC front-end load generator: N concurrent clients drive a loopback
+//! threaded server with submissions (plus a status sweep), measuring
+//! client-observed end-to-end latency (frame out → ack in) and aggregate
+//! submission throughput. Emits `BENCH_rpc.json` at the repo root so the
+//! fleet's perf trajectory gains a client-facing number alongside the DB
+//! (`BENCH_db.json`) and WAL (`BENCH_wal.json`) benches.
+//!
+//! Knobs: `OAR_RPC_CLIENTS` (default 8) × `OAR_RPC_SUBS` (default 200).
+//! The run doubles as a correctness gate: it verifies zero lost and zero
+//! duplicated jobs (DB job multiset == acknowledged ids) and that the
+//! workload drains to terminal states, and exits non-zero otherwise.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oar::cluster::VirtualCluster;
+use oar::rpc::{RpcClient, RpcConfig, RpcServer};
+use oar::server::{Server, ServerConfig};
+use oar::types::{JobId, JobSpec};
+use oar::util::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Percentile over sorted latency samples.
+fn pct(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    sorted[(((sorted.len() - 1) as f64) * q).round() as usize]
+}
+
+fn main() {
+    let clients = env_usize("OAR_RPC_CLIENTS", 8).max(1);
+    let per = env_usize("OAR_RPC_SUBS", 200).max(1);
+    println!(
+        "== rpc: {clients} concurrent clients x {per} submissions over loopback ==\n"
+    );
+
+    // The paper's Xeon testbed shape (17 bi-proc nodes), instantaneous
+    // modeled latencies: the bench measures the front-end + automaton
+    // path, not simulated runtimes.
+    let cluster = Arc::new(VirtualCluster::xeon());
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    let server = Arc::new(Server::new(cluster, cfg));
+    let rpc = RpcServer::start(
+        server.clone(),
+        RpcConfig {
+            workers: clients.max(8),
+            queue_depth: (2 * clients).max(16),
+            ..RpcConfig::loopback()
+        },
+    )
+    .expect("start rpc front-end");
+    let addr = rpc.addr().to_string();
+
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = RpcClient::connect(&addr).expect("connect");
+                let mut ids: Vec<JobId> = Vec::with_capacity(per);
+                let mut lats: Vec<Duration> = Vec::with_capacity(per);
+                for i in 0..per {
+                    let spec = JobSpec::batch(
+                        &format!("load-u{c}"),
+                        "date",
+                        1 + (i % 2) as u32,
+                        60,
+                    );
+                    let t = Instant::now();
+                    let id = client
+                        .sub(&spec)
+                        .expect("transport")
+                        .expect("admission");
+                    lats.push(t.elapsed());
+                    ids.push(id);
+                }
+                (ids, lats)
+            })
+        })
+        .collect();
+
+    let mut all_ids: Vec<JobId> = Vec::with_capacity(clients * per);
+    let mut lats: Vec<Duration> = Vec::with_capacity(clients * per);
+    for w in workers {
+        let (ids, l) = w.join().expect("client thread");
+        all_ids.extend(ids);
+        lats.extend(l);
+    }
+    let submit_wall = t0.elapsed();
+
+    // One full status sweep under the freshly loaded table.
+    let mut client = RpcClient::connect(&addr).expect("connect");
+    let t = Instant::now();
+    let seen = client.stat(None).expect("transport").expect("stat").len();
+    let stat_lat = t.elapsed();
+
+    let drained = server.wait_all_terminal(Duration::from_secs(300));
+    let drain_wall = t0.elapsed();
+    let (conns, reqs) = rpc.stats();
+    rpc.drain();
+
+    // Correctness gate: zero lost, zero duplicated.
+    let total = clients * per;
+    let mut unique = all_ids.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    let duplicated = total - unique.len();
+    let db_jobs = server.with_db(|db| db.job_count());
+    let lost = total.saturating_sub(db_jobs);
+    let stranded = server.with_db(|db| {
+        oar::types::JobState::ALL
+            .iter()
+            .filter(|s| !s.is_terminal())
+            .map(|s| db.count_jobs_in_state(*s))
+            .sum::<usize>()
+    });
+    let ok = drained
+        && duplicated == 0
+        && lost == 0
+        && db_jobs == total
+        && stranded == 0
+        && seen == total;
+
+    lats.sort_unstable();
+    let mean_us =
+        lats.iter().map(|d| d.as_micros() as f64).sum::<f64>() / lats.len().max(1) as f64;
+    let p50 = pct(&lats, 0.50);
+    let p99 = pct(&lats, 0.99);
+    let max = lats.last().copied().unwrap_or(Duration::ZERO);
+    let throughput = total as f64 / submit_wall.as_secs_f64().max(1e-9);
+
+    println!("submissions            {total} ({clients} clients x {per})");
+    println!("acknowledged unique    {}", unique.len());
+    println!("db jobs                {db_jobs} (lost={lost} duplicated={duplicated})");
+    println!("submissions/sec        {throughput:.0}");
+    println!(
+        "e2e latency            mean={mean_us:.0}us p50={p50:?} p99={p99:?} max={max:?}"
+    );
+    println!("stat full-table sweep  {stat_lat:?} ({seen} rows)");
+    println!(
+        "drain to terminal      {} in {drain_wall:?} (stranded={stranded})",
+        if drained { "ok" } else { "TIMEOUT" }
+    );
+    println!("front-end              {conns} connections, {reqs} requests served");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_rpc.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("rpc".into())),
+        ("clients", Json::Num(clients as f64)),
+        ("submissions_per_client", Json::Num(per as f64)),
+        ("total_submissions", Json::Num(total as f64)),
+        ("submissions_per_sec", Json::Num(throughput)),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("mean", Json::Num(mean_us)),
+                ("p50", Json::Num(p50.as_micros() as f64)),
+                ("p99", Json::Num(p99.as_micros() as f64)),
+                ("max", Json::Num(max.as_micros() as f64)),
+            ]),
+        ),
+        ("stat_full_table_us", Json::Num(stat_lat.as_micros() as f64)),
+        ("submit_wall_ms", Json::Num(submit_wall.as_millis() as f64)),
+        ("drain_wall_ms", Json::Num(drain_wall.as_millis() as f64)),
+        (
+            "verified",
+            Json::obj(vec![
+                ("lost", Json::Num(lost as f64)),
+                ("duplicated", Json::Num(duplicated as f64)),
+                ("stranded", Json::Num(stranded as f64)),
+                ("drained", Json::Bool(drained)),
+            ]),
+        ),
+        ("requests_served", Json::Num(reqs as f64)),
+    ]);
+    std::fs::write(&out, doc.dump()).expect("write BENCH_rpc.json");
+    println!("\nwrote {}", out.display());
+
+    if !ok {
+        eprintln!("RPC LOAD VERIFICATION FAILED");
+        std::process::exit(1);
+    }
+}

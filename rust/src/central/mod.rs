@@ -38,6 +38,10 @@ pub enum Task {
 pub enum JobEvent {
     Ended { job: JobId, at: Time, ok: bool },
     LaunchFailed { job: JobId, at: Time },
+    /// `oardel` arriving over the network: cancellation is *routed
+    /// through* the automaton instead of racing it, so a delete can never
+    /// interleave with the apply phase of a scheduling round.
+    Cancel { job: JobId, at: Time },
 }
 
 /// Coalescing notification listener + event buffer.

@@ -90,6 +90,22 @@ System commands:
               recovery/reconciliation report, drain the remaining workload
               [--policy fail|requeue] [--scale 0.01]
   snapshot    Run a short demo and write a database snapshot [--out PATH]
+  serve       Run the server behind the network RPC front-end
+              [--addr 127.0.0.1:6010] [--workers 16] [--queue-depth 64]
+              [--scale 0.01] [--nodes N] [--procs P] [--data-dir DIR]
+              [--policy fail|requeue]; Ctrl-C/SIGTERM drains in-flight
+              requests and checkpoints before exit
+
+Client commands (speak the socket protocol of docs/PROTOCOL.md; all take
+[--addr HOST:PORT], default 127.0.0.1:6010):
+  sub         oarsub: submit a job  --command 'sleep 60' [--user U]
+              [--nodes N] [--weight W] [--maxtime SECS] [--queue Q]
+              [--properties EXPR] [--reservation T] [--dir D]
+              [--besteffort] [--interactive] [--array N]
+  stat        oarstat: list jobs [--filter \"state = 'Running'\"]
+  del         oardel: cancel a job   oar del <jobId>
+  nodes       oarnodes: fleet state
+  queues      queue table (priority, policy, limits, active)
 
 All evaluation outputs are printed as tables/ASCII figures; --csv writes
 machine-readable series next to them.
@@ -121,6 +137,12 @@ pub fn run(args: Vec<String>) -> Result<i32> {
                 .ok_or_else(|| anyhow::anyhow!("recover requires --data-dir DIR"))?;
             crate::cli::demo::run_recover(dir, parse_policy(&flags)?, flags.get_f64("scale", 0.01))
         }
+        "serve" => net::run_serve(&flags, parse_policy(&flags)?),
+        "sub" => net::run_sub(&flags),
+        "stat" => net::run_stat(&flags),
+        "del" => net::run_del(&flags),
+        "nodes" => net::run_nodes(&flags),
+        "queues" => net::run_queues(&flags),
         "snapshot" => crate::cli::demo::run_snapshot(
             flags
                 .values
@@ -428,3 +450,4 @@ fn cmd_features() -> Result<i32> {
 }
 
 pub mod demo;
+pub mod net;

@@ -1,0 +1,310 @@
+//! The network-facing subcommands: `oar serve` runs the system behind
+//! the RPC front-end; `oar sub|stat|del|nodes|queues` are the paper's
+//! user commands (`oarsub`, `oarstat`, `oardel`, `oarnodes`) as separate
+//! client programs speaking the socket protocol (`docs/PROTOCOL.md`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::bench::report;
+use crate::cli::Flags;
+use crate::cluster::VirtualCluster;
+use crate::rpc::{signal, RpcClient, RpcConfig, RpcError, RpcServer, DEFAULT_ADDR};
+use crate::server::{Server, ServerConfig};
+use crate::types::{JobKind, JobSpec, RecoveryPolicy};
+use crate::Result;
+
+fn addr(flags: &Flags) -> String {
+    flags
+        .values
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| DEFAULT_ADDR.to_string())
+}
+
+fn connect(flags: &Flags) -> Result<RpcClient> {
+    let addr = addr(flags);
+    RpcClient::connect(&addr).map_err(|e| {
+        anyhow::anyhow!("cannot reach oar server at {addr}: {e} (is `oar serve` running?)")
+    })
+}
+
+/// Print a protocol error the way a user command should: code + message,
+/// non-zero exit.
+fn report_rpc_error(cmd: &str, e: &RpcError) -> i32 {
+    eprintln!("{cmd}: [{}] {}", e.code, e.message);
+    1
+}
+
+/// Strict `--flag N` parse for job-defining numbers: `--nodes 1O` (typo)
+/// must error, not silently fall back to a default and submit a
+/// different job than the user asked.
+fn strict_u64(flags: &Flags, key: &str, default: u64) -> Result<u64> {
+    match flags.values.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("--{key} must be an integer, got {v:?}")),
+    }
+}
+
+// -------------------------------------------------------------- serve ----
+
+/// `oar serve`: the always-running server process. Ctrl-C / SIGTERM
+/// drains the RPC front-end (in-flight requests are answered first) and
+/// then runs the clean-shutdown checkpoint (WAL compaction) before exit.
+pub fn run_serve(flags: &Flags, policy: RecoveryPolicy) -> Result<i32> {
+    let scale = flags.get_f64("scale", 0.01);
+    let data_dir = flags.values.get("data-dir").map(PathBuf::from);
+    let nodes = flags.get_u64("nodes", 0);
+    let cluster = Arc::new(if nodes == 0 {
+        VirtualCluster::xeon()
+    } else {
+        VirtualCluster::tiny(nodes as u32, flags.get_u64("procs", 2) as u32)
+    });
+
+    let config = ServerConfig {
+        data_dir: data_dir.clone(),
+        recovery: policy,
+        ..ServerConfig::fast(scale)
+    };
+    let server = match &data_dir {
+        Some(dir) => {
+            println!("• durable mode: WAL + snapshots under {}", dir.display());
+            let server = Server::open(cluster, config)?;
+            if let Some(report) = server.recovery_report() {
+                println!(
+                    "• recovered generation {} ({} WAL records replayed, {} jobs reconciled)",
+                    report.generation,
+                    report.replayed_records,
+                    report.reconciled.len()
+                );
+            }
+            server
+        }
+        None => Server::new(cluster, config),
+    };
+    let server = Arc::new(server);
+
+    let rpc_config = RpcConfig {
+        addr: addr(flags),
+        workers: flags.get_u64("workers", 16) as usize,
+        queue_depth: flags.get_u64("queue-depth", 64) as usize,
+        ..RpcConfig::default()
+    };
+    let rpc = RpcServer::start(server.clone(), rpc_config)?;
+    println!(
+        "── oar serve: listening on {} ({} nodes, scale={scale}) ──",
+        rpc.addr(),
+        server.cluster().nodes().len()
+    );
+    println!("   Ctrl-C / SIGTERM = drain + clean-shutdown checkpoint");
+
+    signal::install();
+    while !signal::shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    println!("\n• shutdown signal: draining RPC front-end (in-flight requests finish)");
+    let (conns, reqs) = rpc.drain();
+    println!("• served {reqs} requests over {conns} connections");
+    match Arc::try_unwrap(server) {
+        Ok(server) => {
+            // Clean shutdown = checkpoint (WAL compaction) inside.
+            let _ = server.shutdown();
+            println!("• state checkpointed; bye");
+        }
+        Err(shared) => {
+            // A clone is still live (shouldn't happen once the front-end
+            // has joined): checkpoint through the shared handle instead.
+            shared.with_db(|db| {
+                if db.is_durable() {
+                    let _ = db.checkpoint();
+                }
+            });
+            println!("• state checkpointed (shared handle); bye");
+        }
+    }
+    Ok(0)
+}
+
+// ---------------------------------------------------- client commands ----
+
+/// `oar sub`: submit a job (`oarsub`). The command is `--command '...'`;
+/// `--array N` expands a multi-parametric campaign server-side.
+pub fn run_sub(flags: &Flags) -> Result<i32> {
+    // Required, not defaulted: a typo'd `--comand` is silently dropped by
+    // the flag parser, and submitting some other job instead of erroring
+    // would defeat the wire layer's reject-unknown-fields discipline.
+    let Some(command) = flags.values.get("command").cloned() else {
+        anyhow::bail!("sub requires --command '...' (e.g. oar sub --command 'sleep 60')");
+    };
+    let nodes = strict_u64(flags, "nodes", 1)?;
+    let weight = strict_u64(flags, "weight", 1)?;
+    anyhow::ensure!(
+        nodes <= u32::MAX as u64 && weight <= u32::MAX as u64,
+        "--nodes/--weight out of range"
+    );
+    let mut spec = JobSpec {
+        user: flags
+            .values
+            .get("user")
+            .cloned()
+            .or_else(|| std::env::var("USER").ok())
+            .unwrap_or_else(|| "nobody".into()),
+        command,
+        nb_nodes: nodes as u32,
+        weight: weight as u32,
+        ..JobSpec::default()
+    };
+    if flags.has("maxtime") {
+        spec.max_time = Some(strict_u64(flags, "maxtime", 3600)? as i64);
+    }
+    spec.queue = flags.values.get("queue").cloned();
+    spec.properties = flags.values.get("properties").cloned();
+    if flags.has("reservation") {
+        spec.reservation_start = Some(strict_u64(flags, "reservation", 0)? as i64);
+    }
+    if let Some(dir) = flags.values.get("dir") {
+        spec.launching_directory = dir.clone();
+    }
+    spec.best_effort = flags.has("besteffort");
+    if flags.has("interactive") {
+        spec.kind = JobKind::Interactive;
+    }
+
+    // Strict parse + range: `--array 4294967296` must error, not wrap
+    // to 0 and silently submit a single job (mirrors the server side).
+    let array = strict_u64(flags, "array", 1)?;
+    anyhow::ensure!(
+        (1..=100_000).contains(&array),
+        "--array must be in 1..=100000, got {array}"
+    );
+    let mut client = connect(flags)?;
+    let outcome = if array == 1 {
+        client.sub(&spec)?.map(|id| vec![id])
+    } else {
+        client.sub_array(&spec, array as u32)?
+    };
+    match outcome {
+        Ok(ids) => {
+            for id in ids {
+                println!("OAR_JOB_ID={id}");
+            }
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("sub", &e)),
+    }
+}
+
+/// `oar stat`: list jobs (`oarstat`), optionally `--filter "<where>"`.
+pub fn run_stat(flags: &Flags) -> Result<i32> {
+    let mut client = connect(flags)?;
+    match client.stat(flags.values.get("filter").map(String::as_str))? {
+        Ok(mut jobs) => {
+            jobs.sort_by_key(|j| j.id);
+            let rows: Vec<Vec<String>> = jobs
+                .iter()
+                .map(|j| {
+                    vec![
+                        j.id.to_string(),
+                        j.user.clone(),
+                        j.queue_name.clone(),
+                        j.state.to_string(),
+                        j.submission_time.to_string(),
+                        j.start_time.map(|t| t.to_string()).unwrap_or_default(),
+                        j.stop_time.map(|t| t.to_string()).unwrap_or_default(),
+                        j.command.clone(),
+                        j.message.clone(),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(
+                    &[
+                        "id", "user", "queue", "state", "submitted", "started", "stopped",
+                        "command", "message"
+                    ],
+                    &rows
+                )
+            );
+            println!("{} job(s)", rows.len());
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("stat", &e)),
+    }
+}
+
+/// `oar del <id>`: cancel a job (`oardel`).
+pub fn run_del(flags: &Flags) -> Result<i32> {
+    let Some(id) = flags.positional.first().and_then(|s| s.parse::<u64>().ok()) else {
+        anyhow::bail!("usage: oar del <jobId> [--addr HOST:PORT]");
+    };
+    let mut client = connect(flags)?;
+    match client.del(id)? {
+        Ok(state) if state.is_terminal() => {
+            println!("job {id} already {state}; nothing to cancel");
+            Ok(0)
+        }
+        Ok(state) => {
+            println!("job {id} ({state}) cancellation enqueued");
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("del", &e)),
+    }
+}
+
+/// `oar nodes`: fleet state (`oarnodes`).
+pub fn run_nodes(flags: &Flags) -> Result<i32> {
+    let mut client = connect(flags)?;
+    match client.nodes()? {
+        Ok(nodes) => {
+            let rows: Vec<Vec<String>> = nodes
+                .iter()
+                .map(|(host, state, procs)| {
+                    vec![host.clone(), state.clone(), procs.to_string()]
+                })
+                .collect();
+            println!("{}", report::table(&["hostname", "state", "procs"], &rows));
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("nodes", &e)),
+    }
+}
+
+/// `oar queues`: the queue table.
+pub fn run_queues(flags: &Flags) -> Result<i32> {
+    let mut client = connect(flags)?;
+    match client.queues()? {
+        Ok(queues) => {
+            let rows: Vec<Vec<String>> = queues
+                .iter()
+                .map(|q| {
+                    vec![
+                        q.name.clone(),
+                        q.priority.to_string(),
+                        q.policy.as_str().to_string(),
+                        q.default_max_time.to_string(),
+                        if q.max_procs_per_job == u32::MAX {
+                            "-".into()
+                        } else {
+                            q.max_procs_per_job.to_string()
+                        },
+                        if q.active { "yes" } else { "no" }.to_string(),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(
+                    &["queue", "priority", "policy", "default maxTime", "max procs/job", "active"],
+                    &rows
+                )
+            );
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("queues", &e)),
+    }
+}

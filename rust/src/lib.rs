@@ -33,6 +33,9 @@
 //! * [`monitor`] — resource monitoring through the launcher (§2.4).
 //! * [`server`] — the live system: wires db + central + scheduler +
 //!   launcher into a running service with a CLI (`oarsub`/`oarstat`/...).
+//! * [`rpc`] — the network front-end: length-framed JSON protocol,
+//!   threaded TCP server with a bounded worker pool, typed client, and
+//!   the socket-speaking user commands of §2.1 (`oar sub|stat|del|...`).
 
 pub mod admission;
 pub mod bench;
@@ -43,6 +46,7 @@ pub mod db;
 pub mod launcher;
 pub mod matching;
 pub mod monitor;
+pub mod rpc;
 pub mod runtime;
 pub mod sched;
 pub mod server;

@@ -1,0 +1,228 @@
+//! The typed client library: what `oarsub`/`oarstat`/`oardel`/`oarnodes`
+//! are to the paper's server, [`RpcClient`] is to ours — a thin
+//! synchronous connection speaking the length-framed JSON protocol.
+//!
+//! One connection, strictly request/response: each call writes a frame,
+//! blocks for the answer and checks that the echoed request id matches.
+//! Server-side failures come back as the typed [`RpcError`] (stable
+//! `code` + human message) inside `Ok(Err(..))`, transport failures as
+//! the outer `Err` — mirroring how [`crate::server::Server::submit`]
+//! separates rejection from breakage.
+
+use std::fmt;
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::proto;
+use super::wire;
+use crate::types::{Job, JobId, JobSpec, JobState, Queue, Time};
+use crate::util::Json;
+use crate::Result;
+
+/// A protocol-level error response from the server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RpcError {
+    /// Stable machine-readable code ([`super::proto::code`]).
+    pub code: String,
+    /// Human-readable detail (for `admission_rejected`, the rule's
+    /// REJECT message verbatim).
+    pub message: String,
+}
+
+impl fmt::Display for RpcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+/// Outcome of one call: transport errors outside, protocol errors inside.
+pub type CallResult<T> = Result<std::result::Result<T, RpcError>>;
+
+/// A connected RPC client.
+pub struct RpcClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl RpcClient {
+    /// Connect to a serving front-end (`host:port`).
+    pub fn connect(addr: &str) -> Result<RpcClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone()?;
+        Ok(RpcClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+        })
+    }
+
+    /// Set a read timeout for responses (None = block forever).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Raw call: send `method`/`params`, return the `ok` payload or the
+    /// typed error. Public so new methods can be driven before a typed
+    /// wrapper exists.
+    pub fn call(&mut self, method: &str, params: Json) -> CallResult<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(&mut self.writer, &proto::request(id, method, params))?;
+        let doc = wire::read_frame(&mut self.reader)?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+        let rid = doc.get("id").and_then(Json::as_i64).unwrap_or(-1);
+        anyhow::ensure!(
+            rid == id as i64,
+            "response id {rid} does not match request id {id}"
+        );
+        if let Some(err) = doc.get("err") {
+            return Ok(Err(RpcError {
+                code: err
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .unwrap_or(proto::code::INTERNAL)
+                    .to_string(),
+                message: err
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            }));
+        }
+        // Move the payload out of the owned document (a full-table `stat`
+        // answer is multi-MB — no reason to deep-clone it).
+        let Json::Obj(mut map) = doc else {
+            anyhow::bail!("response envelope is not an object");
+        };
+        match map.remove("ok") {
+            Some(ok) => Ok(Ok(ok)),
+            None => anyhow::bail!("response carries neither ok nor err"),
+        }
+    }
+
+    /// `ping`: liveness + clock; returns the server's `now` (ms since its
+    /// start).
+    pub fn ping(&mut self) -> CallResult<Time> {
+        let res = self.call("ping", Json::Null)?;
+        Ok(res.map(|ok| ok.get("now").and_then(Json::as_i64).unwrap_or(0)))
+    }
+
+    /// `sub`: submit one job; the admission rules run server-side.
+    pub fn sub(&mut self, spec: &JobSpec) -> CallResult<JobId> {
+        let res = self.call("sub", proto::spec_to_json(spec))?;
+        match res {
+            Ok(ok) => {
+                let ids = proto::ids_from_json(&ok)?;
+                anyhow::ensure!(ids.len() == 1, "sub acknowledged {} ids", ids.len());
+                Ok(Ok(ids[0]))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `sub` with `array = n`: multi-parametric campaign (`{i}` in the
+    /// command is replaced by the task index server-side).
+    pub fn sub_array(&mut self, spec: &JobSpec, n: u32) -> CallResult<Vec<JobId>> {
+        let mut params = proto::spec_to_json(spec);
+        if let Json::Obj(map) = &mut params {
+            map.insert("array".into(), Json::Num(n as f64));
+        }
+        let res = self.call("sub", params)?;
+        match res {
+            Ok(ok) => Ok(Ok(proto::ids_from_json(&ok)?)),
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `stat`: all jobs, optionally filtered by a WHERE clause over the
+    /// raw job columns.
+    pub fn stat(&mut self, filter: Option<&str>) -> CallResult<Vec<Job>> {
+        let params = match filter {
+            Some(f) => Json::obj(vec![("filter", Json::Str(f.to_string()))]),
+            None => Json::Null,
+        };
+        let res = self.call("stat", params)?;
+        match res {
+            Ok(ok) => {
+                let arr = ok
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("stat result missing jobs"))?;
+                Ok(Ok(arr
+                    .iter()
+                    .map(proto::job_from_json)
+                    .collect::<Result<Vec<_>>>()?))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `del`: request cancellation; returns the state the job was
+    /// observed in when the cancellation was enqueued (terminal states
+    /// mean there was nothing left to cancel).
+    pub fn del(&mut self, job: JobId) -> CallResult<JobState> {
+        let res = self.call("del", Json::obj(vec![("id", Json::Num(job as f64))]))?;
+        match res {
+            Ok(ok) => {
+                let s = ok
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .and_then(JobState::parse)
+                    .ok_or_else(|| anyhow::anyhow!("del result missing state"))?;
+                Ok(Ok(s))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `nodes`: fleet summary as `(hostname, state, nbProcs)` rows.
+    pub fn nodes(&mut self) -> CallResult<Vec<(String, String, u32)>> {
+        let res = self.call("nodes", Json::Null)?;
+        match res {
+            Ok(ok) => {
+                let arr = ok
+                    .get("nodes")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("nodes result missing nodes"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for n in arr {
+                    out.push((
+                        n.get("hostname")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        n.get("state")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        n.get("nbProcs").and_then(Json::as_i64).unwrap_or(0).max(0) as u32,
+                    ));
+                }
+                Ok(Ok(out))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `queues`: the queue table, by decreasing priority.
+    pub fn queues(&mut self) -> CallResult<Vec<Queue>> {
+        let res = self.call("queues", Json::Null)?;
+        match res {
+            Ok(ok) => {
+                let arr = ok
+                    .get("queues")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("queues result missing queues"))?;
+                Ok(Ok(arr
+                    .iter()
+                    .map(proto::queue_from_json)
+                    .collect::<Result<Vec<_>>>()?))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! The network RPC front-end (§2.1–§2.2): the paper's user commands
+//! (`oarsub`, `oarstat`, `oardel`, `oarnodes`) are separate client
+//! programs that talk to the always-running server over TCP sockets —
+//! "the automaton ... listens for external notifications" — and this
+//! module gives the reproduction that client/server boundary.
+//!
+//! Layers, bottom-up:
+//!
+//! * [`wire`] — length-framed JSON frames (8-hex-char length prefix,
+//!   16 MiB cap), the transport unit of the protocol.
+//! * [`proto`] — versioned request/response envelopes with request ids,
+//!   stable error codes, and the typed codecs for jobs, specs and queues.
+//! * [`server`] — [`RpcServer`]: a threaded TCP front-end over a shared
+//!   [`crate::server::Server`] (which is `Sync`: all state sits behind
+//!   the database lock and the central automaton's event buffer) with a
+//!   bounded worker pool, acceptor backpressure and graceful drain.
+//! * [`client`] — [`RpcClient`]: the typed synchronous client library the
+//!   CLI subcommands (`oar sub|stat|del|nodes|queues`) are built on.
+//! * [`signal`] — SIGINT/SIGTERM → clean-shutdown flag for `oar serve`.
+//!
+//! Command flow is identical to in-process use: `sub` runs the admission
+//! rules and then [`crate::central::NotificationHub::notify`], exactly
+//! like [`crate::server::Server::submit`]; `del` is routed through the
+//! automaton's job-event buffer ([`crate::central::JobEvent::Cancel`]) so
+//! cancellation serializes with scheduling rounds. The wire format and
+//! error codes are specified in `docs/PROTOCOL.md`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod signal;
+pub mod wire;
+
+pub use client::{CallResult, RpcClient, RpcError};
+pub use proto::PROTOCOL_VERSION;
+pub use server::{RpcConfig, RpcServer, DEFAULT_ADDR};
+
+/// The front-end shares one [`crate::server::Server`] across its worker
+/// threads; this assertion fails to compile if a refactor ever makes the
+/// server non-shareable.
+#[allow(dead_code)]
+fn assert_server_is_shareable() {
+    fn requires_send_sync<T: Send + Sync>() {}
+    requires_send_sync::<std::sync::Arc<crate::server::Server>>();
+}

@@ -1,0 +1,527 @@
+//! Request/response envelopes and the typed JSON codecs of the protocol
+//! (`docs/PROTOCOL.md`).
+//!
+//! Every request is `{"v": 1, "id": N, "method": "...", "params": {...}}`
+//! and every response echoes the id: `{"v": 1, "id": N, "ok": ...}` on
+//! success, `{"v": 1, "id": N, "err": {"code": "...", "message": "..."}}`
+//! on failure. `v` is the protocol version: a server answers a request
+//! whose version it does not speak with `unsupported_version` (and its
+//! own version in the message), so clients can fail with a clear
+//! diagnostic instead of a decode error.
+
+use crate::types::{
+    Job, JobId, JobKind, JobSpec, JobState, Queue, QueuePolicyKind, ReservationField, Time,
+};
+use crate::util::Json;
+use crate::Result;
+
+/// The protocol version this build speaks.
+pub const PROTOCOL_VERSION: i64 = 1;
+
+/// Stable error codes (`err.code`). Messages are human-readable and may
+/// change; codes are the machine contract.
+pub mod code {
+    /// Envelope or params malformed (missing method, bad field type,
+    /// unknown field...).
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// `v` is not a version this server speaks.
+    pub const UNSUPPORTED_VERSION: &str = "unsupported_version";
+    /// `method` is not part of the protocol.
+    pub const UNKNOWN_METHOD: &str = "unknown_method";
+    /// An admission rule fired `REJECT '<message>'`; the message travels
+    /// verbatim in `err.message`.
+    pub const ADMISSION_REJECTED: &str = "admission_rejected";
+    /// The `stat` filter expression failed to parse.
+    pub const BAD_FILTER: &str = "bad_filter";
+    /// `del` named a job id the database does not know.
+    pub const NO_SUCH_JOB: &str = "no_such_job";
+    /// The server is draining for shutdown and takes no new work.
+    pub const SHUTTING_DOWN: &str = "shutting_down";
+    /// Anything else (e.g. a stored admission rule that fails to parse).
+    pub const INTERNAL: &str = "internal";
+}
+
+/// Build a request envelope.
+pub fn request(id: u64, method: &str, params: Json) -> Json {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("id", Json::Num(id as f64)),
+        ("method", Json::Str(method.to_string())),
+        ("params", params),
+    ])
+}
+
+/// Build a success response.
+pub fn ok_response(id: u64, result: Json) -> Json {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("id", Json::Num(id as f64)),
+        ("ok", result),
+    ])
+}
+
+/// Build an error response.
+pub fn err_response(id: u64, code: &str, message: &str) -> Json {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("id", Json::Num(id as f64)),
+        (
+            "err",
+            Json::obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        ),
+    ])
+}
+
+/// Decode outcome: `(id, method, params)` on success, or the
+/// best-effort request id (0 when unreadable) plus code/message for the
+/// error response.
+pub type DecodedRequest = std::result::Result<(u64, String, Json), (u64, &'static str, String)>;
+
+/// Decode a request envelope.
+pub fn decode_request(doc: &Json) -> DecodedRequest {
+    // The id echoes verbatim, so it gets the same strict-integer
+    // discipline as everything else: truncating 7.9 to 7 would hand an
+    // id-checking client an opaque mismatch instead of a typed error.
+    let id = match doc.get("id") {
+        None | Some(Json::Null) => 0,
+        Some(Json::Num(n)) if n.fract() == 0.0 && *n >= 0.0 => *n as u64,
+        Some(other) => {
+            return Err((
+                0,
+                code::BAD_REQUEST,
+                format!("request id must be a non-negative integer, got {other:?}"),
+            ))
+        }
+    };
+    // A missing or non-integer `v` is a malformed envelope
+    // (`bad_request`); `unsupported_version` is reserved for a
+    // well-formed version this server does not speak. Strict integer
+    // match: 1.5 is not version 1.
+    let v = match doc.get("v") {
+        Some(Json::Num(n)) if n.fract() == 0.0 => *n as i64,
+        None | Some(Json::Null) => {
+            return Err((id, code::BAD_REQUEST, "missing protocol version `v`".into()))
+        }
+        Some(other) => {
+            return Err((
+                id,
+                code::BAD_REQUEST,
+                format!("protocol version `v` must be an integer, got {other:?}"),
+            ))
+        }
+    };
+    if v != PROTOCOL_VERSION {
+        return Err((
+            id,
+            code::UNSUPPORTED_VERSION,
+            format!("request version {v}; this server speaks version {PROTOCOL_VERSION}"),
+        ));
+    }
+    let Some(method) = doc.get("method").and_then(Json::as_str) else {
+        return Err((id, code::BAD_REQUEST, "missing request method".into()));
+    };
+    let params = doc.get("params").cloned().unwrap_or(Json::Null);
+    Ok((id, method.to_string(), params))
+}
+
+/// Strict integer read of an optional numeric field — the one validator
+/// for every integer in `sub` params (spec fields and the `array`
+/// campaign count): fractional values are rejected, never truncated.
+pub fn int_param(doc: &Json, k: &str) -> Result<Option<i64>> {
+    match doc.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) if n.fract() == 0.0 => Ok(Some(*n as i64)),
+        Some(other) => anyhow::bail!("field {k:?} must be an integer, got {other:?}"),
+    }
+}
+
+fn opt_str(v: &Option<String>) -> Json {
+    v.clone().map(Json::Str).unwrap_or(Json::Null)
+}
+
+fn opt_num(v: Option<i64>) -> Json {
+    v.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null)
+}
+
+// ----------------------------------------------------------- JobSpec ----
+
+/// Fields the `sub` params object accepts. `array` is the campaign count
+/// handled by the server, not a spec field.
+const SPEC_FIELDS: &[&str] = &[
+    "user",
+    "command",
+    "nbNodes",
+    "weight",
+    "maxTime",
+    "properties",
+    "queue",
+    "interactive",
+    "reservation",
+    "launchingDirectory",
+    "bestEffort",
+    "array",
+];
+
+/// Encode a submission as `sub` params (field names follow fig. 2, as the
+/// rest of the system does).
+pub fn spec_to_json(spec: &JobSpec) -> Json {
+    Json::obj(vec![
+        ("user", Json::Str(spec.user.clone())),
+        ("command", Json::Str(spec.command.clone())),
+        ("nbNodes", Json::Num(spec.nb_nodes as f64)),
+        ("weight", Json::Num(spec.weight as f64)),
+        ("maxTime", opt_num(spec.max_time)),
+        ("properties", opt_str(&spec.properties)),
+        ("queue", opt_str(&spec.queue)),
+        ("interactive", Json::Bool(spec.kind == JobKind::Interactive)),
+        ("reservation", opt_num(spec.reservation_start)),
+        (
+            "launchingDirectory",
+            Json::Str(spec.launching_directory.clone()),
+        ),
+        ("bestEffort", Json::Bool(spec.best_effort)),
+    ])
+}
+
+/// Decode `sub` params into a [`JobSpec`]. Unknown fields are rejected
+/// (a typo'd field silently ignored would submit a different job than
+/// the user asked for). Absent fields keep [`JobSpec::default`] values so
+/// the admission rules fill them, exactly as in-process submission does.
+pub fn spec_from_json(doc: &Json) -> Result<JobSpec> {
+    let Json::Obj(map) = doc else {
+        anyhow::bail!("sub params must be an object");
+    };
+    for key in map.keys() {
+        anyhow::ensure!(
+            SPEC_FIELDS.contains(&key.as_str()),
+            "unknown submission field {key:?}"
+        );
+    }
+    let str_field = |k: &str| -> Result<Option<String>> {
+        match doc.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(Json::Str(s)) => Ok(Some(s.clone())),
+            Some(other) => anyhow::bail!("field {k:?} must be a string, got {other:?}"),
+        }
+    };
+    let int_field = |k: &str| int_param(doc, k);
+    let bool_field = |k: &str| -> Result<Option<bool>> {
+        match doc.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(Json::Bool(b)) => Ok(Some(*b)),
+            Some(other) => anyhow::bail!("field {k:?} must be a boolean, got {other:?}"),
+        }
+    };
+
+    let mut spec = JobSpec::default();
+    if let Some(u) = str_field("user")? {
+        spec.user = u;
+    }
+    if let Some(c) = str_field("command")? {
+        spec.command = c;
+    }
+    if let Some(n) = int_field("nbNodes")? {
+        anyhow::ensure!((0..=u32::MAX as i64).contains(&n), "nbNodes out of range");
+        spec.nb_nodes = n as u32;
+    }
+    if let Some(w) = int_field("weight")? {
+        anyhow::ensure!((0..=u32::MAX as i64).contains(&w), "weight out of range");
+        spec.weight = w as u32;
+    }
+    spec.max_time = int_field("maxTime")?;
+    spec.properties = str_field("properties")?;
+    spec.queue = str_field("queue")?;
+    if bool_field("interactive")?.unwrap_or(false) {
+        spec.kind = JobKind::Interactive;
+    }
+    spec.reservation_start = int_field("reservation")?;
+    if let Some(d) = str_field("launchingDirectory")? {
+        spec.launching_directory = d;
+    }
+    spec.best_effort = bool_field("bestEffort")?.unwrap_or(false);
+    Ok(spec)
+}
+
+// --------------------------------------------------------------- Job ----
+
+/// Encode a full job row (`stat` results).
+pub fn job_to_json(job: &Job) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(job.id as f64)),
+        ("kind", Json::Str(job.kind.as_str().to_string())),
+        ("infoType", opt_str(&job.info_type)),
+        ("state", Json::Str(job.state.as_str().to_string())),
+        (
+            "reservation",
+            Json::Str(job.reservation.as_str().to_string()),
+        ),
+        ("message", Json::Str(job.message.clone())),
+        ("user", Json::Str(job.user.clone())),
+        ("nbNodes", Json::Num(job.nb_nodes as f64)),
+        ("weight", Json::Num(job.weight as f64)),
+        ("command", Json::Str(job.command.clone())),
+        ("bpid", opt_num(job.bpid.map(|b| b as i64))),
+        ("queue", Json::Str(job.queue_name.clone())),
+        ("maxTime", Json::Num(job.max_time as f64)),
+        ("properties", Json::Str(job.properties.clone())),
+        (
+            "launchingDirectory",
+            Json::Str(job.launching_directory.clone()),
+        ),
+        ("submissionTime", Json::Num(job.submission_time as f64)),
+        ("startTime", opt_num(job.start_time)),
+        ("stopTime", opt_num(job.stop_time)),
+        ("bestEffort", Json::Bool(job.best_effort)),
+        ("reservationStart", opt_num(job.reservation_start)),
+    ])
+}
+
+/// Decode a job row (client side of `stat`).
+pub fn job_from_json(doc: &Json) -> Result<Job> {
+    let req_str = |k: &str| -> Result<String> {
+        doc.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("job record missing string field {k:?}"))
+    };
+    let req_num = |k: &str| -> Result<i64> {
+        doc.get(k)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("job record missing numeric field {k:?}"))
+    };
+    let opt_num_field = |k: &str| doc.get(k).and_then(Json::as_i64);
+    let opt_str_field = |k: &str| doc.get(k).and_then(Json::as_str).map(str::to_string);
+
+    let state_s = req_str("state")?;
+    let state = JobState::parse(&state_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown job state {state_s:?}"))?;
+    let kind = match req_str("kind")?.as_str() {
+        "INTERACTIVE" => JobKind::Interactive,
+        "PASSIVE" => JobKind::Passive,
+        other => anyhow::bail!("unknown job kind {other:?}"),
+    };
+    let reservation = match req_str("reservation")?.as_str() {
+        "None" => ReservationField::None,
+        "toSchedule" => ReservationField::ToSchedule,
+        "Scheduled" => ReservationField::Scheduled,
+        other => anyhow::bail!("unknown reservation field {other:?}"),
+    };
+    Ok(Job {
+        id: req_num("id")?.max(0) as JobId,
+        kind,
+        info_type: opt_str_field("infoType"),
+        state,
+        reservation,
+        message: req_str("message")?,
+        user: req_str("user")?,
+        nb_nodes: req_num("nbNodes")?.max(0) as u32,
+        weight: req_num("weight")?.max(0) as u32,
+        command: req_str("command")?,
+        bpid: opt_num_field("bpid").map(|b| b.max(0) as u32),
+        queue_name: req_str("queue")?,
+        max_time: req_num("maxTime")? as Time,
+        properties: req_str("properties")?,
+        launching_directory: req_str("launchingDirectory")?,
+        submission_time: req_num("submissionTime")? as Time,
+        start_time: opt_num_field("startTime"),
+        stop_time: opt_num_field("stopTime"),
+        best_effort: doc.get("bestEffort").and_then(Json::as_bool).unwrap_or(false),
+        reservation_start: opt_num_field("reservationStart"),
+    })
+}
+
+// ------------------------------------------------------------- Queue ----
+
+/// Encode a queue row (`queues` results).
+pub fn queue_to_json(q: &Queue) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(q.name.clone())),
+        ("priority", Json::Num(q.priority as f64)),
+        ("policy", Json::Str(q.policy.as_str().to_string())),
+        ("defaultMaxTime", Json::Num(q.default_max_time as f64)),
+        ("maxProcsPerJob", Json::Num(q.max_procs_per_job as f64)),
+        ("active", Json::Bool(q.active)),
+    ])
+}
+
+/// Decode a queue row (client side of `queues`).
+pub fn queue_from_json(doc: &Json) -> Result<Queue> {
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("queue record missing name"))?;
+    let policy_s = doc
+        .get("policy")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("queue record missing policy"))?;
+    let policy = QueuePolicyKind::parse(policy_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown queue policy {policy_s:?}"))?;
+    Ok(Queue {
+        name: name.to_string(),
+        priority: doc.get("priority").and_then(Json::as_i64).unwrap_or(0) as i32,
+        policy,
+        default_max_time: doc
+            .get("defaultMaxTime")
+            .and_then(Json::as_i64)
+            .unwrap_or(3600),
+        max_procs_per_job: doc
+            .get("maxProcsPerJob")
+            .and_then(Json::as_i64)
+            .map(|n| n.clamp(0, u32::MAX as i64) as u32)
+            .unwrap_or(u32::MAX),
+        active: doc.get("active").and_then(Json::as_bool).unwrap_or(true),
+    })
+}
+
+/// Encode submission ids (`sub` result).
+pub fn ids_to_json(ids: &[JobId]) -> Json {
+    Json::obj(vec![(
+        "ids",
+        Json::Arr(ids.iter().map(|i| Json::Num(*i as f64)).collect()),
+    )])
+}
+
+/// Decode submission ids (client side of `sub`).
+pub fn ids_from_json(doc: &Json) -> Result<Vec<JobId>> {
+    let arr = doc
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("sub result missing ids"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_i64()
+                .filter(|i| *i >= 0)
+                .map(|i| i as JobId)
+                .ok_or_else(|| anyhow::anyhow!("non-numeric job id in sub result"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_roundtrip() {
+        let req = request(7, "stat", Json::obj(vec![("filter", Json::Null)]));
+        let (id, method, params) = decode_request(&req).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(method, "stat");
+        assert_eq!(params.get("filter"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn version_mismatch_is_flagged_with_the_id() {
+        let mut req = request(9, "ping", Json::Null);
+        if let Json::Obj(m) = &mut req {
+            m.insert("v".into(), Json::Num(99.0));
+        }
+        let (id, code, msg) = decode_request(&req).unwrap_err();
+        assert_eq!(id, 9);
+        assert_eq!(code, code::UNSUPPORTED_VERSION);
+        assert!(msg.contains("99"), "{msg}");
+    }
+
+    #[test]
+    fn missing_method_is_bad_request() {
+        let doc = Json::obj(vec![("v", Json::Num(1.0)), ("id", Json::Num(1.0))]);
+        let (_, code, _) = decode_request(&doc).unwrap_err();
+        assert_eq!(code, code::BAD_REQUEST);
+    }
+
+    #[test]
+    fn spec_roundtrip_preserves_every_field() {
+        let spec = JobSpec {
+            user: "alice".into(),
+            command: "sleep 5".into(),
+            nb_nodes: 3,
+            weight: 2,
+            max_time: Some(120),
+            properties: Some("mem >= 512".into()),
+            queue: Some("default".into()),
+            kind: JobKind::Interactive,
+            reservation_start: Some(4242),
+            launching_directory: "/home/alice".into(),
+            best_effort: true,
+        };
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_defaults_survive_an_empty_object() {
+        let spec = spec_from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(spec, JobSpec::default());
+    }
+
+    #[test]
+    fn unknown_and_mistyped_spec_fields_are_rejected() {
+        let doc = Json::obj(vec![("nbNodez", Json::Num(4.0))]);
+        assert!(spec_from_json(&doc).is_err());
+        let doc = Json::obj(vec![("nbNodes", Json::Str("four".into()))]);
+        assert!(spec_from_json(&doc).is_err());
+        // Fractional integers are rejected, never truncated.
+        let doc = Json::obj(vec![("nbNodes", Json::Num(2.9))]);
+        assert!(spec_from_json(&doc).is_err());
+        let doc = Json::obj(vec![("maxTime", Json::Num(0.5))]);
+        assert!(spec_from_json(&doc).is_err());
+        assert!(spec_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn missing_or_noninteger_version_is_a_malformed_envelope() {
+        // No `v` at all: bad_request, not a bogus "version -1" claim.
+        let doc = Json::obj(vec![
+            ("id", Json::Num(3.0)),
+            ("method", Json::Str("ping".into())),
+        ]);
+        let (id, code, _) = decode_request(&doc).unwrap_err();
+        assert_eq!(id, 3);
+        assert_eq!(code, code::BAD_REQUEST);
+        // Fractional `v`: malformed too (1.5 is not version 1).
+        let mut req = request(3, "ping", Json::Null);
+        if let Json::Obj(m) = &mut req {
+            m.insert("v".into(), Json::Num(1.5));
+        }
+        let (_, code, _) = decode_request(&req).unwrap_err();
+        assert_eq!(code, code::BAD_REQUEST);
+    }
+
+    #[test]
+    fn job_roundtrip() {
+        let spec = JobSpec::batch("bob", "date", 2, 60);
+        let mut job = Job::from_spec(&spec, 1234);
+        job.id = 17;
+        job.state = JobState::Waiting;
+        job.bpid = Some(99);
+        let back = job_from_json(&job_to_json(&job)).unwrap();
+        assert_eq!(back.id, 17);
+        assert_eq!(back.user, "bob");
+        assert_eq!(back.state, JobState::Waiting);
+        assert_eq!(back.bpid, Some(99));
+        assert_eq!(back.submission_time, 1234);
+        assert_eq!(back.max_time, job.max_time);
+    }
+
+    #[test]
+    fn queue_roundtrip() {
+        for q in Queue::standard_set() {
+            let back = queue_from_json(&queue_to_json(&q)).unwrap();
+            assert_eq!(back.name, q.name);
+            assert_eq!(back.priority, q.priority);
+            assert_eq!(back.policy, q.policy);
+            assert_eq!(back.max_procs_per_job, q.max_procs_per_job);
+            assert_eq!(back.active, q.active);
+        }
+    }
+
+    #[test]
+    fn ids_roundtrip() {
+        let ids = vec![1u64, 5, 42];
+        assert_eq!(ids_from_json(&ids_to_json(&ids)).unwrap(), ids);
+        assert!(ids_from_json(&Json::obj(vec![])).is_err());
+    }
+}

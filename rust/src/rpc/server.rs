@@ -1,0 +1,619 @@
+//! The threaded TCP front-end: accepts many concurrent client
+//! connections, serves them from a **bounded worker pool** and drains
+//! in-flight requests on shutdown.
+//!
+//! Shape: one acceptor thread pushes accepted connections into a bounded
+//! queue; `workers` threads pop connections and serve them to completion
+//! (the protocol is strictly request/response per connection, so a worker
+//! owns one connection at a time). Backpressure is the queue bound: when
+//! every worker is busy and the queue is full, the acceptor blocks — new
+//! clients wait in the TCP accept backlog instead of the server
+//! accumulating unbounded per-connection state. This is the paper's §2.2
+//! module discipline applied to the network edge: the front-end only
+//! talks to [`Server`], which serializes all state behind the database
+//! lock and the central automaton's event buffer.
+//!
+//! Graceful drain ([`RpcServer::drain`]): stop accepting, answer the
+//! request each worker is currently processing, then close every
+//! connection (blocked readers are unblocked by shutting down the read
+//! half of their sockets, which they observe as a clean EOF). Queued but
+//! never-served connections are dropped; their clients see EOF before any
+//! response and know nothing was admitted.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::proto::{self, code};
+use super::wire;
+use crate::server::Server;
+use crate::util::Json;
+use crate::Result;
+
+/// Default front-end address, shared by [`RpcConfig::default`] and the
+/// CLI client commands so `oar serve` and `oar stat` always agree.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:6010";
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct RpcConfig {
+    /// Bind address. Use port 0 to let the OS pick (tests/benches).
+    pub addr: String,
+    /// Worker pool size = max connections served concurrently.
+    pub workers: usize,
+    /// Accepted-but-unserved connection bound; the acceptor blocks when
+    /// it is reached (backpressure).
+    pub queue_depth: usize,
+    /// Per-connection socket timeout, applied to idle reads between
+    /// requests *and* to blocked response writes. Bounds two failure
+    /// modes: silent clients pinning workers forever (the pool would
+    /// otherwise wedge once `workers` sockets go quiet), and a peer that
+    /// stops reading stalling drain on a blocked `write`. `None` = no
+    /// timeout.
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for RpcConfig {
+    fn default() -> Self {
+        RpcConfig {
+            addr: DEFAULT_ADDR.into(),
+            workers: 16,
+            queue_depth: 64,
+            io_timeout: Some(Duration::from_secs(60)),
+        }
+    }
+}
+
+impl RpcConfig {
+    /// Ephemeral loopback config for tests and benches.
+    pub fn loopback() -> RpcConfig {
+        RpcConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        }
+    }
+}
+
+/// State shared between the acceptor, the workers and the handle.
+struct Shared {
+    server: Arc<Server>,
+    draining: AtomicBool,
+    queue: Mutex<VecDeque<TcpStream>>,
+    /// Workers wait here for connections...
+    queue_cv: Condvar,
+    /// ...and the acceptor waits here for queue space.
+    space_cv: Condvar,
+    queue_depth: usize,
+    io_timeout: Option<Duration>,
+    /// Read-half handles of connections currently being served, so drain
+    /// can EOF readers blocked between requests.
+    active: Mutex<Vec<(u64, TcpStream)>>,
+    next_conn: AtomicU64,
+    /// Telemetry: requests answered (any outcome).
+    served: AtomicU64,
+    /// Telemetry: connections accepted.
+    accepted_conns: AtomicU64,
+}
+
+/// The RPC front-end handle. Dropping it drains and joins all threads.
+pub struct RpcServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind `config.addr` and start serving `server` over it.
+    pub fn start(server: Arc<Server>, config: RpcConfig) -> Result<RpcServer> {
+        anyhow::ensure!(config.workers > 0, "RpcConfig.workers must be > 0");
+        anyhow::ensure!(config.queue_depth > 0, "RpcConfig.queue_depth must be > 0");
+        let listener = TcpListener::bind(config.addr.as_str())?;
+        let local_addr = listener.local_addr()?;
+        // Non-blocking accept so the acceptor can observe the drain flag.
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            server,
+            draining: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            queue_depth: config.queue_depth,
+            io_timeout: config.io_timeout,
+            active: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(1),
+            served: AtomicU64::new(0),
+            accepted_conns: AtomicU64::new(0),
+        });
+
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("oar-rpc-accept".into())
+                .spawn(move || accept_loop(listener, &shared))
+                .expect("spawn rpc acceptor")
+        };
+        let workers = (0..config.workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("oar-rpc-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn rpc worker")
+            })
+            .collect();
+
+        Ok(RpcServer {
+            local_addr,
+            shared,
+            acceptor: Some(acceptor),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Telemetry: (connections accepted, requests served).
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.shared.accepted_conns.load(Ordering::Relaxed),
+            self.shared.served.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Graceful shutdown: stop accepting, finish the in-flight request on
+    /// every connection, close them all, join every thread. Consumes the
+    /// handle and returns the final `(connections, requests)` totals —
+    /// read *after* the drain, so requests answered while draining are
+    /// counted. The underlying [`Server`] keeps running (checkpointing
+    /// at process shutdown is the owner's job — see `cli serve`).
+    pub fn drain(mut self) -> (u64, u64) {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        // EOF readers parked between requests; responses being written on
+        // the other half still go out.
+        for (_, stream) in self.shared.active.lock().unwrap().iter() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Shared) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Accepted sockets must block on read/write regardless of
+                // the listener's non-blocking flag.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                shared.accepted_conns.fetch_add(1, Ordering::Relaxed);
+                let mut q = shared.queue.lock().unwrap();
+                while q.len() >= shared.queue_depth && !shared.draining.load(Ordering::SeqCst) {
+                    // Backpressure: block until a worker frees a slot.
+                    let (guard, _) = shared
+                        .space_cv
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .unwrap();
+                    q = guard;
+                }
+                if shared.draining.load(Ordering::SeqCst) {
+                    return; // drops the stream: client sees EOF
+                }
+                q.push_back(stream);
+                drop(q);
+                shared.queue_cv.notify_one();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Idle poll. 20 ms balances accept latency after an idle
+                // period (bounded by one sleep; bursts queue in the TCP
+                // backlog and are then accepted back-to-back) against
+                // wakeup load on a long-lived idle daemon (~50/s).
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. EMFILE): back off.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let stream = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    shared.space_cv.notify_one();
+                    break Some(s);
+                }
+                if shared.draining.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (guard, _) = shared
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Some(stream) = stream else { return };
+        if shared.draining.load(Ordering::SeqCst) {
+            continue; // queued connection dropped during drain
+        }
+        // Contain handler panics (e.g. the WAL's by-design I/O-error
+        // panic, or a poisoned lock behind it) to the connection: the
+        // client sees EOF with no response — by the protocol contract,
+        // "not admitted" — instead of the panic silently shrinking the
+        // pool until the server accepts but never answers.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_connection(shared, stream)
+        }));
+        if result.is_err() {
+            eprintln!("oar-rpc: worker caught a handler panic; connection dropped");
+        }
+    }
+}
+
+/// Serve one connection until the client closes, the connection errors,
+/// or the server drains.
+fn serve_connection(shared: &Shared, stream: TcpStream) {
+    let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+    // Socket-level timeouts (shared by every cloned handle): an idle or
+    // stuck peer frees this worker after `io_timeout` instead of pinning
+    // it forever.
+    let _ = stream.set_read_timeout(shared.io_timeout);
+    let _ = stream.set_write_timeout(shared.io_timeout);
+    let Ok(registry_handle) = stream.try_clone() else {
+        return;
+    };
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    shared.active.lock().unwrap().push((conn_id, registry_handle));
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    // Close the race with drain: if the flag was set after we were popped
+    // from the queue but before we registered above, the drain sweep may
+    // have missed this connection — EOF our own read half so the loop
+    // below cannot block on an idle client. (If the flag flips after this
+    // check, the sweep sees our registry entry and EOFs it for us.)
+    if shared.draining.load(Ordering::SeqCst) {
+        let _ = reader.get_ref().shutdown(Shutdown::Read);
+    }
+
+    loop {
+        let doc = match wire::read_frame(&mut reader) {
+            Ok(Some(doc)) => doc,
+            // Clean close, or drain EOF'd the read half between requests.
+            Ok(None) => break,
+            Err(e) => {
+                if is_timeout(&e) {
+                    // Idle past io_timeout (or a stalled mid-frame send):
+                    // close quietly and free the worker.
+                    break;
+                }
+                // Torn frame / bad JSON: answer best-effort (id 0 — the
+                // envelope was unreadable) and cut the connection; framing
+                // is unrecoverable once desynchronized.
+                let resp = proto::err_response(0, code::BAD_REQUEST, &format!("bad frame: {e}"));
+                let _ = wire::write_frame(&mut writer, &resp);
+                break;
+            }
+        };
+        let response = dispatch(shared, &doc);
+        shared.served.fetch_add(1, Ordering::Relaxed);
+        match wire::write_frame(&mut writer, &response) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // The response exceeded the frame cap. Nothing of it was
+                // written, so the stream is still in sync: answer with a
+                // small error envelope instead of killing the connection.
+                let rid = response.get("id").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+                let resp = proto::err_response(
+                    rid,
+                    code::INTERNAL,
+                    "response exceeds the frame cap; narrow the query (e.g. stat with a filter)",
+                );
+                if wire::write_frame(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+        if shared.draining.load(Ordering::SeqCst) {
+            break; // in-flight request answered; close out
+        }
+    }
+    shared.active.lock().unwrap().retain(|(id, _)| *id != conn_id);
+}
+
+/// Was this read/decode failure a socket timeout (idle connection)?
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.source()
+        .and_then(|s| s.downcast_ref::<std::io::Error>())
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+        .unwrap_or(false)
+}
+
+/// Decode the envelope and route to the matching [`Server`] command.
+fn dispatch(shared: &Shared, doc: &Json) -> Json {
+    let (id, method, params) = match proto::decode_request(doc) {
+        Ok(t) => t,
+        Err((id, code, msg)) => return proto::err_response(id, code, &msg),
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        return proto::err_response(id, code::SHUTTING_DOWN, "server is draining");
+    }
+    let server = &shared.server;
+    match method.as_str() {
+        "ping" => proto::ok_response(
+            id,
+            Json::obj(vec![
+                ("protocol", Json::Num(proto::PROTOCOL_VERSION as f64)),
+                ("now", Json::Num(server.now() as f64)),
+            ]),
+        ),
+        "sub" => handle_sub(server, id, &params),
+        "stat" => handle_stat(server, id, &params),
+        "del" => handle_del(server, id, &params),
+        "nodes" => {
+            let nodes = server.nodes();
+            proto::ok_response(
+                id,
+                Json::obj(vec![(
+                    "nodes",
+                    Json::Arr(
+                        nodes
+                            .into_iter()
+                            .map(|(hostname, state, procs)| {
+                                Json::obj(vec![
+                                    ("hostname", Json::Str(hostname)),
+                                    ("state", Json::Str(state)),
+                                    ("nbProcs", Json::Num(procs as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )]),
+            )
+        }
+        "queues" => {
+            let queues = server.queues();
+            proto::ok_response(
+                id,
+                Json::obj(vec![(
+                    "queues",
+                    Json::Arr(queues.iter().map(proto::queue_to_json).collect()),
+                )]),
+            )
+        }
+        other => proto::err_response(
+            id,
+            code::UNKNOWN_METHOD,
+            &format!("unknown method {other:?}"),
+        ),
+    }
+}
+
+/// `sub`: admission rules run in-process inside [`Server::submit`]; a
+/// rule's `REJECT '<message>'` comes back as the `admission_rejected`
+/// error with the message **verbatim**. `array > 1` is the campaign form
+/// ([`Server::submit_array`], all-or-nothing).
+fn handle_sub(server: &Server, id: u64, params: &Json) -> Json {
+    let spec = match proto::spec_from_json(params) {
+        Ok(s) => s,
+        Err(e) => return proto::err_response(id, code::BAD_REQUEST, &e.to_string()),
+    };
+    // Like every spec field, `array` is strictly type-checked (shared
+    // validator): a mistyped value must not silently submit a different
+    // campaign than the user asked.
+    let array = match proto::int_param(params, "array") {
+        Ok(v) => v.unwrap_or(1),
+        Err(e) => return proto::err_response(id, code::BAD_REQUEST, &e.to_string()),
+    };
+    if !(1..=100_000).contains(&array) {
+        return proto::err_response(id, code::BAD_REQUEST, "array must be in 1..=100000");
+    }
+    let outcome = if array == 1 {
+        server.submit(&spec).map(|r| r.map(|one| vec![one]))
+    } else {
+        server.submit_array(&spec, array as u32)
+    };
+    match outcome {
+        Ok(Ok(ids)) => proto::ok_response(id, proto::ids_to_json(&ids)),
+        Ok(Err(reason)) => proto::err_response(id, code::ADMISSION_REJECTED, &reason),
+        // e.g. a stored admission rule failed to parse: surfaced, never
+        // silently dropped.
+        Err(e) => proto::err_response(id, code::INTERNAL, &e.to_string()),
+    }
+}
+
+/// `stat`: optional WHERE filter over the raw job columns.
+fn handle_stat(server: &Server, id: u64, params: &Json) -> Json {
+    let filter = match params.get("filter") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(other) => {
+            return proto::err_response(
+                id,
+                code::BAD_REQUEST,
+                &format!("filter must be a string, got {other:?}"),
+            )
+        }
+    };
+    match server.stat(filter.as_deref()) {
+        Ok(jobs) => proto::ok_response(
+            id,
+            Json::obj(vec![(
+                "jobs",
+                Json::Arr(jobs.iter().map(proto::job_to_json).collect()),
+            )]),
+        ),
+        Err(e) => proto::err_response(id, code::BAD_FILTER, &e.to_string()),
+    }
+}
+
+/// `del`: routed through the central automaton's event buffer
+/// ([`Server::request_delete`]) so cancellation serializes with
+/// scheduling rounds instead of racing them.
+fn handle_del(server: &Server, id: u64, params: &Json) -> Json {
+    // Reject fractional ids instead of truncating: 17.9 must not cancel
+    // job 17.
+    let job = match params.get("id") {
+        Some(Json::Num(n)) if n.fract() == 0.0 && *n >= 0.0 => *n as i64,
+        _ => {
+            return proto::err_response(
+                id,
+                code::BAD_REQUEST,
+                "del requires a non-negative integer id",
+            )
+        }
+    };
+    match server.request_delete(job as u64) {
+        Ok(state) => proto::ok_response(
+            id,
+            Json::obj(vec![
+                ("id", Json::Num(job as f64)),
+                ("state", Json::Str(state.as_str().to_string())),
+                ("enqueued", Json::Bool(!state.is_terminal())),
+            ]),
+        ),
+        Err(e) => proto::err_response(id, code::NO_SUCH_JOB, &e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // End-to-end server tests live in `rust/tests/rpc.rs`; here only the
+    // pure dispatch pieces that need no socket.
+
+    use crate::cluster::VirtualCluster;
+    use crate::server::ServerConfig;
+
+    fn shared() -> Arc<Shared> {
+        let cluster = Arc::new(VirtualCluster::tiny(2, 1));
+        let mut cfg = ServerConfig::fast(0.0);
+        cfg.sched.dense_matching = false;
+        Arc::new(Shared {
+            server: Arc::new(Server::new(cluster, cfg)),
+            draining: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            queue_depth: 4,
+            io_timeout: None,
+            active: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(1),
+            served: AtomicU64::new(0),
+            accepted_conns: AtomicU64::new(0),
+        })
+    }
+
+    #[test]
+    fn dispatch_routes_and_reports_unknown_method() {
+        let shared = shared();
+        let resp = dispatch(&shared, &proto::request(3, "ping", Json::Null));
+        assert!(resp.get("ok").is_some(), "{resp:?}");
+        assert_eq!(resp.get("id").and_then(Json::as_i64), Some(3));
+
+        let resp = dispatch(&shared, &proto::request(4, "frobnicate", Json::Null));
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::UNKNOWN_METHOD));
+    }
+
+    #[test]
+    fn dispatch_while_draining_refuses_new_work() {
+        let shared = shared();
+        shared.draining.store(true, Ordering::SeqCst);
+        let resp = dispatch(&shared, &proto::request(1, "ping", Json::Null));
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::SHUTTING_DOWN));
+    }
+
+    #[test]
+    fn sub_del_stat_via_dispatch() {
+        let shared = shared();
+        let params = Json::obj(vec![
+            ("user", Json::Str("u".into())),
+            ("command", Json::Str("sleep 30".into())),
+            ("maxTime", Json::Num(60.0)),
+        ]);
+        let resp = dispatch(&shared, &proto::request(1, "sub", params));
+        let ids = proto::ids_from_json(resp.get("ok").expect("ok")).unwrap();
+        assert_eq!(ids.len(), 1);
+
+        let resp = dispatch(
+            &shared,
+            &proto::request(2, "del", Json::obj(vec![("id", Json::Num(ids[0] as f64))])),
+        );
+        assert!(resp.get("ok").is_some(), "{resp:?}");
+
+        let resp = dispatch(
+            &shared,
+            &proto::request(3, "del", Json::obj(vec![("id", Json::Num(424242.0))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::NO_SUCH_JOB));
+
+        let filter = Json::obj(vec![("filter", Json::Str("state = 'Error'".into()))]);
+        let resp = dispatch(&shared, &proto::request(4, "stat", filter));
+        assert!(resp.get("ok").is_some());
+
+        // Mistyped params must be rejected, never silently reinterpreted:
+        // a fractional id would otherwise truncate onto another job, and
+        // a string `array` would submit 1 job instead of a campaign.
+        let resp = dispatch(
+            &shared,
+            &proto::request(6, "del", Json::obj(vec![("id", Json::Num(17.9))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_REQUEST));
+        let params = Json::obj(vec![
+            ("command", Json::Str("date".into())),
+            ("array", Json::Str("10".into())),
+        ]);
+        let resp = dispatch(&shared, &proto::request(7, "sub", params));
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_REQUEST));
+        let resp = dispatch(
+            &shared,
+            &proto::request(5, "stat", Json::obj(vec![("filter", Json::Str("(((".into()))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_FILTER));
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal SIGINT/SIGTERM hook, so `oar serve` can run the clean-shutdown
+//! checkpoint (WAL compaction) on Ctrl-C instead of only on normal
+//! return.
+//!
+//! The build is offline/zero-dep, so no `signal-hook`/`libc` crates: on
+//! unix the `signal(2)` symbol is reached directly over FFI (std already
+//! links libc on every unix target). The handler body is
+//! async-signal-safe — a single atomic store — and serving loops poll
+//! [`shutdown_requested`]. Elsewhere [`install`] is a no-op and shutdown
+//! is driven by [`request_shutdown`] (also the test hook).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Has a shutdown signal (SIGINT/SIGTERM) been delivered — or
+/// [`request_shutdown`] been called?
+pub fn shutdown_requested() -> bool {
+    REQUESTED.load(Ordering::SeqCst)
+}
+
+/// Programmatic shutdown request: what the signal handler does, callable
+/// in-process (tests, embedding).
+pub fn request_shutdown() {
+    REQUESTED.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT + SIGTERM handlers (idempotent).
+#[cfg(unix)]
+pub fn install() {
+    extern "C" fn handler(_signum: i32) {
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, handler);
+        signal(SIGTERM, handler);
+    }
+}
+
+/// No signals to hook on non-unix targets; use [`request_shutdown`].
+#[cfg(not(unix))]
+pub fn install() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_flag_roundtrip() {
+        // `install` must at least not crash; the flag path is what the
+        // serve loop actually polls.
+        install();
+        request_shutdown();
+        assert!(shutdown_requested());
+    }
+}

@@ -1,0 +1,146 @@
+//! The wire format: length-framed JSON (specified in `docs/PROTOCOL.md`).
+//!
+//! A frame is `LLLLLLLL payload` — 8 ASCII lower-case hex characters
+//! giving the payload byte length, immediately followed by that many
+//! bytes of UTF-8 JSON. The same framing discipline as the WAL
+//! (`db/wal.rs`), minus the checksum: TCP already guarantees integrity,
+//! the length prefix only has to delimit messages. A frame is hard-capped
+//! at [`MAX_FRAME`] bytes so a corrupt or malicious header cannot make
+//! the server allocate unbounded memory.
+
+use std::io::{Read, Write};
+
+use crate::util::Json;
+use crate::Result;
+
+/// Hard cap on a frame payload (16 MiB). It binds in *both* directions:
+/// `read_frame` rejects headers announcing more, and `write_frame`
+/// refuses to start an oversized frame (`ErrorKind::InvalidData`, with
+/// nothing written — the stream stays in sync, so the server can answer
+/// with an error envelope instead). A `stat` over a large enough jobs
+/// table can exceed this: narrow the filter.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Bytes of the hex length header.
+pub const HEADER_LEN: usize = 8;
+
+/// Serialize `doc` and write it as one frame. The header and payload go
+/// out in a single `write_all` so a frame is never interleaved with
+/// another writer's bytes on the same stream. An over-[`MAX_FRAME`]
+/// document fails with `ErrorKind::InvalidData` before any byte is
+/// written.
+pub fn write_frame(w: &mut impl Write, doc: &Json) -> std::io::Result<()> {
+    let payload = doc.dump();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!(
+                "frame of {} bytes exceeds the {MAX_FRAME}-byte cap",
+                bytes.len()
+            ),
+        ));
+    }
+    let mut buf = Vec::with_capacity(HEADER_LEN + bytes.len());
+    buf.extend_from_slice(format!("{:08x}", bytes.len()).as_bytes());
+    buf.extend_from_slice(bytes);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection
+/// cleanly at a frame boundary; EOF anywhere inside a frame is an error
+/// (a torn frame — the connection died mid-message).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut header = [0u8; HEADER_LEN];
+    // Read the first byte separately: zero bytes here is a clean close,
+    // not a protocol violation.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    header[0] = first[0];
+    r.read_exact(&mut header[1..])?;
+    let text = std::str::from_utf8(&header)
+        .map_err(|_| anyhow::anyhow!("non-UTF8 frame header"))?;
+    let len = usize::from_str_radix(text, 16)
+        .map_err(|_| anyhow::anyhow!("bad frame header {text:?}"))?;
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)?;
+    Ok(Some(Json::parse(text)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_over_a_buffer() {
+        let doc = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("method", Json::Str("ping".into())),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &doc).unwrap();
+        write_frame(&mut buf, &Json::Null).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(doc));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Json::Null));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn header_is_fixed_width_hex() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Bool(true)).unwrap();
+        assert_eq!(&buf[..HEADER_LEN], b"00000004");
+        assert_eq!(&buf[HEADER_LEN..], b"true");
+    }
+
+    #[test]
+    fn torn_frames_are_errors_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Str("hello world".into())).unwrap();
+        // cut inside the header
+        let mut r = &buf[..4];
+        assert!(read_frame(&mut r).is_err());
+        // cut inside the payload
+        let mut r = &buf[..HEADER_LEN + 3];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn bad_header_and_oversized_frames_are_rejected() {
+        let mut r = &b"zzzzzzzz{}"[..];
+        assert!(read_frame(&mut r).is_err());
+        let mut r = &b"ffffffff"[..]; // 4 GiB claim, no payload
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_documents_are_refused_before_any_byte_is_written() {
+        let doc = Json::Str("x".repeat(MAX_FRAME + 1));
+        let mut buf = Vec::new();
+        let err = write_frame(&mut buf, &doc).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(buf.is_empty(), "stream must stay in sync");
+    }
+
+    #[test]
+    fn garbage_payload_is_an_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"00000003not");
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use crate::admission::{self, Admission};
 use crate::central::{JobEvent, NotificationHub, Planner, Task, Work};
 use crate::cluster::VirtualCluster;
-use crate::db::{Accounting, Db, Expr};
+use crate::db::{Accounting, Db, DbError, Expr};
 use crate::launcher::{Launcher, LauncherConfig};
 use crate::matching::ScheduleStep;
 use crate::monitor;
@@ -168,6 +168,29 @@ impl Server {
         // the last logged instant.
         let now = db.events().last().map(|e| e.time).unwrap_or(0);
         let reconciled = db.reconcile_in_flight(config.recovery, now);
+        // Apply cancellation intents a crash interrupted *before* the
+        // automaton exists: an acked `del` logs `DELETION_REQUESTED`
+        // (WAL-appended) ahead of its in-memory Cancel event, and a
+        // recovered short job could otherwise be rescheduled and run to
+        // completion before any replayed event is processed. Terminal
+        // jobs (the cancel did run, or reconciliation failed them) are
+        // left alone; no launcher kill is needed — the previous
+        // process's executions died with it. One pass over the event
+        // log, the same order of work recovery already did to replay it.
+        let pending: std::collections::BTreeSet<JobId> = db
+            .events()
+            .iter()
+            .filter(|e| e.kind == "DELETION_REQUESTED")
+            .filter_map(|e| e.job)
+            .collect();
+        for id in pending {
+            let Ok(job) = db.job(id) else { continue };
+            if job.state.is_terminal() {
+                continue;
+            }
+            let _ = db.fail_job(id, "cancelled by user", now);
+            db.log_event(now, "DELETION", Some(id), &job.user);
+        }
         let report = RecoveryReport {
             generation: stats.generation,
             snapshot_loaded: stats.snapshot_loaded,
@@ -297,7 +320,15 @@ impl Server {
             match self.submit(&task)? {
                 Ok(id) => ids.push(id),
                 Err(reason) => {
-                    // all-or-nothing: cancel what was already inserted
+                    // All-or-nothing: cancel what was already inserted.
+                    // Deliberately the *synchronous* path: the rejection
+                    // must not be returned while rolled-back tasks are
+                    // still live (an async Cancel could let a fast task
+                    // finish after the client was told nothing was
+                    // admitted). `cancel_job` holds the db lock and
+                    // every consumer re-checks job state under it, so
+                    // running here — including on an RPC worker — cannot
+                    // corrupt a concurrent scheduling round.
                     for id in ids {
                         let _ = self.delete(id);
                     }
@@ -309,22 +340,39 @@ impl Server {
     }
 
     /// `oardel`: cancel a job (waiting → Error; running → killed).
+    /// Synchronous form for in-process callers; the body is the same
+    /// [`cancel_job`] the automaton runs for [`JobEvent::Cancel`].
     pub fn delete(&self, id: JobId) -> Result<()> {
+        cancel_job(&self.inner, id, self.inner.now())?;
+        Ok(())
+    }
+
+    /// `oardel` over RPC: route the cancellation through the central
+    /// automaton's event buffer instead of running it on the caller's
+    /// thread, so a delete serializes with scheduling rounds (it can
+    /// never interleave with the apply phase of a round). Returns the
+    /// state the job was observed in at enqueue time; a terminal state
+    /// means there was nothing left to cancel.
+    ///
+    /// The acknowledgment is durable: a `DELETION_REQUESTED` event is
+    /// logged (and therefore WAL-appended on a durable server) *before*
+    /// the in-memory event is enqueued, and [`Server::open`] applies
+    /// cancellations whose processing a crash interrupted directly to
+    /// the recovered database, before scheduling resumes — an acked
+    /// `del` is never silently forgotten.
+    pub fn request_delete(&self, id: JobId) -> Result<JobState> {
         let now = self.inner.now();
         let mut db = self.inner.db.lock().unwrap();
         let job = db.job(id)?;
-        if job.state.is_terminal() {
-            return Ok(());
+        let state = job.state;
+        if !state.is_terminal() {
+            // The audit trail records who the cancellation targets, like
+            // SUBMISSION/DELETION do.
+            db.log_event(now, "DELETION_REQUESTED", Some(id), &job.user);
+            drop(db);
+            self.inner.hub.push_event(JobEvent::Cancel { job: id, at: now });
         }
-        let nodes = db.assigned_nodes(id);
-        db.fail_job(id, "cancelled by user", now)?;
-        db.log_event(now, "DELETION", Some(id), &job.user);
-        drop(db);
-        if !nodes.is_empty() {
-            self.inner.launcher.kill(&nodes);
-        }
-        self.inner.hub.notify(Task::Schedule);
-        Ok(())
+        Ok(state)
     }
 
     /// `oarstat`: all jobs (optionally filtered by a WHERE clause over the
@@ -344,6 +392,11 @@ impl Server {
     /// `oarnodes`: fleet state.
     pub fn nodes(&self) -> Vec<(String, String, u32)> {
         self.with_db(monitor::fleet_summary)
+    }
+
+    /// The queue table, by decreasing priority (`queues` RPC method).
+    pub fn queues(&self) -> Vec<Queue> {
+        self.with_db(|db| db.queues_by_priority())
     }
 
     /// `oarhold` / `oarresume`.
@@ -463,6 +516,9 @@ fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Plann
                 }
                 Work::Task(Task::CheckJobs) => check_jobs(&inner),
                 Work::Event(JobEvent::Ended { job, at, ok }) => finish_job(&inner, job, at, ok),
+                Work::Event(JobEvent::Cancel { job, at }) => {
+                    let _ = cancel_job(&inner, job, at);
+                }
                 Work::Event(JobEvent::LaunchFailed { job, at }) => {
                     let mut db = inner.db.lock().unwrap();
                     let _ = db.fail_job(job, "launch failed", at);
@@ -593,6 +649,30 @@ fn spawn_execution(inner: Arc<Inner>, id: JobId, nodes: Vec<NodeId>, runtime_ms:
             inner.hub.push_event(JobEvent::Ended { job: id, at, ok: true });
         })
         .expect("spawn execution thread");
+}
+
+/// The `oardel` body, shared by the synchronous command path and the
+/// automaton's [`JobEvent::Cancel`] arm: fail the job through the
+/// abnormal path, reclaim its nodes, trigger a scheduling round.
+/// Idempotent — an already-terminal job is a successful no-op, so a
+/// delete racing normal termination is harmless from either path;
+/// unknown ids are an error (one lock acquisition covers the existence
+/// check and the cancellation).
+fn cancel_job(inner: &Arc<Inner>, id: JobId, at: Time) -> std::result::Result<(), DbError> {
+    let mut db = inner.db.lock().unwrap();
+    let job = db.job(id)?;
+    if job.state.is_terminal() {
+        return Ok(());
+    }
+    let nodes = db.assigned_nodes(id);
+    let _ = db.fail_job(id, "cancelled by user", at);
+    db.log_event(at, "DELETION", Some(id), &job.user);
+    drop(db);
+    if !nodes.is_empty() {
+        inner.launcher.kill(&nodes);
+    }
+    inner.hub.notify(Task::Schedule);
+    Ok(())
 }
 
 fn finish_job(inner: &Arc<Inner>, id: JobId, at: Time, ok: bool) {
@@ -728,6 +808,47 @@ mod tests {
         let job = server.with_db(|db| db.job(id)).unwrap();
         assert_eq!(job.state, JobState::Error);
         assert!(server.wait_all_terminal(Duration::from_secs(20)));
+    }
+
+    #[test]
+    fn request_delete_routes_through_the_automaton() {
+        let server = test_server_scaled(0.05);
+        let _block = server
+            .submit(&JobSpec::batch("a", "sleep 30", 4, 60))
+            .unwrap()
+            .unwrap();
+        let id = server
+            .submit(&JobSpec::batch("b", "date", 4, 60))
+            .unwrap()
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let state = server.request_delete(id).unwrap();
+        assert_eq!(state, JobState::Waiting);
+        // The Cancel event is processed by the automaton thread, not the
+        // caller: poll for the outcome.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = server.with_db(|db| db.job(id)).unwrap().state;
+            if s == JobState::Error {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "cancel event not processed, job stuck in {s}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(server.request_delete(999_999).is_err(), "unknown id must error");
+        assert!(server.wait_all_terminal(Duration::from_secs(30)));
+    }
+
+    #[test]
+    fn queues_are_served_by_priority() {
+        let server = test_server();
+        let queues = server.queues();
+        assert_eq!(queues.len(), 2);
+        assert_eq!(queues[0].name, "default");
+        assert_eq!(queues[1].name, "besteffort");
     }
 
     #[test]

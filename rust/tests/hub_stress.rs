@@ -1,0 +1,191 @@
+//! Stress/property tests of [`NotificationHub`] under concurrency: the
+//! §2.2 contract is that notifications from any number of threads never
+//! wedge the automaton, redundant `Schedule` notifications coalesce, and
+//! job events — which carry payloads — are never lost or duplicated.
+//! With the RPC front-end, every worker thread is now a notifier, so this
+//! is the contention profile production actually sees.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oar::central::{JobEvent, NotificationHub, Task, Work};
+use oar::util::Rng;
+
+/// Drain the hub the way the automaton does (poll-until-empty + bounded
+/// wait), counting what was seen, until `Shutdown` arrives.
+fn spawn_consumer(
+    hub: Arc<NotificationHub>,
+    schedules: Arc<AtomicU64>,
+    events: Arc<AtomicU64>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        while let Some(w) = hub.poll() {
+            match w {
+                Work::Task(Task::Shutdown) => return,
+                Work::Task(Task::Schedule) => {
+                    schedules.fetch_add(1, Ordering::Relaxed);
+                }
+                Work::Task(_) => {}
+                Work::Event(_) => {
+                    events.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        hub.wait_timeout(Duration::from_millis(5));
+    })
+}
+
+/// Block until `events` reaches `expected` (the wedge detector: if the
+/// hub loses a wakeup or an event, this fails at the deadline instead of
+/// hanging the suite).
+fn await_events(events: &AtomicU64, expected: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while events.load(Ordering::Relaxed) < expected {
+        assert!(
+            Instant::now() < deadline,
+            "hub wedged: {}/{} events drained",
+            events.load(Ordering::Relaxed),
+            expected
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn notification_storm_never_wedges_and_still_coalesces() {
+    const THREADS: u64 = 16;
+    const PER: u64 = 500;
+    let hub = Arc::new(NotificationHub::new());
+    let schedules = Arc::new(AtomicU64::new(0));
+    let events = Arc::new(AtomicU64::new(0));
+    let consumer = spawn_consumer(hub.clone(), schedules.clone(), events.clone());
+
+    let producers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let hub = hub.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER {
+                    hub.notify(Task::Schedule);
+                    if i % 7 == 0 {
+                        hub.push_event(JobEvent::Ended {
+                            job: t * PER + i,
+                            at: i as i64,
+                            ok: true,
+                        });
+                    }
+                    if i % 11 == 0 {
+                        hub.notify(Task::Monitor);
+                    }
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+
+    let expected_events = THREADS * ((PER + 6) / 7);
+    await_events(&events, expected_events);
+    hub.notify(Task::Shutdown);
+    consumer.join().unwrap();
+
+    assert_eq!(
+        events.load(Ordering::Relaxed),
+        expected_events,
+        "events must be delivered exactly once"
+    );
+    let accepted = hub.accepted.load(Ordering::Relaxed);
+    let discarded = hub.discarded.load(Ordering::Relaxed);
+    let total_notifies = THREADS * PER          // Schedule
+        + THREADS * ((PER + 10) / 11)           // Monitor
+        + 1; // Shutdown
+    assert_eq!(
+        accepted + discarded,
+        total_notifies,
+        "every notification is either accepted or coalesced, never dropped on the floor"
+    );
+    assert!(discarded > 0, "a {THREADS}-thread storm must coalesce");
+    let seen = schedules.load(Ordering::Relaxed);
+    assert!(seen >= 1, "at least one Schedule must be dispatched");
+    assert!(
+        seen <= accepted,
+        "dispatched Schedules ({seen}) cannot exceed accepted notifications ({accepted})"
+    );
+}
+
+#[test]
+fn randomized_interleavings_deliver_every_event_exactly_once() {
+    for seed in [1u64, 7, 42, 1337] {
+        const THREADS: u64 = 8;
+        const OPS: u64 = 400;
+        let hub = Arc::new(NotificationHub::new());
+        let schedules = Arc::new(AtomicU64::new(0));
+        let events = Arc::new(AtomicU64::new(0));
+        let pushed = Arc::new(AtomicU64::new(0));
+        let notified = Arc::new(AtomicU64::new(0));
+        let consumer = spawn_consumer(hub.clone(), schedules.clone(), events.clone());
+
+        let producers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let hub = hub.clone();
+                let pushed = pushed.clone();
+                let notified = notified.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed.wrapping_mul(0x9e37).wrapping_add(t));
+                    for i in 0..OPS {
+                        match rng.below(5) {
+                            0 => {
+                                hub.push_event(JobEvent::Ended {
+                                    job: t * OPS + i,
+                                    at: i as i64,
+                                    ok: i % 2 == 0,
+                                });
+                                pushed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            1 => {
+                                hub.push_event(JobEvent::LaunchFailed {
+                                    job: t * OPS + i,
+                                    at: i as i64,
+                                });
+                                pushed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            2 => {
+                                hub.notify(Task::Monitor);
+                                notified.fetch_add(1, Ordering::Relaxed);
+                            }
+                            3 => {
+                                hub.notify(Task::CheckJobs);
+                                notified.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => {
+                                hub.notify(Task::Schedule);
+                                notified.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+
+        await_events(&events, pushed.load(Ordering::Relaxed));
+        hub.notify(Task::Shutdown);
+        consumer.join().unwrap();
+
+        assert_eq!(
+            events.load(Ordering::Relaxed),
+            pushed.load(Ordering::Relaxed),
+            "seed {seed}: every pushed event exactly once"
+        );
+        let accepted = hub.accepted.load(Ordering::Relaxed);
+        let discarded = hub.discarded.load(Ordering::Relaxed);
+        assert_eq!(
+            accepted + discarded,
+            notified.load(Ordering::Relaxed) + 1, // + Shutdown
+            "seed {seed}: notification accounting must balance"
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Grid federation walkthrough: boot three asymmetric loopback clusters,
+//! farm a 60-task campaign across them as best-effort jobs, and watch the
+//! meta-scheduler probe, dispatch and reconcile — including a mid-campaign
+//! cluster kill + rejoin, the scenario the grid layer exists for.
+//!
+//! Run with: `cargo run --release --example grid_campaign`
+
+use std::time::Duration;
+
+use oar::grid::{Grid, GridConfig, TestGrid};
+use oar::types::CampaignSpec;
+
+fn main() -> oar::Result<()> {
+    println!("── grid federation: 3 clusters (8 + 4 + 2 processors) ──\n");
+    let mut fleet = TestGrid::start(&[(4, 2), (2, 2), (1, 2)], 0.02)?;
+    for i in 0..fleet.len() {
+        println!("  {} listening on {}", fleet.name(i), fleet.addr(i));
+    }
+
+    let grid = Grid::start(GridConfig::fast(fleet.cluster_configs(16)))?;
+    let id = grid.submit_campaign(&CampaignSpec::bag(
+        "demo",
+        "alice",
+        "sleep 5", // 100 ms per task at the harness scale
+        60,
+    ))?;
+    println!("\ncampaign {id}: 60 tasks, farmed as best-effort jobs\n");
+
+    let mut killed = false;
+    let mut rebooted = false;
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        let p = grid.campaign_progress(id)?;
+        println!(
+            "  pending={:<3} dispatched={:<3} done={:<3} failed={}",
+            p.pending, p.dispatched, p.done, p.failed
+        );
+        if !killed && p.done >= 15 {
+            println!("  ✂ killing cluster c1 mid-campaign");
+            fleet.kill(1);
+            killed = true;
+        }
+        if killed && !rebooted && grid.counters().blacklists >= 1 {
+            println!("  ⟳ c1 blacklisted; rebooting it on the same address");
+            fleet.reboot(1)?;
+            rebooted = true;
+        }
+        if p.drained() {
+            break;
+        }
+    }
+
+    let p = grid.campaign_progress(id)?;
+    let c = grid.counters();
+    println!("\n── drained: {} done, {} failed ──", p.done, p.failed);
+    println!(
+        "   dispatched={} retried={} orphaned={} blacklists={} rejoins={}",
+        c.dispatched, c.retried, c.orphaned, c.blacklists, c.rejoins
+    );
+    for s in grid.clusters() {
+        println!(
+            "   {}: completed {} task(s), {} dispatched",
+            s.name, s.completed_total, s.dispatched_total
+        );
+    }
+    let _ = grid.shutdown();
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Grid federation bench: a bag-of-tasks campaign farmed over three
+//! asymmetric loopback clusters, measuring tasks/sec, time-to-drain and
+//! dispatch fairness (per-cluster completion share vs. capacity share,
+//! summarized as Jain's fairness index over share ratios). Emits
+//! `BENCH_grid.json` at the repo root alongside the DB/WAL/RPC benches.
+//!
+//! Knobs: `OAR_GRID_TASKS` (default 400), `OAR_GRID_SLEEP` (simulated
+//! task seconds, default 2 — 40 ms at the harness scale of 0.02).
+//!
+//! The run doubles as a correctness gate: every task must drain `Done`
+//! with a recorded placement, each cluster's terminated tagged jobs must
+//! equal the grid's mapping (zero lost, zero duplicated), and the bench
+//! exits non-zero otherwise.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use oar::grid::{Grid, GridConfig, TestGrid};
+use oar::types::{CampaignSpec, GridTaskState, JobState};
+use oar::util::Json;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let tasks = env_u64("OAR_GRID_TASKS", 400).clamp(1, 100_000) as u32;
+    let sleep_s = env_u64("OAR_GRID_SLEEP", 2);
+    // 8 + 4 + 2 processors: capacity shares 4/7, 2/7, 1/7.
+    let shapes: &[(u32, u32)] = &[(4, 2), (2, 2), (1, 2)];
+    println!("== grid: {tasks} tasks (sleep {sleep_s}) over 3 asymmetric clusters ==\n");
+
+    let fleet = TestGrid::start(shapes, 0.02).expect("boot fleet");
+    let grid = Grid::start(GridConfig::fast(fleet.cluster_configs(16))).expect("boot grid");
+
+    let t0 = Instant::now();
+    let id = grid
+        .submit_campaign(&CampaignSpec::bag(
+            "bench",
+            "grid",
+            &format!("sleep {sleep_s}"),
+            tasks,
+        ))
+        .expect("submit campaign");
+    let drained = grid.wait_campaign_drained(id, Duration::from_secs(600));
+    let drain = t0.elapsed();
+
+    let p = grid.campaign_progress(id).expect("progress");
+    let counters = grid.counters();
+    let statuses = grid.clusters();
+
+    // Correctness gate: zero lost, zero duplicated, zero stranded.
+    let task_rows = grid.tasks(id);
+    let all_done = task_rows.iter().all(|t| t.state == GridTaskState::Done);
+    let mut mapped = vec![0usize; shapes.len()];
+    for t in &task_rows {
+        if let Some(c) = t.cluster.as_deref().and_then(|c| c.strip_prefix('c')) {
+            if let Ok(i) = c.parse::<usize>() {
+                mapped[i] += 1;
+            }
+        }
+    }
+    let mut duplicated = 0usize;
+    let mut lost = 0usize;
+    for i in 0..shapes.len() {
+        let remote = fleet.tagged_jobs_in_state(i, JobState::Terminated);
+        duplicated += remote.saturating_sub(mapped[i]);
+        lost += mapped[i].saturating_sub(remote);
+    }
+    let ok = drained && all_done && p.done == tasks && p.failed == 0 && duplicated == 0 && lost == 0;
+
+    // Fairness: completion share / capacity share per cluster, folded
+    // into Jain's index ((Σx)² / (n·Σx²); 1.0 = perfectly proportional).
+    let capacity: Vec<f64> = shapes.iter().map(|(n, p)| (n * p) as f64).collect();
+    let cap_total: f64 = capacity.iter().sum();
+    let ratios: Vec<f64> = (0..shapes.len())
+        .map(|i| (mapped[i] as f64 / tasks as f64) / (capacity[i] / cap_total))
+        .collect();
+    let jain = {
+        let sum: f64 = ratios.iter().sum();
+        let sq: f64 = ratios.iter().map(|r| r * r).sum();
+        (sum * sum) / (ratios.len() as f64 * sq).max(1e-12)
+    };
+    let tasks_per_sec = tasks as f64 / drain.as_secs_f64().max(1e-9);
+
+    println!("tasks                  {tasks} ({} done, {} failed)", p.done, p.failed);
+    println!("time to drain          {drain:?}");
+    println!("tasks/sec              {tasks_per_sec:.1}");
+    println!("dispatch fairness      jain={jain:.3} (share/capacity ratios {ratios:?})");
+    println!("verified               lost={lost} duplicated={duplicated}");
+    println!(
+        "counters               dispatched={} retried={} orphaned={} transport_errors={} rounds={}",
+        counters.dispatched,
+        counters.retried,
+        counters.orphaned,
+        counters.transport_errors,
+        counters.rounds
+    );
+    for (i, s) in statuses.iter().enumerate() {
+        println!(
+            "  {}  procs={}  completed={}  ({:.1}% vs capacity {:.1}%)",
+            s.name,
+            capacity[i],
+            s.completed_total,
+            100.0 * mapped[i] as f64 / tasks as f64,
+            100.0 * capacity[i] / cap_total
+        );
+    }
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_grid.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("grid".into())),
+        ("tasks", Json::Num(tasks as f64)),
+        ("clusters", Json::Num(shapes.len() as f64)),
+        ("tasks_per_sec", Json::Num(tasks_per_sec)),
+        ("drain_ms", Json::Num(drain.as_millis() as f64)),
+        ("fairness_jain", Json::Num(jain)),
+        (
+            "per_cluster",
+            Json::Arr(
+                (0..shapes.len())
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("name", Json::Str(format!("c{i}"))),
+                            ("procs", Json::Num(capacity[i])),
+                            ("completed", Json::Num(mapped[i] as f64)),
+                            ("share_vs_capacity", Json::Num(ratios[i])),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "verified",
+            Json::obj(vec![
+                ("lost", Json::Num(lost as f64)),
+                ("duplicated", Json::Num(duplicated as f64)),
+                ("failed", Json::Num(p.failed as f64)),
+                ("drained", Json::Bool(drained)),
+            ]),
+        ),
+        ("dispatched", Json::Num(counters.dispatched as f64)),
+        ("retried", Json::Num(counters.retried as f64)),
+        ("rounds", Json::Num(counters.rounds as f64)),
+    ]);
+    std::fs::write(&out, doc.dump()).expect("write BENCH_grid.json");
+    println!("\nwrote {}", out.display());
+
+    let _ = grid.shutdown();
+    if !ok {
+        eprintln!("GRID FEDERATION VERIFICATION FAILED");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,294 @@
+//! The `oar grid` subcommands: drive the federation layer from the
+//! command line.
+//!
+//! * `oar grid sub` — submit a bag-of-tasks campaign and run the grid
+//!   meta-scheduler in-process until it drains (CiGri as a driver
+//!   command rather than a daemon: the grid state lives in `--data-dir`
+//!   when given, so an interrupted run resumes where it stopped).
+//! * `oar grid stat` — inspect the persisted campaigns/tasks of a grid
+//!   state directory without dispatching anything.
+//! * `oar grid clusters` — probe each cluster's `load` RPC and print the
+//!   federation view.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::bench::report;
+use crate::cli::Flags;
+use crate::db::Db;
+use crate::grid::{ClusterConfig, Grid, GridConfig};
+use crate::rpc::RpcClient;
+use crate::types::{CampaignSpec, CampaignState, GridTaskState};
+use crate::Result;
+
+pub fn run_grid(flags: &Flags) -> Result<i32> {
+    match flags.positional.first().map(String::as_str) {
+        Some("sub") => grid_sub(flags),
+        Some("stat") => grid_stat(flags),
+        Some("clusters") => grid_clusters(flags),
+        other => {
+            eprintln!(
+                "unknown grid subcommand {:?}; expected sub|stat|clusters",
+                other.unwrap_or("")
+            );
+            Ok(2)
+        }
+    }
+}
+
+/// Parse `--clusters host:port,host:port,...` into grid cluster configs.
+/// Each cluster is *named by its address*: persisted `grid_tasks`
+/// placements key on the name, so it must stay stable when a `--data-dir`
+/// run is resumed with the addresses listed in a different order —
+/// positional names (`c0`, `c1`, ...) would silently remap every
+/// in-flight placement.
+fn cluster_list(flags: &Flags, cap: u32) -> Result<Vec<ClusterConfig>> {
+    let Some(raw) = flags.values.get("clusters") else {
+        anyhow::bail!("requires --clusters HOST:PORT,HOST:PORT,...");
+    };
+    let clusters: Vec<ClusterConfig> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(|addr| ClusterConfig {
+            name: addr.to_string(),
+            addr: addr.to_string(),
+            max_outstanding: cap,
+        })
+        .collect();
+    anyhow::ensure!(!clusters.is_empty(), "--clusters names no addresses");
+    let mut names: Vec<&str> = clusters.iter().map(|c| c.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    anyhow::ensure!(
+        names.len() == clusters.len(),
+        "--clusters lists the same address twice"
+    );
+    Ok(clusters)
+}
+
+fn grid_sub(flags: &Flags) -> Result<i32> {
+    let Some(command) = flags.values.get("command").cloned() else {
+        anyhow::bail!(
+            "grid sub requires --command '...' (use {{i}} for the task index)"
+        );
+    };
+    let tasks = flags.get_u64("tasks", 100);
+    anyhow::ensure!(
+        (1..=1_000_000).contains(&tasks),
+        "--tasks must be in 1..=1000000"
+    );
+    let cap = flags.get_u64("cap", 32) as u32;
+    let clusters = cluster_list(flags, cap)?;
+    let config = GridConfig {
+        clusters,
+        data_dir: flags.values.get("data-dir").map(PathBuf::from),
+        round_every: Duration::from_millis(flags.get_u64("round-ms", 200)),
+        retry_budget: flags.get_u64("retries", 5) as u32,
+        stale_after: Duration::from_secs(flags.get_u64("stale", 600)),
+        ..GridConfig::default()
+    };
+    let spec = CampaignSpec {
+        name: flags
+            .values
+            .get("name")
+            .cloned()
+            .unwrap_or_else(|| "campaign".into()),
+        user: flags
+            .values
+            .get("user")
+            .cloned()
+            .or_else(|| std::env::var("USER").ok())
+            .unwrap_or_else(|| "nobody".into()),
+        command,
+        nb_nodes: flags.get_u64("nodes", 1) as u32,
+        weight: flags.get_u64("weight", 1) as u32,
+        max_time: flags.get_u64("maxtime", 3600) as i64,
+        tasks: tasks as u32,
+    };
+
+    let grid = Grid::start(config)?;
+    // With --data-dir, an interrupted run resumes: an Active campaign
+    // with the same identity is reattached instead of resubmitted (its
+    // finished tasks stay finished); anything else is a new campaign.
+    let resumed = grid.campaigns().into_iter().find(|c| {
+        c.state == CampaignState::Active
+            && c.name == spec.name
+            && c.user == spec.user
+            && c.command == spec.command
+            && c.tasks == spec.tasks
+            && c.nb_nodes == spec.nb_nodes
+            && c.weight == spec.weight
+            && c.max_time == spec.max_time
+    });
+    let id = match resumed {
+        Some(c) => {
+            println!("resuming campaign {} ({} tasks) from grid state", c.id, c.tasks);
+            c.id
+        }
+        None => grid.submit_campaign(&spec)?,
+    };
+    println!("GRID_CAMPAIGN_ID={id} ({} tasks)", spec.tasks);
+
+    let timeout = Duration::from_secs(flags.get_u64("timeout", 3600));
+    let started = std::time::Instant::now();
+    loop {
+        let p = grid.campaign_progress(id)?;
+        println!(
+            "  pending={} dispatched={} done={} failed={}",
+            p.pending, p.dispatched, p.done, p.failed
+        );
+        if p.drained() {
+            break;
+        }
+        if started.elapsed() > timeout {
+            eprintln!("grid sub: timeout after {timeout:?}; state kept in --data-dir");
+            return Ok(1);
+        }
+        std::thread::sleep(Duration::from_millis(500));
+    }
+    let p = grid.campaign_progress(id)?;
+    let c = grid.counters();
+    println!("── campaign {id} drained: {} done, {} failed ──", p.done, p.failed);
+    println!(
+        "   dispatched={} retried={} orphaned={} blacklists={} rejoins={} transport_errors={}",
+        c.dispatched, c.retried, c.orphaned, c.blacklists, c.rejoins, c.transport_errors
+    );
+    print_cluster_table(&grid);
+    let _ = grid.shutdown();
+    Ok(if p.failed == 0 { 0 } else { 1 })
+}
+
+fn print_cluster_table(grid: &Grid) {
+    let rows: Vec<Vec<String>> = grid
+        .clusters()
+        .iter()
+        .map(|c| {
+            vec![
+                c.name.clone(),
+                c.addr.clone(),
+                if c.blacklisted {
+                    "blacklisted".into()
+                } else if c.alive {
+                    "alive".into()
+                } else {
+                    "unreachable".into()
+                },
+                c.last_free.to_string(),
+                c.outstanding.to_string(),
+                c.dispatched_total.to_string(),
+                c.completed_total.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["cluster", "addr", "state", "free", "outstanding", "dispatched", "completed"],
+            &rows
+        )
+    );
+}
+
+fn grid_stat(flags: &Flags) -> Result<i32> {
+    let dir = flags
+        .values
+        .get("data-dir")
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("grid stat requires --data-dir DIR"))?;
+    // Inspect a *copy* of the state directory: `Db::recover` is not a
+    // read-only open — it truncates torn WAL tails and sweeps stale
+    // generations, which against the live directory of a running
+    // `grid sub` would corrupt the state this command only reads.
+    let scratch = std::env::temp_dir().join(format!("oar-grid-stat-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch)?;
+    for entry in std::fs::read_dir(&dir)? {
+        let entry = entry?;
+        if entry.file_type()?.is_file() {
+            std::fs::copy(entry.path(), scratch.join(entry.file_name()))?;
+        }
+    }
+    let (mut db, stats) = Db::recover(&scratch)?;
+    println!(
+        "grid state {} (generation {}, {} WAL records replayed)\n",
+        dir.display(),
+        stats.generation,
+        stats.replayed
+    );
+    let campaigns = db.campaigns();
+    let mut rows = Vec::new();
+    for c in &campaigns {
+        let tasks = db.grid_tasks_of_campaign(c.id);
+        let count = |s: GridTaskState| tasks.iter().filter(|t| t.state == s).count();
+        rows.push(vec![
+            c.id.to_string(),
+            c.name.clone(),
+            c.user.clone(),
+            c.state.as_str().to_string(),
+            c.tasks.to_string(),
+            count(GridTaskState::Pending).to_string(),
+            count(GridTaskState::Dispatched).to_string(),
+            count(GridTaskState::Done).to_string(),
+            count(GridTaskState::Failed).to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["id", "name", "user", "state", "tasks", "pending", "dispatched", "done", "failed"],
+            &rows
+        )
+    );
+    println!("{} campaign(s)", campaigns.len());
+    drop(db);
+    let _ = std::fs::remove_dir_all(&scratch);
+    Ok(0)
+}
+
+fn grid_clusters(flags: &Flags) -> Result<i32> {
+    let clusters = cluster_list(flags, 0)?;
+    let mut rows = Vec::new();
+    for c in &clusters {
+        match RpcClient::connect_timeout(&c.addr, Duration::from_secs(5)).and_then(|mut cl| {
+            cl.set_timeout(Some(Duration::from_secs(5)))?;
+            cl.load()
+        }) {
+            Ok(Ok(info)) => rows.push(vec![
+                c.name.clone(),
+                c.addr.clone(),
+                "alive".into(),
+                format!("{}/{}", info.nodes_alive, info.nodes_total),
+                format!("{}/{}", info.procs_free, info.procs_alive),
+                info.waiting_jobs.to_string(),
+                info.running_jobs.to_string(),
+            ]),
+            Ok(Err(e)) => rows.push(vec![
+                c.name.clone(),
+                c.addr.clone(),
+                format!("refused [{}]", e.code),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+            Err(_) => rows.push(vec![
+                c.name.clone(),
+                c.addr.clone(),
+                "unreachable".into(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            &["cluster", "addr", "state", "nodes", "free/alive procs", "waiting", "running"],
+            &rows
+        )
+    );
+    Ok(0)
+}

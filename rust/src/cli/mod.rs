@@ -104,8 +104,23 @@ Client commands (speak the socket protocol of docs/PROTOCOL.md; all take
               [--besteffort] [--interactive] [--array N]
   stat        oarstat: list jobs [--filter \"state = 'Running'\"]
   del         oardel: cancel a job   oar del <jobId>
+  hold        oarhold: suspend a Waiting job   oar hold <jobId>
+  resume      oarresume: release a held job    oar resume <jobId>
   nodes       oarnodes: fleet state
   queues      queue table (priority, policy, limits, active)
+
+Grid federation (a CiGri-style meta-scheduler farming bag-of-tasks
+campaigns across clusters as best-effort jobs):
+  grid sub      submit + drain a campaign  --clusters H:P,H:P,...
+                --command 'sim {i}' [--tasks 100] [--cap 32] [--user U]
+                [--nodes N] [--weight W] [--maxtime SECS] [--name S]
+                [--data-dir DIR] [--retries 5] [--round-ms 200]
+                [--stale SECS] [--timeout SECS] ({i} = task index;
+                --data-dir persists campaigns so an interrupted run
+                resumes; --stale cancels+retries placements that never
+                start)
+  grid stat     inspect persisted campaigns  --data-dir DIR
+  grid clusters probe each cluster's load    --clusters H:P,H:P,...
 
 All evaluation outputs are printed as tables/ASCII figures; --csv writes
 machine-readable series next to them.
@@ -141,8 +156,11 @@ pub fn run(args: Vec<String>) -> Result<i32> {
         "sub" => net::run_sub(&flags),
         "stat" => net::run_stat(&flags),
         "del" => net::run_del(&flags),
+        "hold" => net::run_hold(&flags),
+        "resume" => net::run_resume(&flags),
         "nodes" => net::run_nodes(&flags),
         "queues" => net::run_queues(&flags),
+        "grid" => grid::run_grid(&flags),
         "snapshot" => crate::cli::demo::run_snapshot(
             flags
                 .values
@@ -450,4 +468,5 @@ fn cmd_features() -> Result<i32> {
 }
 
 pub mod demo;
+pub mod grid;
 pub mod net;

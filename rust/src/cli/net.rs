@@ -256,6 +256,32 @@ pub fn run_del(flags: &Flags) -> Result<i32> {
     }
 }
 
+/// `oar hold <id>`: suspend a Waiting job (`oarhold`).
+pub fn run_hold(flags: &Flags) -> Result<i32> {
+    hold_resume(flags, true)
+}
+
+/// `oar resume <id>`: release a held job (`oarresume`).
+pub fn run_resume(flags: &Flags) -> Result<i32> {
+    hold_resume(flags, false)
+}
+
+fn hold_resume(flags: &Flags, hold: bool) -> Result<i32> {
+    let cmd = if hold { "hold" } else { "resume" };
+    let Some(id) = flags.positional.first().and_then(|s| s.parse::<u64>().ok()) else {
+        anyhow::bail!("usage: oar {cmd} <jobId> [--addr HOST:PORT]");
+    };
+    let mut client = connect(flags)?;
+    let outcome = if hold { client.hold(id)? } else { client.resume(id)? };
+    match outcome {
+        Ok(state) => {
+            println!("job {id} now {state}");
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error(cmd, &e)),
+    }
+}
+
 /// `oar nodes`: fleet state (`oarnodes`).
 pub fn run_nodes(flags: &Flags) -> Result<i32> {
     let mut client = connect(flags)?;

@@ -27,8 +27,9 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::types::{
-    Job, JobId, JobKind, JobState, Node, NodeId, NodeState, Queue, QueuePolicyKind,
-    RecoveryPolicy, ReservationField, Time,
+    Campaign, CampaignId, CampaignSpec, CampaignState, GridTask, GridTaskState, Job, JobId,
+    JobKind, JobState, Node, NodeId, NodeState, Queue, QueuePolicyKind, RecoveryPolicy,
+    ReservationField, Time,
 };
 
 use super::accounting::{Accounting, AccountingBuilder};
@@ -45,6 +46,8 @@ pub enum DbError {
     JobNotFound(JobId),
     NodeNotFound(NodeId),
     QueueNotFound(String),
+    CampaignNotFound(CampaignId),
+    GridTaskNotFound(u64),
     IllegalTransition { job: JobId, from: JobState, to: JobState },
     Corrupt(String),
     Parse(String),
@@ -56,6 +59,8 @@ impl std::fmt::Display for DbError {
             DbError::JobNotFound(id) => write!(f, "job {id} not found"),
             DbError::NodeNotFound(id) => write!(f, "node {id} not found"),
             DbError::QueueNotFound(q) => write!(f, "queue {q:?} not found"),
+            DbError::CampaignNotFound(id) => write!(f, "campaign {id} not found"),
+            DbError::GridTaskNotFound(id) => write!(f, "grid task {id} not found"),
             DbError::IllegalTransition { job, from, to } => {
                 write!(f, "job {job}: illegal transition {from} -> {to}")
             }
@@ -101,6 +106,11 @@ pub struct Db {
     assignments: Table,
     queues: Table,
     admission_rules: Table,
+    /// Grid federation: campaign headers (used by the grid meta-scheduler;
+    /// empty on a plain cluster server).
+    campaigns: Table,
+    /// Grid federation: per-task placement rows.
+    grid_tasks: Table,
     events: EventLog,
     stats: QueryStats,
     /// Durability: when present, every logical mutation is WAL-logged
@@ -150,6 +160,8 @@ impl Db {
             assignments: Table::new("assignments"),
             queues: Table::new("queues"),
             admission_rules: Table::new("admission_rules"),
+            campaigns: Table::new("campaigns"),
+            grid_tasks: Table::new("grid_tasks"),
             events: EventLog::new(),
             stats: QueryStats::default(),
             wal: None,
@@ -181,6 +193,8 @@ impl Db {
         self.nodes.create_index("hostname");
         self.assignments.create_index("jobId");
         self.queues.create_index("name");
+        self.grid_tasks.create_index("state");
+        self.grid_tasks.create_index("campaignId");
     }
 
     /// Drop every secondary index on every table — benchmarks use this to
@@ -192,6 +206,8 @@ impl Db {
             &mut self.assignments,
             &mut self.queues,
             &mut self.admission_rules,
+            &mut self.campaigns,
+            &mut self.grid_tasks,
         ] {
             t.drop_all_indexes();
         }
@@ -209,6 +225,8 @@ impl Db {
             "assignments" => Some(&self.assignments),
             "queues" => Some(&self.queues),
             "admission_rules" => Some(&self.admission_rules),
+            "campaigns" => Some(&self.campaigns),
+            "grid_tasks" => Some(&self.grid_tasks),
             _ => None,
         }
     }
@@ -220,6 +238,8 @@ impl Db {
             TableId::Assignments => &mut self.assignments,
             TableId::Queues => &mut self.queues,
             TableId::AdmissionRules => &mut self.admission_rules,
+            TableId::Campaigns => &mut self.campaigns,
+            TableId::GridTasks => &mut self.grid_tasks,
         }
     }
 
@@ -415,6 +435,8 @@ impl Db {
             &self.assignments,
             &self.queues,
             &self.admission_rules,
+            &self.campaigns,
+            &self.grid_tasks,
         ]
         .iter()
         .all(|t| t.indexes_consistent())
@@ -507,6 +529,8 @@ impl Db {
             &self.assignments,
             &self.queues,
             &self.admission_rules,
+            &self.campaigns,
+            &self.grid_tasks,
         ] {
             let (probes, scans) = t.plan_counters();
             s.index_probes += probes;
@@ -523,6 +547,8 @@ impl Db {
             &self.assignments,
             &self.queues,
             &self.admission_rules,
+            &self.campaigns,
+            &self.grid_tasks,
         ] {
             t.reset_plan_counters();
         }
@@ -963,6 +989,384 @@ impl Db {
         rules
     }
 
+    // ----------------------------------------------- grid federation ----
+
+    /// INSERT a campaign header plus one `grid_tasks` row per task (all
+    /// `Pending`); returns the campaign id. Used by the grid
+    /// meta-scheduler — a plain cluster server never touches these
+    /// tables.
+    pub fn insert_campaign(&mut self, spec: &CampaignSpec, now: Time) -> CampaignId {
+        self.stats.inserts += 1;
+        // Random token (std-only: RandomState seeds from the OS): minted
+        // once here, then WAL-logged with the row, so replay and
+        // restarts see the same value. Masked to 53 bits — WAL records
+        // and snapshots round-trip `Value::Int` through `Json::Num`
+        // (f64), which is exact only below 2^53; a full-range u64 would
+        // corrupt on recovery and break every tag comparison.
+        let token = {
+            use std::hash::{BuildHasher, Hasher};
+            let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+            h.write_i64(now);
+            h.finish() & ((1 << 53) - 1)
+        };
+        let mut row = Row::new();
+        row.insert("token".into(), Value::Int(token as i64));
+        row.insert("name".into(), Value::Text(spec.name.clone()));
+        row.insert("user".into(), Value::Text(spec.user.clone()));
+        row.insert("command".into(), Value::Text(spec.command.clone()));
+        row.insert("nbNodes".into(), Value::Int(spec.nb_nodes as i64));
+        row.insert("weight".into(), Value::Int(spec.weight as i64));
+        row.insert("maxTime".into(), Value::Int(spec.max_time));
+        row.insert("tasks".into(), Value::Int(spec.tasks as i64));
+        row.insert(
+            "state".into(),
+            Value::Text(CampaignState::Active.as_str().into()),
+        );
+        row.insert("submissionTime".into(), Value::Int(now));
+        let id = self.mutate(Mutation::Insert {
+            table: TableId::Campaigns,
+            row,
+        });
+        for index in 0..spec.tasks {
+            self.insert_grid_task(id, index);
+        }
+        id
+    }
+
+    /// INSERT one `Pending` task row. The header goes in first and each
+    /// task row is its own WAL record, so a crash can cut the loop short
+    /// — a campaign's bag is fully derivable from its header, and the
+    /// grid re-inserts missing indices at boot ([`Db::repair_campaigns`]).
+    pub fn insert_grid_task(&mut self, campaign: CampaignId, index: u32) -> u64 {
+        self.stats.inserts += 1;
+        let mut row = Row::new();
+        row.insert("campaignId".into(), Value::Int(campaign as i64));
+        row.insert("idx".into(), Value::Int(index as i64));
+        row.insert(
+            "state".into(),
+            Value::Text(GridTaskState::Pending.as_str().into()),
+        );
+        row.insert("cluster".into(), Value::Null);
+        row.insert("jobId".into(), Value::Null);
+        row.insert("attempts".into(), Value::Int(0));
+        row.insert("dispatchedAt".into(), Value::Int(0));
+        row.insert("message".into(), Value::Text(String::new()));
+        self.mutate(Mutation::Insert {
+            table: TableId::GridTasks,
+            row,
+        })
+    }
+
+    /// Boot-time repair for campaigns a crash cut short mid-insert: every
+    /// index in `0..tasks` without a row gets a fresh `Pending` one, and
+    /// a `Dispatched` row with no cluster — impossible under the
+    /// cell-ordering contract of [`Db::mark_grid_task_dispatched`], but
+    /// unresolvable by any live code path if it ever existed — is
+    /// requeued. Returns how many rows were repaired.
+    pub fn repair_campaigns(&mut self) -> usize {
+        let mut repaired = 0;
+        for c in self.campaigns() {
+            let have: std::collections::BTreeSet<u32> = self
+                .grid_tasks_of_campaign(c.id)
+                .iter()
+                .map(|t| t.index)
+                .collect();
+            for index in 0..c.tasks {
+                if !have.contains(&index) {
+                    self.insert_grid_task(c.id, index);
+                    repaired += 1;
+                }
+            }
+        }
+        let clusterless: Vec<u64> = self
+            .grid_tasks_in_state(GridTaskState::Dispatched)
+            .iter()
+            .filter(|t| t.cluster.is_none())
+            .map(|t| t.id)
+            .collect();
+        for id in clusterless {
+            if self.requeue_grid_task(id, "recovered intent had no cluster").is_ok() {
+                repaired += 1;
+            }
+        }
+        repaired
+    }
+
+    pub fn campaign(&mut self, id: CampaignId) -> Result<Campaign, DbError> {
+        self.stats.selects += 1;
+        let row = self
+            .campaigns
+            .get(id)
+            .ok_or(DbError::CampaignNotFound(id))?;
+        campaign_from_row(row)
+    }
+
+    /// Look a campaign up by its random tag token (small table scan; the
+    /// rejoin sweep uses this to tell our jobs from another grid's).
+    pub fn campaign_by_token(&mut self, token: u64) -> Option<Campaign> {
+        self.stats.selects += 1;
+        let mut found = None;
+        self.campaigns.for_each_all(|_, r| {
+            if found.is_none()
+                && r.get("token").and_then(Value::as_i64).map(|t| t as u64) == Some(token)
+            {
+                found = campaign_from_row(r).ok();
+            }
+        });
+        found
+    }
+
+    /// All campaigns, in submission (id) order.
+    pub fn campaigns(&mut self) -> Vec<Campaign> {
+        self.stats.selects += 1;
+        let mut out = Vec::new();
+        self.campaigns.for_each_all(|_, r| {
+            if let Ok(c) = campaign_from_row(r) {
+                out.push(c);
+            }
+        });
+        out
+    }
+
+    pub fn set_campaign_state(
+        &mut self,
+        id: CampaignId,
+        state: CampaignState,
+    ) -> Result<(), DbError> {
+        self.stats.updates += 1;
+        if self.campaigns.get(id).is_none() {
+            return Err(DbError::CampaignNotFound(id));
+        }
+        self.mutate(Mutation::SetCell {
+            table: TableId::Campaigns,
+            id,
+            col: "state".into(),
+            value: Value::Text(state.as_str().into()),
+        });
+        Ok(())
+    }
+
+    pub fn grid_task(&mut self, id: u64) -> Result<GridTask, DbError> {
+        self.stats.selects += 1;
+        let row = self.grid_tasks.get(id).ok_or(DbError::GridTaskNotFound(id))?;
+        grid_task_from_row(id, row)
+    }
+
+    /// Tasks in one state, in id (campaign, then index) order — an index
+    /// probe on `grid_tasks.state`.
+    pub fn grid_tasks_in_state(&mut self, state: GridTaskState) -> Vec<GridTask> {
+        self.stats.selects += 1;
+        let key = Value::Text(state.as_str().to_string());
+        let mut out = Vec::new();
+        self.grid_tasks.for_each_eq("state", &key, |id, r| {
+            if let Ok(t) = grid_task_from_row(id, r) {
+                out.push(t);
+            }
+        });
+        out
+    }
+
+    /// All tasks of one campaign, by index — probes `grid_tasks.campaignId`.
+    pub fn grid_tasks_of_campaign(&mut self, campaign: CampaignId) -> Vec<GridTask> {
+        self.stats.selects += 1;
+        let key = Value::Int(campaign as i64);
+        let mut out = Vec::new();
+        self.grid_tasks.for_each_eq("campaignId", &key, |id, r| {
+            if let Ok(t) = grid_task_from_row(id, r) {
+                out.push(t);
+            }
+        });
+        out.sort_by_key(|t| t.index);
+        out
+    }
+
+    /// `SELECT COUNT(*) FROM grid_tasks WHERE state = ?` off the index.
+    pub fn count_grid_tasks_in_state(&mut self, state: GridTaskState) -> usize {
+        self.stats.selects += 1;
+        self.grid_tasks
+            .count_eq("state", &Value::Text(state.as_str().to_string()))
+    }
+
+    /// Per-state counts of one campaign's tasks, in [`GridTaskState::ALL`]
+    /// order, without materializing a single row — progress polls run
+    /// every few ms against campaigns up to a million tasks.
+    pub fn count_campaign_tasks(&mut self, campaign: CampaignId) -> [usize; 4] {
+        self.stats.selects += 1;
+        let key = Value::Int(campaign as i64);
+        let mut counts = [0usize; 4];
+        self.grid_tasks.for_each_eq("campaignId", &key, |_, r| {
+            if let Some(s) = r
+                .get("state")
+                .and_then(Value::as_str)
+                .and_then(GridTaskState::parse)
+            {
+                if let Some(i) = GridTaskState::ALL.iter().position(|x| *x == s) {
+                    counts[i] += 1;
+                }
+            }
+        });
+        counts
+    }
+
+    /// Are all tasks of `campaign` terminal? Walks the campaign index
+    /// until the first counterexample, materializing nothing — the
+    /// grid's close pass runs this every round on every Active campaign,
+    /// and a mid-drain campaign answers at its first live task.
+    pub fn campaign_tasks_all_terminal(&mut self, campaign: CampaignId) -> bool {
+        self.stats.selects += 1;
+        let key = Value::Int(campaign as i64);
+        let mut all = true;
+        self.grid_tasks.for_each_eq_while("campaignId", &key, |_, r| {
+            all = r
+                .get("state")
+                .and_then(Value::as_str)
+                .and_then(GridTaskState::parse)
+                .map(|s| s.is_terminal())
+                .unwrap_or(false);
+            all
+        });
+        all
+    }
+
+    /// The first `max` tasks in one state (id order), visiting only that
+    /// many index entries. The dispatch loop only ever places
+    /// `sum(headrooms)` tasks per wave, so a million-task backlog costs
+    /// a wave-sized walk, not a million-row one.
+    pub fn grid_tasks_in_state_capped(
+        &mut self,
+        state: GridTaskState,
+        max: usize,
+    ) -> Vec<GridTask> {
+        self.stats.selects += 1;
+        let key = Value::Text(state.as_str().to_string());
+        let mut out = Vec::new();
+        self.grid_tasks.for_each_eq_while("state", &key, |id, r| {
+            if out.len() >= max {
+                return false;
+            }
+            if let Ok(t) = grid_task_from_row(id, r) {
+                out.push(t);
+            }
+            out.len() < max
+        });
+        out
+    }
+
+    fn set_grid_task_cell(&mut self, id: u64, col: &str, value: Value) {
+        self.mutate(Mutation::SetCell {
+            table: TableId::GridTasks,
+            id,
+            col: col.into(),
+            value,
+        });
+    }
+
+    /// Record a placement intent *before* the remote submission goes out
+    /// (write-ahead at the grid level): state `Dispatched`, the target
+    /// cluster, no job id yet, attempts + 1, and the dispatch instant
+    /// (grid clock) the staleness check measures from. If the grid dies
+    /// between this write and the remote ack, the reconciler resolves
+    /// the window by the task tag instead of double-dispatching.
+    ///
+    /// Each cell is its own WAL record, so the `state` cell goes in
+    /// **last**: any crash-truncated prefix recovers as a `Pending` task
+    /// with half-updated placement cells — harmless, the next dispatch
+    /// overwrites them — never as a `Dispatched` task with no cluster,
+    /// which nothing could ever resolve.
+    pub fn mark_grid_task_dispatched(
+        &mut self,
+        id: u64,
+        cluster: &str,
+        now: Time,
+    ) -> Result<(), DbError> {
+        let task = self.grid_task(id)?;
+        self.stats.updates += 1;
+        self.set_grid_task_cell(id, "cluster", Value::Text(cluster.into()));
+        self.set_grid_task_cell(id, "jobId", Value::Null);
+        self.set_grid_task_cell(id, "attempts", Value::Int(task.attempts as i64 + 1));
+        self.set_grid_task_cell(id, "dispatchedAt", Value::Int(now));
+        self.set_grid_task_cell(
+            id,
+            "state",
+            Value::Text(GridTaskState::Dispatched.as_str().into()),
+        );
+        Ok(())
+    }
+
+    /// Reset the dispatch instants of every `Dispatched` task to 0 (=
+    /// "as of grid boot"). A restarted grid has a fresh monotonic clock,
+    /// so persisted instants from the previous process are meaningless —
+    /// resetting restarts each in-flight task's staleness timer instead
+    /// of comparing clocks that never shared an epoch.
+    pub fn reset_grid_dispatch_clocks(&mut self) {
+        let ids: Vec<u64> = self
+            .grid_tasks_in_state(GridTaskState::Dispatched)
+            .iter()
+            .map(|t| t.id)
+            .collect();
+        for id in ids {
+            self.stats.updates += 1;
+            self.set_grid_task_cell(id, "dispatchedAt", Value::Int(0));
+        }
+    }
+
+    /// Record the acknowledged remote job id of a dispatched task.
+    pub fn set_grid_task_job(&mut self, id: u64, job: JobId) -> Result<(), DbError> {
+        if self.grid_tasks.get(id).is_none() {
+            return Err(DbError::GridTaskNotFound(id));
+        }
+        self.stats.updates += 1;
+        self.set_grid_task_cell(id, "jobId", Value::Int(job as i64));
+        Ok(())
+    }
+
+    /// The remote job terminated normally: task `Done` (terminal).
+    pub fn complete_grid_task(&mut self, id: u64) -> Result<(), DbError> {
+        if self.grid_tasks.get(id).is_none() {
+            return Err(DbError::GridTaskNotFound(id));
+        }
+        self.stats.updates += 1;
+        self.set_grid_task_cell(id, "state", Value::Text(GridTaskState::Done.as_str().into()));
+        Ok(())
+    }
+
+    /// Retry budget exhausted: task `Failed` (terminal) with the reason.
+    pub fn fail_grid_task(&mut self, id: u64, why: &str) -> Result<(), DbError> {
+        if self.grid_tasks.get(id).is_none() {
+            return Err(DbError::GridTaskNotFound(id));
+        }
+        self.stats.updates += 1;
+        self.set_grid_task_cell(
+            id,
+            "state",
+            Value::Text(GridTaskState::Failed.as_str().into()),
+        );
+        self.set_grid_task_cell(id, "message", Value::Text(why.into()));
+        Ok(())
+    }
+
+    /// Send a task back to `Pending` (preempted / lost / cluster died):
+    /// the placement is cleared, the reason recorded, and the next
+    /// dispatch wave places it again (attempts keep accumulating). The
+    /// `state` cell goes in first — `Pending` is the safe state, and a
+    /// crash-truncated prefix then recovers as a requeued task with a
+    /// stale placement that the next dispatch overwrites.
+    pub fn requeue_grid_task(&mut self, id: u64, why: &str) -> Result<(), DbError> {
+        if self.grid_tasks.get(id).is_none() {
+            return Err(DbError::GridTaskNotFound(id));
+        }
+        self.stats.updates += 1;
+        self.set_grid_task_cell(
+            id,
+            "state",
+            Value::Text(GridTaskState::Pending.as_str().into()),
+        );
+        self.set_grid_task_cell(id, "cluster", Value::Null);
+        self.set_grid_task_cell(id, "jobId", Value::Null);
+        self.set_grid_task_cell(id, "message", Value::Text(why.into()));
+        Ok(())
+    }
+
     // -------------------------------------------------------- events ----
 
     pub fn log_event(&mut self, now: Time, kind: &str, job: Option<JobId>, detail: &str) {
@@ -1030,6 +1434,8 @@ impl Db {
             ("assignments", self.assignments.to_json()),
             ("queues", self.queues.to_json()),
             ("admission_rules", self.admission_rules.to_json()),
+            ("campaigns", self.campaigns.to_json()),
+            ("grid_tasks", self.grid_tasks.to_json()),
             ("events", self.events.to_json()),
         ])
     }
@@ -1079,12 +1485,23 @@ impl Db {
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing {key}"))?,
             )
         };
+        // The grid tables were added after the snapshot format shipped: a
+        // snapshot written before them simply has no such state, so their
+        // absence decodes as empty tables (never an error).
+        let table_or_empty = |key: &str| -> crate::Result<Table> {
+            match doc.get(key) {
+                Some(j) => Table::from_json(j),
+                None => Ok(Table::new(key)),
+            }
+        };
         let mut db = Db {
             jobs: table("jobs")?,
             nodes: table("nodes")?,
             assignments: table("assignments")?,
             queues: table("queues")?,
             admission_rules: table("admission_rules")?,
+            campaigns: table_or_empty("campaigns")?,
+            grid_tasks: table_or_empty("grid_tasks")?,
             events: EventLog::from_json(
                 doc.get("events")
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
@@ -1289,6 +1706,71 @@ fn queue_from_row(r: &Row) -> Result<Queue, DbError> {
             .and_then(Value::as_i64)
             .unwrap_or(i64::MAX) as u32,
         active: r.get("active").map(Value::is_truthy).unwrap_or(true),
+    })
+}
+
+fn campaign_from_row(r: &Row) -> Result<Campaign, DbError> {
+    let corrupt = |f: &str| DbError::Corrupt(format!("campaigns.{f}"));
+    Ok(Campaign {
+        id: r.get("id").and_then(Value::as_i64).ok_or_else(|| corrupt("id"))? as CampaignId,
+        token: r.get("token").and_then(Value::as_i64).unwrap_or(0) as u64,
+        name: r
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        user: r
+            .get("user")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        command: r
+            .get("command")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        nb_nodes: r.get("nbNodes").and_then(Value::as_i64).unwrap_or(1) as u32,
+        weight: r.get("weight").and_then(Value::as_i64).unwrap_or(1) as u32,
+        max_time: r.get("maxTime").and_then(Value::as_i64).unwrap_or(3600),
+        tasks: r.get("tasks").and_then(Value::as_i64).unwrap_or(0) as u32,
+        state: r
+            .get("state")
+            .and_then(Value::as_str)
+            .and_then(CampaignState::parse)
+            .ok_or_else(|| corrupt("state"))?,
+        submission_time: r
+            .get("submissionTime")
+            .and_then(Value::as_i64)
+            .unwrap_or(0),
+    })
+}
+
+fn grid_task_from_row(id: u64, r: &Row) -> Result<GridTask, DbError> {
+    let corrupt = |f: &str| DbError::Corrupt(format!("grid_tasks.{f}"));
+    Ok(GridTask {
+        id,
+        campaign: r
+            .get("campaignId")
+            .and_then(Value::as_i64)
+            .ok_or_else(|| corrupt("campaignId"))? as CampaignId,
+        index: r.get("idx").and_then(Value::as_i64).unwrap_or(0) as u32,
+        state: r
+            .get("state")
+            .and_then(Value::as_str)
+            .and_then(GridTaskState::parse)
+            .ok_or_else(|| corrupt("state"))?,
+        cluster: r
+            .get("cluster")
+            .and_then(Value::as_str)
+            .map(str::to_string),
+        job: r.get("jobId").and_then(Value::as_i64).map(|j| j as JobId),
+        attempts: r.get("attempts").and_then(Value::as_i64).unwrap_or(0) as u32,
+        dispatched_at: r.get("dispatchedAt").and_then(Value::as_i64).unwrap_or(0),
+        message: r
+            .get("message")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
     })
 }
 
@@ -1541,6 +2023,147 @@ mod tests {
         let mut back = Db::restore(&path).unwrap();
         assert_eq!(back.job(id).unwrap().user, "bob");
         assert_eq!(back.queues_by_priority().len(), 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn campaign_and_grid_task_lifecycle() {
+        let mut db = Db::new();
+        let spec = CampaignSpec::bag("sweep", "alice", "sleep 1 --p {i}", 3);
+        let id = db.insert_campaign(&spec, 42);
+        let c = db.campaign(id).unwrap();
+        assert_eq!(c.name, "sweep");
+        assert_eq!(c.tasks, 3);
+        assert_eq!(c.state, CampaignState::Active);
+        assert_eq!(c.submission_time, 42);
+        assert!(matches!(
+            db.campaign(999),
+            Err(DbError::CampaignNotFound(999))
+        ));
+
+        let tasks = db.grid_tasks_of_campaign(id);
+        assert_eq!(tasks.len(), 3);
+        assert!(tasks.iter().all(|t| t.state == GridTaskState::Pending));
+        assert_eq!(tasks.iter().map(|t| t.index).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(db.count_grid_tasks_in_state(GridTaskState::Pending), 3);
+
+        // Dispatch intent → ack → done, with the state index tracking.
+        let t0 = tasks[0].id;
+        db.mark_grid_task_dispatched(t0, "clusterA", 55).unwrap();
+        let t = db.grid_task(t0).unwrap();
+        assert_eq!(t.state, GridTaskState::Dispatched);
+        assert_eq!(t.cluster.as_deref(), Some("clusterA"));
+        assert_eq!(t.job, None);
+        assert_eq!(t.attempts, 1);
+        assert_eq!(t.dispatched_at, 55);
+        db.set_grid_task_job(t0, 17).unwrap();
+        assert_eq!(db.grid_task(t0).unwrap().job, Some(17));
+        db.complete_grid_task(t0).unwrap();
+        assert_eq!(db.count_grid_tasks_in_state(GridTaskState::Done), 1);
+
+        // Requeue clears the placement but keeps the attempt count.
+        let t1 = tasks[1].id;
+        db.mark_grid_task_dispatched(t1, "clusterB", 60).unwrap();
+        db.requeue_grid_task(t1, "cluster died").unwrap();
+        let t = db.grid_task(t1).unwrap();
+        assert_eq!(t.state, GridTaskState::Pending);
+        assert_eq!(t.cluster, None);
+        assert_eq!(t.job, None);
+        assert_eq!(t.attempts, 1);
+        assert_eq!(t.message, "cluster died");
+
+        let t2 = tasks[2].id;
+        assert!(!db.campaign_tasks_all_terminal(id));
+        db.fail_grid_task(t2, "budget exhausted").unwrap();
+        assert_eq!(db.grid_task(t2).unwrap().state, GridTaskState::Failed);
+        // t0 Done, t1 Pending (requeued), t2 Failed → not all terminal.
+        assert!(!db.campaign_tasks_all_terminal(id));
+        db.mark_grid_task_dispatched(t1, "clusterC", 70).unwrap();
+        db.set_grid_task_job(t1, 18).unwrap();
+        db.complete_grid_task(t1).unwrap();
+        assert!(db.campaign_tasks_all_terminal(id));
+        // [pending, dispatched, done, failed] — index-walk counts.
+        assert_eq!(db.count_campaign_tasks(id), [0, 0, 2, 1]);
+
+        db.set_campaign_state(id, CampaignState::Done).unwrap();
+        assert_eq!(db.campaign(id).unwrap().state, CampaignState::Done);
+        assert!(db.verify_indexes());
+    }
+
+    #[test]
+    fn grid_task_reads_probe_their_indexes() {
+        let mut db = Db::new();
+        let a = db.insert_campaign(&CampaignSpec::bag("a", "u", "c", 4), 0);
+        let _b = db.insert_campaign(&CampaignSpec::bag("b", "u", "c", 2), 1);
+        // Tag tokens are random and unique; by-token lookup resolves them.
+        let (ta, tb) = (db.campaign(a).unwrap().token, db.campaign(_b).unwrap().token);
+        assert_ne!(ta, tb, "campaign tokens must be distinct");
+        assert_eq!(db.campaign_by_token(ta).map(|c| c.id), Some(a));
+        assert_eq!(db.campaign_by_token(ta ^ tb ^ 1), None);
+        db.reset_stats();
+        assert_eq!(db.grid_tasks_in_state(GridTaskState::Pending).len(), 6);
+        assert_eq!(db.grid_tasks_of_campaign(a).len(), 4);
+        assert_eq!(db.count_grid_tasks_in_state(GridTaskState::Done), 0);
+        let s = db.stats();
+        assert_eq!(s.selects, 3);
+        assert!(s.index_probes >= 3, "grid reads must probe, got {s:?}");
+        assert_eq!(s.full_scans, 0);
+        // Capped reads materialize only what a dispatch wave can place.
+        let capped = db.grid_tasks_in_state_capped(GridTaskState::Pending, 2);
+        assert_eq!(capped.len(), 2);
+        assert!(db
+            .grid_tasks_in_state_capped(GridTaskState::Pending, 100)
+            .len()
+            == 6);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_grid_tables_and_tolerates_their_absence() {
+        let dir = std::env::temp_dir().join("oar_db_test_grid_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let mut db = Db::with_standard_queues();
+        let id = db.insert_campaign(&CampaignSpec::bag("s", "u", "cmd {i}", 2), 7);
+        let t = db.grid_tasks_of_campaign(id)[0].id;
+        db.mark_grid_task_dispatched(t, "c1", 8).unwrap();
+        db.set_grid_task_job(t, 5).unwrap();
+        db.snapshot(&path).unwrap();
+        let mut back = Db::restore(&path).unwrap();
+        assert_eq!(back.campaigns().len(), 1);
+        // The tag token must survive the f64 JSON round-trip exactly —
+        // it is the placement identity on remote clusters.
+        assert_eq!(back.campaign(id).unwrap().token, db.campaign(id).unwrap().token);
+        assert!(db.campaign(id).unwrap().token < (1 << 53));
+        let task = back.grid_task(t).unwrap();
+        assert_eq!(task.cluster.as_deref(), Some("c1"));
+        assert_eq!(task.job, Some(5));
+        assert!(back.verify_indexes());
+
+        // A pre-grid snapshot (no campaigns/grid_tasks keys) still loads.
+        let doc = crate::util::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let crate::util::Json::Obj(map) = doc else { unreachable!() };
+        let mut no_grid = map.clone();
+        no_grid.remove("campaigns");
+        no_grid.remove("grid_tasks");
+        std::fs::write(&path, crate::util::Json::Obj(no_grid).dump()).unwrap();
+        let mut old = Db::restore(&path).unwrap();
+        assert!(old.campaigns().is_empty());
+        assert_eq!(old.count_grid_tasks_in_state(GridTaskState::Pending), 0);
+
+        // A campaign whose task rows a crash truncated (here: all of
+        // them) is repaired at boot: missing indices re-inserted Pending.
+        let mut torn = map;
+        torn.remove("grid_tasks");
+        std::fs::write(&path, crate::util::Json::Obj(torn).dump()).unwrap();
+        let mut repaired = Db::restore(&path).unwrap();
+        assert_eq!(repaired.campaigns().len(), 1);
+        assert_eq!(repaired.grid_tasks_of_campaign(id).len(), 0);
+        assert_eq!(repaired.repair_campaigns(), 2);
+        let rows = repaired.grid_tasks_of_campaign(id);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|t| t.state == GridTaskState::Pending));
+        assert_eq!(repaired.repair_campaigns(), 0, "repair is idempotent");
+        assert!(repaired.verify_indexes());
         std::fs::remove_file(path).ok();
     }
 

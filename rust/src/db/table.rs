@@ -348,6 +348,38 @@ impl Table {
         }
     }
 
+    /// Like [`Table::for_each_eq`], but stops as soon as `f` returns
+    /// `false` — capped fetches and first-counterexample checks must not
+    /// pay for the whole matching set.
+    pub fn for_each_eq_while(
+        &self,
+        col: &str,
+        value: &Value,
+        mut f: impl FnMut(u64, &Row) -> bool,
+    ) {
+        let residual =
+            |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
+        if let Some(idx) = self.indexes.get(col) {
+            self.probes.set(self.probes.get() + 1);
+            if let Some(ids) = idx.eq_ids(value) {
+                for id in ids {
+                    if let Some(row) = self.rows.get(id) {
+                        if residual(row) && !f(*id, row) {
+                            return;
+                        }
+                    }
+                }
+            }
+        } else {
+            self.scans.set(self.scans.get() + 1);
+            for (id, row) in &self.rows {
+                if residual(row) && !f(*id, row) {
+                    return;
+                }
+            }
+        }
+    }
+
     /// First row with `col = value`, by id order.
     pub fn find_eq(&self, col: &str, value: &Value) -> Option<(u64, &Row)> {
         let residual =

@@ -58,6 +58,10 @@ pub enum TableId {
     Assignments,
     Queues,
     AdmissionRules,
+    /// Grid federation: campaign headers (one row per bag of tasks).
+    Campaigns,
+    /// Grid federation: one row per task, tracking remote placement.
+    GridTasks,
 }
 
 impl TableId {
@@ -68,6 +72,8 @@ impl TableId {
             TableId::Assignments => "assignments",
             TableId::Queues => "queues",
             TableId::AdmissionRules => "admission_rules",
+            TableId::Campaigns => "campaigns",
+            TableId::GridTasks => "grid_tasks",
         }
     }
 
@@ -78,6 +84,8 @@ impl TableId {
             "assignments" => TableId::Assignments,
             "queues" => TableId::Queues,
             "admission_rules" => TableId::AdmissionRules,
+            "campaigns" => TableId::Campaigns,
+            "grid_tasks" => TableId::GridTasks,
             _ => return None,
         })
     }

@@ -1,0 +1,75 @@
+//! Wave sizing: greedy water-filling of pending tasks across per-cluster
+//! headrooms.
+//!
+//! Each cluster contributes a *headroom* — how many more tasks it can
+//! absorb right now, computed by the scheduler as
+//! `min(concurrency cap − outstanding, probed free capacity)`. The wave
+//! planner pours tasks one at a time into the cluster with the most
+//! remaining headroom (ties to the lower index), the classic
+//! water-filling shape: the emptiest back-end fills first, and over a
+//! long campaign each cluster's share tracks its drain rate — the
+//! feedback-driven placement idea of Libra applied to best-effort
+//! farming. The function is pure and deterministic, so fairness is
+//! testable and benchmarkable in isolation.
+
+/// Plan one dispatch wave: distribute up to `pending` tasks over
+/// `headrooms`, returning how many tasks each entry receives (aligned
+/// with the input slice). The total never exceeds `pending` nor the sum
+/// of headrooms, and no entry exceeds its own headroom.
+pub fn plan_wave(pending: usize, headrooms: &[u32]) -> Vec<u32> {
+    let mut counts = vec![0u32; headrooms.len()];
+    let mut remaining: Vec<u32> = headrooms.to_vec();
+    for _ in 0..pending {
+        // Argmax over remaining headroom; strict `>` keeps ties on the
+        // lowest index, making the plan deterministic.
+        let Some((best, _)) = remaining
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r > 0)
+            .reduce(|a, b| if b.1 > a.1 { b } else { a })
+        else {
+            break; // every cluster is full
+        };
+        counts[best] += 1;
+        remaining[best] -= 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_headrooms_and_pending() {
+        let counts = plan_wave(100, &[16, 4, 2]);
+        assert_eq!(counts, vec![16, 4, 2], "saturates every cluster");
+        let counts = plan_wave(0, &[16, 4, 2]);
+        assert_eq!(counts, vec![0, 0, 0]);
+        let counts = plan_wave(5, &[0, 0, 0]);
+        assert_eq!(counts, vec![0, 0, 0]);
+        assert!(plan_wave(7, &[]).is_empty());
+    }
+
+    #[test]
+    fn fills_the_emptiest_cluster_first() {
+        // Water-filling: remaining headrooms equalize.
+        let counts = plan_wave(12, &[16, 4, 2]);
+        assert_eq!(counts.iter().sum::<u32>(), 12);
+        assert_eq!(counts, vec![12, 0, 0], "largest headroom absorbs first");
+        let counts = plan_wave(14, &[16, 4, 2]);
+        assert_eq!(counts, vec![13, 1, 0]);
+        let counts = plan_wave(20, &[16, 4, 2]);
+        // Remaining after the wave: [0, 1, 1] — levels within 1 of each
+        // other wherever capacity allows.
+        assert_eq!(counts, vec![16, 3, 1]);
+    }
+
+    #[test]
+    fn ties_break_deterministically_to_the_lower_index() {
+        assert_eq!(plan_wave(1, &[4, 4, 4]), vec![1, 0, 0]);
+        assert_eq!(plan_wave(4, &[2, 2, 2]), vec![2, 1, 1]);
+        // Same inputs, same plan.
+        assert_eq!(plan_wave(9, &[5, 7, 3]), plan_wave(9, &[5, 7, 3]));
+    }
+}

@@ -1,0 +1,145 @@
+//! [`TestGrid`]: boots several in-process cluster servers, each behind
+//! its own loopback RPC front-end, so federation tests, benches and
+//! examples can drive a real multi-cluster deployment in one process —
+//! including killing a cluster mid-campaign and rebooting it on the same
+//! address (the front-end binds with `SO_REUSEADDR`, so the port is
+//! immediately reusable despite TIME_WAIT remnants of killed
+//! connections).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::VirtualCluster;
+use crate::rpc::{RpcConfig, RpcServer};
+use crate::server::{Server, ServerConfig};
+use crate::types::{GridTask, JobState};
+use crate::Result;
+
+use super::scheduler::ClusterConfig;
+
+/// One loopback cluster of the harness.
+pub struct TestCluster {
+    pub name: String,
+    /// Bound RPC address (stable across [`TestGrid::reboot`]).
+    pub addr: String,
+    nodes: u32,
+    procs: u32,
+    scale: f64,
+    server: Option<Arc<Server>>,
+    rpc: Option<RpcServer>,
+}
+
+impl TestCluster {
+    fn boot(&mut self, addr: &str) -> Result<()> {
+        let cluster = Arc::new(VirtualCluster::tiny(self.nodes, self.procs));
+        let mut cfg = ServerConfig::fast(self.scale);
+        cfg.sched.dense_matching = false; // keep the harness artifact-free
+        let server = Arc::new(Server::new(cluster, cfg));
+        let rpc = RpcServer::start(
+            server.clone(),
+            RpcConfig {
+                addr: addr.into(),
+                workers: 4,
+                queue_depth: 16,
+                io_timeout: Some(Duration::from_secs(30)),
+            },
+        )?;
+        self.addr = rpc.addr().to_string();
+        self.server = Some(server);
+        self.rpc = Some(rpc);
+        Ok(())
+    }
+}
+
+/// A fleet of in-process clusters for federation tests.
+pub struct TestGrid {
+    clusters: Vec<TestCluster>,
+}
+
+impl TestGrid {
+    /// Boot one cluster per `(nodes, procs_per_node)` shape, named
+    /// `c0`, `c1`, ... — asymmetric shapes make dispatch fairness
+    /// observable. `scale` compresses modeled latencies and simulated
+    /// runtimes exactly as [`ServerConfig::fast`] does.
+    pub fn start(shapes: &[(u32, u32)], scale: f64) -> Result<TestGrid> {
+        let mut clusters = Vec::with_capacity(shapes.len());
+        for (i, (nodes, procs)) in shapes.iter().enumerate() {
+            let mut c = TestCluster {
+                name: format!("c{i}"),
+                addr: String::new(),
+                nodes: *nodes,
+                procs: *procs,
+                scale,
+                server: None,
+                rpc: None,
+            };
+            c.boot("127.0.0.1:0")?;
+            clusters.push(c);
+        }
+        Ok(TestGrid { clusters })
+    }
+
+    /// The grid-side view of this fleet, with one shared concurrency cap.
+    pub fn cluster_configs(&self, max_outstanding: u32) -> Vec<ClusterConfig> {
+        self.clusters
+            .iter()
+            .map(|c| ClusterConfig {
+                name: c.name.clone(),
+                addr: c.addr.clone(),
+                max_outstanding,
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.clusters[i].addr
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.clusters[i].name
+    }
+
+    /// The live server behind cluster `i` (panics if it is killed).
+    pub fn server(&self, i: usize) -> &Arc<Server> {
+        self.clusters[i].server.as_ref().expect("cluster is down")
+    }
+
+    /// Kill cluster `i`: the front-end and server are torn down; further
+    /// connections to its address are refused. From the grid's point of
+    /// view the cluster died — its in-flight jobs are gone with it.
+    pub fn kill(&mut self, i: usize) {
+        self.clusters[i].rpc.take();
+        self.clusters[i].server.take();
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        self.clusters[i].rpc.is_some()
+    }
+
+    /// Reboot cluster `i` from scratch (fresh database — a crashed
+    /// cluster that lost its volatile state) on the *same* address, so a
+    /// blacklisted grid entry re-enters at probation time.
+    pub fn reboot(&mut self, i: usize) -> Result<()> {
+        let addr = self.clusters[i].addr.clone();
+        self.clusters[i].boot(&addr)
+    }
+
+    /// Count grid-tagged jobs of cluster `i` currently in `state`
+    /// (duplicate-detection helper for tests and benches).
+    pub fn tagged_jobs_in_state(&self, i: usize, state: JobState) -> usize {
+        self.server(i).with_db(|db| {
+            db.jobs_in_state(state)
+                .iter()
+                .filter(|j| GridTask::parse_tag(&j.command).is_some())
+                .count()
+        })
+    }
+}

@@ -1,0 +1,36 @@
+//! Grid federation: a CiGri-style meta-scheduler that farms bag-of-tasks
+//! campaigns across multiple independent cluster servers over the RPC
+//! protocol.
+//!
+//! The paper's headline deployment is not one cluster but a metropolitan
+//! GRID of ~700 nodes with global-computing support (§ abstract, §3.3):
+//! many autonomous OAR clusters, plus a grid layer that feeds them
+//! best-effort work. This module is that layer for the reproduction:
+//!
+//! * [`scheduler`] — [`Grid`], the meta-scheduler: campaigns persisted in
+//!   the `campaigns`/`grid_tasks` tables of its own embedded (optionally
+//!   WAL-durable) database, a probe/reconcile/dispatch round over
+//!   [`crate::rpc::RpcClient`] connections, per-cluster blacklisting
+//!   with timed probation, and a retry budget per task.
+//! * [`dispatch`] — the pure wave planner: greedy water-filling of
+//!   pending tasks across per-cluster headrooms.
+//! * [`harness`] — [`TestGrid`], which boots several in-process cluster
+//!   servers on loopback so federation scenarios (including killing and
+//!   rebooting a cluster mid-campaign) run in one test process.
+//!
+//! The grid only speaks the public client protocol (`load`, `sub`,
+//! `stat`, `del`) — clusters need no grid-specific state and keep serving
+//! their local users; grid tasks arrive as ordinary best-effort jobs that
+//! the clusters may preempt at will, and the reconciler re-places
+//! preempted work elsewhere.
+
+pub mod dispatch;
+pub mod harness;
+pub mod scheduler;
+
+pub use dispatch::plan_wave;
+pub use harness::{TestCluster, TestGrid};
+pub use scheduler::{
+    CampaignProgress, ClusterConfig, ClusterStatus, Grid, GridConfig, GridCounters,
+    GridCountersSnapshot,
+};

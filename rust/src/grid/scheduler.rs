@@ -1,0 +1,996 @@
+//! The grid meta-scheduler: farms bag-of-tasks campaigns across N
+//! independent cluster servers over the RPC protocol, CiGri-style.
+//!
+//! Structure mirrors the paper's §2.2 discipline one level up: the grid
+//! keeps **all** its state in its own embedded database (`campaigns` /
+//! `grid_tasks` tables, WAL-logged when a `data_dir` is configured), and
+//! one round thread runs the executive loop:
+//!
+//! 1. **probe** — ask every cluster's `load` RPC for free capacity;
+//!    consecutive transport failures blacklist a cluster for a probation
+//!    period, after which one probe decides re-entry;
+//! 2. **reconcile** — `stat` each reachable cluster (bounded to what is
+//!    in flight), complete tasks whose remote job terminated, requeue
+//!    preempted/failed/lost tasks within a retry budget, cancel + requeue
+//!    placements whose remote job never starts (`stale_after`), adopt
+//!    acknowledged-but-unrecorded placements by tag, and (on rejoin)
+//!    kill orphaned remote duplicates before they can double-count;
+//! 3. **dispatch** — size one best-effort submission wave per cluster
+//!    (greedy water-filling under per-cluster concurrency caps,
+//!    [`super::dispatch::plan_wave`]) and record every placement intent
+//!    *before* the remote submission goes out, so a crash between intent
+//!    and ack is recoverable by tag instead of double-dispatching.
+//!
+//! Tasks are submitted as **best-effort** jobs (§3.3): clusters may
+//! reclaim their resources at any time, and the reconciler treats the
+//! resulting `Error` exactly like a lost job — requeue elsewhere.
+//!
+//! **Exactly-once caveat.** Zero lost / zero duplicated holds for
+//! cluster *crashes* (state-wiping restarts — the acceptance scenario).
+//! A pure network partition is indistinguishable from a crash from the
+//! grid's side: after `blacklist_after` failed probes the partitioned
+//! cluster's tasks are re-placed, and if its original jobs kept running
+//! and *finished* before the rejoin sweep can kill them, that work ran
+//! twice. CiGri makes the same trade — campaign tasks must be
+//! idempotent or uniquely-named per attempt; true fencing would need
+//! cluster-side lease support the paper's protocol does not have.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::db::Db;
+use crate::rpc::RpcClient;
+use crate::server::LoadInfo;
+use crate::types::{
+    Campaign, CampaignId, CampaignSpec, CampaignState, GridTask, GridTaskState, JobId, JobSpec,
+    JobState, Time,
+};
+use crate::Result;
+
+use super::dispatch::plan_wave;
+
+/// One federated cluster, as the grid sees it.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Stable name the task→placement mapping records.
+    pub name: String,
+    /// RPC front-end address (`host:port`).
+    pub addr: String,
+    /// Concurrency cap: max tasks this grid keeps outstanding there.
+    pub max_outstanding: u32,
+}
+
+/// Grid meta-scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    pub clusters: Vec<ClusterConfig>,
+    /// Durable state directory (WAL + snapshots); `None` = volatile.
+    pub data_dir: Option<PathBuf>,
+    /// Cadence of the probe/reconcile/dispatch round.
+    pub round_every: Duration,
+    /// Max dispatch attempts per task before it is marked `Failed`.
+    pub retry_budget: u32,
+    /// Consecutive transport failures before a cluster is blacklisted.
+    pub blacklist_after: u32,
+    /// How long a blacklisted cluster sits out before a probation probe.
+    pub probation: Duration,
+    /// Per-call socket timeout on cluster RPC connections.
+    pub rpc_timeout: Duration,
+    /// A dispatched task whose remote job still has not *started* after
+    /// this long is cancelled remotely and re-placed (within the retry
+    /// budget). This is what keeps a campaign draining when a task's
+    /// shape can never fit a cluster that admitted it, or a remote admin
+    /// holds a grid job — without it such a placement would pin its task
+    /// forever.
+    pub stale_after: Duration,
+    /// WAL records between automatic checkpoints (durable grids).
+    pub checkpoint_every: u64,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            clusters: Vec::new(),
+            data_dir: None,
+            round_every: Duration::from_millis(500),
+            retry_budget: 5,
+            blacklist_after: 3,
+            probation: Duration::from_secs(10),
+            rpc_timeout: Duration::from_secs(5),
+            stale_after: Duration::from_secs(600),
+            checkpoint_every: 4096,
+        }
+    }
+}
+
+impl GridConfig {
+    /// Fast cadence for tests and benches.
+    pub fn fast(clusters: Vec<ClusterConfig>) -> GridConfig {
+        GridConfig {
+            clusters,
+            round_every: Duration::from_millis(10),
+            blacklist_after: 2,
+            probation: Duration::from_millis(150),
+            rpc_timeout: Duration::from_secs(2),
+            stale_after: Duration::from_secs(5),
+            ..GridConfig::default()
+        }
+    }
+}
+
+/// Event counters of one grid process (in-memory; the durable audit
+/// trail is the grid database's event log).
+#[derive(Debug, Default)]
+pub struct GridCounters {
+    /// Remote submissions acknowledged (including tag adoptions).
+    pub dispatched: AtomicU64,
+    /// Tasks completed (remote job terminated normally).
+    pub completed: AtomicU64,
+    /// Tasks that exhausted their retry budget.
+    pub failed: AtomicU64,
+    /// Requeues after a remote error / lost job / lost ack / stale
+    /// never-started placement.
+    pub retried: AtomicU64,
+    /// Requeues because the task's cluster was blacklisted.
+    pub orphaned: AtomicU64,
+    /// Times a cluster entered the blacklist.
+    pub blacklists: AtomicU64,
+    /// Probation probes that brought a cluster back.
+    pub rejoins: AtomicU64,
+    /// Remote duplicate jobs killed by the rejoin sweep.
+    pub orphan_kills: AtomicU64,
+    /// Individual transport failures (connect/probe/stat/sub).
+    pub transport_errors: AtomicU64,
+    /// Rounds executed.
+    pub rounds: AtomicU64,
+}
+
+/// A coherent copy of [`GridCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GridCountersSnapshot {
+    pub dispatched: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub retried: u64,
+    pub orphaned: u64,
+    pub blacklists: u64,
+    pub rejoins: u64,
+    pub orphan_kills: u64,
+    pub transport_errors: u64,
+    pub rounds: u64,
+}
+
+/// Public view of one cluster's federation state.
+#[derive(Debug, Clone)]
+pub struct ClusterStatus {
+    pub name: String,
+    pub addr: String,
+    /// Last probe answered.
+    pub alive: bool,
+    pub blacklisted: bool,
+    pub consecutive_errors: u32,
+    /// Free capacity (procs minus waiting backlog) at the last probe.
+    pub last_free: u32,
+    /// Tasks currently mapped to this cluster.
+    pub outstanding: u32,
+    pub dispatched_total: u64,
+    pub completed_total: u64,
+}
+
+/// Per-campaign progress summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CampaignProgress {
+    pub total: u32,
+    pub pending: u32,
+    pub dispatched: u32,
+    pub done: u32,
+    pub failed: u32,
+    pub state: CampaignState,
+}
+
+impl CampaignProgress {
+    /// No task will ever move again.
+    pub fn drained(&self) -> bool {
+        self.pending == 0 && self.dispatched == 0
+    }
+}
+
+#[derive(Clone)]
+struct ClusterState {
+    name: String,
+    addr: String,
+    cap: u32,
+    alive: bool,
+    consecutive_errors: u32,
+    /// Grid-clock instant (ms) after which a probation probe may run.
+    blacklisted_until: Option<Time>,
+    /// Run the orphan sweep on the next reconcile (set at rejoin).
+    sweep_on_rejoin: bool,
+    last_free: u32,
+    dispatched_total: u64,
+    completed_total: u64,
+}
+
+struct GridInner {
+    db: Mutex<Db>,
+    clusters: Mutex<Vec<ClusterState>>,
+    counters: GridCounters,
+    running: AtomicBool,
+    epoch: Instant,
+    round_every: Duration,
+    retry_budget: u32,
+    blacklist_after: u32,
+    probation: Duration,
+    rpc_timeout: Duration,
+    /// Grid-clock ms after which a never-started placement is stale.
+    stale_ms: Time,
+}
+
+impl GridInner {
+    fn now(&self) -> Time {
+        self.epoch.elapsed().as_millis() as Time
+    }
+}
+
+/// The grid meta-scheduler handle. Dropping it stops the round thread.
+pub struct Grid {
+    inner: Arc<GridInner>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Why a task is going back to `Pending` — decides which counter ticks.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RequeueKind {
+    /// Remote error / lost job / lost ack.
+    Retry,
+    /// The task's cluster was blacklisted from under it.
+    Orphan,
+}
+
+impl Grid {
+    /// Boot the meta-scheduler: recover (or create) the grid database,
+    /// then start the round thread. With a `data_dir`, a restart resumes
+    /// mid-campaign from the persisted tables — finished tasks stay
+    /// finished, in-flight placements are re-reconciled against their
+    /// clusters, and the ack window is resolved by tag.
+    pub fn start(config: GridConfig) -> Result<Grid> {
+        anyhow::ensure!(
+            !config.clusters.is_empty(),
+            "GridConfig.clusters must name at least one cluster"
+        );
+        // Placements and reconciliation key on the cluster *name*: two
+        // entries sharing one would each reconcile the other's tasks as
+        // "lost" and re-run them forever.
+        let mut names: Vec<&str> = config.clusters.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(
+            names.len() == config.clusters.len(),
+            "GridConfig.clusters contains duplicate names"
+        );
+        let db = match &config.data_dir {
+            Some(dir) => {
+                let (mut db, _stats) = Db::recover(dir)?;
+                db.set_checkpoint_every(config.checkpoint_every);
+                // A crash can cut a campaign's task-row inserts short:
+                // the bag is derivable from its header, so re-insert the
+                // missing indices. Dispatch instants from the previous
+                // process's clock are meaningless on ours — reset them so
+                // every in-flight task's staleness timer restarts at 0.
+                let repaired = db.repair_campaigns();
+                if repaired > 0 {
+                    db.log_event(
+                        0,
+                        "GRID_REPAIR",
+                        None,
+                        &format!("re-inserted {repaired} truncated task rows"),
+                    );
+                }
+                db.reset_grid_dispatch_clocks();
+                db
+            }
+            None => Db::new(),
+        };
+        let clusters = config
+            .clusters
+            .iter()
+            .map(|c| ClusterState {
+                name: c.name.clone(),
+                addr: c.addr.clone(),
+                cap: c.max_outstanding.max(1),
+                alive: false,
+                consecutive_errors: 0,
+                blacklisted_until: None,
+                sweep_on_rejoin: false,
+                last_free: 0,
+                dispatched_total: 0,
+                completed_total: 0,
+            })
+            .collect();
+        let inner = Arc::new(GridInner {
+            db: Mutex::new(db),
+            clusters: Mutex::new(clusters),
+            counters: GridCounters::default(),
+            running: AtomicBool::new(true),
+            epoch: Instant::now(),
+            round_every: config.round_every,
+            retry_budget: config.retry_budget.max(1),
+            blacklist_after: config.blacklist_after.max(1),
+            probation: config.probation,
+            rpc_timeout: config.rpc_timeout,
+            stale_ms: (config.stale_after.as_millis() as Time).max(1),
+        });
+        let thread = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("oar-grid".into())
+                .spawn(move || {
+                    while inner.running.load(Ordering::SeqCst) {
+                        round(&inner);
+                        std::thread::sleep(inner.round_every);
+                    }
+                })
+                .expect("spawn grid round thread")
+        };
+        Ok(Grid {
+            inner,
+            thread: Some(thread),
+        })
+    }
+
+    /// Milliseconds since grid start (the grid's clock).
+    pub fn now(&self) -> Time {
+        self.inner.now()
+    }
+
+    /// Submit a campaign: insert the header plus one `Pending` task row
+    /// per task (all WAL-logged on a durable grid before the call
+    /// returns — an acknowledged campaign survives a grid crash).
+    pub fn submit_campaign(&self, spec: &CampaignSpec) -> Result<CampaignId> {
+        anyhow::ensure!(spec.tasks >= 1, "campaign needs at least one task");
+        anyhow::ensure!(spec.tasks <= 1_000_000, "campaign too large (max 1e6 tasks)");
+        anyhow::ensure!(!spec.command.trim().is_empty(), "campaign command is empty");
+        anyhow::ensure!(
+            spec.nb_nodes >= 1 && spec.weight >= 1,
+            "nbNodes and weight must be positive"
+        );
+        anyhow::ensure!(spec.max_time > 0, "maxTime must be positive");
+        let now = self.inner.now();
+        let mut db = self.inner.db.lock().unwrap();
+        let id = db.insert_campaign(spec, now);
+        db.log_event(
+            now,
+            "CAMPAIGN",
+            None,
+            &format!("campaign {id} ({}) x{} tasks", spec.name, spec.tasks),
+        );
+        Ok(id)
+    }
+
+    pub fn campaigns(&self) -> Vec<Campaign> {
+        self.inner.db.lock().unwrap().campaigns()
+    }
+
+    pub fn tasks(&self, campaign: CampaignId) -> Vec<GridTask> {
+        self.inner.db.lock().unwrap().grid_tasks_of_campaign(campaign)
+    }
+
+    pub fn campaign_progress(&self, id: CampaignId) -> Result<CampaignProgress> {
+        let mut db = self.inner.db.lock().unwrap();
+        let campaign = db.campaign(id)?;
+        // Index-walk counts, no row materialization: progress is polled
+        // in tight loops and must not scale with campaign size.
+        let [pending, dispatched, done, failed] = db.count_campaign_tasks(id);
+        Ok(CampaignProgress {
+            total: campaign.tasks,
+            pending: pending as u32,
+            dispatched: dispatched as u32,
+            done: done as u32,
+            failed: failed as u32,
+            state: campaign.state,
+        })
+    }
+
+    /// Per-cluster federation status (for `oar grid clusters` and tests).
+    pub fn clusters(&self) -> Vec<ClusterStatus> {
+        let outstanding = {
+            let mut db = self.inner.db.lock().unwrap();
+            let mut by_cluster: BTreeMap<String, u32> = BTreeMap::new();
+            for t in db.grid_tasks_in_state(GridTaskState::Dispatched) {
+                if let Some(c) = t.cluster {
+                    *by_cluster.entry(c).or_insert(0) += 1;
+                }
+            }
+            by_cluster
+        };
+        let now = self.inner.now();
+        self.inner
+            .clusters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| ClusterStatus {
+                name: c.name.clone(),
+                addr: c.addr.clone(),
+                alive: c.alive,
+                blacklisted: c.blacklisted_until.map(|t| now < t).unwrap_or(false),
+                consecutive_errors: c.consecutive_errors,
+                last_free: c.last_free,
+                outstanding: outstanding.get(&c.name).copied().unwrap_or(0),
+                dispatched_total: c.dispatched_total,
+                completed_total: c.completed_total,
+            })
+            .collect()
+    }
+
+    pub fn counters(&self) -> GridCountersSnapshot {
+        let c = &self.inner.counters;
+        GridCountersSnapshot {
+            dispatched: c.dispatched.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            retried: c.retried.load(Ordering::Relaxed),
+            orphaned: c.orphaned.load(Ordering::Relaxed),
+            blacklists: c.blacklists.load(Ordering::Relaxed),
+            rejoins: c.rejoins.load(Ordering::Relaxed),
+            orphan_kills: c.orphan_kills.load(Ordering::Relaxed),
+            transport_errors: c.transport_errors.load(Ordering::Relaxed),
+            rounds: c.rounds.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until every task of `id` is terminal (or `timeout`).
+    pub fn wait_campaign_drained(&self, id: CampaignId, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.campaign_progress(id) {
+                Ok(p) if p.drained() => return true,
+                _ => {}
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Inspection hook (tests, `oar grid stat`).
+    pub fn with_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
+        f(&mut self.inner.db.lock().unwrap())
+    }
+
+    /// Stop the round thread without giving up the handle (idempotent).
+    /// Once this returns, no further state transitions happen: counters
+    /// and tables are final and can be read race-free before
+    /// [`Grid::shutdown`].
+    pub fn pause(&mut self) {
+        self.inner.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the round thread and return the final database. A clean
+    /// shutdown of a durable grid checkpoints, so the next boot replays
+    /// nothing.
+    pub fn shutdown(mut self) -> Db {
+        self.pause();
+        let inner = self.inner.clone();
+        drop(self);
+        // The joined round thread held the only other Arc clone, and no
+        // API hands the Arc out, so unwrap cannot fail here.
+        let Ok(i) = Arc::try_unwrap(inner) else {
+            unreachable!("round thread is joined; no other GridInner holders exist");
+        };
+        let mut db = i.db.into_inner().unwrap();
+        if db.is_durable() {
+            let _ = db.checkpoint();
+        }
+        db
+    }
+}
+
+impl Drop for Grid {
+    fn drop(&mut self) {
+        self.pause();
+    }
+}
+
+// ------------------------------------------------------------ rounds ----
+
+/// Connect and probe one cluster. Any failure — transport or a protocol
+/// refusal (e.g. the cluster is draining) — means "unusable this round".
+/// The connect itself is bounded by the same timeout as the calls: a
+/// black-holed host (powered off, packets silently dropped) must cost
+/// one `rpc_timeout`, not the OS connect default of minutes, or every
+/// round would stall behind it.
+fn probe(addr: &str, timeout: Duration) -> Result<(RpcClient, LoadInfo)> {
+    let mut client = RpcClient::connect_timeout(addr, timeout)?;
+    client.set_timeout(Some(timeout))?;
+    match client.load()? {
+        Ok(info) => Ok((client, info)),
+        Err(e) => anyhow::bail!("load refused: {e}"),
+    }
+}
+
+/// Count one transport failure against a cluster; when `blacklist_after`
+/// consecutive failures accumulate — across the probe, reconcile and
+/// dispatch phases, so a cluster whose `load` answers but whose
+/// `stat`/`sub` persistently fail still trips it — the cluster is
+/// blacklisted until probation and its in-flight tasks are requeued onto
+/// the survivors. Returns whether the cluster was just blacklisted.
+fn note_transport_failure(inner: &GridInner, cs: &mut ClusterState) -> bool {
+    let now = inner.now();
+    inner.counters.transport_errors.fetch_add(1, Ordering::Relaxed);
+    cs.alive = false;
+    cs.last_free = 0;
+    cs.consecutive_errors += 1;
+    if cs.consecutive_errors < inner.blacklist_after {
+        return false;
+    }
+    cs.blacklisted_until = Some(now + inner.probation.as_millis() as Time);
+    cs.consecutive_errors = 0;
+    inner.counters.blacklists.fetch_add(1, Ordering::Relaxed);
+    let mut db = inner.db.lock().unwrap();
+    db.log_event(now, "GRID_BLACKLIST", None, &cs.name);
+    let placed: Vec<GridTask> = db
+        .grid_tasks_in_state(GridTaskState::Dispatched)
+        .into_iter()
+        .filter(|t| t.cluster.as_deref() == Some(cs.name.as_str()))
+        .collect();
+    for task in placed {
+        requeue_or_fail(inner, &mut db, &task, "cluster blacklisted", RequeueKind::Orphan);
+    }
+    true
+}
+
+/// Free capacity usable for new best-effort tasks: free processors minus
+/// the waiting backlog (each waiting job will claim at least one proc).
+fn wave_budget(info: &LoadInfo) -> u32 {
+    info.procs_free.saturating_sub(info.waiting_jobs)
+}
+
+/// The `stat` filter of one reconcile pass: all non-terminal grid-tagged
+/// jobs, plus the placed job ids (whatever state they reached), plus the
+/// exact tags of any ack-window placements. Bounded by the cluster's
+/// live queue + the grid's own outstanding count — never by how many
+/// tasks have finished over the campaign's lifetime.
+fn reconcile_filter(placed: &[GridTask], ack_tags: &[String]) -> String {
+    use std::fmt::Write as _;
+    let mut filter = String::from("command LIKE '%#grid:%' AND (state IN (");
+    let mut first = true;
+    for s in JobState::ALL {
+        if !s.is_terminal() {
+            if !first {
+                filter.push(',');
+            }
+            let _ = write!(filter, "'{}'", s.as_str());
+            first = false;
+        }
+    }
+    filter.push(')');
+    let ids: Vec<String> = placed
+        .iter()
+        .filter_map(|t| t.job)
+        .map(|j| j.to_string())
+        .collect();
+    if !ids.is_empty() {
+        let _ = write!(filter, " OR id IN ({})", ids.join(","));
+    }
+    for tag in ack_tags {
+        let _ = write!(filter, " OR command LIKE '%{tag}'");
+    }
+    filter.push(')');
+    filter
+}
+
+/// Requeue within budget, fail beyond it. The *only* place a task goes
+/// back to `Pending`, so `sum(attempts) == initial dispatches + retried
+/// + orphaned` holds exactly (the e2e suite asserts it).
+fn requeue_or_fail(inner: &GridInner, db: &mut Db, task: &GridTask, why: &str, kind: RequeueKind) {
+    let now = inner.now();
+    if task.attempts >= inner.retry_budget {
+        if db.fail_grid_task(task.id, why).is_ok() {
+            inner.counters.failed.fetch_add(1, Ordering::Relaxed);
+            db.log_event(
+                now,
+                "GRID_TASK_FAILED",
+                None,
+                &format!("task {}:{} after {} attempts: {why}", task.campaign, task.index, task.attempts),
+            );
+        }
+    } else if db.requeue_grid_task(task.id, why).is_ok() {
+        let (counter, kind_s) = match kind {
+            RequeueKind::Retry => (&inner.counters.retried, "GRID_REQUEUE"),
+            RequeueKind::Orphan => (&inner.counters.orphaned, "GRID_ORPHAN"),
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        db.log_event(
+            now,
+            kind_s,
+            None,
+            &format!("task {}:{}: {why}", task.campaign, task.index),
+        );
+    }
+}
+
+/// One executive round: probe → reconcile → dispatch → campaign close.
+///
+/// The round works on a **private copy** of the cluster table and writes
+/// it back at the end: a round does per-cluster network I/O (worst case
+/// `clusters × rpc_timeout` against black-holed hosts), and holding the
+/// lock across that would stall every [`Grid::clusters`] status read.
+/// The round thread is the only writer, so copy-out/write-back is
+/// race-free; readers just see the previous round's snapshot.
+fn round(inner: &Arc<GridInner>) {
+    inner.counters.rounds.fetch_add(1, Ordering::Relaxed);
+    let mut clusters: Vec<ClusterState> = inner.clusters.lock().unwrap().clone();
+    let n = clusters.len();
+    let mut sessions: Vec<Option<RpcClient>> = Vec::with_capacity(n);
+
+    // ------------------------------------------------------- probe ----
+    for cs in clusters.iter_mut() {
+        let now = inner.now();
+        if let Some(until) = cs.blacklisted_until {
+            if now < until {
+                sessions.push(None);
+                continue;
+            }
+            // Probation probe: one success re-enters, one failure extends.
+            match probe(&cs.addr, inner.rpc_timeout) {
+                Ok((client, info)) => {
+                    cs.blacklisted_until = None;
+                    cs.consecutive_errors = 0;
+                    cs.alive = true;
+                    cs.sweep_on_rejoin = true;
+                    cs.last_free = wave_budget(&info);
+                    inner.counters.rejoins.fetch_add(1, Ordering::Relaxed);
+                    let mut db = inner.db.lock().unwrap();
+                    db.log_event(now, "GRID_REJOIN", None, &cs.name);
+                    sessions.push(Some(client));
+                }
+                Err(_) => {
+                    inner.counters.transport_errors.fetch_add(1, Ordering::Relaxed);
+                    cs.blacklisted_until = Some(now + inner.probation.as_millis() as Time);
+                    sessions.push(None);
+                }
+            }
+            continue;
+        }
+        match probe(&cs.addr, inner.rpc_timeout) {
+            Ok((client, info)) => {
+                cs.alive = true;
+                cs.consecutive_errors = 0;
+                cs.last_free = wave_budget(&info);
+                sessions.push(Some(client));
+            }
+            Err(_) => {
+                note_transport_failure(inner, cs);
+                sessions.push(None);
+            }
+        }
+    }
+
+    // --------------------------------------------------- reconcile ----
+    for i in 0..n {
+        if sessions[i].is_none() {
+            continue;
+        }
+        let name = clusters[i].name.clone();
+        let (placed, ack_tags): (Vec<GridTask>, Vec<String>) = {
+            let mut db = inner.db.lock().unwrap();
+            let placed: Vec<GridTask> = db
+                .grid_tasks_in_state(GridTaskState::Dispatched)
+                .into_iter()
+                .filter(|t| t.cluster.as_deref() == Some(name.as_str()))
+                .collect();
+            let ack_tags = placed
+                .iter()
+                .filter(|t| t.job.is_none())
+                .filter_map(|t| {
+                    db.campaign(t.campaign)
+                        .ok()
+                        .map(|c| GridTask::tag(c.token, t.index))
+                })
+                .collect();
+            (placed, ack_tags)
+        };
+        if placed.is_empty() && !clusters[i].sweep_on_rejoin {
+            continue;
+        }
+        // One bounded stat per cluster: every *non-terminal* grid-tagged
+        // job (what the rejoin sweep must see), plus — by id — the placed
+        // jobs whose terminal fate decides completion vs. retry, plus —
+        // by tag — any ack-window submission that may have landed in any
+        // state. Terminated jobs of past waves are excluded, so the
+        // transfer stays proportional to what is in flight, not to how
+        // much the campaign has already finished.
+        let filter = reconcile_filter(&placed, &ack_tags);
+        let jobs = match sessions[i].as_mut().unwrap().stat(Some(&filter)) {
+            Ok(Ok(jobs)) => jobs,
+            Ok(Err(e)) => {
+                // Protocol refusal (draining, or — if the generated
+                // filter ever stopped parsing — bad_filter): retried
+                // next round, but logged so a persistent refusal leaves
+                // a trail instead of a silent stall.
+                let now = inner.now();
+                let mut db = inner.db.lock().unwrap();
+                db.log_event(now, "GRID_STAT_REFUSED", None, &format!("{name}: {e}"));
+                continue;
+            }
+            Err(_) => {
+                note_transport_failure(inner, &mut clusters[i]);
+                sessions[i] = None;
+                continue;
+            }
+        };
+        let by_id: BTreeMap<JobId, &crate::types::Job> =
+            jobs.iter().map(|j| (j.id, j)).collect();
+        let now = inner.now();
+        // Cancels decided under the db lock are issued after it drops: a
+        // `del` is a blocking RPC, and pinning the grid database for up
+        // to rpc_timeout per call would stall every status read.
+        let mut to_cancel: Vec<JobId> = Vec::new();
+        let mut db = inner.db.lock().unwrap();
+        for task in &placed {
+            match task.job {
+                Some(jid) => {
+                    // Identity check, not just the id: a cluster that
+                    // crashed and rebooted between rounds (without a
+                    // probe failure in between) re-issues job ids from
+                    // 1, so a bare id can alias a *different* task's
+                    // fresh job — trusting it would complete the wrong
+                    // task. The command tag is the placement's identity.
+                    let tag = db
+                        .campaign(task.campaign)
+                        .ok()
+                        .map(|c| GridTask::tag(c.token, task.index));
+                    let remote = by_id.get(&jid).copied().filter(|j| {
+                        tag.as_deref()
+                            .map(|t| j.command.ends_with(t))
+                            .unwrap_or(false)
+                    });
+                    match remote {
+                        Some(job) if job.state == JobState::Terminated => {
+                            if db.complete_grid_task(task.id).is_ok() {
+                                inner.counters.completed.fetch_add(1, Ordering::Relaxed);
+                                clusters[i].completed_total += 1;
+                            }
+                        }
+                        Some(job) if job.state == JobState::Error => {
+                            let why = format!("remote error: {}", job.message);
+                            requeue_or_fail(inner, &mut db, task, &why, RequeueKind::Retry);
+                        }
+                        Some(job)
+                            if matches!(job.state, JobState::Waiting | JobState::Hold)
+                                && now.saturating_sub(task.dispatched_at) > inner.stale_ms =>
+                        {
+                            // The placement never started (a shape the
+                            // cluster admitted but can never fit, or a
+                            // remote hold): nudge a cancellation, but do
+                            // NOT requeue yet — the del ack only confirms
+                            // the Cancel *event* was enqueued, not that
+                            // it beat a concurrent launch, so releasing
+                            // the task here could run it twice. The task
+                            // stays Dispatched until a later stat shows
+                            // the job terminal: Error (the cancel won)
+                            // requeues it, Terminated (the job slipped
+                            // through and finished) completes it.
+                            // Re-sent each round until then; cancels are
+                            // idempotent.
+                            db.log_event(
+                                now,
+                                "GRID_STALE_CANCEL",
+                                None,
+                                &format!(
+                                    "task {}:{} job {jid} on {name}",
+                                    task.campaign, task.index
+                                ),
+                            );
+                            to_cancel.push(jid);
+                        }
+                        Some(_) => {} // still waiting/running there
+                        None => {
+                            requeue_or_fail(
+                                inner,
+                                &mut db,
+                                task,
+                                "remote job lost",
+                                RequeueKind::Retry,
+                            );
+                        }
+                    }
+                }
+                None => {
+                    // Ack window: the intent was recorded but the ack never
+                    // made it back. The tag decides — adopt the remote job
+                    // if the submission did land, requeue otherwise.
+                    let Ok(campaign) = db.campaign(task.campaign) else {
+                        continue;
+                    };
+                    let tag = GridTask::tag(campaign.token, task.index);
+                    let adopted = jobs
+                        .iter()
+                        .filter(|j| j.command.ends_with(tag.as_str()))
+                        .max_by_key(|j| j.id);
+                    match adopted {
+                        Some(job) => {
+                            if db.set_grid_task_job(task.id, job.id).is_ok() {
+                                inner.counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                                clusters[i].dispatched_total += 1;
+                            }
+                        }
+                        None => {
+                            requeue_or_fail(
+                                inner,
+                                &mut db,
+                                task,
+                                "submission ack lost",
+                                RequeueKind::Retry,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Rejoin sweep: a cluster coming back from the blacklist may
+        // still hold live jobs for tasks the grid has since re-placed
+        // elsewhere. Kill them before they can terminate and double-run.
+        if clusters[i].sweep_on_rejoin {
+            for job in &jobs {
+                if job.state.is_terminal() {
+                    continue;
+                }
+                let Some((token, index)) = GridTask::parse_tag(&job.command) else {
+                    continue;
+                };
+                // A token not in our campaigns table is another grid's
+                // job (or a past life of this one) — never ours to kill.
+                let Some(campaign) = db.campaign_by_token(token) else {
+                    continue;
+                };
+                let ours = db
+                    .grid_tasks_of_campaign(campaign.id)
+                    .into_iter()
+                    .find(|t| t.index == index)
+                    .map(|t| {
+                        t.state == GridTaskState::Dispatched
+                            && t.cluster.as_deref() == Some(name.as_str())
+                            && t.job == Some(job.id)
+                    })
+                    .unwrap_or(false);
+                if !ours {
+                    to_cancel.push(job.id);
+                    inner.counters.orphan_kills.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            clusters[i].sweep_on_rejoin = false;
+        }
+        drop(db);
+        for jid in to_cancel {
+            let _ = sessions[i].as_mut().unwrap().del(jid);
+        }
+    }
+
+    // ---------------------------------------------------- dispatch ----
+    // Headrooms first: the pending fetch is capped at what this wave can
+    // actually place, so a million-task backlog costs a million-row
+    // materialization exactly never.
+    let headrooms: Vec<u32> = {
+        let mut db = inner.db.lock().unwrap();
+        let mut outstanding: BTreeMap<String, u32> = BTreeMap::new();
+        for t in db.grid_tasks_in_state(GridTaskState::Dispatched) {
+            if let Some(c) = t.cluster {
+                *outstanding.entry(c).or_insert(0) += 1;
+            }
+        }
+        clusters
+            .iter()
+            .enumerate()
+            .map(|(i, cs)| {
+                if sessions[i].is_none() {
+                    return 0;
+                }
+                let out = outstanding.get(&cs.name).copied().unwrap_or(0);
+                cs.cap.saturating_sub(out).min(cs.last_free)
+            })
+            .collect()
+    };
+    let wave_cap: u32 = headrooms.iter().sum();
+    let (pending, campaigns_by_id) = if wave_cap > 0 {
+        let mut db = inner.db.lock().unwrap();
+        let pending = db.grid_tasks_in_state_capped(GridTaskState::Pending, wave_cap as usize);
+        let campaigns: BTreeMap<CampaignId, Campaign> =
+            db.campaigns().into_iter().map(|c| (c.id, c)).collect();
+        (pending, campaigns)
+    } else {
+        (Vec::new(), BTreeMap::new())
+    };
+    if !pending.is_empty() {
+        let counts = plan_wave(pending.len(), &headrooms);
+        let mut tasks = pending.into_iter();
+        for i in 0..n {
+            for _ in 0..counts[i] {
+                let Some(task) = tasks.next() else { break };
+                let Some(campaign) = campaigns_by_id.get(&task.campaign) else {
+                    continue;
+                };
+                let name = clusters[i].name.clone();
+                // Placement intent first (write-ahead at the grid level).
+                {
+                    let mut db = inner.db.lock().unwrap();
+                    if db
+                        .mark_grid_task_dispatched(task.id, &name, inner.now())
+                        .is_err()
+                    {
+                        continue;
+                    }
+                }
+                let spec = JobSpec {
+                    user: campaign.user.clone(),
+                    command: format!(
+                        "{} {}",
+                        campaign.command.replace("{i}", &task.index.to_string()),
+                        GridTask::tag(campaign.token, task.index)
+                    ),
+                    nb_nodes: campaign.nb_nodes,
+                    weight: campaign.weight,
+                    max_time: Some(campaign.max_time),
+                    best_effort: true,
+                    ..JobSpec::default()
+                };
+                match sessions[i].as_mut().unwrap().sub(&spec) {
+                    Ok(Ok(job)) => {
+                        let mut db = inner.db.lock().unwrap();
+                        if db.set_grid_task_job(task.id, job).is_ok() {
+                            inner.counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                            clusters[i].dispatched_total += 1;
+                        }
+                    }
+                    Ok(Err(reject)) => {
+                        // Admission refused: the submission definitively
+                        // did not land, so the task can move on at once.
+                        let mut db = inner.db.lock().unwrap();
+                        if let Ok(t) = db.grid_task(task.id) {
+                            let why = format!("admission rejected: {reject}");
+                            requeue_or_fail(inner, &mut db, &t, &why, RequeueKind::Retry);
+                        }
+                    }
+                    Err(_) => {
+                        // Transport failure mid-sub: the outcome is
+                        // unknown — leave the intent recorded (the tag
+                        // resolves it next round) and stop talking to
+                        // this cluster for the rest of the round.
+                        note_transport_failure(inner, &mut clusters[i]);
+                        sessions[i] = None;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------ close campaigns ----
+    let now = inner.now();
+    let mut db = inner.db.lock().unwrap();
+    let open: Vec<CampaignId> = db
+        .campaigns()
+        .into_iter()
+        .filter(|c| c.state == CampaignState::Active)
+        .map(|c| c.id)
+        .collect();
+    for id in open {
+        if db.campaign_tasks_all_terminal(id) {
+            let _ = db.set_campaign_state(id, CampaignState::Done);
+            db.log_event(now, "CAMPAIGN_DONE", None, &format!("campaign {id}"));
+        }
+    }
+    drop(db);
+
+    // Publish this round's cluster state (see the fn doc: the round ran
+    // on a private copy so status reads never wait on network I/O).
+    *inner.clusters.lock().unwrap() = clusters;
+}

@@ -36,6 +36,10 @@
 //! * [`rpc`] — the network front-end: length-framed JSON protocol,
 //!   threaded TCP server with a bounded worker pool, typed client, and
 //!   the socket-speaking user commands of §2.1 (`oar sub|stat|del|...`).
+//! * [`grid`] — the federation layer above it all: a CiGri-style grid
+//!   meta-scheduler farming bag-of-tasks campaigns across N cluster
+//!   servers over RPC as best-effort jobs (the paper's metropolitan-GRID
+//!   deployment, § abstract / §3.3).
 
 pub mod admission;
 pub mod bench;
@@ -43,6 +47,7 @@ pub mod central;
 pub mod cli;
 pub mod cluster;
 pub mod db;
+pub mod grid;
 pub mod launcher;
 pub mod matching;
 pub mod monitor;

@@ -49,7 +49,29 @@ pub struct RpcClient {
 impl RpcClient {
     /// Connect to a serving front-end (`host:port`).
     pub fn connect(addr: &str) -> Result<RpcClient> {
-        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Like [`RpcClient::connect`] but bounded by `timeout` per resolved
+    /// address: a black-holed host (powered off, packets dropped) must
+    /// fail within the caller's budget, not the OS connect default of
+    /// minutes — the grid probes every cluster with this each round.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<RpcClient> {
+        use std::net::ToSocketAddrs;
+        let mut last: Option<std::io::Error> = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => return Self::from_stream(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => e.into(),
+            None => anyhow::anyhow!("{addr}: no addresses resolved"),
+        })
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<RpcClient> {
         let _ = stream.set_nodelay(true);
         let read_half = stream.try_clone()?;
         Ok(RpcClient {
@@ -175,6 +197,42 @@ impl RpcClient {
                     .ok_or_else(|| anyhow::anyhow!("del result missing state"))?;
                 Ok(Ok(s))
             }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `hold`: suspend a Waiting job (`oarhold`); returns the job's
+    /// resulting state.
+    pub fn hold(&mut self, job: JobId) -> CallResult<JobState> {
+        self.hold_resume("hold", job)
+    }
+
+    /// `resume`: release a held job back to Waiting (`oarresume`).
+    pub fn resume(&mut self, job: JobId) -> CallResult<JobState> {
+        self.hold_resume("resume", job)
+    }
+
+    fn hold_resume(&mut self, method: &str, job: JobId) -> CallResult<JobState> {
+        let res = self.call(method, Json::obj(vec![("id", Json::Num(job as f64))]))?;
+        match res {
+            Ok(ok) => {
+                let s = ok
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .and_then(JobState::parse)
+                    .ok_or_else(|| anyhow::anyhow!("{method} result missing state"))?;
+                Ok(Ok(s))
+            }
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `load`: the cluster occupancy probe the grid meta-scheduler sizes
+    /// its dispatch waves with.
+    pub fn load(&mut self) -> CallResult<crate::server::LoadInfo> {
+        let res = self.call("load", Json::Null)?;
+        match res {
+            Ok(ok) => Ok(Ok(proto::load_from_json(&ok)?)),
             Err(e) => Ok(Err(e)),
         }
     }

@@ -33,8 +33,11 @@ pub mod code {
     pub const ADMISSION_REJECTED: &str = "admission_rejected";
     /// The `stat` filter expression failed to parse.
     pub const BAD_FILTER: &str = "bad_filter";
-    /// `del` named a job id the database does not know.
+    /// `del`/`hold`/`resume` named a job id the database does not know.
     pub const NO_SUCH_JOB: &str = "no_such_job";
+    /// `hold`/`resume` targeted a job whose current state forbids the
+    /// transition (fig. 1: only Waiting ⇄ Hold are legal).
+    pub const ILLEGAL_STATE: &str = "illegal_state";
     /// The server is draining for shutdown and takes no new work.
     pub const SHUTTING_DOWN: &str = "shutting_down";
     /// Anything else (e.g. a stored admission rule that fails to parse).
@@ -376,6 +379,43 @@ pub fn queue_from_json(doc: &Json) -> Result<Queue> {
     })
 }
 
+// -------------------------------------------------------------- load ----
+
+/// Encode a cluster occupancy probe (`load` result).
+pub fn load_to_json(info: &crate::server::LoadInfo) -> Json {
+    Json::obj(vec![
+        ("nodesTotal", Json::Num(info.nodes_total as f64)),
+        ("nodesAlive", Json::Num(info.nodes_alive as f64)),
+        ("procsTotal", Json::Num(info.procs_total as f64)),
+        ("procsAlive", Json::Num(info.procs_alive as f64)),
+        ("procsBusy", Json::Num(info.procs_busy as f64)),
+        ("procsFree", Json::Num(info.procs_free as f64)),
+        ("waitingJobs", Json::Num(info.waiting_jobs as f64)),
+        ("runningJobs", Json::Num(info.running_jobs as f64)),
+    ])
+}
+
+/// Decode a cluster occupancy probe (client side of `load`).
+pub fn load_from_json(doc: &Json) -> Result<crate::server::LoadInfo> {
+    let field = |k: &str| -> Result<u32> {
+        doc.get(k)
+            .and_then(Json::as_i64)
+            .filter(|v| (0..=u32::MAX as i64).contains(v))
+            .map(|v| v as u32)
+            .ok_or_else(|| anyhow::anyhow!("load result missing numeric field {k:?}"))
+    };
+    Ok(crate::server::LoadInfo {
+        nodes_total: field("nodesTotal")?,
+        nodes_alive: field("nodesAlive")?,
+        procs_total: field("procsTotal")?,
+        procs_alive: field("procsAlive")?,
+        procs_busy: field("procsBusy")?,
+        procs_free: field("procsFree")?,
+        waiting_jobs: field("waitingJobs")?,
+        running_jobs: field("runningJobs")?,
+    })
+}
+
 /// Encode submission ids (`sub` result).
 pub fn ids_to_json(ids: &[JobId]) -> Json {
     Json::obj(vec![(
@@ -516,6 +556,23 @@ mod tests {
             assert_eq!(back.max_procs_per_job, q.max_procs_per_job);
             assert_eq!(back.active, q.active);
         }
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let info = crate::server::LoadInfo {
+            nodes_total: 17,
+            nodes_alive: 16,
+            procs_total: 34,
+            procs_alive: 32,
+            procs_busy: 10,
+            procs_free: 22,
+            waiting_jobs: 3,
+            running_jobs: 5,
+        };
+        let back = load_from_json(&load_to_json(&info)).unwrap();
+        assert_eq!(back, info);
+        assert!(load_from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::time::Duration;
 use super::proto::{self, code};
 use super::wire;
 use crate::server::Server;
+use crate::types::JobState;
 use crate::util::Json;
 use crate::Result;
 
@@ -76,6 +77,40 @@ impl RpcConfig {
             ..Default::default()
         }
     }
+
+    /// Environment overrides, applied by [`RpcServer::start`] to whatever
+    /// config it is given: `OAR_RPC_IO_TIMEOUT_MS` (0 = no timeout) and
+    /// `OAR_RPC_QUEUE` (accept-queue depth, must be > 0). They exist so a
+    /// harness or CI can tighten the front-end without plumbing flags
+    /// through every entry point; unset or unparsable values leave the
+    /// config untouched (`docs/PROTOCOL.md` documents the defaults).
+    pub fn with_env_overrides(self) -> RpcConfig {
+        let io = std::env::var("OAR_RPC_IO_TIMEOUT_MS").ok();
+        let queue = std::env::var("OAR_RPC_QUEUE").ok();
+        self.apply_overrides(io.as_deref(), queue.as_deref())
+    }
+
+    /// The pure half of [`RpcConfig::with_env_overrides`] (unit-testable
+    /// without touching process-global env state).
+    fn apply_overrides(
+        mut self,
+        io_timeout_ms: Option<&str>,
+        queue_depth: Option<&str>,
+    ) -> RpcConfig {
+        if let Some(ms) = io_timeout_ms.and_then(|v| v.trim().parse::<u64>().ok()) {
+            self.io_timeout = if ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(ms))
+            };
+        }
+        if let Some(depth) = queue_depth.and_then(|v| v.trim().parse::<usize>().ok()) {
+            if depth > 0 {
+                self.queue_depth = depth;
+            }
+        }
+        self
+    }
 }
 
 /// State shared between the acceptor, the workers and the handle.
@@ -110,9 +145,10 @@ pub struct RpcServer {
 impl RpcServer {
     /// Bind `config.addr` and start serving `server` over it.
     pub fn start(server: Arc<Server>, config: RpcConfig) -> Result<RpcServer> {
+        let config = config.with_env_overrides();
         anyhow::ensure!(config.workers > 0, "RpcConfig.workers must be > 0");
         anyhow::ensure!(config.queue_depth > 0, "RpcConfig.queue_depth must be > 0");
-        let listener = TcpListener::bind(config.addr.as_str())?;
+        let listener = bind_listener(config.addr.as_str())?;
         let local_addr = listener.local_addr()?;
         // Non-blocking accept so the acceptor can observe the drain flag.
         listener.set_nonblocking(true)?;
@@ -201,6 +237,93 @@ impl RpcServer {
 impl Drop for RpcServer {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// Bind the listening socket. Unix IPv4 addresses are bound with
+/// `SO_REUSEADDR` (via the same direct-libc FFI approach as
+/// [`super::signal`] — the build is offline/zero-dep): when a server is
+/// restarted on its old address — or the federation harness reboots a
+/// killed cluster on the same port — connections the previous instance
+/// closed first sit in TIME_WAIT and would otherwise make the rebind fail
+/// with `EADDRINUSE` for minutes. IPv6, non-unix targets and any FFI
+/// failure fall back to a plain `TcpListener::bind`.
+fn bind_listener(addr: &str) -> Result<TcpListener> {
+    #[cfg(unix)]
+    {
+        use std::net::ToSocketAddrs;
+        if let Ok(resolved) = addr.to_socket_addrs() {
+            for sa in resolved {
+                if let SocketAddr::V4(v4) = sa {
+                    if let Some(listener) = bind_reuseaddr_v4(&v4) {
+                        return Ok(listener);
+                    }
+                }
+            }
+        }
+    }
+    Ok(TcpListener::bind(addr)?)
+}
+
+#[cfg(unix)]
+fn bind_reuseaddr_v4(sa: &std::net::SocketAddrV4) -> Option<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = if cfg!(target_os = "linux") { 1 } else { 0xffff };
+    const SO_REUSEADDR: i32 = if cfg!(target_os = "linux") { 2 } else { 4 };
+
+    /// `struct sockaddr_in`: Linux leads with `sa_family_t sin_family`
+    /// (u16); the BSDs (incl. macOS) split that slot into
+    /// `sin_len`/`sin_family` bytes. Port and address are in network
+    /// byte order.
+    #[repr(C)]
+    struct SockaddrIn {
+        #[cfg(not(target_os = "linux"))]
+        sin_len: u8,
+        #[cfg(not(target_os = "linux"))]
+        sin_family: u8,
+        #[cfg(target_os = "linux")]
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, value: *const i32, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    let addr = SockaddrIn {
+        #[cfg(not(target_os = "linux"))]
+        sin_len: std::mem::size_of::<SockaddrIn>() as u8,
+        #[cfg(not(target_os = "linux"))]
+        sin_family: AF_INET as u8,
+        #[cfg(target_os = "linux")]
+        sin_family: AF_INET as u16,
+        sin_port: sa.port().to_be(),
+        sin_addr: u32::from_ne_bytes(sa.ip().octets()),
+        sin_zero: [0; 8],
+    };
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return None;
+        }
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, 4) != 0
+            || bind(fd, &addr, std::mem::size_of::<SockaddrIn>() as u32) != 0
+            || listen(fd, 128) != 0
+        {
+            close(fd);
+            return None;
+        }
+        Some(TcpListener::from_raw_fd(fd))
     }
 }
 
@@ -388,6 +511,9 @@ fn dispatch(shared: &Shared, doc: &Json) -> Json {
         "sub" => handle_sub(server, id, &params),
         "stat" => handle_stat(server, id, &params),
         "del" => handle_del(server, id, &params),
+        "hold" => handle_hold_resume(server, id, &params, true),
+        "resume" => handle_hold_resume(server, id, &params, false),
+        "load" => proto::ok_response(id, proto::load_to_json(&server.load_info())),
         "nodes" => {
             let nodes = server.nodes();
             proto::ok_response(
@@ -514,6 +640,52 @@ fn handle_del(server: &Server, id: u64, params: &Json) -> Json {
     }
 }
 
+/// `hold`/`resume` (`oarhold`/`oarresume`): the in-process [`Server`] API
+/// has always had these; this exposes them to clients. The job id gets
+/// the same strict-integer discipline as `del`. Fig. 1 only allows
+/// Waiting ⇄ Hold, so targeting a job in any other state is the typed
+/// `illegal_state` error, distinct from an unknown id (`no_such_job`).
+fn handle_hold_resume(server: &Server, id: u64, params: &Json, hold: bool) -> Json {
+    let job = match params.get("id") {
+        Some(Json::Num(n)) if n.fract() == 0.0 && *n >= 0.0 => *n as u64,
+        _ => {
+            return proto::err_response(
+                id,
+                code::BAD_REQUEST,
+                &format!(
+                    "{} requires a non-negative integer id",
+                    if hold { "hold" } else { "resume" }
+                ),
+            )
+        }
+    };
+    let outcome = if hold { server.hold(job) } else { server.resume(job) };
+    match outcome {
+        Ok(()) => {
+            // The transition target is deterministic (Waiting ⇄ Hold), so
+            // report it directly: re-reading the row here would race the
+            // automaton — a resumed job can already be `toLaunch` by now.
+            let state = if hold { JobState::Hold } else { JobState::Waiting };
+            proto::ok_response(
+                id,
+                Json::obj(vec![
+                    ("id", Json::Num(job as f64)),
+                    ("state", Json::Str(state.as_str().to_string())),
+                ]),
+            )
+        }
+        Err(e) => match e.downcast_ref::<crate::db::DbError>() {
+            Some(crate::db::DbError::JobNotFound(_)) => {
+                proto::err_response(id, code::NO_SUCH_JOB, &e.to_string())
+            }
+            Some(crate::db::DbError::IllegalTransition { .. }) => {
+                proto::err_response(id, code::ILLEGAL_STATE, &e.to_string())
+            }
+            _ => proto::err_response(id, code::INTERNAL, &e.to_string()),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -562,6 +734,88 @@ mod tests {
         let resp = dispatch(&shared, &proto::request(1, "ping", Json::Null));
         let err = resp.get("err").expect("err");
         assert_eq!(err.get("code").and_then(Json::as_str), Some(code::SHUTTING_DOWN));
+    }
+
+    #[test]
+    fn env_overrides_parse_strictly() {
+        let base = RpcConfig::default();
+        // Unset / garbage: untouched.
+        let cfg = base.clone().apply_overrides(None, None);
+        assert_eq!(cfg.io_timeout, Some(Duration::from_secs(60)));
+        assert_eq!(cfg.queue_depth, 64);
+        let cfg = base.clone().apply_overrides(Some("fast"), Some("-3"));
+        assert_eq!(cfg.io_timeout, Some(Duration::from_secs(60)));
+        assert_eq!(cfg.queue_depth, 64);
+        // Valid values override; 0 io timeout = no timeout; 0 queue depth
+        // would break the acceptor invariant and is ignored.
+        let cfg = base.clone().apply_overrides(Some("1500"), Some("8"));
+        assert_eq!(cfg.io_timeout, Some(Duration::from_millis(1500)));
+        assert_eq!(cfg.queue_depth, 8);
+        let cfg = base.apply_overrides(Some("0"), Some("0"));
+        assert_eq!(cfg.io_timeout, None);
+        assert_eq!(cfg.queue_depth, 64);
+    }
+
+    #[test]
+    fn load_probe_via_dispatch() {
+        let shared = shared();
+        let resp = dispatch(&shared, &proto::request(1, "load", Json::Null));
+        let info = proto::load_from_json(resp.get("ok").expect("ok")).unwrap();
+        // The dispatch fixture is a tiny(2, 1) cluster, fully idle.
+        assert_eq!(info.nodes_total, 2);
+        assert_eq!(info.procs_alive, 2);
+        assert_eq!(info.procs_free, 2);
+        assert_eq!(info.running_jobs, 0);
+    }
+
+    #[test]
+    fn hold_resume_via_dispatch() {
+        let shared = shared();
+        let params = Json::obj(vec![
+            ("user", Json::Str("u".into())),
+            ("command", Json::Str("sleep 30".into())),
+            ("nbNodes", Json::Num(2.0)),
+            ("maxTime", Json::Num(60.0)),
+        ]);
+        let resp = dispatch(&shared, &proto::request(1, "sub", params));
+        let ids = proto::ids_from_json(resp.get("ok").expect("ok")).unwrap();
+
+        // Freshly submitted jobs are Waiting; hold must land before the
+        // scheduler picks the job up, so race the automaton and accept
+        // either outcome — but the *typed* outcome, never a decode error.
+        let resp = dispatch(
+            &shared,
+            &proto::request(2, "hold", Json::obj(vec![("id", Json::Num(ids[0] as f64))])),
+        );
+        if let Some(ok) = resp.get("ok") {
+            assert_eq!(ok.get("state").and_then(Json::as_str), Some("Hold"));
+            let resp = dispatch(
+                &shared,
+                &proto::request(3, "resume", Json::obj(vec![("id", Json::Num(ids[0] as f64))])),
+            );
+            let ok = resp.get("ok").expect("resume ok");
+            assert_eq!(ok.get("state").and_then(Json::as_str), Some("Waiting"));
+        } else {
+            let err = resp.get("err").expect("err");
+            assert_eq!(
+                err.get("code").and_then(Json::as_str),
+                Some(code::ILLEGAL_STATE)
+            );
+        }
+
+        // Unknown id and mistyped id: typed errors.
+        let resp = dispatch(
+            &shared,
+            &proto::request(4, "hold", Json::obj(vec![("id", Json::Num(424242.0))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::NO_SUCH_JOB));
+        let resp = dispatch(
+            &shared,
+            &proto::request(5, "resume", Json::obj(vec![("id", Json::Num(1.5))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_REQUEST));
     }
 
     #[test]

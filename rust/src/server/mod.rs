@@ -69,6 +69,27 @@ impl Default for ServerConfig {
     }
 }
 
+/// Snapshot of a cluster's occupancy, answered by the `load` RPC method —
+/// the probe the grid meta-scheduler sizes its dispatch waves with
+/// (load-aware placement across federated clusters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadInfo {
+    pub nodes_total: u32,
+    pub nodes_alive: u32,
+    pub procs_total: u32,
+    /// Processors on `Alive` nodes (the schedulable pool).
+    pub procs_alive: u32,
+    /// Processors held by jobs in resource-holding states, on alive nodes.
+    pub procs_busy: u32,
+    /// `procs_alive - procs_busy` (saturating).
+    pub procs_free: u32,
+    /// Jobs waiting to be scheduled (`Waiting`).
+    pub waiting_jobs: u32,
+    /// Jobs holding or about to hold resources (`toLaunch`/`Launching`/
+    /// `Running`).
+    pub running_jobs: u32,
+}
+
 /// What [`Server::open`] found and did while bringing the durable
 /// database back: the recovery path (generation, snapshot, replayed WAL
 /// tail) and the restart reconciliation (stranded jobs and the state each
@@ -399,6 +420,35 @@ impl Server {
         self.with_db(|db| db.queues_by_priority())
     }
 
+    /// The `load` probe: current occupancy, computed in one pass under
+    /// the database lock so the numbers are mutually coherent.
+    pub fn load_info(&self) -> LoadInfo {
+        self.with_db(|db| {
+            let nodes = db.all_nodes();
+            let busy_by_node = db.busy_procs_by_node();
+            let mut info = LoadInfo {
+                nodes_total: nodes.len() as u32,
+                ..LoadInfo::default()
+            };
+            for n in &nodes {
+                info.procs_total += n.nb_procs;
+                if n.state == crate::types::NodeState::Alive {
+                    info.nodes_alive += 1;
+                    info.procs_alive += n.nb_procs;
+                    info.procs_busy += busy_by_node.get(&n.id).copied().unwrap_or(0);
+                }
+            }
+            info.procs_free = info.procs_alive.saturating_sub(info.procs_busy);
+            info.waiting_jobs = db.count_jobs_in_state(JobState::Waiting) as u32;
+            info.running_jobs = JobState::ALL
+                .iter()
+                .filter(|s| s.holds_resources())
+                .map(|s| db.count_jobs_in_state(*s))
+                .sum::<usize>() as u32;
+            info
+        })
+    }
+
     /// `oarhold` / `oarresume`.
     pub fn hold(&self, id: JobId) -> Result<()> {
         let now = self.inner.now();
@@ -408,7 +458,22 @@ impl Server {
 
     pub fn resume(&self, id: JobId) -> Result<()> {
         let now = self.inner.now();
-        self.with_db(|db| db.set_job_state(id, JobState::Waiting, now))?;
+        // Only the user-hold edge: fig. 1 also allows
+        // toAckReservation → Waiting, but that edge belongs to the
+        // automaton's reservation negotiation — `oarresume` must not
+        // yank a reservation out from under it (the RPC contract
+        // promises `illegal_state` for anything but Hold).
+        self.with_db(|db| -> std::result::Result<(), DbError> {
+            let job = db.job(id)?;
+            if job.state != JobState::Hold {
+                return Err(DbError::IllegalTransition {
+                    job: id,
+                    from: job.state,
+                    to: JobState::Waiting,
+                });
+            }
+            db.set_job_state(id, JobState::Waiting, now)
+        })?;
         self.inner.hub.notify(Task::Schedule);
         Ok(())
     }
@@ -840,6 +905,35 @@ mod tests {
         }
         assert!(server.request_delete(999_999).is_err(), "unknown id must error");
         assert!(server.wait_all_terminal(Duration::from_secs(30)));
+    }
+
+    #[test]
+    fn load_info_tracks_occupancy() {
+        let server = test_server_scaled(0.05);
+        let idle = server.load_info();
+        assert_eq!(idle.nodes_total, 4);
+        assert_eq!(idle.nodes_alive, 4);
+        assert_eq!(idle.procs_total, 4);
+        assert_eq!(idle.procs_free, 4);
+        assert_eq!(idle.waiting_jobs, 0);
+        let _block = server
+            .submit(&JobSpec::batch("a", "sleep 30", 4, 60))
+            .unwrap()
+            .unwrap();
+        // The blocker occupies the whole cluster once launched.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let info = server.load_info();
+            if info.procs_busy == 4 {
+                assert_eq!(info.procs_free, 0);
+                assert_eq!(info.running_jobs, 1);
+                break;
+            }
+            assert!(Instant::now() < deadline, "blocker never occupied the cluster");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(server.wait_all_terminal(Duration::from_secs(30)));
+        assert_eq!(server.load_info().procs_free, 4);
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Grid-federation domain types: campaigns (a grid-level bag of tasks)
+//! and grid tasks (one remote best-effort job each), in the spirit of the
+//! paper's metropolitan-GRID deployment (§ abstract: "the management of
+//! 700 nodes", §3.3 global computing support). A campaign is submitted to
+//! the grid meta-scheduler, which farms its tasks across clusters as
+//! best-effort jobs and tracks each task's remote placement in the
+//! `campaigns` / `grid_tasks` tables.
+
+use super::{JobId, Time};
+
+/// Campaign identifier: the index number in the campaigns table.
+pub type CampaignId = u64;
+
+/// Lifecycle of a campaign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CampaignState {
+    /// Tasks remain to dispatch or reconcile.
+    Active,
+    /// Every task reached a terminal state (`Done` or `Failed`).
+    Done,
+}
+
+impl CampaignState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CampaignState::Active => "Active",
+            CampaignState::Done => "Done",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CampaignState> {
+        Some(match s {
+            "Active" => CampaignState::Active,
+            "Done" => CampaignState::Done,
+            _ => return None,
+        })
+    }
+}
+
+/// What a user hands to `oar grid sub`: a parameterized task template.
+/// Every occurrence of `{i}` in `command` is replaced by the task index
+/// (0-based) at dispatch time, exactly like `oarsub --array`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    pub name: String,
+    pub user: String,
+    /// Task command template (`{i}` = task index).
+    pub command: String,
+    /// Nodes per task.
+    pub nb_nodes: u32,
+    /// Processors per node per task.
+    pub weight: u32,
+    /// `maxTime` per task, in seconds.
+    pub max_time: Time,
+    /// Number of tasks in the bag.
+    pub tasks: u32,
+}
+
+impl CampaignSpec {
+    /// Convenience constructor for the common single-proc-task case.
+    pub fn bag(name: &str, user: &str, command: &str, tasks: u32) -> CampaignSpec {
+        CampaignSpec {
+            name: name.into(),
+            user: user.into(),
+            command: command.into(),
+            nb_nodes: 1,
+            weight: 1,
+            max_time: 3600,
+            tasks,
+        }
+    }
+}
+
+/// A row of the `campaigns` table.
+#[derive(Debug, Clone)]
+pub struct Campaign {
+    pub id: CampaignId,
+    /// Globally unique random token, minted at submission. Task tags
+    /// embed it instead of the campaign id: ids restart at 1 in every
+    /// grid's own database, so two grids sharing a cluster (or one grid
+    /// rebooted with a wiped state directory) would otherwise adopt and
+    /// kill each other's jobs.
+    pub token: u64,
+    pub name: String,
+    pub user: String,
+    pub command: String,
+    pub nb_nodes: u32,
+    pub weight: u32,
+    pub max_time: Time,
+    pub tasks: u32,
+    pub state: CampaignState,
+    pub submission_time: Time,
+}
+
+/// Lifecycle of one grid task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridTaskState {
+    /// Not placed anywhere; eligible for the next dispatch wave.
+    Pending,
+    /// Submitted to a cluster (`cluster`/`job` identify the placement; a
+    /// recorded placement with `job = NULL` is the ack window — the
+    /// submission may or may not have been admitted, and the reconciler
+    /// resolves it by tag before the task can move anywhere else).
+    Dispatched,
+    /// The remote job terminated normally.
+    Done,
+    /// The retry budget was exhausted.
+    Failed,
+}
+
+impl GridTaskState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GridTaskState::Pending => "Pending",
+            GridTaskState::Dispatched => "Dispatched",
+            GridTaskState::Done => "Done",
+            GridTaskState::Failed => "Failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GridTaskState> {
+        Some(match s {
+            "Pending" => GridTaskState::Pending,
+            "Dispatched" => GridTaskState::Dispatched,
+            "Done" => GridTaskState::Done,
+            "Failed" => GridTaskState::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states: the task will never be dispatched again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, GridTaskState::Done | GridTaskState::Failed)
+    }
+
+    pub const ALL: [GridTaskState; 4] = [
+        GridTaskState::Pending,
+        GridTaskState::Dispatched,
+        GridTaskState::Done,
+        GridTaskState::Failed,
+    ];
+}
+
+impl std::fmt::Display for GridTaskState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A row of the `grid_tasks` table: one task of a campaign and its
+/// current (or last) remote placement.
+#[derive(Debug, Clone)]
+pub struct GridTask {
+    pub id: u64,
+    pub campaign: CampaignId,
+    /// 0-based index within the campaign (the `{i}` substitution).
+    pub index: u32,
+    pub state: GridTaskState,
+    /// Cluster the task is (or was last) placed on.
+    pub cluster: Option<String>,
+    /// Remote job id on `cluster`, once the submission was acknowledged.
+    pub job: Option<JobId>,
+    /// Dispatch attempts so far (1 after the first placement).
+    pub attempts: u32,
+    /// Grid-clock instant (ms) of the current placement; the reconciler
+    /// cancels and re-places a task whose remote job still has not
+    /// started `stale_after` past this (0 = placed before the last grid
+    /// restart — the timer restarts at boot).
+    pub dispatched_at: Time,
+    /// Last failure/requeue reason.
+    pub message: String,
+}
+
+impl GridTask {
+    /// The tag appended to every dispatched command, by which a remote
+    /// job is traced back to its grid task (ack-loss recovery and the
+    /// rejoin orphan sweep both key on it). Keyed by the campaign's
+    /// random [`Campaign::token`], not its id — ids collide across grid
+    /// instances, tokens do not.
+    pub fn tag(token: u64, index: u32) -> String {
+        format!("#grid:{token:016x}:{index}")
+    }
+
+    /// Parse a command's grid tag back into `(campaign token, index)`.
+    pub fn parse_tag(command: &str) -> Option<(u64, u32)> {
+        let (_, rest) = command.rsplit_once("#grid:")?;
+        let (tok, i) = rest.split_once(':')?;
+        Some((
+            u64::from_str_radix(tok.trim(), 16).ok()?,
+            i.trim().parse().ok()?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_string_roundtrips() {
+        for s in GridTaskState::ALL {
+            assert_eq!(GridTaskState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(GridTaskState::parse("bogus"), None);
+        for s in [CampaignState::Active, CampaignState::Done] {
+            assert_eq!(CampaignState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(CampaignState::parse("bogus"), None);
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(GridTaskState::Done.is_terminal());
+        assert!(GridTaskState::Failed.is_terminal());
+        assert!(!GridTaskState::Pending.is_terminal());
+        assert!(!GridTaskState::Dispatched.is_terminal());
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        let cmd = format!("sleep 2 {}", GridTask::tag(0xdead_beef_0042, 42));
+        assert_eq!(GridTask::parse_tag(&cmd), Some((0xdead_beef_0042, 42)));
+        assert_eq!(GridTask::parse_tag("sleep 2"), None);
+        assert_eq!(GridTask::parse_tag("echo #grid:zz:y"), None);
+    }
+}

@@ -1,11 +1,13 @@
 //! Core domain types: jobs (fig. 2), the job state machine (fig. 1),
 //! nodes, queues and reservations.
 
+mod grid;
 mod job;
 mod node;
 mod queue;
 mod state;
 
+pub use grid::{Campaign, CampaignId, CampaignSpec, CampaignState, GridTask, GridTaskState};
 pub use job::{Job, JobKind, JobSpec, ReservationField};
 pub use node::{Node, NodeState};
 pub use queue::{Queue, QueuePolicyKind};

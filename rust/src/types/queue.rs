@@ -104,5 +104,54 @@ mod tests {
             assert_eq!(QueuePolicyKind::parse(p.as_str()), Some(p));
         }
         assert_eq!(QueuePolicyKind::parse("nope"), None);
+        // Encodings are stable wire/db contract values, not Debug names.
+        assert_eq!(QueuePolicyKind::FifoConservative.as_str(), "fifo");
+        assert_eq!(QueuePolicyKind::SjfConservative.as_str(), "sjf");
+        assert_eq!(QueuePolicyKind::BestEffort.as_str(), "best_effort");
+        // Parsing is exact: no case folding, no surrounding whitespace.
+        assert_eq!(QueuePolicyKind::parse("FIFO"), None);
+        assert_eq!(QueuePolicyKind::parse(" fifo"), None);
+        assert_eq!(QueuePolicyKind::parse(""), None);
+    }
+
+    #[test]
+    fn standard_set_invariants() {
+        let qs = Queue::standard_set();
+        // Unique names — the queues table probes by name.
+        let mut names: Vec<&str> = qs.iter().map(|q| q.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), qs.len(), "queue names must be unique");
+        // Exactly one default queue, and it is the admission fallback
+        // target of the `DEFAULT queue = 'default'` rule.
+        assert_eq!(qs.iter().filter(|q| q.name == "default").count(), 1);
+        // Exactly one best-effort queue (§3.3), and nothing outranks the
+        // default queue: best-effort work may never delay normal jobs.
+        assert_eq!(
+            qs.iter()
+                .filter(|q| q.policy == QueuePolicyKind::BestEffort)
+                .count(),
+            1
+        );
+        let default = qs.iter().find(|q| q.name == "default").unwrap();
+        let besteffort = qs
+            .iter()
+            .find(|q| q.policy == QueuePolicyKind::BestEffort)
+            .unwrap();
+        assert!(default.priority > besteffort.priority);
+        // Sane rows: non-negative priorities, positive default maxTime,
+        // every queue active out of the box.
+        for q in &qs {
+            assert!(q.priority >= 0, "{}: negative priority", q.name);
+            assert!(q.default_max_time > 0, "{}: bad default maxTime", q.name);
+            assert!(q.max_procs_per_job > 0, "{}: zero proc cap", q.name);
+            assert!(q.active, "{}: standard queues start active", q.name);
+        }
+        // Priorities are distinct, so the meta-scheduler's by-priority
+        // iteration order is total and deterministic.
+        let mut prios: Vec<i32> = qs.iter().map(|q| q.priority).collect();
+        prios.sort_unstable();
+        prios.dedup();
+        assert_eq!(prios.len(), qs.len(), "queue priorities must be distinct");
     }
 }

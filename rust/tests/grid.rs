@@ -1,0 +1,349 @@
+//! End-to-end federation tests: bag-of-tasks campaigns farmed over
+//! several in-process loopback clusters, including the ISSUE's acceptance
+//! scenario — a 500-task campaign over 3 asymmetric clusters that drains
+//! completely with zero lost/duplicated tasks while one cluster is killed
+//! mid-campaign and later rejoins, with a grid restart mid-campaign
+//! resuming from the persisted tables.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use oar::db::Db;
+use oar::grid::{Grid, GridConfig, TestGrid};
+use oar::types::{
+    CampaignId, CampaignSpec, CampaignState, GridTask, GridTaskState, JobSpec, JobState,
+};
+
+/// Poll `cond` until it holds or `timeout` elapses; returns success.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn fresh_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("oar_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Final task→cluster mapping counts of a drained campaign.
+fn mapping_counts(grid: &Grid, id: CampaignId) -> BTreeMap<String, usize> {
+    let mut counts = BTreeMap::new();
+    for t in grid.tasks(id) {
+        assert_eq!(t.state, GridTaskState::Done, "task {} not done: {t:?}", t.index);
+        let cluster = t.cluster.clone().expect("done task without a cluster");
+        assert!(t.job.is_some(), "done task without a job id: {t:?}");
+        *counts.entry(cluster).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn small_campaign_farms_across_asymmetric_clusters() {
+    // 8 + 4 + 2 processors; `sleep 2` at scale 0.02 = 40 ms per task.
+    let fleet = TestGrid::start(&[(4, 2), (2, 2), (1, 2)], 0.02).unwrap();
+    let grid = Grid::start(GridConfig::fast(fleet.cluster_configs(16))).unwrap();
+
+    let id = grid
+        .submit_campaign(&CampaignSpec::bag("smoke", "grid", "sleep 2", 80))
+        .unwrap();
+    assert!(
+        grid.wait_campaign_drained(id, Duration::from_secs(60)),
+        "campaign did not drain: {:?}",
+        grid.campaign_progress(id)
+    );
+    let p = grid.campaign_progress(id).unwrap();
+    assert_eq!(p.done, 80);
+    assert_eq!(p.failed, 0);
+    assert!(wait_until(Duration::from_secs(5), || {
+        grid.campaign_progress(id).unwrap().state == CampaignState::Done
+    }));
+
+    // Every cluster participated (the first wave already water-fills all
+    // three), and the mapping agrees with what each cluster really ran.
+    let counts = mapping_counts(&grid, id);
+    assert_eq!(counts.values().sum::<usize>(), 80);
+    for i in 0..fleet.len() {
+        let name = fleet.name(i).to_string();
+        let mapped = counts.get(&name).copied().unwrap_or(0);
+        assert!(mapped > 0, "cluster {name} never completed a task");
+        assert_eq!(
+            fleet.tagged_jobs_in_state(i, JobState::Terminated),
+            mapped,
+            "cluster {name}: remote terminations != grid mapping (lost or duplicated work)"
+        );
+    }
+
+    // Counter coherence: every dispatch attempt is accounted for.
+    let c = grid.counters();
+    assert_eq!(c.completed, 80);
+    assert_eq!(c.failed, 0);
+    let attempts: u64 = grid.tasks(id).iter().map(|t| t.attempts as u64).sum();
+    assert_eq!(attempts, 80 + c.retried + c.orphaned);
+    assert!(grid.clusters().iter().all(|s| s.outstanding == 0));
+    let _ = grid.shutdown();
+}
+
+/// A dispatched task whose remote job sits `Waiting` forever (here:
+/// legitimately queued behind a local job that outlives the test) must
+/// not pin its task — the staleness check cancels the placement and the
+/// retry budget decides the task's fate. Without it this campaign would
+/// never drain.
+#[test]
+fn stale_placement_is_cancelled_and_budget_decides() {
+    let fleet = TestGrid::start(&[(1, 1)], 0.02).unwrap();
+    let data_dir = fresh_dir("grid_stale");
+
+    // Fabricate the grid's durable state offline — a task already
+    // Dispatched to c0 — so no dispatch/hold race exists at all.
+    let (cid, remote) = {
+        let (mut db, _) = Db::recover(&data_dir).unwrap();
+        let cid = db.insert_campaign(&CampaignSpec::bag("stale", "grid", "noop", 1), 0);
+        let token = db.campaign(cid).unwrap().token;
+        let tid = db.grid_tasks_of_campaign(cid)[0].id;
+        db.mark_grid_task_dispatched(tid, "c0", 0).unwrap();
+
+        // On the cluster: a long local blocker takes the only processor,
+        // then the grid-tagged job queues deterministically behind it.
+        let server = fleet.server(0);
+        let blocker = server
+            .submit(&JobSpec::batch("local", "sleep 10000", 1, 20000))
+            .unwrap()
+            .unwrap();
+        assert!(wait_until(Duration::from_secs(10), || {
+            server
+                .with_db(|db| db.job(blocker))
+                .map(|j| j.state == JobState::Running)
+                .unwrap_or(false)
+        }));
+        let remote = server
+            .submit(&JobSpec {
+                user: "grid".into(),
+                command: format!("noop {}", GridTask::tag(token, 0)),
+                nb_nodes: 1,
+                weight: 1,
+                max_time: Some(600),
+                best_effort: true,
+                ..JobSpec::default()
+            })
+            .unwrap()
+            .unwrap();
+        db.set_grid_task_job(tid, remote).unwrap();
+        db.checkpoint().unwrap();
+        (cid, remote)
+    };
+
+    let grid = Grid::start(GridConfig {
+        data_dir: Some(data_dir.clone()),
+        retry_budget: 1,
+        stale_after: Duration::from_millis(300),
+        ..GridConfig::fast(fleet.cluster_configs(4))
+    })
+    .unwrap();
+
+    assert!(
+        grid.wait_campaign_drained(cid, Duration::from_secs(30)),
+        "stale placement never resolved: {:?} {:?}",
+        grid.campaign_progress(cid),
+        grid.counters()
+    );
+    let p = grid.campaign_progress(cid).unwrap();
+    assert_eq!(p.done, 0);
+    assert_eq!(p.failed, 1, "budget of 1 must fail the task: {p:?}");
+    let c = grid.counters();
+    assert_eq!(c.failed, 1);
+    assert_eq!(c.completed, 0);
+    // The cancel really landed: the remote job is Error, not Waiting.
+    assert!(wait_until(Duration::from_secs(5), || {
+        fleet
+            .server(0)
+            .with_db(|db| db.job(remote))
+            .map(|j| j.state == JobState::Error)
+            .unwrap_or(false)
+    }));
+    let _ = grid.shutdown();
+    let _ = std::fs::remove_dir_all(&data_dir);
+}
+
+#[test]
+fn grid_config_requires_clusters_and_valid_campaigns() {
+    assert!(Grid::start(GridConfig::default()).is_err());
+    let fleet = TestGrid::start(&[(1, 1)], 0.0).unwrap();
+    let mut dup = fleet.cluster_configs(4);
+    dup.push(dup[0].clone());
+    assert!(
+        Grid::start(GridConfig::fast(dup)).is_err(),
+        "duplicate cluster names must be rejected"
+    );
+    let grid = Grid::start(GridConfig::fast(fleet.cluster_configs(4))).unwrap();
+    assert!(grid
+        .submit_campaign(&CampaignSpec::bag("empty", "u", "date", 0))
+        .is_err());
+    assert!(grid
+        .submit_campaign(&CampaignSpec::bag("blank", "u", "   ", 3))
+        .is_err());
+    assert!(grid.campaign_progress(99).is_err());
+}
+
+/// The acceptance scenario. Timeline:
+///
+/// 1. 500 `sleep 5` tasks (100 ms each at scale 0.02) over clusters of
+///    8/4/2 processors, durable grid state;
+/// 2. after ≥60 completions the grid is **cleanly restarted** — the new
+///    instance must resume from the persisted tables: finished tasks keep
+///    their recorded placement (and are not re-dispatched), in-flight
+///    placements are re-reconciled against the clusters;
+/// 3. after ≥250 completions cluster `c1` is **killed** with tasks in
+///    flight; the reconciler blacklists it and resubmits its orphaned
+///    tasks elsewhere;
+/// 4. `c1` reboots (same address, empty state) and re-enters at
+///    probation;
+/// 5. the campaign drains: 500 done / 0 failed / 0 lost / 0 duplicated,
+///    and the retry/blacklist counters match the observed events.
+#[test]
+fn federation_survives_cluster_kill_and_grid_restart() {
+    let mut fleet = TestGrid::start(&[(4, 2), (2, 2), (1, 2)], 0.02).unwrap();
+    let data_dir = fresh_dir("grid_e2e");
+    let config = GridConfig {
+        data_dir: Some(data_dir.clone()),
+        retry_budget: 10,
+        ..GridConfig::fast(fleet.cluster_configs(16))
+    };
+
+    let mut grid = Grid::start(config.clone()).unwrap();
+    let id = grid
+        .submit_campaign(&CampaignSpec::bag("e2e", "grid", "sleep 5", 500))
+        .unwrap();
+
+    // Phase 2: clean grid restart mid-campaign.
+    assert!(
+        wait_until(Duration::from_secs(60), || {
+            grid.campaign_progress(id).unwrap().done >= 60
+        }),
+        "first instance never reached 60 completions"
+    );
+    // Freeze the first instance so its counters and tables are final.
+    grid.pause();
+    let c1 = grid.counters();
+    assert_eq!(c1.retried, 0, "no failures expected before the kill");
+    assert_eq!(c1.orphaned, 0);
+    assert_eq!(c1.failed, 0);
+    let done_before_restart: BTreeMap<u32, (String, u64)> = grid
+        .tasks(id)
+        .into_iter()
+        .filter(|t| t.state == GridTaskState::Done)
+        .map(|t| (t.index, (t.cluster.clone().unwrap(), t.job.unwrap())))
+        .collect();
+    let completed_1 = c1.completed;
+    assert_eq!(
+        completed_1,
+        done_before_restart.len() as u64,
+        "paused instance counters must agree with its tables"
+    );
+    let _ = grid.shutdown();
+
+    let grid = Grid::start(config).unwrap();
+    // Resumption, not re-dispatch: the persisted Done set is intact.
+    let resumed: Vec<_> = grid
+        .tasks(id)
+        .into_iter()
+        .filter(|t| t.state == GridTaskState::Done)
+        .collect();
+    assert!(resumed.len() >= done_before_restart.len());
+    for (index, (cluster, job)) in &done_before_restart {
+        let t = resumed.iter().find(|t| t.index == *index).unwrap();
+        assert_eq!(t.cluster.as_deref(), Some(cluster.as_str()));
+        assert_eq!(t.job, Some(*job));
+    }
+
+    // Phase 3: kill c1 with tasks in flight.
+    assert!(
+        wait_until(Duration::from_secs(60), || {
+            grid.campaign_progress(id).unwrap().done >= 250
+                && grid
+                    .clusters()
+                    .iter()
+                    .find(|c| c.name == "c1")
+                    .map(|c| c.outstanding >= 2)
+                    .unwrap_or(false)
+        }),
+        "never reached the kill point with work outstanding on c1"
+    );
+    fleet.kill(1);
+    assert!(
+        wait_until(Duration::from_secs(30), || grid.counters().blacklists >= 1),
+        "dead cluster was never blacklisted"
+    );
+    // Its in-flight tasks were orphan-requeued onto the survivors.
+    let after_kill = grid.counters();
+    assert!(after_kill.orphaned >= 1, "kill stranded no tasks: {after_kill:?}");
+
+    // Phase 4: rejoin on the same address with fresh (empty) state.
+    std::thread::sleep(Duration::from_millis(100));
+    fleet.reboot(1).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(30), || grid.counters().rejoins >= 1),
+        "rebooted cluster never re-entered from probation"
+    );
+
+    // Phase 5: drain and verify.
+    assert!(
+        grid.wait_campaign_drained(id, Duration::from_secs(180)),
+        "campaign did not drain: {:?}, counters {:?}",
+        grid.campaign_progress(id),
+        grid.counters()
+    );
+    let p = grid.campaign_progress(id).unwrap();
+    assert_eq!(p.done, 500, "lost tasks: {p:?}");
+    assert_eq!(p.failed, 0, "failed tasks: {p:?}");
+    assert!(wait_until(Duration::from_secs(5), || {
+        grid.campaign_progress(id).unwrap().state == CampaignState::Done
+    }));
+
+    let c2 = grid.counters();
+    // Exactly-once completion across both grid instances.
+    assert_eq!(completed_1 + c2.completed, 500, "instance1 {completed_1} + instance2 {:?}", c2);
+    // Every dispatch attempt is explained by the initial placement plus
+    // counted requeues (instance 1 had none, asserted above).
+    let attempts: u64 = grid.tasks(id).iter().map(|t| t.attempts as u64).sum();
+    assert_eq!(
+        attempts,
+        500 + c2.retried + c2.orphaned,
+        "unaccounted dispatches: counters {c2:?}"
+    );
+    // The blacklist/rejoin counters match the one observed event each.
+    assert_eq!(c2.blacklists, 1);
+    assert_eq!(c2.rejoins, 1);
+    assert_eq!(c2.failed, 0);
+    assert_eq!(c2.orphan_kills, 0, "fresh rebooted cluster held no orphans");
+
+    // Zero duplicated work: each surviving cluster's terminated tagged
+    // jobs equal the tasks finally mapped to it; the rebooted cluster
+    // additionally lost its pre-kill completions with its state, so its
+    // remote count can only be lower than the mapping, never higher.
+    let counts = mapping_counts(&grid, id);
+    assert_eq!(counts.values().sum::<usize>(), 500);
+    for (i, name) in [(0usize, "c0"), (2, "c2")] {
+        assert_eq!(
+            fleet.tagged_jobs_in_state(i, JobState::Terminated),
+            counts.get(name).copied().unwrap_or(0),
+            "cluster {name}: remote terminations != grid mapping"
+        );
+    }
+    assert!(
+        fleet.tagged_jobs_in_state(1, JobState::Terminated)
+            <= counts.get("c1").copied().unwrap_or(0),
+        "rebooted cluster ran more tagged jobs than the grid mapped to it"
+    );
+
+    let _ = grid.shutdown();
+    let _ = std::fs::remove_dir_all(&data_dir);
+}

@@ -86,6 +86,93 @@ fn envelope_version_and_framing_errors() {
 }
 
 #[test]
+fn rebind_same_addr_after_kill_with_live_connection() {
+    // The federation harness reboots a killed cluster on the *same*
+    // address. Killing the front-end while a client connection is open
+    // makes the server side close first, stranding the connection in
+    // FIN_WAIT/TIME_WAIT on the port — the SO_REUSEADDR bind must shrug
+    // that off instead of failing with EADDRINUSE for a minute.
+    let (server, rpc, addr) = rpc_server(2, 0.0, 2);
+    let mut client = RpcClient::connect(&addr).unwrap();
+    assert!(client.ping().unwrap().is_ok());
+    drop(rpc); // kill while `client` still holds its end open
+    let rpc2 = RpcServer::start(
+        server.clone(),
+        RpcConfig {
+            addr: addr.clone(),
+            ..RpcConfig::loopback()
+        },
+    )
+    .expect("rebinding the killed front-end's address must succeed at once");
+    assert_eq!(rpc2.addr().to_string(), addr);
+    let mut revived = RpcClient::connect(&addr).unwrap();
+    assert!(revived.ping().unwrap().is_ok());
+}
+
+#[test]
+fn hold_resume_and_load_over_the_socket() {
+    // Non-zero scale: the blocker genuinely occupies the cluster, so the
+    // second job is deterministically still Waiting when held.
+    let (server, _rpc, addr) = rpc_server(4, 0.05, 4);
+    let mut client = RpcClient::connect(&addr).unwrap();
+
+    let idle = client.load().unwrap().unwrap();
+    assert_eq!(idle.nodes_total, 4);
+    assert_eq!(idle.procs_alive, 4);
+    assert_eq!(idle.procs_free, 4);
+
+    let blocker = client
+        .sub(&JobSpec::batch("a", "sleep 30", 4, 60))
+        .unwrap()
+        .unwrap();
+    let id = client
+        .sub(&JobSpec::batch("b", "date", 4, 60))
+        .unwrap()
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // hold → Hold, visible through stat; resume → Waiting, and the job
+    // eventually runs to completion.
+    assert_eq!(client.hold(id).unwrap().unwrap(), JobState::Hold);
+    let held = client
+        .stat(Some("state = 'Hold'"))
+        .unwrap()
+        .unwrap();
+    assert_eq!(held.len(), 1);
+    assert_eq!(held[0].id, id);
+    // Holding a job that is not Waiting is the typed illegal_state error.
+    let err = client.hold(id).unwrap().unwrap_err();
+    assert_eq!(err.code, proto::code::ILLEGAL_STATE);
+    assert_eq!(client.resume(id).unwrap().unwrap(), JobState::Waiting);
+
+    // Unknown ids are no_such_job for both methods.
+    assert_eq!(
+        client.hold(424_242).unwrap().unwrap_err().code,
+        proto::code::NO_SUCH_JOB
+    );
+    assert_eq!(
+        client.resume(424_242).unwrap().unwrap_err().code,
+        proto::code::NO_SUCH_JOB
+    );
+
+    // The load probe sees the blocker's occupancy while it runs.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let info = client.load().unwrap().unwrap();
+        if info.procs_busy == 4 {
+            assert_eq!(info.procs_free, 0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "blocker never became busy");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.wait_all_terminal(Duration::from_secs(60)));
+    let job = server.with_db(|db| db.job(id)).unwrap();
+    assert_eq!(job.state, JobState::Terminated);
+    let _ = blocker;
+}
+
+#[test]
 fn sub_stat_del_nodes_queues_roundtrip() {
     let (server, rpc, addr) = rpc_server(4, 0.0, 4);
     let mut client = RpcClient::connect(&addr).unwrap();

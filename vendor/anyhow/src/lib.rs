@@ -29,6 +29,14 @@ impl Error {
     pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         self.source.as_deref().map(|e| e as _)
     }
+
+    /// A reference to the wrapped concrete error, when there is one and
+    /// it is an `E` — the subset of the real crate's `downcast_ref`
+    /// callers use to turn an opaque error back into a typed one (e.g.
+    /// the RPC front-end mapping `DbError` variants to protocol codes).
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
 }
 
 impl fmt::Display for Error {
@@ -113,6 +121,15 @@ mod tests {
         let wrapped: Error = Inner.into();
         assert_eq!(wrapped.to_string(), "inner failure");
         assert!(wrapped.source().is_some());
+    }
+
+    #[test]
+    fn downcast_ref_reaches_the_wrapped_error() {
+        let wrapped: Error = Inner.into();
+        assert!(wrapped.downcast_ref::<Inner>().is_some());
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_none());
+        // Message-only errors wrap nothing.
+        assert!(anyhow!("plain").downcast_ref::<Inner>().is_none());
     }
 
     #[test]

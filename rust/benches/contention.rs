@@ -1,0 +1,243 @@
+//! Lock-contention bench for the reader-writer core: N reader threads
+//! hammer the read-only RPC surface (`stat` under a state filter, plus a
+//! `load` probe) while one mutator thread keeps the write path — and
+//! therefore the central automaton's scheduling rounds — continuously
+//! busy. Sweeps the reader count and emits `BENCH_lock.json` at the repo
+//! root: p50/p99 `stat` latency and aggregate read throughput per point,
+//! plus the throughput scaling ratio across the sweep. Under the old
+//! global `Mutex<Db>` every reader queued behind the scheduler; under the
+//! `RwLock` core read throughput should scale with readers until memory
+//! bandwidth, not the lock, is the limit.
+//!
+//! Knobs: `OAR_LOCK_READERS` (comma list, default `1,4,16,64,256`),
+//! `OAR_LOCK_MS` (measurement window per point, default 400).
+//!
+//! The run doubles as a correctness gate: every acknowledged submission
+//! must exist exactly once in the final table, no read may error, and the
+//! workload must drain to terminal states; it exits non-zero otherwise.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oar::cluster::VirtualCluster;
+use oar::server::{Server, ServerConfig};
+use oar::types::{JobSpec, JobState};
+use oar::util::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|n| *n > 0)
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+/// Percentile over sorted latency samples.
+fn pct(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    sorted[(((sorted.len() - 1) as f64) * q).round() as usize]
+}
+
+/// One sweep point: `readers` threads for `window`, against a fresh
+/// server whose mutator submits continuously. Returns the point's JSON
+/// plus `(reads_per_sec, gate_ok)`.
+fn run_point(readers: usize, window: Duration) -> (Json, f64, bool) {
+    let cluster = Arc::new(VirtualCluster::xeon());
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    let server = Arc::new(Server::new(cluster, cfg));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitted = Arc::new(AtomicU64::new(0));
+
+    // The mutator: a steady submission stream. With instant modeled
+    // runtimes each job walks Waiting → … → Terminated within a couple
+    // of automaton rounds, so the write lock is taken continuously by
+    // the scheduler, the launcher bookkeeping and the submissions.
+    let mutator = {
+        let server = server.clone();
+        let stop = stop.clone();
+        let submitted = submitted.clone();
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let spec = JobSpec::batch("contender", "date", 1 + (i % 2) as u32, 60);
+                if let Ok(Ok(_)) = server.submit(&spec) {
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                }
+                i += 1;
+                if i % 64 == 0 {
+                    // Let the automaton drain: the point is a *mutating*
+                    // scheduler, not an unbounded backlog.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        })
+    };
+
+    // Warm the table a little so the first reads see real rows.
+    std::thread::sleep(Duration::from_millis(20));
+
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..readers)
+        .map(|r| {
+            let server = server.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut lats: Vec<Duration> = Vec::with_capacity(4096);
+                let mut errors = 0u64;
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let t = Instant::now();
+                    match server.stat(Some("state = 'Waiting'")) {
+                        Ok(_) => lats.push(t.elapsed()),
+                        Err(_) => errors += 1,
+                    }
+                    // Mix in the other read-only verbs so the point
+                    // exercises the whole snapshot surface, unmeasured.
+                    match i % 16 {
+                        3 => {
+                            let _ = server.load_info();
+                        }
+                        7 => {
+                            let _ = server.queues();
+                        }
+                        11 if r == 0 => {
+                            let _ = server.nodes();
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                (lats, errors)
+            })
+        })
+        .collect();
+
+    std::thread::sleep(window);
+    stop.store(true, Ordering::Relaxed);
+
+    let mut lats: Vec<Duration> = Vec::new();
+    let mut read_errors = 0u64;
+    for w in workers {
+        let (l, e) = w.join().expect("reader thread");
+        lats.extend(l);
+        read_errors += e;
+    }
+    let wall = t0.elapsed();
+    mutator.join().expect("mutator thread");
+
+    let submitted = submitted.load(Ordering::Relaxed) as usize;
+    let drained = server.wait_all_terminal(Duration::from_secs(120));
+    let db_jobs = server.read_db(|db| db.job_count());
+    let stranded = server.read_db(|db| {
+        JobState::ALL
+            .iter()
+            .filter(|s| !s.is_terminal())
+            .map(|s| db.count_jobs_in_state(*s))
+            .sum::<usize>()
+    });
+    let ok = drained && read_errors == 0 && db_jobs == submitted && stranded == 0;
+
+    lats.sort_unstable();
+    let reads = lats.len();
+    let mean_us =
+        lats.iter().map(|d| d.as_micros() as f64).sum::<f64>() / reads.max(1) as f64;
+    let p50 = pct(&lats, 0.50);
+    let p99 = pct(&lats, 0.99);
+    let max = lats.last().copied().unwrap_or(Duration::ZERO);
+    let reads_per_sec = reads as f64 / wall.as_secs_f64().max(1e-9);
+    let subs_per_sec = submitted as f64 / wall.as_secs_f64().max(1e-9);
+
+    println!(
+        "  {readers:>4} readers: {reads_per_sec:>9.0} reads/s  stat p50={p50:?} p99={p99:?} max={max:?}  \
+         (writer {subs_per_sec:.0} subs/s, {} jobs, drain {}, errors {read_errors})",
+        db_jobs,
+        if ok { "ok" } else { "FAILED" },
+    );
+
+    let point = Json::obj(vec![
+        ("readers", Json::Num(readers as f64)),
+        ("reads", Json::Num(reads as f64)),
+        ("reads_per_sec", Json::Num(reads_per_sec)),
+        (
+            "stat_latency_us",
+            Json::obj(vec![
+                ("mean", Json::Num(mean_us)),
+                ("p50", Json::Num(p50.as_micros() as f64)),
+                ("p99", Json::Num(p99.as_micros() as f64)),
+                ("max", Json::Num(max.as_micros() as f64)),
+            ]),
+        ),
+        ("writer_submissions", Json::Num(submitted as f64)),
+        ("writer_submissions_per_sec", Json::Num(subs_per_sec)),
+        (
+            "verified",
+            Json::obj(vec![
+                ("drained", Json::Bool(drained)),
+                ("read_errors", Json::Num(read_errors as f64)),
+                ("db_jobs", Json::Num(db_jobs as f64)),
+                ("stranded", Json::Num(stranded as f64)),
+            ]),
+        ),
+    ]);
+    (point, reads_per_sec, ok)
+}
+
+fn main() {
+    let sweep = env_list("OAR_LOCK_READERS", &[1, 4, 16, 64, 256]);
+    let window = Duration::from_millis(env_usize("OAR_LOCK_MS", 400) as u64);
+    println!(
+        "== contention: reader sweep {sweep:?} x {window:?} under a continuously mutating scheduler ==\n"
+    );
+
+    let mut points = Vec::new();
+    let mut throughputs = Vec::new();
+    let mut all_ok = true;
+    for readers in &sweep {
+        let (point, tp, ok) = run_point(*readers, window);
+        points.push(point);
+        throughputs.push(tp);
+        all_ok &= ok;
+    }
+
+    // Scaling ratio: aggregate read throughput at the widest point vs a
+    // single reader. Under the old global mutex this hovered near 1.0
+    // (every reader serialized); the RwLock core should grow it with the
+    // reader count until cores run out.
+    let base = throughputs.first().copied().unwrap_or(0.0).max(1e-9);
+    let peak = throughputs.iter().copied().fold(0.0f64, f64::max);
+    let scaling = peak / base;
+    println!("\nread-throughput scaling (peak/1-reader): {scaling:.2}x");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_lock.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("lock".into())),
+        ("window_ms", Json::Num(window.as_millis() as f64)),
+        ("sweep", Json::Arr(points)),
+        ("read_throughput_scaling", Json::Num(scaling)),
+    ]);
+    std::fs::write(&out, doc.dump()).expect("write BENCH_lock.json");
+    println!("wrote {}", out.display());
+
+    if !all_ok {
+        eprintln!("CONTENTION VERIFICATION FAILED");
+        std::process::exit(1);
+    }
+}

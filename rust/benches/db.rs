@@ -7,7 +7,8 @@
 //!
 //! Emits machine-readable results to `BENCH_db.json` at the repo root so
 //! the perf trajectory is diffable across PRs, plus `BENCH_wal.json` for
-//! the durability path (WAL append throughput, recovery time).
+//! the durability path (WAL append throughput, recovery time, and the
+//! group-commit vs per-record-fsync comparison at 8 concurrent writers).
 
 mod common;
 
@@ -173,9 +174,10 @@ fn main() {
     let _ = std::fs::remove_file(path);
 
     let wal = bench_wal();
+    let group = bench_group_commit();
 
     write_report(&results, plans, speedups);
-    write_wal_report(&wal);
+    write_wal_report(&wal, &group);
 }
 
 /// One WAL measurement row.
@@ -250,8 +252,136 @@ fn bench_wal() -> Vec<WalPoint> {
     out
 }
 
+/// The group-commit comparison: same writer fleet, same sync-on-flush
+/// durability, batched vs per-record fsync.
+struct GroupCommitPoint {
+    writers: usize,
+    per_writer: u64,
+    baseline_records: u64,
+    baseline_secs: f64,
+    group_records: u64,
+    group_secs: f64,
+}
+
+impl GroupCommitPoint {
+    fn baseline_rps(&self) -> f64 {
+        self.baseline_records as f64 / self.baseline_secs.max(1e-12)
+    }
+    fn group_rps(&self) -> f64 {
+        self.group_records as f64 / self.group_secs.max(1e-12)
+    }
+    fn speedup(&self) -> f64 {
+        self.group_rps() / self.baseline_rps().max(1e-12)
+    }
+}
+
+/// One writer-fleet run against a fresh durable store. `group` picks the
+/// commit discipline: off = every append flushes + fsyncs inline (the
+/// classic one-fsync-per-record baseline); on = appends buffer under the
+/// store lock and each writer commits through a [`oar::db::WalCommit`]
+/// handle *after* releasing it, so whichever committer reaches the sink
+/// first fsyncs the whole batch the others just buffered. Both modes end
+/// with a recovery pass proving no acknowledged record was lost.
+fn run_writer_fleet(group: bool, writers: usize, per_writer: u64, tag: &str) -> (u64, f64) {
+    use std::sync::{Arc, Mutex};
+    let dir = std::env::temp_dir().join(format!(
+        "oar_bench_wal_gc_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (mut db, _) = Db::recover(&dir).unwrap();
+    db.set_wal_sync(true);
+    db.set_wal_group_commit(group);
+    let base = db.wal_records();
+    let commit = db.wal_commit_handle().expect("durable store has a WAL");
+    let db = Arc::new(Mutex::new(db));
+
+    let t0 = Instant::now();
+    let fleet: Vec<_> = (0..writers)
+        .map(|w| {
+            let db = db.clone();
+            let commit = commit.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_writer {
+                    {
+                        let mut db = db.lock().unwrap();
+                        db.insert_job(Job::from_spec(
+                            &JobSpec::batch(&format!("w{w}"), "date", 1, 60),
+                            i as i64,
+                        ));
+                    }
+                    if group {
+                        // Ack discipline: the write is acknowledged only
+                        // after its batch is on disk — but the fsync runs
+                        // outside the store lock, so the other writers
+                        // keep mutating (and buffering) meanwhile.
+                        commit.commit().expect("group commit");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in fleet {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    let db = Arc::try_unwrap(db)
+        .ok()
+        .expect("writer fleet joined")
+        .into_inner()
+        .unwrap();
+    let records = db.wal_records() - base;
+    assert_eq!(records, writers as u64 * per_writer, "lost appends");
+    drop(db);
+    let (_rec, stats) = Db::recover(&dir).unwrap();
+    assert!(
+        stats.replayed >= records,
+        "recovery lost acknowledged records ({} < {records})",
+        stats.replayed
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    (records, secs)
+}
+
+/// Group-commit ablation: append throughput of 8 concurrent writers with
+/// power-loss durability (fsync on flush), batched vs per-record. The
+/// env knobs `OAR_WAL_WRITERS` / `OAR_WAL_PER_WRITER` resize it.
+fn bench_group_commit() -> GroupCommitPoint {
+    let env = |key: &str, default: u64| -> u64 {
+        std::env::var(key)
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|n| *n > 0)
+            .unwrap_or(default)
+    };
+    let writers = env("OAR_WAL_WRITERS", 8) as usize;
+    let per_writer = env("OAR_WAL_PER_WRITER", 125);
+    println!(
+        "\n== WAL group commit ({writers} concurrent writers x {per_writer}, sync-on-flush) =="
+    );
+    let (baseline_records, baseline_secs) =
+        run_writer_fleet(false, writers, per_writer, "base");
+    let (group_records, group_secs) = run_writer_fleet(true, writers, per_writer, "group");
+    let point = GroupCommitPoint {
+        writers,
+        per_writer,
+        baseline_records,
+        baseline_secs,
+        group_records,
+        group_secs,
+    };
+    println!(
+        "  per-record fsync {:>10.0} rec/s | group commit {:>10.0} rec/s | {:.1}x",
+        point.baseline_rps(),
+        point.group_rps(),
+        point.speedup(),
+    );
+    point
+}
+
 /// `BENCH_wal.json` at the repo root: the durability perf trajectory.
-fn write_wal_report(points: &[WalPoint]) {
+fn write_wal_report(points: &[WalPoint], group: &GroupCommitPoint) {
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_wal.json");
     let doc = Json::obj(vec![
         ("bench", Json::Str("wal".into())),
@@ -282,6 +412,19 @@ fn write_wal_report(points: &[WalPoint]) {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "group_commit",
+            Json::obj(vec![
+                ("writers", Json::Num(group.writers as f64)),
+                ("mutations_per_writer", Json::Num(group.per_writer as f64)),
+                (
+                    "baseline_records_per_sec",
+                    Json::Num(group.baseline_rps()),
+                ),
+                ("group_records_per_sec", Json::Num(group.group_rps())),
+                ("speedup", Json::Num(group.speedup())),
+            ]),
         ),
     ]);
     match std::fs::write(&out, doc.dump()) {

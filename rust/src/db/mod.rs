@@ -37,4 +37,4 @@ pub use plan::{PlanKind, QueryPlan};
 pub use store::{Db, DbHandle, DbError, QueryStats};
 pub use table::{ColName, Row, Table};
 pub use value::Value;
-pub use wal::{AppendError, Mutation, RecoverStats, TableId, Wal};
+pub use wal::{AppendError, Mutation, RecoverStats, TableId, Wal, WalCommit};

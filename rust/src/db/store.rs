@@ -24,6 +24,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::types::{
@@ -38,7 +39,7 @@ use super::log::{EventLog, EventRecord};
 use super::plan::QueryPlan;
 use super::table::{Row, Table};
 use super::value::Value;
-use super::wal::{AppendError, Mutation, RecoverStats, TableId, Wal};
+use super::wal::{AppendError, Mutation, RecoverStats, TableId, Wal, WalCommit};
 
 /// Errors surfaced by database operations.
 #[derive(Debug, Clone, PartialEq)]
@@ -97,6 +98,19 @@ impl QueryStats {
     }
 }
 
+/// Internal statement counters. Atomic (relaxed) so the read-only
+/// accessors can take `&self` and run concurrently against a shared
+/// `&Db` — e.g. many status queries under one `RwLock` read guard —
+/// without losing counts. [`Db::stats`] snapshots them into the plain
+/// [`QueryStats`] view.
+#[derive(Debug, Default)]
+struct StatCounters {
+    selects: AtomicU64,
+    inserts: AtomicU64,
+    updates: AtomicU64,
+    deletes: AtomicU64,
+}
+
 /// The whole database. Shared between modules as [`DbHandle`] — the only
 /// communication medium, as in the paper.
 #[derive(Debug, Default)]
@@ -112,7 +126,7 @@ pub struct Db {
     /// Grid federation: per-task placement rows.
     grid_tasks: Table,
     events: EventLog,
-    stats: QueryStats,
+    stats: StatCounters,
     /// Durability: when present, every logical mutation is WAL-logged
     /// before it is applied (see [`super::wal`]). `None` = volatile.
     wal: Option<Wal>,
@@ -163,7 +177,7 @@ impl Db {
             campaigns: Table::new("campaigns"),
             grid_tasks: Table::new("grid_tasks"),
             events: EventLog::new(),
-            stats: QueryStats::default(),
+            stats: StatCounters::default(),
             wal: None,
             snapshot_fail_after: None,
         };
@@ -426,6 +440,48 @@ impl Db {
         }
     }
 
+    /// Enable (or disable) group commit on the WAL: appends buffer in
+    /// memory and land as one batched log write at the next
+    /// [`Db::flush_wal`] / [`WalCommit::commit`]. Callers that enable
+    /// this own the commit discipline: flush before acknowledging a
+    /// mutation to a client. No-op on a volatile database.
+    pub fn set_wal_group_commit(&mut self, enabled: bool) {
+        if let Some(wal) = &mut self.wal {
+            wal.set_group_commit(enabled);
+        }
+    }
+
+    /// Force `fsync` on every WAL flush (power-loss durability). With
+    /// group commit enabled, one fsync covers the whole batch.
+    pub fn set_wal_sync(&mut self, enabled: bool) {
+        if let Some(wal) = &mut self.wal {
+            wal.set_sync_on_flush(enabled);
+        }
+    }
+
+    /// A cloneable commit handle for the WAL's shared sink: lets the
+    /// server flush a group-commit batch *after* releasing the database
+    /// write lock, so the fsync-amortized write never extends the
+    /// critical section. `None` on a volatile database.
+    pub fn wal_commit_handle(&self) -> Option<WalCommit> {
+        self.wal.as_ref().map(Wal::commit_handle)
+    }
+
+    /// Flush any group-commit-buffered WAL records. Same discipline as
+    /// [`Db::mutate`]: a poisoned log (simulated crash) is silent — the
+    /// process is conceptually dead — while a genuine I/O failure dies
+    /// loudly rather than acknowledge buffered, unlogged writes.
+    pub fn flush_wal(&mut self) {
+        if let Some(wal) = &mut self.wal {
+            match wal.flush() {
+                Ok(()) | Err(AppendError::Injected) => {}
+                Err(AppendError::Io(e)) => {
+                    panic!("WAL flush failed, refusing to acknowledge buffered mutations: {e}")
+                }
+            }
+        }
+    }
+
     /// Recovery invariant: every secondary index agrees with a fresh
     /// rebuild from the rows it indexes.
     pub fn verify_indexes(&self) -> bool {
@@ -481,7 +537,7 @@ impl Db {
                         // Administrative override of fig. 1 (Running →
                         // Waiting is deliberately not a user transition):
                         // primitive cell writes, audited by the event.
-                        self.stats.updates += 1;
+                        self.stats.updates.fetch_add(1, Ordering::Relaxed);
                         for (col, value) in [
                             ("state", Value::Text("Waiting".into())),
                             ("startTime", Value::Null),
@@ -520,9 +576,17 @@ impl Db {
     // ------------------------------------------------------- queries ----
 
     /// Statement counters plus access-path telemetry aggregated over all
-    /// tables.
+    /// tables. A relaxed-atomic snapshot: concurrent readers may be
+    /// mid-bump, but every counted statement lands exactly once.
     pub fn stats(&self) -> QueryStats {
-        let mut s = self.stats;
+        let mut s = QueryStats {
+            selects: self.stats.selects.load(Ordering::Relaxed),
+            inserts: self.stats.inserts.load(Ordering::Relaxed),
+            updates: self.stats.updates.load(Ordering::Relaxed),
+            deletes: self.stats.deletes.load(Ordering::Relaxed),
+            index_probes: 0,
+            full_scans: 0,
+        };
         for t in [
             &self.jobs,
             &self.nodes,
@@ -539,8 +603,15 @@ impl Db {
         s
     }
 
-    pub fn reset_stats(&mut self) {
-        self.stats = QueryStats::default();
+    pub fn reset_stats(&self) {
+        for c in [
+            &self.stats.selects,
+            &self.stats.inserts,
+            &self.stats.updates,
+            &self.stats.deletes,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
         for t in [
             &self.jobs,
             &self.nodes,
@@ -558,7 +629,7 @@ impl Db {
 
     /// INSERT a job row; returns the assigned `idJob`.
     pub fn insert_job(&mut self, mut job: Job) -> JobId {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let row = job_to_row(&job);
         let id = self.mutate(Mutation::Insert {
             table: TableId::Jobs,
@@ -568,27 +639,27 @@ impl Db {
         id
     }
 
-    pub fn job(&mut self, id: JobId) -> Result<Job, DbError> {
-        self.stats.selects += 1;
+    pub fn job(&self, id: JobId) -> Result<Job, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let row = self.jobs.get(id).ok_or(DbError::JobNotFound(id))?;
         job_from_row(row)
     }
 
-    pub fn job_count(&mut self) -> usize {
-        self.stats.selects += 1;
+    pub fn job_count(&self) -> usize {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.jobs.len()
     }
 
     /// All jobs matching a WHERE clause over the raw job columns. Rides
     /// the planner: sargable filters (e.g. `state = 'Waiting'`) probe the
     /// secondary indexes.
-    pub fn jobs_where(&mut self, filter: &Expr) -> Vec<Job> {
-        self.stats.selects += 1;
+    pub fn jobs_where(&self, filter: &Expr) -> Vec<Job> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.jobs.select_map(filter, |_, r| job_from_row(r).ok())
     }
 
-    pub fn jobs_in_state(&mut self, state: JobState) -> Vec<Job> {
-        self.stats.selects += 1;
+    pub fn jobs_in_state(&self, state: JobState) -> Vec<Job> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Text(state.as_str().to_string());
         let mut out = Vec::new();
         self.jobs.for_each_eq("state", &key, |_, r| {
@@ -601,8 +672,8 @@ impl Db {
 
     /// `SELECT COUNT(*) FROM jobs WHERE state = ?` — answered entirely
     /// from the state index (no row materialization at all).
-    pub fn count_jobs_in_state(&mut self, state: JobState) -> usize {
-        self.stats.selects += 1;
+    pub fn count_jobs_in_state(&self, state: JobState) -> usize {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.jobs
             .count_eq("state", &Value::Text(state.as_str().to_string()))
     }
@@ -610,8 +681,8 @@ impl Db {
     /// Waiting jobs of one queue, in submission (id) order. Probes the
     /// more selective of the `state` / `queueName` indexes and residual-
     /// filters on the other column.
-    pub fn waiting_jobs_in_queue(&mut self, queue: &str) -> Vec<Job> {
-        self.stats.selects += 1;
+    pub fn waiting_jobs_in_queue(&self, queue: &str) -> Vec<Job> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let state_key = Value::Text("Waiting".to_string());
         let queue_key = Value::Text(queue.to_string());
         let by_queue = self.jobs.eq_estimate("queueName", &queue_key);
@@ -650,7 +721,7 @@ impl Db {
         to: JobState,
         now: Time,
     ) -> Result<(), DbError> {
-        self.stats.selects += 1;
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let row = self.jobs.get(id).ok_or(DbError::JobNotFound(id))?;
         let from = row
             .get("state")
@@ -660,7 +731,7 @@ impl Db {
         if !from.can_transition_to(to) {
             return Err(DbError::IllegalTransition { job: id, from, to });
         }
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_job_cell(id, "state", Value::Text(to.as_str().into()));
         match to {
             JobState::Running => {
@@ -698,7 +769,7 @@ impl Db {
     }
 
     pub fn set_job_message(&mut self, id: JobId, message: &str) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
@@ -707,7 +778,7 @@ impl Db {
     }
 
     pub fn set_job_bpid(&mut self, id: JobId, bpid: Option<u32>) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
@@ -721,7 +792,7 @@ impl Db {
         id: JobId,
         f: ReservationField,
     ) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         if self.jobs.get(id).is_none() {
             return Err(DbError::JobNotFound(id));
         }
@@ -738,7 +809,7 @@ impl Db {
         value: Value,
     ) -> Result<usize, DbError> {
         Expr::parse(filter).map_err(|e| DbError::Parse(e.to_string()))?;
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         Ok(self.mutate(Mutation::UpdateWhere {
             table: TableId::Jobs,
             filter: filter.into(),
@@ -750,7 +821,7 @@ impl Db {
     // --------------------------------------------------------- nodes ----
 
     pub fn add_node(&mut self, node: Node) -> NodeId {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let row = node_to_row(&node);
         self.mutate(Mutation::Insert {
             table: TableId::Nodes,
@@ -759,16 +830,16 @@ impl Db {
         node.id
     }
 
-    pub fn node(&mut self, id: NodeId) -> Result<Node, DbError> {
-        self.stats.selects += 1;
+    pub fn node(&self, id: NodeId) -> Result<Node, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.nodes
             .find_eq("nodeId", &Value::Int(id as i64))
             .map(|(_, r)| node_from_row(r))
             .ok_or(DbError::NodeNotFound(id))?
     }
 
-    pub fn all_nodes(&mut self) -> Vec<Node> {
-        self.stats.selects += 1;
+    pub fn all_nodes(&self) -> Vec<Node> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
         self.nodes.for_each_all(|_, r| {
             if let Ok(n) = node_from_row(r) {
@@ -778,8 +849,8 @@ impl Db {
         out
     }
 
-    pub fn alive_nodes(&mut self) -> Vec<Node> {
-        self.stats.selects += 1;
+    pub fn alive_nodes(&self) -> Vec<Node> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
         self.nodes.for_each_all(|_, r| {
             if r.get("state").and_then(Value::as_str) != Some("Alive") {
@@ -793,7 +864,7 @@ impl Db {
     }
 
     pub fn set_node_state(&mut self, id: NodeId, state: NodeState) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         let rid = self
             .nodes
             .find_eq("nodeId", &Value::Int(id as i64))
@@ -813,8 +884,8 @@ impl Db {
     /// sql queries", §2). One SELECT per call. The expression is evaluated
     /// *in place* over the stored rows through [`NodePropView`]; only the
     /// matching nodes are materialized.
-    pub fn matching_nodes(&mut self, properties: &str) -> Result<Vec<Node>, DbError> {
-        self.stats.selects += 1;
+    pub fn matching_nodes(&self, properties: &str) -> Result<Vec<Node>, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let expr = Expr::parse(properties).map_err(|e| DbError::Parse(e.to_string()))?;
         let mut out = Vec::new();
         self.nodes.for_each_all(|_, r| {
@@ -835,7 +906,7 @@ impl Db {
     /// Record that `job` runs on `nodes` (`procs_per_node` each).
     pub fn assign_nodes(&mut self, job: JobId, nodes: &[NodeId], procs_per_node: u32) {
         for n in nodes {
-            self.stats.inserts += 1;
+            self.stats.inserts.fetch_add(1, Ordering::Relaxed);
             let mut row = Row::new();
             row.insert("jobId".into(), Value::Int(job as i64));
             row.insert("nodeId".into(), Value::Int(*n as i64));
@@ -850,7 +921,7 @@ impl Db {
     /// DELETE a job's assignment rows (requeue/cleanup path); returns the
     /// number removed.
     pub fn remove_assignments(&mut self, job: JobId) -> usize {
-        self.stats.deletes += 1;
+        self.stats.deletes.fetch_add(1, Ordering::Relaxed);
         let mut rids = Vec::new();
         self.assignments
             .for_each_eq("jobId", &Value::Int(job as i64), |rid, _| rids.push(rid));
@@ -863,8 +934,8 @@ impl Db {
         rids.len()
     }
 
-    pub fn assigned_nodes(&mut self, job: JobId) -> Vec<NodeId> {
-        self.stats.selects += 1;
+    pub fn assigned_nodes(&self, job: JobId) -> Vec<NodeId> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
         self.assignments
             .for_each_eq("jobId", &Value::Int(job as i64), |_, r| {
@@ -878,8 +949,8 @@ impl Db {
     /// Busy processors per node, derived from assignments of live jobs.
     /// The join runs index-to-index: live job ids come off the jobs state
     /// index, their assignment rows off the assignments jobId index.
-    pub fn busy_procs_by_node(&mut self) -> BTreeMap<NodeId, u32> {
-        self.stats.selects += 2; // join over jobs + assignments
+    pub fn busy_procs_by_node(&self) -> BTreeMap<NodeId, u32> {
+        self.stats.selects.fetch_add(2, Ordering::Relaxed); // join over jobs + assignments
         let mut busy = BTreeMap::new();
         for state in JobState::ALL.iter().filter(|s| s.holds_resources()) {
             let key = Value::Text(state.as_str().to_string());
@@ -902,7 +973,7 @@ impl Db {
     // -------------------------------------------------------- queues ----
 
     pub fn add_queue(&mut self, q: Queue) {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let mut row = Row::new();
         row.insert("name".into(), Value::Text(q.name.clone()));
         row.insert("priority".into(), Value::Int(q.priority as i64));
@@ -919,8 +990,8 @@ impl Db {
         });
     }
 
-    pub fn queue(&mut self, name: &str) -> Result<Queue, DbError> {
-        self.stats.selects += 1;
+    pub fn queue(&self, name: &str) -> Result<Queue, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.queues
             .find_eq("name", &Value::Text(name.to_string()))
             .map(|(_, r)| queue_from_row(r))
@@ -929,8 +1000,8 @@ impl Db {
 
     /// All queues by decreasing priority — the meta-scheduler's iteration
     /// order (§2.3).
-    pub fn queues_by_priority(&mut self) -> Vec<Queue> {
-        self.stats.selects += 1;
+    pub fn queues_by_priority(&self) -> Vec<Queue> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut qs: Vec<Queue> = Vec::new();
         self.queues.for_each_all(|_, r| {
             if let Ok(q) = queue_from_row(r) {
@@ -942,7 +1013,7 @@ impl Db {
     }
 
     pub fn set_queue_active(&mut self, name: &str, active: bool) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         // Index probe instead of the old string-built WHERE clause (which
         // broke on names containing quotes).
         let rid = self
@@ -963,7 +1034,7 @@ impl Db {
 
     /// Store an admission rule (rule-DSL source, see [`crate::admission`]).
     pub fn add_admission_rule(&mut self, priority: i32, source: &str) {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let mut row = Row::new();
         row.insert("priority".into(), Value::Int(priority as i64));
         row.insert("source".into(), Value::Text(source.into()));
@@ -974,8 +1045,8 @@ impl Db {
     }
 
     /// Rules in priority order (ascending: lower runs first).
-    pub fn admission_rules(&mut self) -> Vec<(i32, String)> {
-        self.stats.selects += 1;
+    pub fn admission_rules(&self) -> Vec<(i32, String)> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut rules: Vec<(i32, String)> = Vec::new();
         self.admission_rules.for_each_all(|_, r| {
             if let (Some(p), Some(s)) = (
@@ -996,7 +1067,7 @@ impl Db {
     /// meta-scheduler — a plain cluster server never touches these
     /// tables.
     pub fn insert_campaign(&mut self, spec: &CampaignSpec, now: Time) -> CampaignId {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         // Random token (std-only: RandomState seeds from the OS): minted
         // once here, then WAL-logged with the row, so replay and
         // restarts see the same value. Masked to 53 bits — WAL records
@@ -1038,7 +1109,7 @@ impl Db {
     /// — a campaign's bag is fully derivable from its header, and the
     /// grid re-inserts missing indices at boot ([`Db::repair_campaigns`]).
     pub fn insert_grid_task(&mut self, campaign: CampaignId, index: u32) -> u64 {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let mut row = Row::new();
         row.insert("campaignId".into(), Value::Int(campaign as i64));
         row.insert("idx".into(), Value::Int(index as i64));
@@ -1092,8 +1163,8 @@ impl Db {
         repaired
     }
 
-    pub fn campaign(&mut self, id: CampaignId) -> Result<Campaign, DbError> {
-        self.stats.selects += 1;
+    pub fn campaign(&self, id: CampaignId) -> Result<Campaign, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let row = self
             .campaigns
             .get(id)
@@ -1103,8 +1174,8 @@ impl Db {
 
     /// Look a campaign up by its random tag token (small table scan; the
     /// rejoin sweep uses this to tell our jobs from another grid's).
-    pub fn campaign_by_token(&mut self, token: u64) -> Option<Campaign> {
-        self.stats.selects += 1;
+    pub fn campaign_by_token(&self, token: u64) -> Option<Campaign> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut found = None;
         self.campaigns.for_each_all(|_, r| {
             if found.is_none()
@@ -1117,8 +1188,8 @@ impl Db {
     }
 
     /// All campaigns, in submission (id) order.
-    pub fn campaigns(&mut self) -> Vec<Campaign> {
-        self.stats.selects += 1;
+    pub fn campaigns(&self) -> Vec<Campaign> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
         self.campaigns.for_each_all(|_, r| {
             if let Ok(c) = campaign_from_row(r) {
@@ -1133,7 +1204,7 @@ impl Db {
         id: CampaignId,
         state: CampaignState,
     ) -> Result<(), DbError> {
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         if self.campaigns.get(id).is_none() {
             return Err(DbError::CampaignNotFound(id));
         }
@@ -1146,16 +1217,16 @@ impl Db {
         Ok(())
     }
 
-    pub fn grid_task(&mut self, id: u64) -> Result<GridTask, DbError> {
-        self.stats.selects += 1;
+    pub fn grid_task(&self, id: u64) -> Result<GridTask, DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let row = self.grid_tasks.get(id).ok_or(DbError::GridTaskNotFound(id))?;
         grid_task_from_row(id, row)
     }
 
     /// Tasks in one state, in id (campaign, then index) order — an index
     /// probe on `grid_tasks.state`.
-    pub fn grid_tasks_in_state(&mut self, state: GridTaskState) -> Vec<GridTask> {
-        self.stats.selects += 1;
+    pub fn grid_tasks_in_state(&self, state: GridTaskState) -> Vec<GridTask> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Text(state.as_str().to_string());
         let mut out = Vec::new();
         self.grid_tasks.for_each_eq("state", &key, |id, r| {
@@ -1167,8 +1238,8 @@ impl Db {
     }
 
     /// All tasks of one campaign, by index — probes `grid_tasks.campaignId`.
-    pub fn grid_tasks_of_campaign(&mut self, campaign: CampaignId) -> Vec<GridTask> {
-        self.stats.selects += 1;
+    pub fn grid_tasks_of_campaign(&self, campaign: CampaignId) -> Vec<GridTask> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Int(campaign as i64);
         let mut out = Vec::new();
         self.grid_tasks.for_each_eq("campaignId", &key, |id, r| {
@@ -1181,8 +1252,8 @@ impl Db {
     }
 
     /// `SELECT COUNT(*) FROM grid_tasks WHERE state = ?` off the index.
-    pub fn count_grid_tasks_in_state(&mut self, state: GridTaskState) -> usize {
-        self.stats.selects += 1;
+    pub fn count_grid_tasks_in_state(&self, state: GridTaskState) -> usize {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.grid_tasks
             .count_eq("state", &Value::Text(state.as_str().to_string()))
     }
@@ -1190,8 +1261,8 @@ impl Db {
     /// Per-state counts of one campaign's tasks, in [`GridTaskState::ALL`]
     /// order, without materializing a single row — progress polls run
     /// every few ms against campaigns up to a million tasks.
-    pub fn count_campaign_tasks(&mut self, campaign: CampaignId) -> [usize; 4] {
-        self.stats.selects += 1;
+    pub fn count_campaign_tasks(&self, campaign: CampaignId) -> [usize; 4] {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Int(campaign as i64);
         let mut counts = [0usize; 4];
         self.grid_tasks.for_each_eq("campaignId", &key, |_, r| {
@@ -1212,8 +1283,8 @@ impl Db {
     /// until the first counterexample, materializing nothing — the
     /// grid's close pass runs this every round on every Active campaign,
     /// and a mid-drain campaign answers at its first live task.
-    pub fn campaign_tasks_all_terminal(&mut self, campaign: CampaignId) -> bool {
-        self.stats.selects += 1;
+    pub fn campaign_tasks_all_terminal(&self, campaign: CampaignId) -> bool {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Int(campaign as i64);
         let mut all = true;
         self.grid_tasks.for_each_eq_while("campaignId", &key, |_, r| {
@@ -1233,11 +1304,11 @@ impl Db {
     /// `sum(headrooms)` tasks per wave, so a million-task backlog costs
     /// a wave-sized walk, not a million-row one.
     pub fn grid_tasks_in_state_capped(
-        &mut self,
+        &self,
         state: GridTaskState,
         max: usize,
     ) -> Vec<GridTask> {
-        self.stats.selects += 1;
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let key = Value::Text(state.as_str().to_string());
         let mut out = Vec::new();
         self.grid_tasks.for_each_eq_while("state", &key, |id, r| {
@@ -1280,7 +1351,7 @@ impl Db {
         now: Time,
     ) -> Result<(), DbError> {
         let task = self.grid_task(id)?;
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_grid_task_cell(id, "cluster", Value::Text(cluster.into()));
         self.set_grid_task_cell(id, "jobId", Value::Null);
         self.set_grid_task_cell(id, "attempts", Value::Int(task.attempts as i64 + 1));
@@ -1305,7 +1376,7 @@ impl Db {
             .map(|t| t.id)
             .collect();
         for id in ids {
-            self.stats.updates += 1;
+            self.stats.updates.fetch_add(1, Ordering::Relaxed);
             self.set_grid_task_cell(id, "dispatchedAt", Value::Int(0));
         }
     }
@@ -1315,7 +1386,7 @@ impl Db {
         if self.grid_tasks.get(id).is_none() {
             return Err(DbError::GridTaskNotFound(id));
         }
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_grid_task_cell(id, "jobId", Value::Int(job as i64));
         Ok(())
     }
@@ -1325,7 +1396,7 @@ impl Db {
         if self.grid_tasks.get(id).is_none() {
             return Err(DbError::GridTaskNotFound(id));
         }
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_grid_task_cell(id, "state", Value::Text(GridTaskState::Done.as_str().into()));
         Ok(())
     }
@@ -1335,7 +1406,7 @@ impl Db {
         if self.grid_tasks.get(id).is_none() {
             return Err(DbError::GridTaskNotFound(id));
         }
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_grid_task_cell(
             id,
             "state",
@@ -1355,7 +1426,7 @@ impl Db {
         if self.grid_tasks.get(id).is_none() {
             return Err(DbError::GridTaskNotFound(id));
         }
-        self.stats.updates += 1;
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
         self.set_grid_task_cell(
             id,
             "state",
@@ -1370,7 +1441,7 @@ impl Db {
     // -------------------------------------------------------- events ----
 
     pub fn log_event(&mut self, now: Time, kind: &str, job: Option<JobId>, detail: &str) {
-        self.stats.inserts += 1;
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         self.mutate(Mutation::LogEvent {
             time: now,
             kind: kind.into(),
@@ -1379,15 +1450,15 @@ impl Db {
         });
     }
 
-    pub fn events(&mut self) -> &[EventRecord] {
-        self.stats.selects += 1;
+    pub fn events(&self) -> &[EventRecord] {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.events.all()
     }
 
     /// Events whose kind starts with `prefix` (e.g. `RECOVERY_` — the
     /// restart-reconciliation audit trail), in time order.
-    pub fn events_with_kind_prefix(&mut self, prefix: &str) -> Vec<&EventRecord> {
-        self.stats.selects += 1;
+    pub fn events_with_kind_prefix(&self, prefix: &str) -> Vec<&EventRecord> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         self.events.of_kind_prefix(prefix)
     }
 
@@ -1395,8 +1466,8 @@ impl Db {
 
     /// `oarstat --accounting` aggregation, computed in one zero-copy pass
     /// over the jobs table (one logical SELECT; no `Job` materialization).
-    pub fn accounting(&mut self) -> Accounting {
-        self.stats.selects += 1;
+    pub fn accounting(&self) -> Accounting {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
         let mut b = AccountingBuilder::new();
         self.jobs.for_each_all(|_, r| {
             let Some(state) = r
@@ -1506,7 +1577,7 @@ impl Db {
                 doc.get("events")
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
             )?,
-            stats: QueryStats::default(),
+            stats: StatCounters::default(),
             wal: None,
             snapshot_fail_after: None,
         };

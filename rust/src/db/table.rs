@@ -19,8 +19,8 @@
 //!   for callers that genuinely want owned rows.
 
 use std::borrow::Cow;
-use std::cell::Cell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::expr::Expr;
 use super::index::{range_empty, ColumnIndex};
@@ -38,17 +38,19 @@ pub type Row = BTreeMap<ColName, Value>;
 /// A table with an auto-increment primary key, mirroring MySQL's
 /// `AUTO_INCREMENT` id columns (`idJob` is "its index number in the table
 /// of the jobs", §2.1).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Table {
     pub name: String,
     next_id: u64,
     rows: BTreeMap<u64, Row>,
     indexes: BTreeMap<ColName, ColumnIndex>,
     /// Access-path telemetry: WHERE-driven statements answered via an
-    /// index probe vs. by visiting every row. `Cell` so reads can record
-    /// their plan without `&mut` (the table sits behind the Db mutex).
-    probes: Cell<u64>,
-    scans: Cell<u64>,
+    /// index probe vs. by visiting every row. Atomics so reads can record
+    /// their plan without `&mut` — tables are shared by concurrent
+    /// readers under the store's read lock, and relaxed increments keep
+    /// the counters exact without ordering cost.
+    probes: AtomicU64,
+    scans: AtomicU64,
 }
 
 impl Default for Table {
@@ -59,8 +61,23 @@ impl Default for Table {
             next_id: 1,
             rows: BTreeMap::new(),
             indexes: BTreeMap::new(),
-            probes: Cell::new(0),
-            scans: Cell::new(0),
+            probes: AtomicU64::new(0),
+            scans: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Clone for Table {
+    /// Counter values are carried over (a cloned table continues the
+    /// original's telemetry, as the derived impl did with `Cell`).
+    fn clone(&self) -> Table {
+        Table {
+            name: self.name.clone(),
+            next_id: self.next_id,
+            rows: self.rows.clone(),
+            indexes: self.indexes.clone(),
+            probes: AtomicU64::new(self.probes.load(Ordering::Relaxed)),
+            scans: AtomicU64::new(self.scans.load(Ordering::Relaxed)),
         }
     }
 }
@@ -203,12 +220,15 @@ impl Table {
 
     /// `(index probes, full scans)` recorded since the last reset.
     pub fn plan_counters(&self) -> (u64, u64) {
-        (self.probes.get(), self.scans.get())
+        (
+            self.probes.load(Ordering::Relaxed),
+            self.scans.load(Ordering::Relaxed),
+        )
     }
 
     pub fn reset_plan_counters(&self) {
-        self.probes.set(0);
-        self.scans.set(0);
+        self.probes.store(0, Ordering::Relaxed);
+        self.scans.store(0, Ordering::Relaxed);
     }
 
     // ------------------------------------------------------ planning ----
@@ -255,11 +275,11 @@ impl Table {
     fn candidates(&self, filter: &Expr) -> Candidates {
         match self.choose(filter) {
             None => {
-                self.scans.set(self.scans.get() + 1);
+                self.scans.fetch_add(1, Ordering::Relaxed);
                 Candidates::All
             }
             Some((sarg, _)) => {
-                self.probes.set(self.probes.get() + 1);
+                self.probes.fetch_add(1, Ordering::Relaxed);
                 let idx = &self.indexes[sarg.column()];
                 let ids = match &sarg {
                     Sarg::Eq(_, v) => idx
@@ -315,7 +335,7 @@ impl Table {
 
     /// Visit every row (a logical full-table SELECT; counts as one scan).
     pub fn for_each_all(&self, mut f: impl FnMut(u64, &Row)) {
-        self.scans.set(self.scans.get() + 1);
+        self.scans.fetch_add(1, Ordering::Relaxed);
         for (id, row) in &self.rows {
             f(*id, row);
         }
@@ -328,7 +348,7 @@ impl Table {
         let residual =
             |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
         if let Some(idx) = self.indexes.get(col) {
-            self.probes.set(self.probes.get() + 1);
+            self.probes.fetch_add(1, Ordering::Relaxed);
             if let Some(ids) = idx.eq_ids(value) {
                 for id in ids {
                     if let Some(row) = self.rows.get(id) {
@@ -339,7 +359,7 @@ impl Table {
                 }
             }
         } else {
-            self.scans.set(self.scans.get() + 1);
+            self.scans.fetch_add(1, Ordering::Relaxed);
             for (id, row) in &self.rows {
                 if residual(row) {
                     f(*id, row);
@@ -360,7 +380,7 @@ impl Table {
         let residual =
             |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
         if let Some(idx) = self.indexes.get(col) {
-            self.probes.set(self.probes.get() + 1);
+            self.probes.fetch_add(1, Ordering::Relaxed);
             if let Some(ids) = idx.eq_ids(value) {
                 for id in ids {
                     if let Some(row) = self.rows.get(id) {
@@ -371,7 +391,7 @@ impl Table {
                 }
             }
         } else {
-            self.scans.set(self.scans.get() + 1);
+            self.scans.fetch_add(1, Ordering::Relaxed);
             for (id, row) in &self.rows {
                 if residual(row) && !f(*id, row) {
                     return;
@@ -385,7 +405,7 @@ impl Table {
         let residual =
             |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
         if let Some(idx) = self.indexes.get(col) {
-            self.probes.set(self.probes.get() + 1);
+            self.probes.fetch_add(1, Ordering::Relaxed);
             for id in idx.eq_ids(value)? {
                 if let Some(row) = self.rows.get(id) {
                     if residual(row) {
@@ -395,7 +415,7 @@ impl Table {
             }
             None
         } else {
-            self.scans.set(self.scans.get() + 1);
+            self.scans.fetch_add(1, Ordering::Relaxed);
             self.rows
                 .iter()
                 .find(|(_, row)| residual(row))
@@ -407,10 +427,10 @@ impl Table {
     /// one exists (no row is touched at all).
     pub fn count_eq(&self, col: &str, value: &Value) -> usize {
         if let Some(idx) = self.indexes.get(col) {
-            self.probes.set(self.probes.get() + 1);
+            self.probes.fetch_add(1, Ordering::Relaxed);
             idx.eq_count(value)
         } else {
-            self.scans.set(self.scans.get() + 1);
+            self.scans.fetch_add(1, Ordering::Relaxed);
             self.rows
                 .values()
                 .filter(|row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false))

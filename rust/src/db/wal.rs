@@ -32,17 +32,34 @@
 //! exactly the prefix of fully-written records — which is exactly what
 //! recovery must reproduce.
 //!
+//! **Group commit**: framed records are accepted into a pending buffer
+//! and reach the file in batches. By default every append flushes its own
+//! record immediately (the classic one-`write(2)`-per-record discipline);
+//! a store under a reader-writer core enables *group-commit mode*, where
+//! appends only buffer and a [`WalCommit`] handle — callable **without**
+//! the database lock — flushes everything pending in one write. Several
+//! writers that mutate back-to-back then share a single log write (and a
+//! single `sync_data`, when sync mode is on): the first committer's flush
+//! covers every record buffered so far, and the others find the buffer
+//! empty and return without touching the file. Callers must not
+//! acknowledge a write before committing it; every crash-shaped exit
+//! (poison, fail-point tear, drop, rotation) flushes the buffer first, so
+//! the recoverable prefix is never behind the acknowledged state.
+//!
 //! **Durability model**: appends reach the kernel via `write(2)` but are
 //! not fsynced per record, so the guarantee covers *process* death
 //! (crash, `kill -9`, the injected fail points) — what the paper's
 //! module-robustness argument needs — not power loss or kernel panic.
 //! Snapshots, being rare, *are* fsynced before the rename that publishes
-//! them. Per-record (or batched) `sync_data` would extend the guarantee
-//! to power failure at a large append-throughput cost.
+//! them. Setting `OAR_WAL_SYNC=1` (or [`Wal::set_sync_on_flush`]) extends
+//! the guarantee to power failure by fsyncing every flush — group commit
+//! is what makes that affordable, since one `sync_data` then covers a
+//! whole batch of writers.
 
 use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::types::{JobId, Time};
 use crate::util::Json;
@@ -379,20 +396,84 @@ pub struct RecoverStats {
     pub torn_tail: bool,
 }
 
+/// In group-commit mode the pending buffer is force-flushed once it
+/// grows past this, bounding the window a store that never commits
+/// explicitly (e.g. a test driving `Db` directly) keeps in user space.
+const GROUP_FLUSH_BYTES: usize = 256 * 1024;
+
+/// The shared append sink: the open log file, the pending (not yet
+/// written) framed records, and the crash state. It lives behind its own
+/// lock, *separate* from the database lock, so a [`WalCommit`] handle can
+/// flush a batch while the next writer is already mutating the store —
+/// the mechanism behind group commit.
+#[derive(Debug)]
+struct Sink {
+    file: File,
+    /// Framed records accepted by `append` but not yet written to `file`.
+    pending: Vec<u8>,
+    /// Buffer appends for batched flushes (off: flush every record).
+    group: bool,
+    /// `sync_data` after every flush: power-loss durability, amortized
+    /// across the batch.
+    sync_on_flush: bool,
+    failpoint: Option<FailPoint>,
+    crashed: bool,
+}
+
+impl Sink {
+    /// Write everything pending in one `write(2)` (+ optional fsync).
+    /// On error the buffer is kept; callers poison the log.
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        self.file.write_all(&self.pending)?;
+        self.pending.clear();
+        if self.sync_on_flush {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+}
+
+/// Cloneable commit handle: flushes every record appended so far without
+/// taking the database lock. The group-commit fast path is structural —
+/// whichever committer runs first writes the whole batch; later
+/// committers find nothing pending and return immediately.
+#[derive(Debug, Clone)]
+pub struct WalCommit {
+    sink: Arc<Mutex<Sink>>,
+}
+
+impl WalCommit {
+    /// Make every acknowledged-to-be-appended record durable (to the
+    /// degree the sync mode promises). Call before acking a write.
+    pub fn commit(&self) -> Result<(), AppendError> {
+        let mut s = self.sink.lock().unwrap();
+        if s.crashed {
+            // Dead process: the tear already flushed what it accepted.
+            return Err(AppendError::Injected);
+        }
+        if let Err(e) = s.flush() {
+            s.crashed = true;
+            return Err(AppendError::Io(e));
+        }
+        Ok(())
+    }
+}
+
 /// The open write-ahead log of one durable database.
 #[derive(Debug)]
 pub struct Wal {
     dir: PathBuf,
     generation: u64,
-    file: File,
+    sink: Arc<Mutex<Sink>>,
     /// Records successfully appended over this object's lifetime
     /// (including the replayed tail it was opened with) — the crash
     /// harness counts boundaries in this unit.
     total: u64,
     since_checkpoint: u64,
     checkpoint_every: u64,
-    failpoint: Option<FailPoint>,
-    crashed: bool,
 }
 
 impl Wal {
@@ -450,46 +531,102 @@ impl Wal {
             .create(true)
             .append(true)
             .open(Self::log_path(dir, generation))?;
+        let sync_on_flush = std::env::var("OAR_WAL_SYNC")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
         Ok(Wal {
             dir: dir.to_path_buf(),
             generation,
-            file,
+            sink: Arc::new(Mutex::new(Sink {
+                file,
+                pending: Vec::new(),
+                group: false,
+                sync_on_flush,
+                failpoint: None,
+                crashed: false,
+            })),
             total: replayed,
             since_checkpoint: replayed,
             checkpoint_every: 0,
-            failpoint: None,
-            crashed: false,
         })
     }
 
     /// Append one record (write-ahead: callers apply only after `Ok`).
-    /// Any failure poisons the log; see [`AppendError`] for how callers
-    /// must treat the two failure classes differently.
+    /// Outside group-commit mode the record is flushed immediately; in
+    /// group-commit mode it only enters the pending buffer, and the
+    /// caller must [`WalCommit::commit`] (or [`Wal::flush`]) before
+    /// acknowledging the write. Any failure poisons the log; see
+    /// [`AppendError`] for how callers must treat the two failure classes
+    /// differently.
     pub fn append(&mut self, m: &Mutation) -> Result<(), AppendError> {
-        if self.crashed {
+        let mut s = self.sink.lock().unwrap();
+        if s.crashed {
             return Err(AppendError::Injected);
         }
         let framed = frame(&m.to_json().dump());
-        if let Some(fp) = self.failpoint {
+        if let Some(fp) = s.failpoint {
             if fp.after == 0 {
+                // Tear exactly as a dying process would: every record
+                // accepted before this one reaches the file (they were
+                // `write(2)`-durable in spirit the moment they were
+                // acknowledged), then a prefix of the failing frame.
+                let _ = s.flush();
                 let cut = fp.partial.min(framed.len().saturating_sub(1));
-                let _ = self.file.write_all(&framed[..cut]);
-                let _ = self.file.flush();
-                self.crashed = true;
+                let _ = s.file.write_all(&framed[..cut]);
+                let _ = s.file.flush();
+                s.crashed = true;
                 return Err(AppendError::Injected);
             }
-            self.failpoint = Some(FailPoint {
+            s.failpoint = Some(FailPoint {
                 after: fp.after - 1,
                 ..fp
             });
         }
-        if let Err(e) = self.file.write_all(&framed) {
-            self.crashed = true;
-            return Err(AppendError::Io(e));
+        s.pending.extend_from_slice(&framed);
+        if !s.group || s.pending.len() >= GROUP_FLUSH_BYTES {
+            if let Err(e) = s.flush() {
+                s.crashed = true;
+                return Err(AppendError::Io(e));
+            }
         }
+        drop(s);
         self.total += 1;
         self.since_checkpoint += 1;
         Ok(())
+    }
+
+    /// Flush the pending buffer from the owning side (a committer that
+    /// already holds the store mutably). Equivalent to
+    /// [`WalCommit::commit`].
+    pub fn flush(&mut self) -> Result<(), AppendError> {
+        WalCommit {
+            sink: self.sink.clone(),
+        }
+        .commit()
+    }
+
+    /// A cloneable commit handle sharing this log's sink; committing
+    /// through it does not require the database lock.
+    pub fn commit_handle(&self) -> WalCommit {
+        WalCommit {
+            sink: self.sink.clone(),
+        }
+    }
+
+    /// Enable/disable group-commit mode (buffered appends + batched
+    /// flushes). Off by default: a store without a committing front-end
+    /// keeps the one-write-per-record discipline.
+    pub fn set_group_commit(&mut self, enabled: bool) {
+        let mut s = self.sink.lock().unwrap();
+        s.group = enabled;
+        if !enabled && !s.crashed {
+            let _ = s.flush();
+        }
+    }
+
+    /// Fsync every flush (power-loss durability; see the module docs).
+    pub fn set_sync_on_flush(&mut self, enabled: bool) {
+        self.sink.lock().unwrap().sync_on_flush = enabled;
     }
 
     /// Rotate to a fresh log for `new_generation` (called after that
@@ -502,7 +639,16 @@ impl Wal {
             .write(true)
             .truncate(true)
             .open(Self::log_path(&self.dir, new_generation))?;
-        self.file = file;
+        {
+            let mut s = self.sink.lock().unwrap();
+            // Pending records were applied in memory, so the snapshot
+            // that precedes rotation already covers them: they must land
+            // in the *old* generation's file (about to be swept), never
+            // the new one, or recovery would apply them twice.
+            s.flush()
+                .map_err(|e| anyhow::anyhow!("wal flush before rotate: {e}"))?;
+            s.file = file;
+        }
         self.generation = new_generation;
         self.since_checkpoint = 0;
         Self::sweep_older_than(&self.dir, new_generation);
@@ -542,16 +688,21 @@ impl Wal {
     /// next one writes only `partial` bytes (clamped to frame length − 1)
     /// and poisons the log.
     pub fn inject_failure(&mut self, after: u64, partial: usize) {
-        self.failpoint = Some(FailPoint { after, partial });
+        self.sink.lock().unwrap().failpoint = Some(FailPoint { after, partial });
     }
 
-    /// Poison the log immediately — models `kill -9` right now.
+    /// Poison the log immediately — models `kill -9` right now. The
+    /// pending buffer is flushed first: records appended before this
+    /// instant were acknowledged, so the recoverable prefix must contain
+    /// them (exactly the old per-record-`write(2)` behaviour).
     pub fn crash(&mut self) {
-        self.crashed = true;
+        let mut s = self.sink.lock().unwrap();
+        let _ = s.flush();
+        s.crashed = true;
     }
 
     pub fn crashed(&self) -> bool {
-        self.crashed
+        self.sink.lock().unwrap().crashed
     }
 
     pub fn generation(&self) -> u64 {
@@ -575,7 +726,18 @@ impl Wal {
     pub fn due_checkpoint(&self) -> bool {
         self.checkpoint_every > 0
             && self.since_checkpoint >= self.checkpoint_every
-            && !self.crashed
+            && !self.crashed()
+    }
+}
+
+impl Drop for Wal {
+    /// A process exiting cleanly must leave its acknowledged records on
+    /// disk even if nothing committed the last batch explicitly.
+    fn drop(&mut self) {
+        let Ok(mut s) = self.sink.lock() else { return };
+        if !s.crashed {
+            let _ = s.flush();
+        }
     }
 }
 
@@ -660,6 +822,85 @@ mod tests {
             assert_eq!(valid, boundaries[whole], "cut {cut}");
             assert_eq!(torn, cut != boundaries[whole], "cut {cut}");
         }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("oar_wal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn group_commit_buffers_until_committed() {
+        let dir = tmp_dir("group");
+        let mut wal = Wal::open(&dir, 0, 0).unwrap();
+        wal.set_group_commit(true);
+        for m in sample() {
+            wal.append(&m).unwrap();
+        }
+        // Nothing on disk yet: the records are pending in the sink.
+        let on_disk = std::fs::read(Wal::log_path(&dir, 0)).unwrap();
+        assert!(on_disk.is_empty(), "group mode must not write per record");
+        assert_eq!(wal.total_records(), sample().len() as u64);
+
+        // One commit (via the lock-free handle) lands the whole batch.
+        wal.commit_handle().commit().unwrap();
+        let (records, _) = Wal::read_records(&dir, 0).unwrap();
+        assert_eq!(records, sample());
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_and_drop_flush_the_pending_batch() {
+        // Poisoning models a dead process whose acknowledged appends had
+        // already hit write(2): the buffer must reach the file first.
+        let dir = tmp_dir("crashflush");
+        let mut wal = Wal::open(&dir, 0, 0).unwrap();
+        wal.set_group_commit(true);
+        for m in sample() {
+            wal.append(&m).unwrap();
+        }
+        wal.crash();
+        assert!(wal.crashed());
+        assert!(matches!(
+            wal.append(&sample()[0]),
+            Err(AppendError::Injected)
+        ));
+        let (records, torn) = Wal::read_records(&dir, 0).unwrap();
+        assert_eq!(records, sample());
+        assert!(!torn);
+        drop(wal);
+
+        // Clean drop flushes too.
+        let dir2 = tmp_dir("dropflush");
+        let mut wal = Wal::open(&dir2, 0, 0).unwrap();
+        wal.set_group_commit(true);
+        wal.append(&sample()[0]).unwrap();
+        drop(wal);
+        let (records, _) = Wal::read_records(&dir2, 0).unwrap();
+        assert_eq!(records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn injected_tear_lands_prior_batch_then_torn_frame() {
+        let dir = tmp_dir("tearflush");
+        let mut wal = Wal::open(&dir, 0, 0).unwrap();
+        wal.set_group_commit(true);
+        wal.inject_failure(2, 7);
+        let ms = sample();
+        wal.append(&ms[0]).unwrap();
+        wal.append(&ms[1]).unwrap();
+        assert!(matches!(wal.append(&ms[2]), Err(AppendError::Injected)));
+        // The two acknowledged records recover; the torn third does not.
+        let (records, torn) = Wal::read_records(&dir, 0).unwrap();
+        assert_eq!(records, ms[..2].to_vec());
+        assert!(torn);
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

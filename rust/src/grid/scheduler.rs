@@ -38,7 +38,7 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::db::Db;
@@ -215,7 +215,12 @@ struct ClusterState {
 }
 
 struct GridInner {
-    db: Mutex<Db>,
+    /// Reader-writer core, same discipline as the cluster server: status
+    /// APIs (`campaigns`, `tasks`, `campaign_progress`, `clusters`,
+    /// drain polls) take read guards and run concurrently with each
+    /// other; only the round thread's reconcile/dispatch mutations and
+    /// `submit_campaign` take the write guard.
+    db: RwLock<Db>,
     clusters: Mutex<Vec<ClusterState>>,
     counters: GridCounters,
     running: AtomicBool,
@@ -311,7 +316,7 @@ impl Grid {
             })
             .collect();
         let inner = Arc::new(GridInner {
-            db: Mutex::new(db),
+            db: RwLock::new(db),
             clusters: Mutex::new(clusters),
             counters: GridCounters::default(),
             running: AtomicBool::new(true),
@@ -359,7 +364,7 @@ impl Grid {
         );
         anyhow::ensure!(spec.max_time > 0, "maxTime must be positive");
         let now = self.inner.now();
-        let mut db = self.inner.db.lock().unwrap();
+        let mut db = self.inner.db.write().unwrap();
         let id = db.insert_campaign(spec, now);
         db.log_event(
             now,
@@ -371,15 +376,15 @@ impl Grid {
     }
 
     pub fn campaigns(&self) -> Vec<Campaign> {
-        self.inner.db.lock().unwrap().campaigns()
+        self.inner.db.read().unwrap().campaigns()
     }
 
     pub fn tasks(&self, campaign: CampaignId) -> Vec<GridTask> {
-        self.inner.db.lock().unwrap().grid_tasks_of_campaign(campaign)
+        self.inner.db.read().unwrap().grid_tasks_of_campaign(campaign)
     }
 
     pub fn campaign_progress(&self, id: CampaignId) -> Result<CampaignProgress> {
-        let mut db = self.inner.db.lock().unwrap();
+        let db = self.inner.db.read().unwrap();
         let campaign = db.campaign(id)?;
         // Index-walk counts, no row materialization: progress is polled
         // in tight loops and must not scale with campaign size.
@@ -397,7 +402,7 @@ impl Grid {
     /// Per-cluster federation status (for `oar grid clusters` and tests).
     pub fn clusters(&self) -> Vec<ClusterStatus> {
         let outstanding = {
-            let mut db = self.inner.db.lock().unwrap();
+            let db = self.inner.db.read().unwrap();
             let mut by_cluster: BTreeMap<String, u32> = BTreeMap::new();
             for t in db.grid_tasks_in_state(GridTaskState::Dispatched) {
                 if let Some(c) = t.cluster {
@@ -457,9 +462,16 @@ impl Grid {
         }
     }
 
-    /// Inspection hook (tests, `oar grid stat`).
+    /// Mutating inspection hook (tests, `oar grid stat`). Takes the
+    /// write guard; prefer [`Grid::read_db`] for pure queries.
     pub fn with_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
-        f(&mut self.inner.db.lock().unwrap())
+        f(&mut self.inner.db.write().unwrap())
+    }
+
+    /// Read-only inspection hook: runs against a consistent snapshot
+    /// without blocking (or being blocked by) an in-progress round.
+    pub fn read_db<T>(&self, f: impl FnOnce(&Db) -> T) -> T {
+        f(&self.inner.db.read().unwrap())
     }
 
     /// Stop the round thread without giving up the handle (idempotent).
@@ -534,7 +546,7 @@ fn note_transport_failure(inner: &GridInner, cs: &mut ClusterState) -> bool {
     cs.blacklisted_until = Some(now + inner.probation.as_millis() as Time);
     cs.consecutive_errors = 0;
     inner.counters.blacklists.fetch_add(1, Ordering::Relaxed);
-    let mut db = inner.db.lock().unwrap();
+    let mut db = inner.db.write().unwrap();
     db.log_event(now, "GRID_BLACKLIST", None, &cs.name);
     let placed: Vec<GridTask> = db
         .grid_tasks_in_state(GridTaskState::Dispatched)
@@ -648,7 +660,7 @@ fn round(inner: &Arc<GridInner>) {
                     cs.sweep_on_rejoin = true;
                     cs.last_free = wave_budget(&info);
                     inner.counters.rejoins.fetch_add(1, Ordering::Relaxed);
-                    let mut db = inner.db.lock().unwrap();
+                    let mut db = inner.db.write().unwrap();
                     db.log_event(now, "GRID_REJOIN", None, &cs.name);
                     sessions.push(Some(client));
                 }
@@ -681,7 +693,7 @@ fn round(inner: &Arc<GridInner>) {
         }
         let name = clusters[i].name.clone();
         let (placed, ack_tags): (Vec<GridTask>, Vec<String>) = {
-            let mut db = inner.db.lock().unwrap();
+            let db = inner.db.read().unwrap();
             let placed: Vec<GridTask> = db
                 .grid_tasks_in_state(GridTaskState::Dispatched)
                 .into_iter()
@@ -717,7 +729,7 @@ fn round(inner: &Arc<GridInner>) {
                 // next round, but logged so a persistent refusal leaves
                 // a trail instead of a silent stall.
                 let now = inner.now();
-                let mut db = inner.db.lock().unwrap();
+                let mut db = inner.db.write().unwrap();
                 db.log_event(now, "GRID_STAT_REFUSED", None, &format!("{name}: {e}"));
                 continue;
             }
@@ -734,7 +746,7 @@ fn round(inner: &Arc<GridInner>) {
         // `del` is a blocking RPC, and pinning the grid database for up
         // to rpc_timeout per call would stall every status read.
         let mut to_cancel: Vec<JobId> = Vec::new();
-        let mut db = inner.db.lock().unwrap();
+        let mut db = inner.db.write().unwrap();
         for task in &placed {
             match task.job {
                 Some(jid) => {
@@ -880,7 +892,7 @@ fn round(inner: &Arc<GridInner>) {
     // actually place, so a million-task backlog costs a million-row
     // materialization exactly never.
     let headrooms: Vec<u32> = {
-        let mut db = inner.db.lock().unwrap();
+        let db = inner.db.read().unwrap();
         let mut outstanding: BTreeMap<String, u32> = BTreeMap::new();
         for t in db.grid_tasks_in_state(GridTaskState::Dispatched) {
             if let Some(c) = t.cluster {
@@ -901,7 +913,7 @@ fn round(inner: &Arc<GridInner>) {
     };
     let wave_cap: u32 = headrooms.iter().sum();
     let (pending, campaigns_by_id) = if wave_cap > 0 {
-        let mut db = inner.db.lock().unwrap();
+        let db = inner.db.read().unwrap();
         let pending = db.grid_tasks_in_state_capped(GridTaskState::Pending, wave_cap as usize);
         let campaigns: BTreeMap<CampaignId, Campaign> =
             db.campaigns().into_iter().map(|c| (c.id, c)).collect();
@@ -921,7 +933,7 @@ fn round(inner: &Arc<GridInner>) {
                 let name = clusters[i].name.clone();
                 // Placement intent first (write-ahead at the grid level).
                 {
-                    let mut db = inner.db.lock().unwrap();
+                    let mut db = inner.db.write().unwrap();
                     if db
                         .mark_grid_task_dispatched(task.id, &name, inner.now())
                         .is_err()
@@ -944,7 +956,7 @@ fn round(inner: &Arc<GridInner>) {
                 };
                 match sessions[i].as_mut().unwrap().sub(&spec) {
                     Ok(Ok(job)) => {
-                        let mut db = inner.db.lock().unwrap();
+                        let mut db = inner.db.write().unwrap();
                         if db.set_grid_task_job(task.id, job).is_ok() {
                             inner.counters.dispatched.fetch_add(1, Ordering::Relaxed);
                             clusters[i].dispatched_total += 1;
@@ -953,7 +965,7 @@ fn round(inner: &Arc<GridInner>) {
                     Ok(Err(reject)) => {
                         // Admission refused: the submission definitively
                         // did not land, so the task can move on at once.
-                        let mut db = inner.db.lock().unwrap();
+                        let mut db = inner.db.write().unwrap();
                         if let Ok(t) = db.grid_task(task.id) {
                             let why = format!("admission rejected: {reject}");
                             requeue_or_fail(inner, &mut db, &t, &why, RequeueKind::Retry);
@@ -975,7 +987,7 @@ fn round(inner: &Arc<GridInner>) {
 
     // ------------------------------------------------ close campaigns ----
     let now = inner.now();
-    let mut db = inner.db.lock().unwrap();
+    let mut db = inner.db.write().unwrap();
     let open: Vec<CampaignId> = db
         .campaigns()
         .into_iter()

@@ -20,20 +20,19 @@ pub struct MonitorReport {
 }
 
 /// Run one monitoring round: ping every node, reconcile database state.
+/// The fleet listing takes a shared read guard (status queries proceed
+/// concurrently); only the state transitions take the write lock.
 pub fn monitor_round(
-    db: &std::sync::Mutex<Db>,
+    db: &std::sync::RwLock<Db>,
     launcher: &Launcher,
     now: Time,
 ) -> Result<MonitorReport> {
-    let nodes = {
-        let mut db = db.lock().unwrap();
-        db.all_nodes()
-    };
+    let nodes = db.read().unwrap().all_nodes();
     let ids: Vec<_> = nodes.iter().map(|n| n.id).collect();
     let states = launcher.ping_all(&ids);
 
     let mut report = MonitorReport::default();
-    let mut db = db.lock().unwrap();
+    let mut db = db.write().unwrap();
     for (node, reachable) in states {
         let current = nodes.iter().find(|n| n.id == node).unwrap();
         match (current.state, reachable) {
@@ -54,18 +53,20 @@ pub fn monitor_round(
     Ok(report)
 }
 
-/// Helper used by `oarnodes`: summarize fleet state.
-pub fn fleet_summary(db: &mut Db) -> Vec<(String, String, u32)> {
+/// Helper used by `oarnodes`: summarize fleet state. Read-only.
+pub fn fleet_summary(db: &Db) -> Vec<(String, String, u32)> {
     db.all_nodes()
         .into_iter()
         .map(|n| (n.hostname.clone(), n.state.as_str().to_string(), n.nb_procs))
         .collect()
 }
 
-pub use std::sync::Mutex as DbMutex;
+pub use std::sync::RwLock as DbLock;
 
-/// Convenience alias used by the server.
-pub type SharedDb = Arc<std::sync::Mutex<Db>>;
+/// Convenience alias used by the server: the reader-writer core. Status
+/// queries share read guards; mutation batches serialize on the write
+/// half.
+pub type SharedDb = Arc<std::sync::RwLock<Db>>;
 
 #[cfg(test)]
 mod tests {
@@ -78,7 +79,7 @@ mod tests {
         let cluster = Arc::new(VirtualCluster::tiny(3, 1));
         let mut db = Db::new();
         cluster.register(&mut db);
-        let db = std::sync::Mutex::new(db);
+        let db = std::sync::RwLock::new(db);
         let launcher = Launcher::new(
             cluster.clone(),
             LauncherConfig {
@@ -92,7 +93,7 @@ mod tests {
         assert_eq!(r.suspected, vec![2]);
         assert!(r.recovered.is_empty());
         {
-            let mut d = db.lock().unwrap();
+            let d = db.read().unwrap();
             assert_eq!(d.alive_nodes().len(), 2);
             assert_eq!(d.events().iter().filter(|e| e.kind == "NODE_SUSPECTED").count(), 1);
         }
@@ -104,6 +105,6 @@ mod tests {
         cluster.repair(2);
         let r = monitor_round(&db, &launcher, 102).unwrap();
         assert_eq!(r.recovered, vec![2]);
-        assert_eq!(db.lock().unwrap().alive_nodes().len(), 3);
+        assert_eq!(db.read().unwrap().alive_nodes().len(), 3);
     }
 }

@@ -10,8 +10,11 @@
 //! clients wait in the TCP accept backlog instead of the server
 //! accumulating unbounded per-connection state. This is the paper's §2.2
 //! module discipline applied to the network edge: the front-end only
-//! talks to [`Server`], which serializes all state behind the database
-//! lock and the central automaton's event buffer.
+//! talks to [`Server`], which routes read-only methods (`stat`, `load`,
+//! `nodes`, `queues`) through shared database read guards — concurrent
+//! workers answer them in parallel, never queued behind a scheduling
+//! round — and serializes mutations behind the write lock and the
+//! central automaton's event buffer.
 //!
 //! Graceful drain ([`RpcServer::drain`]): stop accepting, answer the
 //! request each worker is currently processing, then close every
@@ -79,15 +82,19 @@ impl RpcConfig {
     }
 
     /// Environment overrides, applied by [`RpcServer::start`] to whatever
-    /// config it is given: `OAR_RPC_IO_TIMEOUT_MS` (0 = no timeout) and
-    /// `OAR_RPC_QUEUE` (accept-queue depth, must be > 0). They exist so a
-    /// harness or CI can tighten the front-end without plumbing flags
-    /// through every entry point; unset or unparsable values leave the
-    /// config untouched (`docs/PROTOCOL.md` documents the defaults).
+    /// config it is given: `OAR_RPC_IO_TIMEOUT_MS` (0 = no timeout),
+    /// `OAR_RPC_QUEUE` (accept-queue depth, must be > 0) and
+    /// `OAR_RPC_WORKERS` (pool size, must be > 0 — more workers means
+    /// more concurrent readers sharing the database read lock). They
+    /// exist so a harness or CI can tighten the front-end without
+    /// plumbing flags through every entry point; unset or unparsable
+    /// values leave the config untouched (`docs/PROTOCOL.md` documents
+    /// the defaults).
     pub fn with_env_overrides(self) -> RpcConfig {
         let io = std::env::var("OAR_RPC_IO_TIMEOUT_MS").ok();
         let queue = std::env::var("OAR_RPC_QUEUE").ok();
-        self.apply_overrides(io.as_deref(), queue.as_deref())
+        let workers = std::env::var("OAR_RPC_WORKERS").ok();
+        self.apply_overrides(io.as_deref(), queue.as_deref(), workers.as_deref())
     }
 
     /// The pure half of [`RpcConfig::with_env_overrides`] (unit-testable
@@ -96,6 +103,7 @@ impl RpcConfig {
         mut self,
         io_timeout_ms: Option<&str>,
         queue_depth: Option<&str>,
+        workers: Option<&str>,
     ) -> RpcConfig {
         if let Some(ms) = io_timeout_ms.and_then(|v| v.trim().parse::<u64>().ok()) {
             self.io_timeout = if ms == 0 {
@@ -107,6 +115,13 @@ impl RpcConfig {
         if let Some(depth) = queue_depth.and_then(|v| v.trim().parse::<usize>().ok()) {
             if depth > 0 {
                 self.queue_depth = depth;
+            }
+        }
+        if let Some(n) = workers.and_then(|v| v.trim().parse::<usize>().ok()) {
+            // 0 would mean a pool that never serves anyone; keep the
+            // same reject-don't-clamp discipline as the queue depth.
+            if n > 0 {
+                self.workers = n;
             }
         }
         self
@@ -740,20 +755,26 @@ mod tests {
     fn env_overrides_parse_strictly() {
         let base = RpcConfig::default();
         // Unset / garbage: untouched.
-        let cfg = base.clone().apply_overrides(None, None);
+        let cfg = base.clone().apply_overrides(None, None, None);
         assert_eq!(cfg.io_timeout, Some(Duration::from_secs(60)));
         assert_eq!(cfg.queue_depth, 64);
-        let cfg = base.clone().apply_overrides(Some("fast"), Some("-3"));
+        assert_eq!(cfg.workers, 16);
+        let cfg = base
+            .clone()
+            .apply_overrides(Some("fast"), Some("-3"), Some("many"));
         assert_eq!(cfg.io_timeout, Some(Duration::from_secs(60)));
         assert_eq!(cfg.queue_depth, 64);
+        assert_eq!(cfg.workers, 16);
         // Valid values override; 0 io timeout = no timeout; 0 queue depth
-        // would break the acceptor invariant and is ignored.
-        let cfg = base.clone().apply_overrides(Some("1500"), Some("8"));
+        // or 0 workers would break the pool invariants and are ignored.
+        let cfg = base.clone().apply_overrides(Some("1500"), Some("8"), Some("64"));
         assert_eq!(cfg.io_timeout, Some(Duration::from_millis(1500)));
         assert_eq!(cfg.queue_depth, 8);
-        let cfg = base.apply_overrides(Some("0"), Some("0"));
+        assert_eq!(cfg.workers, 64);
+        let cfg = base.apply_overrides(Some("0"), Some("0"), Some("0"));
         assert_eq!(cfg.io_timeout, None);
         assert_eq!(cfg.queue_depth, 64);
+        assert_eq!(cfg.workers, 16);
     }
 
     #[test]

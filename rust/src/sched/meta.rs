@@ -5,10 +5,13 @@
 //! priority using it associated scheduler."
 //!
 //! One [`MetaScheduler::round`] call is one execution of the paper's
-//! scheduling module: read everything from the database, compute, write
-//! decisions back as state transitions + assignments. The module keeps no
-//! hidden state between rounds (re-running it is always safe — the central
-//! module's redundancy principle).
+//! scheduling module: read everything from the database, compute, and
+//! return the decisions. The round itself never writes — it runs against
+//! a shared read guard of the store, so status queries proceed while a
+//! round is planning; the caller applies the decision (state transitions,
+//! assignments, reservation grants) under the write lock. The module
+//! keeps no hidden state between rounds (re-running it is always safe —
+//! the central module's redundancy principle).
 
 use crate::db::Db;
 use crate::matching::encode::{Encoder, JobToMatch};
@@ -57,8 +60,10 @@ pub struct SchedulerDecision {
     pub cancellations: Vec<JobId>,
     /// Jobs that can never run (no eligible resources): → Error.
     pub rejected: Vec<(JobId, String)>,
-    /// `toSchedule` reservations that were granted a slot this round.
-    pub reservations_confirmed: Vec<JobId>,
+    /// `toSchedule` reservations granted a slot this round, with the
+    /// chosen nodes; the caller pins the assignment and flips the
+    /// reservation to `Scheduled` when it applies the decision.
+    pub reservations_confirmed: Vec<(JobId, Vec<NodeId>)>,
     /// `toSchedule` reservations that could not be granted: → Error.
     pub reservations_rejected: Vec<JobId>,
 }
@@ -97,8 +102,10 @@ impl MetaScheduler {
         &self.config
     }
 
-    /// One scheduling round over the database state at `now`.
-    pub fn round(&mut self, db: &mut Db, now: Time) -> Result<SchedulerDecision> {
+    /// One scheduling round over the database state at `now`. Read-only:
+    /// `db` may be a shared read guard; concurrent status queries are
+    /// never blocked by a planning round.
+    pub fn round(&mut self, db: &Db, now: Time) -> Result<SchedulerDecision> {
         let mut decision = SchedulerDecision::default();
         let nodes = db.alive_nodes();
         // The *registered* fleet (any state) judges impossibility: a job
@@ -156,9 +163,7 @@ impl MetaScheduler {
                 for n in &chosen {
                     gantt.occupy(job.id, *n, job.weight, start, start + job.max_time);
                 }
-                db.assign_nodes(job.id, &chosen, job.weight);
-                db.set_job_reservation(job.id, ReservationField::Scheduled)?;
-                decision.reservations_confirmed.push(job.id);
+                decision.reservations_confirmed.push((job.id, chosen));
             } else {
                 decision.reservations_rejected.push(job.id);
             }
@@ -251,7 +256,7 @@ impl MetaScheduler {
     /// J-sized chunks with SQL fallback, or pure SQL.
     fn build_policy_jobs(
         &mut self,
-        db: &mut Db,
+        db: &Db,
         waiting: &[Job],
         nodes: &[crate::types::Node],
         gantt: &Gantt,
@@ -414,6 +419,17 @@ mod tests {
         MetaScheduler::new(SchedulerConfig::default(), Box::new(ReferenceStep))
     }
 
+    /// Apply granted reservations the way the central module does: pin
+    /// the chosen nodes and flip the reservation to `Scheduled`.
+    fn apply_reservations(db: &mut Db, decision: &SchedulerDecision) {
+        for (id, nodes) in &decision.reservations_confirmed {
+            let weight = db.job(*id).unwrap().weight;
+            db.assign_nodes(*id, nodes, weight);
+            db.set_job_reservation(*id, ReservationField::Scheduled)
+                .unwrap();
+        }
+    }
+
     fn apply_starts(db: &mut Db, decision: &SchedulerDecision, now: Time) {
         for (id, nodes) in &decision.starts {
             let job = db.job(*id).unwrap();
@@ -528,8 +544,10 @@ mod tests {
         );
         let mut meta = dense_meta();
         let d = meta.round(&mut db, 0).unwrap();
-        assert_eq!(d.reservations_confirmed, vec![ok]);
+        let confirmed: Vec<JobId> = d.reservations_confirmed.iter().map(|r| r.0).collect();
+        assert_eq!(confirmed, vec![ok]);
         assert_eq!(d.reservations_rejected, vec![clash]);
+        apply_reservations(&mut db, &d);
         assert_eq!(db.job(ok).unwrap().reservation, ReservationField::Scheduled);
     }
 
@@ -545,7 +563,8 @@ mod tests {
             0,
         );
         let mut meta = dense_meta();
-        meta.round(&mut db, 0).unwrap();
+        let d = meta.round(&mut db, 0).unwrap();
+        apply_reservations(&mut db, &d);
         // A long job cannot start now: it would collide with the
         // reservation at t=100. (Conservative placement puts it after.)
         let _long = submit(&mut db, JobSpec::batch("b", "y", 1, 500), 1);
@@ -570,7 +589,8 @@ mod tests {
             0,
         );
         let mut meta = dense_meta();
-        meta.round(&mut db, 0).unwrap();
+        let d = meta.round(&mut db, 0).unwrap();
+        apply_reservations(&mut db, &d);
         let d = meta.round(&mut db, 100).unwrap();
         assert_eq!(d.starts.len(), 1);
         assert_eq!(d.starts[0].0, res);

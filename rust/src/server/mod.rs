@@ -15,21 +15,33 @@
 //! given in seconds by `submit` is converted. Modeled latencies (launcher)
 //! and simulated command runtimes are scaled by `time_scale`, so the burst
 //! benchmarks (figs. 9–10) can run a latency-faithful stack quickly.
+//!
+//! Locking model: the database sits behind an [`RwLock`]. Read-only
+//! commands (`stat`, `nodes`, `queues`, `load`, accounting, the
+//! terminal-state poll) share read guards and never wait behind a
+//! scheduling round; every mutation takes the write half, and the round
+//! itself *plans* under a read guard and only takes the write lock to
+//! apply its decision. On a durable server the write path runs the WAL
+//! in group-commit mode: appends buffer while the lock is held and land
+//! as one batched log write (one `fsync` when enabled) right after it is
+//! released, before the mutation is acknowledged to anyone.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::admission::{self, Admission};
 use crate::central::{JobEvent, NotificationHub, Planner, Task, Work};
 use crate::cluster::VirtualCluster;
-use crate::db::{Accounting, Db, DbError, Expr};
+use crate::db::{Accounting, AppendError, Db, DbError, Expr, WalCommit};
 use crate::launcher::{Launcher, LauncherConfig};
 use crate::matching::ScheduleStep;
 use crate::monitor;
 use crate::sched::{MetaScheduler, SchedulerConfig, SchedulerDecision};
-use crate::types::{Job, JobId, JobSpec, JobState, NodeId, Queue, RecoveryPolicy, Time};
+use crate::types::{
+    Job, JobId, JobSpec, JobState, NodeId, Queue, RecoveryPolicy, ReservationField, Time,
+};
 use crate::Result;
 
 /// Server configuration.
@@ -123,7 +135,11 @@ impl ServerConfig {
 
 /// Shared innards handed to execution threads.
 struct Inner {
-    db: Mutex<Db>,
+    db: RwLock<Db>,
+    /// Group-commit handle to the WAL's shared sink (`None` on a
+    /// volatile server): flushes the buffered batch *outside* the
+    /// database lock, so the log write never extends a critical section.
+    wal: Option<WalCommit>,
     hub: NotificationHub,
     launcher: Launcher,
     epoch: Instant,
@@ -135,6 +151,38 @@ impl Inner {
     /// Milliseconds since server start.
     fn now(&self) -> Time {
         self.epoch.elapsed().as_millis() as Time
+    }
+
+    /// Write path: run `f` under the exclusive lock, then land the
+    /// group-commit batch before returning — no mutation is ever
+    /// acknowledged ahead of its log records. Concurrent writers that
+    /// queued behind the same batch find it already flushed and return
+    /// without touching the file (that is the group commit).
+    fn write_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
+        let out = f(&mut self.db.write().unwrap());
+        self.commit_wal();
+        out
+    }
+
+    /// Read path: run `f` against a shared snapshot of the database.
+    /// Many readers proceed concurrently; none blocks a scheduling
+    /// round's planning phase.
+    fn read_db<T>(&self, f: impl FnOnce(&Db) -> T) -> T {
+        f(&self.db.read().unwrap())
+    }
+
+    /// Flush WAL records buffered by write guards that already dropped.
+    /// Same discipline as `Db::mutate`: a poisoned log (simulated crash)
+    /// is silent, a genuine I/O failure dies loudly.
+    fn commit_wal(&self) {
+        if let Some(wal) = &self.wal {
+            match wal.commit() {
+                Ok(()) | Err(AppendError::Injected) => {}
+                Err(AppendError::Io(e)) => {
+                    panic!("WAL commit failed, refusing to acknowledge mutations: {e}")
+                }
+            }
+        }
     }
 }
 
@@ -240,10 +288,16 @@ impl Server {
     }
 
     /// Build over an existing database (e.g. restored from a snapshot).
-    pub fn from_db(db: Db, cluster: Arc<VirtualCluster>, config: ServerConfig) -> Server {
+    /// A durable database is switched to group-commit WAL mode: its
+    /// appends buffer under the write lock and are flushed by the server
+    /// write path before each mutation is acknowledged.
+    pub fn from_db(mut db: Db, cluster: Arc<VirtualCluster>, config: ServerConfig) -> Server {
+        db.set_wal_group_commit(true);
+        let wal = db.wal_commit_handle();
         let launcher = Launcher::new(cluster.clone(), config.launcher.clone());
         let inner = Arc::new(Inner {
-            db: Mutex::new(db),
+            db: RwLock::new(db),
+            wal,
             hub: NotificationHub::new(),
             launcher,
             epoch: Instant::now(),
@@ -293,9 +347,20 @@ impl Server {
         &self.cluster
     }
 
-    /// Run `f` against the database (the only shared state there is).
+    /// Run `f` against the database under the **write** lock (the only
+    /// shared state there is); any WAL records it buffers are committed
+    /// before this returns. Use [`Server::read_db`] for read-only work —
+    /// it shares the lock with other readers.
     pub fn with_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
-        f(&mut self.inner.db.lock().unwrap())
+        self.inner.write_db(f)
+    }
+
+    /// Run `f` against a shared read guard of the database: a consistent
+    /// snapshot (no half-applied scheduling rounds) that other readers
+    /// share concurrently. Reads may trail the latest acknowledged write
+    /// by whatever the write lock is currently applying.
+    pub fn read_db<T>(&self, f: impl FnOnce(&Db) -> T) -> T {
+        self.inner.read_db(f)
     }
 
     // ------------------------------------------------------ commands ----
@@ -304,7 +369,7 @@ impl Server {
     /// (§2.1 fig. 3). `max_time` in the spec is in *seconds*.
     pub fn submit(&self, spec: &JobSpec) -> Result<std::result::Result<JobId, String>> {
         let now = self.inner.now();
-        let mut db = self.inner.db.lock().unwrap();
+        let mut db = self.inner.db.write().unwrap();
         let admitted = match admission::admit(&mut db, spec)? {
             Admission::Accepted(s) => s,
             Admission::Rejected(reason) => return Ok(Err(reason)),
@@ -317,6 +382,9 @@ impl Server {
         let id = db.insert_job(job);
         db.log_event(now, "SUBMISSION", Some(id), &admitted.user);
         drop(db);
+        // Durable before acknowledged: the group-commit batch lands here,
+        // outside the lock, before the id is returned or the round poked.
+        self.inner.commit_wal();
         self.inner.hub.notify(Task::Schedule);
         Ok(Ok(id))
     }
@@ -383,7 +451,7 @@ impl Server {
     /// `del` is never silently forgotten.
     pub fn request_delete(&self, id: JobId) -> Result<JobState> {
         let now = self.inner.now();
-        let mut db = self.inner.db.lock().unwrap();
+        let mut db = self.inner.db.write().unwrap();
         let job = db.job(id)?;
         let state = job.state;
         if !state.is_terminal() {
@@ -391,6 +459,9 @@ impl Server {
             // SUBMISSION/DELETION do.
             db.log_event(now, "DELETION_REQUESTED", Some(id), &job.user);
             drop(db);
+            // The durable-acknowledgment contract: the event is on disk
+            // before the in-memory Cancel is enqueued.
+            self.inner.commit_wal();
             self.inner.hub.push_event(JobEvent::Cancel { job: id, at: now });
         }
         Ok(state)
@@ -401,29 +472,29 @@ impl Server {
     pub fn stat(&self, filter: Option<&str>) -> Result<Vec<Job>> {
         let expr = Expr::parse(filter.unwrap_or(""))
             .map_err(|e| anyhow::anyhow!("bad filter: {e}"))?;
-        Ok(self.with_db(|db| db.jobs_where(&expr)))
+        Ok(self.read_db(|db| db.jobs_where(&expr)))
     }
 
     /// `oarstat --accounting`: aggregate usage report, computed in one
     /// zero-copy pass over the jobs table.
     pub fn accounting(&self) -> Accounting {
-        self.with_db(|db| db.accounting())
+        self.read_db(|db| db.accounting())
     }
 
     /// `oarnodes`: fleet state.
     pub fn nodes(&self) -> Vec<(String, String, u32)> {
-        self.with_db(monitor::fleet_summary)
+        self.read_db(monitor::fleet_summary)
     }
 
     /// The queue table, by decreasing priority (`queues` RPC method).
     pub fn queues(&self) -> Vec<Queue> {
-        self.with_db(|db| db.queues_by_priority())
+        self.read_db(|db| db.queues_by_priority())
     }
 
     /// The `load` probe: current occupancy, computed in one pass under
-    /// the database lock so the numbers are mutually coherent.
+    /// one read guard so the numbers are mutually coherent.
     pub fn load_info(&self) -> LoadInfo {
-        self.with_db(|db| {
+        self.read_db(|db| {
             let nodes = db.all_nodes();
             let busy_by_node = db.busy_procs_by_node();
             let mut info = LoadInfo {
@@ -496,8 +567,9 @@ impl Server {
         let deadline = Instant::now() + timeout;
         loop {
             // Index-only counts: this poll loop used to materialize every
-            // live job on each tick.
-            let pending = self.with_db(|db| {
+            // live job on each tick. A read guard — polling never stalls
+            // the automaton's write path.
+            let pending = self.read_db(|db| {
                 JobState::ALL
                     .iter()
                     .filter(|s| !s.is_terminal())
@@ -529,7 +601,8 @@ impl Server {
                 let mut db = i.db.into_inner().unwrap();
                 if db.is_durable() {
                     // Clean shutdown = checkpoint: compact the WAL into a
-                    // snapshot generation so the next boot replays nothing.
+                    // snapshot generation so the next boot replays nothing
+                    // (rotation flushes any group-commit remainder first).
                     let _ = db.checkpoint();
                 }
                 db
@@ -537,7 +610,7 @@ impl Server {
             Err(shared) => {
                 // Execution threads may still hold clones briefly: go
                 // through a snapshot instead of waiting on them.
-                let mut db = shared.db.lock().unwrap();
+                let mut db = shared.db.write().unwrap();
                 if db.is_durable() {
                     let _ = db.checkpoint();
                 }
@@ -578,6 +651,7 @@ fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Plann
                 Work::Task(Task::Monitor) => {
                     let now = inner.now();
                     let _ = monitor::monitor_round(&inner.db, &inner.launcher, now);
+                    inner.commit_wal();
                 }
                 Work::Task(Task::CheckJobs) => check_jobs(&inner),
                 Work::Event(JobEvent::Ended { job, at, ok }) => finish_job(&inner, job, at, ok),
@@ -585,10 +659,11 @@ fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Plann
                     let _ = cancel_job(&inner, job, at);
                 }
                 Work::Event(JobEvent::LaunchFailed { job, at }) => {
-                    let mut db = inner.db.lock().unwrap();
+                    let mut db = inner.db.write().unwrap();
                     let _ = db.fail_job(job, "launch failed", at);
                     db.log_event(at, "LAUNCH_FAILED", Some(job), "");
                     drop(db);
+                    inner.commit_wal();
                     inner.hub.notify(Task::Schedule);
                 }
             }
@@ -599,12 +674,17 @@ fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Plann
 
 fn run_schedule(inner: &Arc<Inner>, meta: &mut MetaScheduler) {
     let now = inner.now();
+    // Planning is pure and runs under a *read* guard: `stat`/`load`/grid
+    // probes keep answering while the round computes its placement.
     let decision = {
-        let mut db = inner.db.lock().unwrap();
-        match meta.round(&mut db, now) {
+        let db = inner.db.read().unwrap();
+        match meta.round(&db, now) {
             Ok(d) => d,
             Err(e) => {
-                db.log_event(now, "SCHEDULER_ERROR", None, &e.to_string());
+                drop(db);
+                inner.write_db(|db| {
+                    db.log_event(now, "SCHEDULER_ERROR", None, &e.to_string())
+                });
                 return;
             }
         }
@@ -613,9 +693,20 @@ fn run_schedule(inner: &Arc<Inner>, meta: &mut MetaScheduler) {
 }
 
 fn apply_decision(inner: &Arc<Inner>, decision: &SchedulerDecision, now: Time) {
-    let mut db = inner.db.lock().unwrap();
+    let mut db = inner.db.write().unwrap();
 
-    for id in &decision.reservations_confirmed {
+    for (id, nodes) in &decision.reservations_confirmed {
+        // The grant was planned under a read guard: re-check the job is
+        // still negotiating before pinning the slot (a concurrent delete
+        // may have raced the round).
+        let Ok(job) = db.job(*id) else { continue };
+        if job.state != JobState::Waiting || job.reservation != ReservationField::ToSchedule {
+            continue; // stale decision
+        }
+        if db.assigned_nodes(*id).is_empty() {
+            db.assign_nodes(*id, nodes, job.weight);
+        }
+        let _ = db.set_job_reservation(*id, ReservationField::Scheduled);
         // fig. 1: Waiting → toAckReservation → (user ack) → Waiting.
         let _ = db.set_job_state(*id, JobState::ToAckReservation, now);
         let _ = db.set_job_state(*id, JobState::Waiting, now);
@@ -654,6 +745,9 @@ fn apply_decision(inner: &Arc<Inner>, decision: &SchedulerDecision, now: Time) {
         }
     }
     drop(db);
+    // One batched log write covers the whole round's mutations, before
+    // any of its consequences (kills, launches, re-notify) take effect.
+    inner.commit_wal();
 
     for (_id, nodes) in &kills {
         inner.launcher.kill(nodes);
@@ -674,11 +768,12 @@ fn spawn_execution(inner: Arc<Inner>, id: JobId, nodes: Vec<NodeId>, runtime_ms:
         .spawn(move || {
             let now = inner.now();
             {
-                let mut db = inner.db.lock().unwrap();
+                let mut db = inner.db.write().unwrap();
                 if db.set_job_state(id, JobState::Launching, now).is_err() {
                     return; // cancelled before we started
                 }
             }
+            inner.commit_wal();
             let report = inner.launcher.launch(&nodes);
             let now = inner.now();
             if report.deployed.len() < nodes.len() {
@@ -687,23 +782,25 @@ fn spawn_execution(inner: Arc<Inner>, id: JobId, nodes: Vec<NodeId>, runtime_ms:
                 // scheduling round avoids them (the monitor will recover
                 // them when they answer again).
                 {
-                    let mut db = inner.db.lock().unwrap();
+                    let mut db = inner.db.write().unwrap();
                     for n in &report.failed {
                         let _ = db.set_node_state(*n, crate::types::NodeState::Suspected);
                         db.log_event(now, "NODE_SUSPECTED", Some(id), &format!("node {n}"));
                     }
                 }
+                inner.commit_wal();
                 inner.hub.push_event(JobEvent::LaunchFailed { job: id, at: now });
                 return;
             }
             {
-                let mut db = inner.db.lock().unwrap();
+                let mut db = inner.db.write().unwrap();
                 if db.set_job_state(id, JobState::Running, now).is_err() {
                     return; // killed during deployment
                 }
                 let _ = db.set_job_bpid(id, Some((id % u32::MAX as u64) as u32));
                 db.log_event(now, "RUNNING", Some(id), "");
             }
+            inner.commit_wal();
             // Simulate the command's execution on the virtual cluster.
             let scaled = Duration::from_millis(runtime_ms.max(0) as u64)
                 .mul_f64(inner.time_scale.max(0.0));
@@ -724,7 +821,7 @@ fn spawn_execution(inner: Arc<Inner>, id: JobId, nodes: Vec<NodeId>, runtime_ms:
 /// unknown ids are an error (one lock acquisition covers the existence
 /// check and the cancellation).
 fn cancel_job(inner: &Arc<Inner>, id: JobId, at: Time) -> std::result::Result<(), DbError> {
-    let mut db = inner.db.lock().unwrap();
+    let mut db = inner.db.write().unwrap();
     let job = db.job(id)?;
     if job.state.is_terminal() {
         return Ok(());
@@ -733,6 +830,7 @@ fn cancel_job(inner: &Arc<Inner>, id: JobId, at: Time) -> std::result::Result<()
     let _ = db.fail_job(id, "cancelled by user", at);
     db.log_event(at, "DELETION", Some(id), &job.user);
     drop(db);
+    inner.commit_wal();
     if !nodes.is_empty() {
         inner.launcher.kill(&nodes);
     }
@@ -741,7 +839,7 @@ fn cancel_job(inner: &Arc<Inner>, id: JobId, at: Time) -> std::result::Result<()
 }
 
 fn finish_job(inner: &Arc<Inner>, id: JobId, at: Time, ok: bool) {
-    let mut db = inner.db.lock().unwrap();
+    let mut db = inner.db.write().unwrap();
     let Ok(job) = db.job(id) else { return };
     if job.state.is_terminal() {
         return; // already failed/cancelled
@@ -755,6 +853,7 @@ fn finish_job(inner: &Arc<Inner>, id: JobId, at: Time, ok: bool) {
         db.log_event(at, "TERMINATED", Some(id), "");
     }
     drop(db);
+    inner.commit_wal();
     inner.hub.notify(Task::Schedule);
 }
 
@@ -764,20 +863,30 @@ fn finish_job(inner: &Arc<Inner>, id: JobId, at: Time, ok: bool) {
 /// execution threads (they always emit an event).
 fn check_jobs(inner: &Arc<Inner>) {
     let now = inner.now();
-    let mut db = inner.db.lock().unwrap();
-    let overdue: Vec<JobId> = db
-        .jobs_in_state(JobState::Running)
-        .into_iter()
-        .filter(|j| {
-            let started = j.start_time.unwrap_or(j.submission_time);
-            now - started > j.max_time + 60_000
-        })
-        .map(|j| j.id)
-        .collect();
-    for id in overdue {
-        let _ = db.fail_job(id, "walltime exceeded", now);
-        db.log_event(now, "WALLTIME_KILL", Some(id), "");
+    let overdue: Vec<JobId> = inner.read_db(|db| {
+        db.jobs_in_state(JobState::Running)
+            .into_iter()
+            .filter(|j| {
+                let started = j.start_time.unwrap_or(j.submission_time);
+                now - started > j.max_time + 60_000
+            })
+            .map(|j| j.id)
+            .collect()
+    });
+    if overdue.is_empty() {
+        return; // the common case never takes the write lock
     }
+    inner.write_db(|db| {
+        for id in overdue {
+            // Re-check under the write lock: the job may have terminated
+            // between the read guard and here.
+            if db.job(id).map(|j| j.state) != Ok(JobState::Running) {
+                continue;
+            }
+            let _ = db.fail_job(id, "walltime exceeded", now);
+            db.log_event(now, "WALLTIME_KILL", Some(id), "");
+        }
+    });
 }
 
 /// Simulated runtime of a job command, in milliseconds: `sleep N` runs N

@@ -1,0 +1,180 @@
+//! Snapshot-consistency stress for the reader-writer core: reader
+//! threads take consistent read guards ([`Server::read_db`]) while the
+//! central automaton schedules, launches and terminates a seeded
+//! workload. The write path applies every scheduling round under one
+//! write guard, so no snapshot may ever observe a half-applied round:
+//! the per-state counts must always partition the job table, a `Running`
+//! job must always hold its node assignment, terminal states must be
+//! absorbing, and the accounting aggregate — derived inside the same
+//! guard — must agree with the table it was derived from. Four fixed
+//! seeds vary the reader/automaton interleaving, hub_stress-style.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use oar::cluster::VirtualCluster;
+use oar::server::{Server, ServerConfig};
+use oar::types::{JobId, JobSpec, JobState};
+use oar::util::Rng;
+
+/// Everything that must hold in *any* snapshot, half-round or not.
+/// Returns `(total, terminal)` so callers can check monotonicity across
+/// successive snapshots too.
+fn assert_snapshot_coherent(db: &oar::db::Db, seed: u64) -> (usize, usize) {
+    let total = db.job_count();
+    let by_state: Vec<usize> = JobState::ALL
+        .iter()
+        .map(|s| db.count_jobs_in_state(*s))
+        .collect();
+    let sum: usize = by_state.iter().sum();
+    assert_eq!(
+        sum, total,
+        "seed {seed}: per-state counts must partition the job table ({by_state:?})"
+    );
+
+    // The scheduler assigns nodes and flips the state edge under one
+    // write guard: a Running job without an assignment would mean a
+    // reader caught the round halfway through.
+    for j in db.jobs_in_state(JobState::Running) {
+        assert!(
+            !db.assigned_nodes(j.id).is_empty(),
+            "seed {seed}: snapshot shows Running job {} with no nodes",
+            j.id
+        );
+    }
+
+    // Accounting is derived from the same snapshot, inside the same
+    // guard — it can never disagree with the table it came from.
+    let acct = db.accounting();
+    let submitted: usize = acct.by_user.values().map(|u| u.jobs_submitted).sum();
+    let terminated: usize = acct.by_user.values().map(|u| u.jobs_terminated).sum();
+    let errored: usize = acct.by_user.values().map(|u| u.jobs_error).sum();
+    assert_eq!(
+        submitted, total,
+        "seed {seed}: accounting must cover every job in the snapshot"
+    );
+    assert_eq!(
+        terminated,
+        db.count_jobs_in_state(JobState::Terminated),
+        "seed {seed}: accounting terminated-count must match the table"
+    );
+    assert_eq!(
+        errored,
+        db.count_jobs_in_state(JobState::Error),
+        "seed {seed}: accounting error-count must match the table"
+    );
+
+    let terminal: usize = JobState::ALL
+        .iter()
+        .filter(|s| s.is_terminal())
+        .map(|s| db.count_jobs_in_state(*s))
+        .sum();
+    (total, terminal)
+}
+
+fn run_seed(seed: u64) {
+    const READERS: u64 = 4;
+    const JOBS: usize = 250;
+
+    let cluster = Arc::new(VirtualCluster::xeon());
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    let server = Arc::new(Server::new(cluster, cfg));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..READERS)
+        .map(|t| {
+            let server = server.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed.wrapping_mul(0x9e37).wrapping_add(t));
+                let mut checks = 0u64;
+                let mut last_total = 0usize;
+                let mut last_terminal = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let (total, terminal) =
+                        server.read_db(|db| assert_snapshot_coherent(db, seed));
+                    // This workload never deletes: the job table only
+                    // grows, and terminal states are absorbing, so both
+                    // counts are monotone across successive snapshots.
+                    assert!(
+                        total >= last_total,
+                        "seed {seed}: job table shrank ({last_total} -> {total})"
+                    );
+                    assert!(
+                        terminal >= last_terminal,
+                        "seed {seed}: terminal set shrank ({last_terminal} -> {terminal})"
+                    );
+                    last_total = total;
+                    last_terminal = terminal;
+                    checks += 1;
+                    // Vary the interleaving: sometimes re-read back to
+                    // back, sometimes yield so the automaton gets a
+                    // whole round in between.
+                    if rng.below(3) == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                checks
+            })
+        })
+        .collect();
+
+    // The writer: a steady seeded submission stream from this thread
+    // while the readers snapshot concurrently.
+    let mut rng = Rng::new(seed);
+    let mut acked: Vec<JobId> = Vec::with_capacity(JOBS);
+    for i in 0..JOBS {
+        let spec = JobSpec::batch(
+            &format!("u{}", rng.below(5)),
+            "date",
+            1 + (i % 2) as u32,
+            60,
+        );
+        let id = server
+            .submit(&spec)
+            .expect("transport")
+            .expect("admission");
+        acked.push(id);
+        if rng.below(8) == 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    assert!(
+        server.wait_all_terminal(Duration::from_secs(60)),
+        "seed {seed}: workload must drain to terminal states"
+    );
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let checks = r.join().expect("reader thread");
+        assert!(checks > 0, "seed {seed}: reader never got a snapshot in");
+    }
+
+    // Final multiset: every acknowledged id exists exactly once and
+    // reached a terminal state — nothing lost, duplicated or stuck.
+    let mut unique = acked.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), acked.len(), "seed {seed}: duplicate job ids acked");
+    server.read_db(|db| {
+        assert_eq!(db.job_count(), acked.len(), "seed {seed}: job multiset changed size");
+        for id in &acked {
+            let job = db.job(*id).expect("acked job must exist");
+            assert!(
+                job.state.is_terminal(),
+                "seed {seed}: job {id} stuck in {:?}",
+                job.state
+            );
+        }
+        assert_snapshot_coherent(db, seed);
+    });
+}
+
+#[test]
+fn snapshot_reads_never_observe_half_applied_rounds() {
+    for seed in [1u64, 7, 42, 1337] {
+        run_seed(seed);
+    }
+}

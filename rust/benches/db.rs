@@ -152,6 +152,9 @@ fn main() {
         results.extend(scanned);
     }
 
+    println!("\n== materialized views vs recompute (load/occupancy ablation) ==");
+    let views_json = bench_views(&mut results, &mut speedups);
+
     println!("\n== expression engine ==");
     let expr = Expr::parse("mem >= 512 AND cpu_mhz > 2000 AND switch = 'sw1'").unwrap();
     let row = {
@@ -176,8 +179,107 @@ fn main() {
     let wal = bench_wal();
     let group = bench_group_commit();
 
-    write_report(&results, plans, speedups);
+    write_report(&results, plans, speedups, views_json);
     write_wal_report(&wal, &group);
+}
+
+/// Materialized-view ablation: the load/occupancy questions the hot
+/// paths ask (`Server::load_info`, the meta-scheduler's depth probes,
+/// `fleet_summary`, the grid's `load` probe), answered from the
+/// incrementally-maintained views vs recomputed from the base tables on
+/// identical data. `OAR_DB_VIEW_JOBS` sizes the table — 100k by default
+/// so local runs stay quick; CI sets 1M, the acceptance scale at which
+/// the views must win by >= 10x.
+fn bench_views(results: &mut Vec<BenchResult>, speedups: &mut BTreeMap<String, f64>) -> Json {
+    let jobs: usize = std::env::var("OAR_DB_VIEW_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or(100_000);
+    println!("  building the {jobs}-job table (occupancy for the ~1% running)...");
+    let mut db = filled_db(jobs);
+    // `filled_db` leaves its Running jobs unassigned; claim nodes for
+    // them so the occupancy views and the recompute join have real work.
+    for i in (1..jobs).step_by(100) {
+        db.assign_nodes((i + 1) as u64, &[(i % 64) as u32 + 1], 2);
+    }
+    assert!(db.verify_views(), "views diverged from recompute");
+
+    db.reset_stats();
+    let pairs = [
+        (
+            bench(&format!("view/cluster_load/{jobs}"), 10, 100, || {
+                db.cluster_load()
+            }),
+            bench(&format!("recompute/cluster_load/{jobs}"), 1, 10, || {
+                db.cluster_load_recompute()
+            }),
+        ),
+        (
+            bench(&format!("view/node_occupancy/{jobs}"), 10, 100, || {
+                db.node_occupancy().len()
+            }),
+            bench(&format!("recompute/node_occupancy/{jobs}"), 1, 10, || {
+                db.busy_procs_by_node().len()
+            }),
+        ),
+        (
+            bench(&format!("view/queue_depth/{jobs}"), 10, 100, || {
+                db.queue_depth("default")
+            }),
+            bench(&format!("recompute/queue_depth/{jobs}"), 1, 10, || {
+                db.queue_depths_recompute().len()
+            }),
+        ),
+        (
+            bench(&format!("view/jobs_by_state/{jobs}"), 10, 100, || {
+                db.state_depth(JobState::Waiting)
+            }),
+            bench(&format!("recompute/jobs_by_state/{jobs}"), 1, 10, || {
+                db.jobs_by_state_recompute().len()
+            }),
+        ),
+        (
+            bench(&format!("view/fleet/{jobs}"), 10, 100, || {
+                db.fleet_view().len()
+            }),
+            bench(&format!("recompute/fleet/{jobs}"), 3, 50, || {
+                db.all_nodes().len()
+            }),
+        ),
+    ];
+    let s = db.stats();
+    println!(
+        "  plan proof: {} view hits | {} index probes | {} full scans",
+        s.view_hits, s.index_probes, s.full_scans
+    );
+
+    let mut ablation = Vec::new();
+    for (view, recompute) in pairs {
+        let ratio =
+            recompute.mean.as_nanos() as f64 / view.mean.as_nanos().max(1) as f64;
+        let name = view.name.trim_start_matches("view/").to_string();
+        println!("  {name:<44} {ratio:>8.1}x faster from the view");
+        speedups.insert(view.name.clone(), ratio);
+        ablation.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("view_mean_ns", Json::Num(view.mean.as_nanos() as f64)),
+            (
+                "recompute_mean_ns",
+                Json::Num(recompute.mean.as_nanos() as f64),
+            ),
+            ("speedup", Json::Num(ratio)),
+        ]));
+        results.push(view);
+        results.push(recompute);
+    }
+    Json::obj(vec![
+        ("jobs", Json::Num(jobs as f64)),
+        ("view_hits", Json::Num(s.view_hits as f64)),
+        ("index_probes", Json::Num(s.index_probes as f64)),
+        ("full_scans", Json::Num(s.full_scans as f64)),
+        ("ablation", Json::Arr(ablation)),
+    ])
 }
 
 /// One WAL measurement row.
@@ -438,10 +540,12 @@ fn write_report(
     results: &[BenchResult],
     plans: BTreeMap<String, Json>,
     speedups: BTreeMap<String, f64>,
+    views: Json,
 ) {
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_db.json");
     let doc = Json::obj(vec![
         ("bench", Json::Str("db".into())),
+        ("views", views),
         (
             "results",
             Json::Arr(

@@ -156,6 +156,14 @@ impl ColumnIndex {
         self.eq_ids(v).map(|s| s.len()).unwrap_or(0)
     }
 
+    /// Visit every distinct key with its row count, in key order — the
+    /// index-only `GROUP BY` walk ([`super::table::Table::group_count_indexed`]).
+    pub fn for_each_key(&self, mut f: impl FnMut(&IndexKey, usize)) {
+        for (k, ids) in &self.map {
+            f(k, ids.len());
+        }
+    }
+
     /// Number of rows inside a key range (cost estimation).
     pub fn range_count(&self, lo: &Bound<IndexKey>, hi: &Bound<IndexKey>) -> usize {
         if range_empty(lo, hi) {

@@ -27,6 +27,7 @@ mod plan;
 mod store;
 mod table;
 mod value;
+mod view;
 mod wal;
 
 pub use accounting::{Accounting, AccountingBuilder, UserUsage};
@@ -37,4 +38,5 @@ pub use plan::{PlanKind, QueryPlan};
 pub use store::{Db, DbHandle, DbError, QueryStats};
 pub use table::{ColName, Row, Table};
 pub use value::Value;
+pub use view::{ClusterLoad, Views};
 pub use wal::{AppendError, Mutation, RecoverStats, TableId, Wal, WalCommit};

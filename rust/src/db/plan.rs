@@ -31,6 +31,8 @@ pub enum PlanKind {
     IndexRange,
     /// No usable index: every row is visited.
     FullScan,
+    /// Answered from a materialized view: no base-table row is touched.
+    ViewHit,
 }
 
 impl PlanKind {
@@ -40,6 +42,7 @@ impl PlanKind {
             PlanKind::IndexIn => "index_in",
             PlanKind::IndexRange => "index_range",
             PlanKind::FullScan => "full_scan",
+            PlanKind::ViewHit => "view_hit",
         }
     }
 }

@@ -38,6 +38,7 @@ use super::expr::{Columns, Expr};
 use super::log::{EventLog, EventRecord};
 use super::plan::QueryPlan;
 use super::table::{Row, Table};
+use super::view::{ClusterLoad, Views};
 use super::value::Value;
 use super::wal::{AppendError, Mutation, RecoverStats, TableId, Wal, WalCommit};
 
@@ -89,6 +90,11 @@ pub struct QueryStats {
     pub index_probes: u64,
     /// WHERE clauses answered by visiting every row.
     pub full_scans: u64,
+    /// Statements answered from a materialized view (no base-table row
+    /// touched). Like the probe/scan telemetry, excluded from
+    /// [`QueryStats::total`]: a view-backed read still counts its one
+    /// logical `select`.
+    pub view_hits: u64,
 }
 
 impl QueryStats {
@@ -109,6 +115,7 @@ struct StatCounters {
     inserts: AtomicU64,
     updates: AtomicU64,
     deletes: AtomicU64,
+    view_hits: AtomicU64,
 }
 
 /// The whole database. Shared between modules as [`DbHandle`] — the only
@@ -127,6 +134,11 @@ pub struct Db {
     grid_tasks: Table,
     events: EventLog,
     stats: StatCounters,
+    /// Incrementally-maintained materialized views (queue depth, node
+    /// occupancy, cluster load). Derived state like the indexes: updated
+    /// by [`Db::apply`] with an O(changed) delta per mutation, never
+    /// serialized, rebuilt from the base tables on snapshot load.
+    views: Views,
     /// Durability: when present, every logical mutation is WAL-logged
     /// before it is applied (see [`super::wal`]). `None` = volatile.
     wal: Option<Wal>,
@@ -178,6 +190,7 @@ impl Db {
             grid_tasks: Table::new("grid_tasks"),
             events: EventLog::new(),
             stats: StatCounters::default(),
+            views: Views::default(),
             wal: None,
             snapshot_fail_after: None,
         };
@@ -291,9 +304,15 @@ impl Db {
     }
 
     /// Apply one logical mutation to the in-memory state. Deterministic:
-    /// recovery replays the WAL through this exact function. Returns the
-    /// assigned id for inserts, the affected-row count otherwise.
+    /// recovery replays the WAL through this exact function — which is
+    /// why the materialized views are maintained here and nowhere else:
+    /// live writes and crash-recovery replay keep them current through
+    /// the same O(changed) delta. The observer runs *before* the table
+    /// op (deletes and cell writes reverse the outgoing row's
+    /// contribution) and touches no query counter.
     fn apply(&mut self, m: &Mutation) -> u64 {
+        self.views
+            .observe(m, &self.jobs, &self.nodes, &self.assignments);
         match m {
             Mutation::Insert { table, row } => self.table_mut(*table).insert(row.clone()),
             Mutation::Delete { table, id } => self.table_mut(*table).delete(*id) as u64,
@@ -586,6 +605,7 @@ impl Db {
             deletes: self.stats.deletes.load(Ordering::Relaxed),
             index_probes: 0,
             full_scans: 0,
+            view_hits: self.stats.view_hits.load(Ordering::Relaxed),
         };
         for t in [
             &self.jobs,
@@ -609,6 +629,7 @@ impl Db {
             &self.stats.inserts,
             &self.stats.updates,
             &self.stats.deletes,
+            &self.stats.view_hits,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -743,6 +764,29 @@ impl Db {
             _ => {}
         }
         Ok(())
+    }
+
+    /// `oarhold`: suspend a job, gated to the automaton's one legal edge
+    /// into `Hold` (fig. 1: `Waiting → Hold`). Any other source state —
+    /// running, launching, terminal — is an [`DbError::IllegalTransition`];
+    /// holding a job that already holds resources would strand its node
+    /// assignment and desync the occupancy accounting.
+    pub fn hold_job(&mut self, id: JobId, now: Time) -> Result<(), DbError> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let row = self.jobs.get(id).ok_or(DbError::JobNotFound(id))?;
+        let from = row
+            .get("state")
+            .and_then(Value::as_str)
+            .and_then(JobState::parse)
+            .ok_or_else(|| DbError::Corrupt(format!("job {id} has bad state")))?;
+        if from != JobState::Waiting {
+            return Err(DbError::IllegalTransition {
+                job: id,
+                from,
+                to: JobState::Hold,
+            });
+        }
+        self.set_job_state(id, JobState::Hold, now)
     }
 
     /// One logged cell write into the jobs table.
@@ -946,9 +990,12 @@ impl Db {
         out
     }
 
-    /// Busy processors per node, derived from assignments of live jobs.
-    /// The join runs index-to-index: live job ids come off the jobs state
-    /// index, their assignment rows off the assignments jobId index.
+    /// Busy processors per node, recomputed from the base tables. The
+    /// join runs index-to-index through [`Table::join_eq_ids`]: live job
+    /// ids come off the jobs state index, their assignment rows off the
+    /// assignments jobId index. This is the from-scratch baseline the
+    /// `node_busy` materialized view replaces on the hot paths (and the
+    /// ablation benchmark measures it against the view).
     pub fn busy_procs_by_node(&self) -> BTreeMap<NodeId, u32> {
         self.stats.selects.fetch_add(2, Ordering::Relaxed); // join over jobs + assignments
         let mut busy = BTreeMap::new();
@@ -956,18 +1003,155 @@ impl Db {
             let key = Value::Text(state.as_str().to_string());
             let mut live: Vec<JobId> = Vec::new();
             self.jobs.for_each_eq("state", &key, |id, _| live.push(id));
-            for jid in live {
-                self.assignments
-                    .for_each_eq("jobId", &Value::Int(jid as i64), |_, r| {
-                        let nid =
-                            r.get("nodeId").and_then(Value::as_i64).unwrap_or(-1) as NodeId;
-                        let procs =
-                            r.get("procs").and_then(Value::as_i64).unwrap_or(0) as u32;
-                        *busy.entry(nid).or_insert(0) += procs;
-                    });
-            }
+            self.assignments.join_eq_ids(&live, "jobId", |_, r| {
+                let nid = r.get("nodeId").and_then(Value::as_i64).unwrap_or(-1) as NodeId;
+                let procs = r.get("procs").and_then(Value::as_i64).unwrap_or(0) as u32;
+                *busy.entry(nid).or_insert(0) += procs;
+            });
         }
         busy
+    }
+
+    // --------------------------------------------- materialized views ----
+
+    /// `Waiting` jobs in `queue`, answered from the `queue_depth` view:
+    /// O(log queues) whatever the jobs table holds. Counts one logical
+    /// select and one view hit.
+    pub fn queue_depth(&self, queue: &str) -> u64 {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.stats.view_hits.fetch_add(1, Ordering::Relaxed);
+        self.views.queue_depth(queue)
+    }
+
+    /// Jobs currently in `state`, answered from the `jobs_by_state` view
+    /// in O(1). Counts one logical select and one view hit.
+    pub fn state_depth(&self, state: JobState) -> u64 {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.stats.view_hits.fetch_add(1, Ordering::Relaxed);
+        self.views.state_count(state)
+    }
+
+    /// The cluster-load scalars (node/processor totals, alive capacity,
+    /// busy processors), answered from the views in O(1). `procs_busy`
+    /// counts every processor claimed by a resource-holding job, dead
+    /// node or not — see [`Views`] for the coherence argument.
+    pub fn cluster_load(&self) -> ClusterLoad {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.stats.view_hits.fetch_add(1, Ordering::Relaxed);
+        self.views.cluster_load()
+    }
+
+    /// Busy processors per node, answered from the `node_busy` view —
+    /// the O(changed) replacement for [`Db::busy_procs_by_node`].
+    pub fn node_occupancy(&self) -> BTreeMap<NodeId, u32> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.stats.view_hits.fetch_add(1, Ordering::Relaxed);
+        self.views.node_busy().clone()
+    }
+
+    /// The fleet summary — `(hostname, state, nbProcs)` per valid node
+    /// row, in row order — answered from the `fleet` view without
+    /// decoding a single node row.
+    pub fn fleet_view(&self) -> Vec<(String, String, u32)> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.stats.view_hits.fetch_add(1, Ordering::Relaxed);
+        self.views
+            .fleet_rows()
+            .map(|(h, s, p)| (h.to_string(), s.as_str().to_string(), p))
+            .collect()
+    }
+
+    /// From-scratch [`ClusterLoad`] off the base tables — the recompute
+    /// baseline for the view ablation (full node scan + the occupancy
+    /// join), counted like the reads it is made of.
+    pub fn cluster_load_recompute(&self) -> ClusterLoad {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let mut load = ClusterLoad::default();
+        self.nodes.for_each_all(|_, row| {
+            if row.get("nodeId").and_then(Value::as_i64).is_none() {
+                return;
+            }
+            let Some(state) = row
+                .get("state")
+                .and_then(Value::as_str)
+                .and_then(NodeState::parse)
+            else {
+                return;
+            };
+            let procs = row.get("nbProcs").and_then(Value::as_i64).unwrap_or(1) as u32;
+            load.nodes_total += 1;
+            load.procs_total += procs;
+            if state == NodeState::Alive {
+                load.nodes_alive += 1;
+                load.procs_alive += procs;
+            }
+        });
+        load.procs_busy = self.busy_procs_by_node().values().sum();
+        load
+    }
+
+    /// `SELECT queueName, COUNT(*) FROM jobs WHERE state = 'Waiting'
+    /// GROUP BY queueName` — the group-by aggregate the `queue_depth`
+    /// view caches, recomputed from the base table. Keys are the bare
+    /// queue names (the `'...'` of [`Table::group_count`]'s stringified
+    /// text keys stripped), so entries compare directly against
+    /// [`Db::queue_depth`]. The ablation benchmark runs it against the
+    /// view.
+    pub fn queue_depths_recompute(&self) -> BTreeMap<String, u64> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let waiting = Expr::parse("state = 'Waiting'").expect("static filter");
+        self.jobs
+            .group_count(&waiting, "queueName")
+            .into_iter()
+            .map(|(k, n)| (k.trim_matches('\'').to_string(), n as u64))
+            .collect()
+    }
+
+    /// `SELECT state, COUNT(*) FROM jobs GROUP BY state` — answered
+    /// index-only off the `state` index when it exists (one probe, no row
+    /// touched), falling back to a grouped scan. Keys are bare state
+    /// names; rows with non-text states are skipped on the indexed path
+    /// exactly as they fail to parse everywhere else. The recompute
+    /// baseline for the `jobs_by_state` view.
+    pub fn jobs_by_state_recompute(&self) -> BTreeMap<String, u64> {
+        use super::index::IndexKey;
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        if let Some(groups) = self.jobs.group_count_indexed("state") {
+            return groups
+                .into_iter()
+                .filter_map(|(k, n)| match k {
+                    IndexKey::Text(s) => Some((s, n as u64)),
+                    IndexKey::Num(_) => None, // states are text columns
+                })
+                .collect();
+        }
+        let all = Expr::parse("id >= 0").expect("static filter");
+        self.jobs
+            .group_count(&all, "state")
+            .into_iter()
+            .map(|(k, n)| (k.trim_matches('\'').to_string(), n as u64))
+            .collect()
+    }
+
+    /// `EXPLAIN` for a view-backed read: the plan is a [`PlanKind::ViewHit`]
+    /// with the view's entry count; `None` for an unknown view name.
+    /// Registered views: `jobs_by_state`, `queue_depth`, `node_busy`,
+    /// `cluster_load`, `fleet`.
+    pub fn explain_view(&self, view: &str) -> Option<QueryPlan> {
+        use super::plan::PlanKind;
+        let entries = self.views.entries(view)?;
+        Some(QueryPlan {
+            kind: PlanKind::ViewHit,
+            column: Some(view.to_string()),
+            estimated_rows: entries,
+        })
+    }
+
+    /// Invariant oracle: do the incrementally-maintained views equal a
+    /// from-scratch recomputation off the base tables? Touches no query
+    /// counter (like [`Db::verify_indexes`]).
+    pub fn verify_views(&self) -> bool {
+        self.views == Views::recompute(&self.jobs, &self.nodes, &self.assignments)
     }
 
     // -------------------------------------------------------- queues ----
@@ -1578,10 +1762,15 @@ impl Db {
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
             )?,
             stats: StatCounters::default(),
+            views: Views::default(),
             wal: None,
             snapshot_fail_after: None,
         };
         db.create_standard_indexes();
+        // Views are derived state, never serialized: rebuild them from
+        // the loaded base tables, exactly like the indexes above. WAL
+        // replay then maintains them through `apply`.
+        db.views = Views::recompute(&db.jobs, &db.nodes, &db.assignments);
         Ok(db)
     }
 
@@ -2020,6 +2209,181 @@ mod tests {
         let plan = db.explain("jobs", &e).unwrap();
         assert_eq!(plan.kind, crate::db::PlanKind::FullScan);
         assert!(db.explain("no_such_table", &e).is_none());
+    }
+
+    /// Drive a fresh job into `target` through legal edges only.
+    fn job_in_state(db: &mut Db, target: JobState) -> JobId {
+        use JobState::*;
+        let id = db.insert_job(make_job(&JobSpec::default(), 0));
+        let chain: &[JobState] = match target {
+            Waiting => &[],
+            Hold => &[Hold],
+            ToLaunch => &[ToLaunch],
+            Launching => &[ToLaunch, Launching],
+            Running => &[ToLaunch, Launching, Running],
+            Terminated => &[ToLaunch, Launching, Running, Terminated],
+            ToError => &[ToError],
+            Error => &[ToError, Error],
+            ToAckReservation => &[ToAckReservation],
+        };
+        for (i, s) in chain.iter().enumerate() {
+            db.set_job_state(id, *s, i as Time).unwrap();
+        }
+        id
+    }
+
+    #[test]
+    fn hold_gate_rejects_every_illegal_source_state() {
+        // fig. 1 admits exactly one edge into Hold: Waiting -> Hold.
+        let mut db = Db::with_standard_queues();
+        for &target in JobState::ALL.iter() {
+            let id = job_in_state(&mut db, target);
+            let res = db.hold_job(id, 100);
+            if target == JobState::Waiting {
+                res.unwrap();
+                assert_eq!(db.job(id).unwrap().state, JobState::Hold);
+            } else {
+                let err = res.unwrap_err();
+                match err {
+                    DbError::IllegalTransition { job, from, to } => {
+                        assert_eq!(job, id);
+                        assert_eq!(from, target);
+                        assert_eq!(to, JobState::Hold);
+                    }
+                    other => panic!("expected IllegalTransition, got {other}"),
+                }
+                // The gate must not have moved the job.
+                assert_eq!(db.job(id).unwrap().state, target);
+            }
+        }
+        assert!(matches!(
+            db.hold_job(9999, 0),
+            Err(DbError::JobNotFound(9999))
+        ));
+        assert!(db.verify_views());
+    }
+
+    #[test]
+    fn views_track_lifecycle_and_match_recompute() {
+        let mut db = Db::with_standard_queues();
+        db.add_node(Node::new(1, "n1", 2));
+        db.add_node(Node::new(2, "n2", 2));
+        assert_eq!(db.cluster_load().procs_alive, 4);
+
+        let a = db.insert_job(make_job(&JobSpec::batch("u", "c", 2, 60), 0));
+        let b = db.insert_job(make_job(&JobSpec::default(), 1));
+        assert_eq!(db.queue_depth("default"), 2);
+        assert_eq!(db.state_depth(JobState::Waiting), 2);
+        assert!(db.verify_views());
+
+        db.assign_nodes(a, &[1, 2], 1);
+        // Assignments of a still-Waiting job claim nothing yet.
+        assert_eq!(db.cluster_load().procs_busy, 0);
+        db.set_job_state(a, JobState::ToLaunch, 1).unwrap();
+        assert_eq!(db.queue_depth("default"), 1);
+        assert_eq!(db.cluster_load().procs_busy, 2);
+        assert_eq!(db.node_occupancy(), db.busy_procs_by_node());
+        assert!(db.verify_views());
+
+        // A node death must NOT release the claimed processors: the view
+        // (and the load probe built on it) keeps them busy until the
+        // automaton fails or requeues the job.
+        db.set_node_state(2, NodeState::Suspected).unwrap();
+        let load = db.cluster_load();
+        assert_eq!(load.nodes_alive, 1);
+        assert_eq!(load.procs_alive, 2);
+        assert_eq!(load.procs_busy, 2);
+        assert_eq!(load, db.cluster_load_recompute());
+        assert!(db.verify_views());
+
+        // Failing the job releases its claim; removing assignments after
+        // the state flip must not double-subtract.
+        db.fail_job(a, "node died", 2).unwrap();
+        db.remove_assignments(a);
+        assert_eq!(db.cluster_load().procs_busy, 0);
+        assert!(db.node_occupancy().is_empty());
+        assert!(db.verify_views());
+
+        db.set_job_state(b, JobState::ToLaunch, 3).unwrap();
+        assert_eq!(db.queue_depth("default"), 0);
+        assert!(db.verify_views());
+    }
+
+    #[test]
+    fn view_reads_count_one_select_plus_view_hit() {
+        let mut db = Db::with_standard_queues();
+        db.add_node(Node::new(1, "n1", 2));
+        db.insert_job(make_job(&JobSpec::default(), 0));
+        db.reset_stats();
+        let _ = db.queue_depth("default");
+        let _ = db.state_depth(JobState::Waiting);
+        let _ = db.cluster_load();
+        let _ = db.fleet_view();
+        let s = db.stats();
+        assert_eq!(s.selects, 4, "each view read is one logical select");
+        assert_eq!(s.view_hits, 4);
+        assert_eq!(s.index_probes, 0, "view reads touch no base table");
+        assert_eq!(s.full_scans, 0);
+        assert_eq!(s.total(), 4, "view hits are telemetry, not statements");
+    }
+
+    #[test]
+    fn explain_reports_view_hits() {
+        let mut db = Db::with_standard_queues();
+        db.add_node(Node::new(1, "n1", 2));
+        let plan = db.explain_view("cluster_load").unwrap();
+        assert_eq!(plan.kind, crate::db::PlanKind::ViewHit);
+        assert_eq!(plan.column.as_deref(), Some("cluster_load"));
+        assert_eq!(plan.estimated_rows, 1);
+        let plan = db.explain_view("fleet").unwrap();
+        assert_eq!(plan.estimated_rows, 1);
+        assert!(db.explain_view("no_such_view").is_none());
+    }
+
+    #[test]
+    fn views_maintained_without_any_index() {
+        // Maintenance must not depend on the standard indexes existing
+        // (it falls back to raw scans, still uncounted).
+        let mut db = Db::with_standard_queues();
+        db.drop_all_indexes();
+        db.add_node(Node::new(1, "n1", 4));
+        let id = db.insert_job(make_job(&JobSpec::batch("u", "c", 1, 60), 0));
+        db.assign_nodes(id, &[1], 4);
+        db.set_job_state(id, JobState::ToLaunch, 1).unwrap();
+        assert_eq!(db.cluster_load().procs_busy, 4);
+        assert!(db.verify_views());
+        db.reset_stats();
+        let _ = db.cluster_load();
+        let s = db.stats();
+        assert_eq!((s.selects, s.view_hits, s.full_scans), (1, 1, 0));
+    }
+
+    #[test]
+    fn views_follow_update_where_and_deletes() {
+        let mut db = Db::with_standard_queues();
+        for i in 0..4 {
+            db.insert_job(make_job(&JobSpec::default(), i));
+        }
+        // Bulk cell write through the WHERE path — including a raw bulk
+        // state flip, which bypasses the automaton but must still be
+        // tracked by the views.
+        let n = db
+            .update_jobs_where("state = 'Waiting'", "message", Value::Text("swept".into()))
+            .unwrap();
+        assert_eq!(n, 4);
+        assert!(db.verify_views());
+        let n = db
+            .update_jobs_where(
+                "state = 'Waiting' AND id <= 2",
+                "state",
+                Value::Text("Hold".into()),
+            )
+            .unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(db.state_depth(JobState::Waiting), 2);
+        assert_eq!(db.state_depth(JobState::Hold), 2);
+        assert_eq!(db.queue_depth("default"), 2);
+        assert!(db.verify_views());
     }
 
     #[test]

@@ -368,6 +368,39 @@ impl Table {
         }
     }
 
+    /// Uncounted equality walk for derived-state maintenance (the
+    /// materialized views): identical match set to [`Table::for_each_eq`]
+    /// — index candidates plus a residual equality check, raw scan when
+    /// the column is unindexed — but touches no probe/scan counter, so
+    /// maintaining a view never perturbs `QueryStats`.
+    pub(crate) fn for_each_eq_raw(&self, col: &str, value: &Value, mut f: impl FnMut(u64, &Row)) {
+        let residual =
+            |row: &Row| row.get(col).map(|v| v.sql_eq(value)).unwrap_or(false);
+        if let Some(idx) = self.indexes.get(col) {
+            if let Some(ids) = idx.eq_ids(value) {
+                for id in ids {
+                    if let Some(row) = self.rows.get(id) {
+                        if residual(row) {
+                            f(*id, row);
+                        }
+                    }
+                }
+            }
+        } else {
+            for (id, row) in &self.rows {
+                if residual(row) {
+                    f(*id, row);
+                }
+            }
+        }
+    }
+
+    /// The id the next [`Table::insert`] will assign. Lets a pre-apply
+    /// observer attribute an `Insert` mutation to its future row id.
+    pub(crate) fn peek_next_id(&self) -> u64 {
+        self.next_id
+    }
+
     /// Like [`Table::for_each_eq`], but stops as soon as `f` returns
     /// `false` — capped fetches and first-counterexample checks must not
     /// pay for the whole matching set.
@@ -517,6 +550,47 @@ impl Table {
             *out.entry(key).or_insert(0) += 1;
         });
         out
+    }
+
+    /// `SELECT group_col, SUM(sum_col) ... GROUP BY group_col`: grouped
+    /// aggregate over the matching rows (rows without a numeric
+    /// `sum_col` contribute nothing; the group key is stringified like
+    /// [`Table::group_count`]'s).
+    pub fn group_sum(&self, filter: &Expr, group_col: &str, sum_col: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        self.for_each_where(filter, |_, row| {
+            if let Some(x) = row.get(sum_col).and_then(Value::as_f64) {
+                let key = row
+                    .get(group_col)
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "NULL".into());
+                *out.entry(key).or_insert(0.0) += x;
+            }
+        });
+        out
+    }
+
+    /// Index-only `GROUP BY col` count: reads the column's index b-tree
+    /// directly — no row is touched. `None` when `col` has no index
+    /// (callers fall back to [`Table::group_count`]). Counts one probe.
+    pub fn group_count_indexed(&self, col: &str) -> Option<Vec<(super::index::IndexKey, usize)>> {
+        let idx = self.indexes.get(col)?;
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::new();
+        idx.for_each_key(|key, n| out.push((key.clone(), n)));
+        Some(out)
+    }
+
+    /// Index-to-index equi-join driver: for each left-side row id, probe
+    /// *this* table's `col` for rows whose cell equals that id, visiting
+    /// each `(left_id, right_row)` pair. This is the join shape of the
+    /// occupancy query (`jobs.state` index → `assignments.jobId` index);
+    /// each probe counts like the [`Table::for_each_eq`] it rides on.
+    pub fn join_eq_ids(&self, left_ids: &[u64], col: &str, mut f: impl FnMut(u64, &Row)) {
+        for &lid in left_ids {
+            let key = Value::Int(lid as i64);
+            self.for_each_eq(col, &key, |_, row| f(lid, row));
+        }
     }
 
     // ------------------------------------------------------ snapshot ----

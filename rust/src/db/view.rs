@@ -1,0 +1,568 @@
+//! Incrementally-maintained materialized views over the hot aggregates.
+//!
+//! The paper's control loop is "queries against the database" — and the
+//! hottest queries (queue depth for the scheduler round, per-node
+//! occupancy for launching, cluster-wide load for the grid's `load`
+//! probe) are aggregates that every round used to recompute from
+//! scratch. [`Views`] holds those aggregates as first-class derived
+//! state, updated with an O(changed) delta for every [`Mutation`]
+//! *before* it is applied to the base tables (the observer runs inside
+//! `Db::apply`, the single choke point shared by live writes and WAL
+//! replay — so crash recovery rebuilds the views for free).
+//!
+//! Views are derived state, like secondary indexes: never serialized in
+//! snapshots, rebuilt by [`Views::recompute`] when a snapshot is loaded,
+//! and verifiable at any time against a from-scratch recomputation
+//! (`Db::verify_views`). Maintenance is deliberately *uncounted* by
+//! [`super::store::QueryStats`] — the §3.2.2 logical statement counts
+//! must not depend on which derived structures happen to exist. Reads
+//! that are answered from a view count one `select` plus one `view_hit`.
+//!
+//! Maintained views:
+//!
+//! * **`jobs_by_state`** — row count per [`JobState`] (queue depth /
+//!   occupancy by state, the scheduler round's skip test).
+//! * **`queue_depth`** — `Waiting` jobs per queue name (the per-queue
+//!   scheduling trigger).
+//! * **`node_busy`** — processors claimed per node by the
+//!   resource-holding states (`ToLaunch`/`Launching`/`Running`), a
+//!   jobs⋈assignments join maintained incrementally. Deliberately
+//!   independent of node liveness: a dead node's claimed processors stay
+//!   claimed until the automaton fails or requeues its jobs, which is
+//!   what makes the `load` probe coherent (`procsFree = procsAlive −
+//!   procsBusy` never counts a dead node's capacity twice).
+//! * **`fleet`** — the decoded nodes table (hostname, state, procs) plus
+//!   the cluster-load scalars (`nodes_total/alive`, `procs_total/alive`).
+
+use std::collections::BTreeMap;
+
+use crate::types::{JobId, JobState, NodeId, NodeState};
+
+use super::expr::Expr;
+use super::table::{Row, Table};
+use super::value::Value;
+use super::wal::{Mutation, TableId};
+
+/// Position of `s` in [`JobState::ALL`] — the `jobs_by_state` slot.
+fn sidx(s: JobState) -> usize {
+    JobState::ALL
+        .iter()
+        .position(|&x| x == s)
+        .expect("JobState::ALL is exhaustive")
+}
+
+/// One decoded row of the nodes table, held by the fleet view. Mirrors
+/// `node_from_row` validity exactly: a slot exists iff the row has a
+/// numeric `nodeId` and a parseable `state`; `hostname` defaults to `""`
+/// and `nbProcs` to 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct FleetSlot {
+    hostname: String,
+    state: NodeState,
+    nb_procs: u32,
+}
+
+fn slot_of(row: &Row) -> Option<FleetSlot> {
+    row.get("nodeId").and_then(Value::as_i64)?;
+    let state = row
+        .get("state")
+        .and_then(Value::as_str)
+        .and_then(NodeState::parse)?;
+    Some(FleetSlot {
+        hostname: row
+            .get("hostname")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        state,
+        nb_procs: row.get("nbProcs").and_then(Value::as_i64).unwrap_or(1) as u32,
+    })
+}
+
+/// The cluster-wide load scalars, readable in O(1). `procs_busy` counts
+/// *every* processor claimed by a resource-holding job, whether or not
+/// its node is still `Alive` — see the module docs for why.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterLoad {
+    pub nodes_total: u32,
+    pub nodes_alive: u32,
+    pub procs_total: u32,
+    pub procs_alive: u32,
+    pub procs_busy: u32,
+}
+
+/// The registered materialized views. Plain data (no interior
+/// mutability): mutated only under the database write lock, compared
+/// wholesale against [`Views::recompute`] by the invariant tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Views {
+    /// Jobs per state, indexed by position in [`JobState::ALL`]. Rows
+    /// whose `state` cell does not parse are counted nowhere.
+    jobs_by_state: [u64; 9],
+    /// `Waiting` jobs per `queueName`; entries are removed at zero so
+    /// the map equals a from-scratch recomputation structurally.
+    queue_depth: BTreeMap<String, u64>,
+    /// Processors claimed per node by resource-holding jobs' assignment
+    /// rows; entries are removed at zero.
+    node_busy: BTreeMap<NodeId, u32>,
+    /// Valid node rows keyed by row id (iteration order therefore
+    /// matches `all_nodes`).
+    fleet: BTreeMap<u64, FleetSlot>,
+    /// The O(1) scalars, maintained alongside `fleet` / `node_busy`.
+    load: ClusterLoad,
+}
+
+impl Views {
+    // ---------------------------------------------------------- reads ----
+
+    /// Jobs currently in `s` (any table size, O(1)).
+    pub fn state_count(&self, s: JobState) -> u64 {
+        self.jobs_by_state[sidx(s)]
+    }
+
+    /// `Waiting` jobs in `queue` (O(log queues)).
+    pub fn queue_depth(&self, queue: &str) -> u64 {
+        self.queue_depth.get(queue).copied().unwrap_or(0)
+    }
+
+    /// The cluster-load scalars (O(1)).
+    pub fn cluster_load(&self) -> ClusterLoad {
+        self.load
+    }
+
+    /// Processors claimed per node by resource-holding jobs.
+    pub fn node_busy(&self) -> &BTreeMap<NodeId, u32> {
+        &self.node_busy
+    }
+
+    /// The fleet in row-id order: `(hostname, state, nb_procs)` per
+    /// valid node row — the shape `monitor::fleet_summary` serves.
+    pub fn fleet_rows(&self) -> impl Iterator<Item = (&str, NodeState, u32)> {
+        self.fleet
+            .values()
+            .map(|s| (s.hostname.as_str(), s.state, s.nb_procs))
+    }
+
+    /// Entry count of the named view, for `EXPLAIN` output; `None` for
+    /// an unknown view name.
+    pub fn entries(&self, view: &str) -> Option<usize> {
+        match view {
+            "jobs_by_state" => Some(JobState::ALL.len()),
+            "queue_depth" => Some(self.queue_depth.len()),
+            "node_busy" => Some(self.node_busy.len()),
+            "cluster_load" => Some(1),
+            "fleet" => Some(self.fleet.len()),
+            _ => None,
+        }
+    }
+
+    // ---------------------------------------------------- maintenance ----
+
+    /// Apply the O(changed) delta for `m`. MUST be called with the base
+    /// tables in their **pre-apply** state (deletes and cell writes read
+    /// the outgoing row to reverse its contribution); `Db::apply` calls
+    /// this first, before touching the tables.
+    pub(crate) fn observe(
+        &mut self,
+        m: &Mutation,
+        jobs: &Table,
+        nodes: &Table,
+        assignments: &Table,
+    ) {
+        match m {
+            Mutation::Insert { table, row } => match table {
+                TableId::Jobs => self.job_inserted(jobs.peek_next_id(), row, assignments),
+                TableId::Nodes => self.node_inserted(nodes.peek_next_id(), row),
+                TableId::Assignments => self.assignment_delta(row, jobs, 1),
+                _ => {}
+            },
+            Mutation::Delete { table, id } => match table {
+                TableId::Jobs => {
+                    if let Some(row) = jobs.get(*id) {
+                        self.job_removed(*id, row, assignments);
+                    }
+                }
+                TableId::Nodes => self.node_removed(*id),
+                TableId::Assignments => {
+                    if let Some(row) = assignments.get(*id) {
+                        self.assignment_delta(row, jobs, -1);
+                    }
+                }
+                _ => {}
+            },
+            Mutation::SetCell {
+                table,
+                id,
+                col,
+                value,
+            } => self.cell_changed(*table, *id, col, value, jobs, nodes, assignments),
+            Mutation::UpdateWhere {
+                table,
+                filter,
+                col,
+                value,
+            } => {
+                // Mirror `Db::apply`: an unparseable filter applies to
+                // nothing. The match set below (raw scan + full
+                // expression) is the same one `update_where` computes
+                // through the planner, without touching any counter.
+                let Ok(expr) = Expr::parse(filter) else { return };
+                let t = match table {
+                    TableId::Jobs => jobs,
+                    TableId::Nodes => nodes,
+                    TableId::Assignments => assignments,
+                    _ => return,
+                };
+                let ids: Vec<u64> = t
+                    .iter()
+                    .filter(|(_, row)| expr.matches(row))
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in ids {
+                    self.cell_changed(*table, id, col, value, jobs, nodes, assignments);
+                }
+            }
+            Mutation::LogEvent { .. } => {}
+        }
+    }
+
+    /// Rebuild every view from the base tables (snapshot load, and the
+    /// `verify_views` oracle). Touches no query counter.
+    pub(crate) fn recompute(jobs: &Table, nodes: &Table, assignments: &Table) -> Views {
+        let mut v = Views::default();
+        for (_, row) in jobs.iter() {
+            if let Some(s) = row.get("state").and_then(Value::as_str).and_then(JobState::parse) {
+                v.jobs_by_state[sidx(s)] += 1;
+                if s == JobState::Waiting {
+                    if let Some(q) = row.get("queueName").and_then(Value::as_str) {
+                        v.queue_inc(q);
+                    }
+                }
+            }
+        }
+        for (id, row) in nodes.iter() {
+            if let Some(slot) = slot_of(row) {
+                v.slot_add(*id, slot);
+            }
+        }
+        for (_, row) in assignments.iter() {
+            v.assignment_delta(row, jobs, 1);
+        }
+        v
+    }
+
+    // ------------------------------------------------------------ jobs ----
+
+    fn job_inserted(&mut self, id: JobId, row: &Row, assignments: &Table) {
+        let Some(s) = row.get("state").and_then(Value::as_str).and_then(JobState::parse) else {
+            return;
+        };
+        self.jobs_by_state[sidx(s)] += 1;
+        if s == JobState::Waiting {
+            if let Some(q) = row.get("queueName").and_then(Value::as_str) {
+                self.queue_inc(q);
+            }
+        }
+        if s.holds_resources() {
+            // Assignment rows may already reference the id the table is
+            // about to assign (replayed out-of-order histories).
+            self.busy_walk(id, assignments, 1);
+        }
+    }
+
+    fn job_removed(&mut self, id: JobId, row: &Row, assignments: &Table) {
+        let Some(s) = row.get("state").and_then(Value::as_str).and_then(JobState::parse) else {
+            return;
+        };
+        self.jobs_by_state[sidx(s)] = self.jobs_by_state[sidx(s)].saturating_sub(1);
+        if s == JobState::Waiting {
+            if let Some(q) = row.get("queueName").and_then(Value::as_str) {
+                self.queue_dec(q);
+            }
+        }
+        if s.holds_resources() {
+            self.busy_walk(id, assignments, -1);
+        }
+    }
+
+    fn job_cell_changed(
+        &mut self,
+        id: JobId,
+        col: &str,
+        value: &Value,
+        jobs: &Table,
+        assignments: &Table,
+    ) {
+        let Some(row) = jobs.get(id) else { return };
+        match col {
+            "state" => {
+                let old = row.get("state").and_then(Value::as_str).and_then(JobState::parse);
+                let new = value.as_str().and_then(JobState::parse);
+                if old == new {
+                    return;
+                }
+                if let Some(s) = old {
+                    self.jobs_by_state[sidx(s)] = self.jobs_by_state[sidx(s)].saturating_sub(1);
+                }
+                if let Some(s) = new {
+                    self.jobs_by_state[sidx(s)] += 1;
+                }
+                let queue = row.get("queueName").and_then(Value::as_str);
+                if old == Some(JobState::Waiting) {
+                    if let Some(q) = queue {
+                        self.queue_dec(q);
+                    }
+                }
+                if new == Some(JobState::Waiting) {
+                    if let Some(q) = queue {
+                        self.queue_inc(q);
+                    }
+                }
+                let was = old.map(JobState::holds_resources).unwrap_or(false);
+                let is = new.map(JobState::holds_resources).unwrap_or(false);
+                if was != is {
+                    self.busy_walk(id, assignments, if is { 1 } else { -1 });
+                }
+            }
+            "queueName" => {
+                let state = row.get("state").and_then(Value::as_str).and_then(JobState::parse);
+                if state == Some(JobState::Waiting) {
+                    if let Some(q) = row.get("queueName").and_then(Value::as_str) {
+                        self.queue_dec(q);
+                    }
+                    if let Some(q) = value.as_str() {
+                        self.queue_inc(q);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Add (`sign > 0`) or remove the busy contribution of every
+    /// assignment row attached to job `id`. Uses the uncounted equality
+    /// walk — an index probe when `assignments.jobId` is indexed, a raw
+    /// scan otherwise — so view maintenance never perturbs `QueryStats`.
+    fn busy_walk(&mut self, id: JobId, assignments: &Table, sign: i32) {
+        let key = Value::Int(id as i64);
+        assignments.for_each_eq_raw("jobId", &key, |_, row| {
+            // Same membership rule as `recompute`: numeric jobId equality.
+            if row.get("jobId").and_then(Value::as_i64) != Some(id as i64) {
+                return;
+            }
+            let node = row.get("nodeId").and_then(Value::as_i64).unwrap_or(-1) as NodeId;
+            let procs = row.get("procs").and_then(Value::as_i64).unwrap_or(0) as u32;
+            self.busy_adjust(node, procs, sign);
+        });
+    }
+
+    // ----------------------------------------------------- assignments ----
+
+    /// Add/remove one assignment row's busy contribution: counts iff its
+    /// `jobId` resolves to a job in a resource-holding state.
+    fn assignment_delta(&mut self, row: &Row, jobs: &Table, sign: i32) {
+        let Some(jid) = row.get("jobId").and_then(Value::as_i64) else {
+            return;
+        };
+        let holding = jobs
+            .get(jid as u64)
+            .and_then(|jr| jr.get("state").and_then(Value::as_str))
+            .and_then(JobState::parse)
+            .map(JobState::holds_resources)
+            .unwrap_or(false);
+        if !holding {
+            return;
+        }
+        let node = row.get("nodeId").and_then(Value::as_i64).unwrap_or(-1) as NodeId;
+        let procs = row.get("procs").and_then(Value::as_i64).unwrap_or(0) as u32;
+        self.busy_adjust(node, procs, sign);
+    }
+
+    fn assignment_cell_changed(
+        &mut self,
+        id: u64,
+        col: &str,
+        value: &Value,
+        jobs: &Table,
+        assignments: &Table,
+    ) {
+        let Some(row) = assignments.get(id) else { return };
+        if !matches!(col, "jobId" | "nodeId" | "procs") {
+            return;
+        }
+        self.assignment_delta(row, jobs, -1);
+        let mut updated = row.clone();
+        updated.insert(col.to_string().into(), value.clone());
+        self.assignment_delta(&updated, jobs, 1);
+    }
+
+    fn busy_adjust(&mut self, node: NodeId, procs: u32, sign: i32) {
+        if sign >= 0 {
+            self.load.procs_busy = self.load.procs_busy.wrapping_add(procs);
+            let e = self.node_busy.entry(node).or_insert(0);
+            *e = e.wrapping_add(procs);
+            if *e == 0 {
+                self.node_busy.remove(&node);
+            }
+        } else {
+            self.load.procs_busy = self.load.procs_busy.wrapping_sub(procs);
+            if let Some(e) = self.node_busy.get_mut(&node) {
+                *e = e.wrapping_sub(procs);
+                if *e == 0 {
+                    self.node_busy.remove(&node);
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- nodes ----
+
+    fn node_inserted(&mut self, rowid: u64, row: &Row) {
+        if let Some(slot) = slot_of(row) {
+            self.slot_add(rowid, slot);
+        }
+    }
+
+    fn node_removed(&mut self, rowid: u64) {
+        self.slot_remove(rowid);
+    }
+
+    fn node_cell_changed(&mut self, id: u64, col: &str, value: &Value, nodes: &Table) {
+        let Some(row) = nodes.get(id) else { return };
+        if !matches!(col, "nodeId" | "state" | "hostname" | "nbProcs") {
+            return;
+        }
+        self.slot_remove(id);
+        let mut updated = row.clone();
+        updated.insert(col.to_string().into(), value.clone());
+        if let Some(slot) = slot_of(&updated) {
+            self.slot_add(id, slot);
+        }
+    }
+
+    fn slot_add(&mut self, rowid: u64, slot: FleetSlot) {
+        self.load.nodes_total += 1;
+        self.load.procs_total = self.load.procs_total.wrapping_add(slot.nb_procs);
+        if slot.state == NodeState::Alive {
+            self.load.nodes_alive += 1;
+            self.load.procs_alive = self.load.procs_alive.wrapping_add(slot.nb_procs);
+        }
+        self.fleet.insert(rowid, slot);
+    }
+
+    fn slot_remove(&mut self, rowid: u64) {
+        if let Some(slot) = self.fleet.remove(&rowid) {
+            self.load.nodes_total = self.load.nodes_total.saturating_sub(1);
+            self.load.procs_total = self.load.procs_total.wrapping_sub(slot.nb_procs);
+            if slot.state == NodeState::Alive {
+                self.load.nodes_alive = self.load.nodes_alive.saturating_sub(1);
+                self.load.procs_alive = self.load.procs_alive.wrapping_sub(slot.nb_procs);
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- queues ----
+
+    fn queue_inc(&mut self, q: &str) {
+        *self.queue_depth.entry(q.to_string()).or_insert(0) += 1;
+    }
+
+    fn queue_dec(&mut self, q: &str) {
+        if let Some(n) = self.queue_depth.get_mut(q) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.queue_depth.remove(q);
+            }
+        }
+    }
+
+    fn cell_changed(
+        &mut self,
+        table: TableId,
+        id: u64,
+        col: &str,
+        value: &Value,
+        jobs: &Table,
+        nodes: &Table,
+        assignments: &Table,
+    ) {
+        match table {
+            TableId::Jobs => self.job_cell_changed(id, col, value, jobs, assignments),
+            TableId::Nodes => self.node_cell_changed(id, col, value, nodes),
+            TableId::Assignments => self.assignment_cell_changed(id, col, value, jobs, assignments),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node_row(id: i64, host: &str, state: &str, procs: i64) -> Row {
+        let mut r = Row::new();
+        r.insert("nodeId".into(), Value::Int(id));
+        r.insert("hostname".into(), Value::Text(host.into()));
+        r.insert("state".into(), Value::Text(state.into()));
+        r.insert("nbProcs".into(), Value::Int(procs));
+        r
+    }
+
+    #[test]
+    fn slot_validity_mirrors_node_from_row() {
+        assert!(slot_of(&node_row(1, "n1", "Alive", 2)).is_some());
+        assert!(slot_of(&node_row(1, "n1", "Zombie", 2)).is_none());
+        let mut missing_id = node_row(1, "n1", "Alive", 2);
+        missing_id.remove("nodeId");
+        assert!(slot_of(&missing_id).is_none());
+        // Defaults mirror node_from_row: hostname "", nbProcs 1.
+        let mut bare = Row::new();
+        bare.insert("nodeId".into(), Value::Int(7));
+        bare.insert("state".into(), Value::Text("Absent".into()));
+        let slot = slot_of(&bare).unwrap();
+        assert_eq!(slot.hostname, "");
+        assert_eq!(slot.nb_procs, 1);
+        assert_eq!(slot.state, NodeState::Absent);
+    }
+
+    #[test]
+    fn queue_depth_entries_vanish_at_zero() {
+        let mut v = Views::default();
+        v.queue_inc("default");
+        v.queue_inc("default");
+        v.queue_dec("default");
+        assert_eq!(v.queue_depth("default"), 1);
+        v.queue_dec("default");
+        assert_eq!(v.queue_depth("default"), 0);
+        assert!(v.queue_depth.is_empty(), "zero entries must be removed");
+        // Structural equality with a fresh recompute depends on it.
+        assert_eq!(v, Views::default());
+    }
+
+    #[test]
+    fn busy_entries_vanish_at_zero() {
+        let mut v = Views::default();
+        v.busy_adjust(3, 2, 1);
+        v.busy_adjust(3, 2, -1);
+        assert!(v.node_busy.is_empty());
+        assert_eq!(v.cluster_load().procs_busy, 0);
+        assert_eq!(v, Views::default());
+    }
+
+    #[test]
+    fn fleet_scalars_track_slot_churn() {
+        let mut v = Views::default();
+        v.node_inserted(1, &node_row(1, "n1", "Alive", 2));
+        v.node_inserted(2, &node_row(2, "n2", "Suspected", 4));
+        let l = v.cluster_load();
+        assert_eq!((l.nodes_total, l.nodes_alive), (2, 1));
+        assert_eq!((l.procs_total, l.procs_alive), (6, 2));
+        v.node_removed(2);
+        let l = v.cluster_load();
+        assert_eq!((l.nodes_total, l.procs_total), (1, 2));
+        assert_eq!(
+            v.fleet_rows().map(|(h, _, _)| h.to_string()).collect::<Vec<_>>(),
+            vec!["n1"]
+        );
+    }
+}

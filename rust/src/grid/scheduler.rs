@@ -561,6 +561,12 @@ fn note_transport_failure(inner: &GridInner, cs: &mut ClusterState) -> bool {
 
 /// Free capacity usable for new best-effort tasks: free processors minus
 /// the waiting backlog (each waiting job will claim at least one proc).
+///
+/// `procs_free` comes from the cluster's `load` probe, which is answered
+/// from materialized views and counts a dead node's claimed processors
+/// as busy until the stranded jobs are failed or requeued — so a node
+/// death shrinks the budget immediately instead of inviting a dispatch
+/// wave against capacity that no longer exists.
 fn wave_budget(info: &LoadInfo) -> u32 {
     info.procs_free.saturating_sub(info.waiting_jobs)
 }

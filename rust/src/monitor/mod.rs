@@ -53,12 +53,11 @@ pub fn monitor_round(
     Ok(report)
 }
 
-/// Helper used by `oarnodes`: summarize fleet state. Read-only.
+/// Helper used by `oarnodes`: summarize fleet state. Read-only, answered
+/// from the `fleet` materialized view — same rows, same order as the old
+/// `all_nodes` decode, without touching the nodes table.
 pub fn fleet_summary(db: &Db) -> Vec<(String, String, u32)> {
-    db.all_nodes()
-        .into_iter()
-        .map(|n| (n.hostname.clone(), n.state.as_str().to_string(), n.nb_procs))
-        .collect()
+    db.fleet_view()
 }
 
 pub use std::sync::RwLock as DbLock;

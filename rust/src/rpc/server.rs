@@ -810,6 +810,18 @@ mod tests {
         );
         if let Some(ok) = resp.get("ok") {
             assert_eq!(ok.get("state").and_then(Json::as_str), Some("Hold"));
+            // Deterministic gate check: a second hold targets a job that
+            // is now Hold, not Waiting — fig. 1 has no Hold → Hold edge,
+            // so this must be the typed `illegal_state`, race-free.
+            let resp = dispatch(
+                &shared,
+                &proto::request(6, "hold", Json::obj(vec![("id", Json::Num(ids[0] as f64))])),
+            );
+            let err = resp.get("err").expect("second hold must fail");
+            assert_eq!(
+                err.get("code").and_then(Json::as_str),
+                Some(code::ILLEGAL_STATE)
+            );
             let resp = dispatch(
                 &shared,
                 &proto::request(3, "resume", Json::obj(vec![("id", Json::Num(ids[0] as f64))])),

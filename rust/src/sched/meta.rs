@@ -119,6 +119,11 @@ impl MetaScheduler {
         //    jobs are deliberately left out: they are pre-emptable, §3.3).
         let mut running_best_effort: Vec<Job> = Vec::new();
         for state in [JobState::ToLaunch, JobState::Launching, JobState::Running] {
+            // O(1) view probe before the row fetch: most rounds on a
+            // quiet cluster have nothing in most holding states.
+            if db.state_depth(state) == 0 {
+                continue;
+            }
             for job in db.jobs_in_state(state) {
                 let stop = expected_stop(&job, now);
                 if job.best_effort {
@@ -187,6 +192,11 @@ impl MetaScheduler {
                 best_effort_queues.push(queue.clone());
                 continue;
             }
+            // The queue_depth view answers the common case — an empty
+            // queue — without fetching or decoding a single job row.
+            if db.queue_depth(&queue.name) == 0 {
+                continue;
+            }
             let waiting: Vec<Job> = db
                 .waiting_jobs_in_queue(&queue.name)
                 .into_iter()
@@ -235,6 +245,9 @@ impl MetaScheduler {
 
         // 6. Best-effort queues fill whatever is idle right now.
         for queue in &best_effort_queues {
+            if db.queue_depth(&queue.name) == 0 {
+                continue;
+            }
             let waiting: Vec<Job> = db.waiting_jobs_in_queue(&queue.name);
             if waiting.is_empty() {
                 continue;

@@ -91,9 +91,14 @@ pub struct LoadInfo {
     pub procs_total: u32,
     /// Processors on `Alive` nodes (the schedulable pool).
     pub procs_alive: u32,
-    /// Processors held by jobs in resource-holding states, on alive nodes.
+    /// Processors held by jobs in resource-holding states — *whatever*
+    /// the state of the node they sit on. A dead node's claim stays
+    /// counted until the automaton fails or requeues its jobs, so
+    /// `procs_free` never resurrects capacity that a node death already
+    /// removed from `procs_alive`.
     pub procs_busy: u32,
-    /// `procs_alive - procs_busy` (saturating).
+    /// `procs_alive - procs_busy` (saturating): capacity a dispatcher
+    /// may actually aim new work at.
     pub procs_free: u32,
     /// Jobs waiting to be scheduled (`Waiting`).
     pub waiting_jobs: u32,
@@ -491,39 +496,47 @@ impl Server {
         self.read_db(|db| db.queues_by_priority())
     }
 
-    /// The `load` probe: current occupancy, computed in one pass under
-    /// one read guard so the numbers are mutually coherent.
+    /// The `load` probe: current occupancy, answered from the database's
+    /// materialized views under one read guard — O(1) whatever the table
+    /// sizes, and mutually coherent because every view is maintained by
+    /// the same write path.
+    ///
+    /// `procs_busy` counts every processor claimed by a resource-holding
+    /// job, *including jobs on nodes that have since died*: a dead node's
+    /// capacity already left `procs_alive`, so also dropping its jobs'
+    /// claim from `procs_busy` would double-count the loss — the old
+    /// alive-nodes-only sum made `procs_free` overshoot right when
+    /// `running_jobs` still counted the stranded jobs, and the grid
+    /// dispatched waves against capacity that did not exist.
     pub fn load_info(&self) -> LoadInfo {
         self.read_db(|db| {
-            let nodes = db.all_nodes();
-            let busy_by_node = db.busy_procs_by_node();
-            let mut info = LoadInfo {
-                nodes_total: nodes.len() as u32,
-                ..LoadInfo::default()
-            };
-            for n in &nodes {
-                info.procs_total += n.nb_procs;
-                if n.state == crate::types::NodeState::Alive {
-                    info.nodes_alive += 1;
-                    info.procs_alive += n.nb_procs;
-                    info.procs_busy += busy_by_node.get(&n.id).copied().unwrap_or(0);
-                }
-            }
-            info.procs_free = info.procs_alive.saturating_sub(info.procs_busy);
-            info.waiting_jobs = db.count_jobs_in_state(JobState::Waiting) as u32;
-            info.running_jobs = JobState::ALL
+            let load = db.cluster_load();
+            let running: u64 = JobState::ALL
                 .iter()
                 .filter(|s| s.holds_resources())
-                .map(|s| db.count_jobs_in_state(*s))
-                .sum::<usize>() as u32;
-            info
+                .map(|s| db.state_depth(*s))
+                .sum();
+            LoadInfo {
+                nodes_total: load.nodes_total,
+                nodes_alive: load.nodes_alive,
+                procs_total: load.procs_total,
+                procs_alive: load.procs_alive,
+                procs_busy: load.procs_busy,
+                procs_free: load.procs_alive.saturating_sub(load.procs_busy),
+                waiting_jobs: db.state_depth(JobState::Waiting) as u32,
+                running_jobs: running as u32,
+            }
         })
     }
 
     /// `oarhold` / `oarresume`.
     pub fn hold(&self, id: JobId) -> Result<()> {
         let now = self.inner.now();
-        self.with_db(|db| db.set_job_state(id, JobState::Hold, now))?;
+        // Gated inside the database to fig. 1's one edge into Hold
+        // (Waiting → Hold): holding a launching/running job would strand
+        // its assignment. Anything else surfaces as `illegal_state` over
+        // RPC, mirroring `resume`'s gate.
+        self.with_db(|db| db.hold_job(id, now))?;
         Ok(())
     }
 
@@ -1043,6 +1056,46 @@ mod tests {
         }
         assert!(server.wait_all_terminal(Duration::from_secs(30)));
         assert_eq!(server.load_info().procs_free, 4);
+    }
+
+    #[test]
+    fn load_info_stays_coherent_when_a_node_dies_mid_run() {
+        // Regression: the old probe summed procs_busy over Alive nodes
+        // only, while running_jobs counted every resource-holding job —
+        // killing a node under a running job inflated procs_free with
+        // capacity that was already claimed, and the grid dispatched
+        // waves against it.
+        let server = test_server_scaled(0.05);
+        let _job = server
+            .submit(&JobSpec::batch("a", "sleep 30", 2, 60))
+            .unwrap()
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.load_info().procs_busy != 2 {
+            assert!(Instant::now() < deadline, "job never occupied its nodes");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let victim = server.with_db(|db| db.assigned_nodes(_job))[0];
+        // Fail it for real (so the monitor keeps it Suspected) and mark
+        // the database, as a monitoring round would.
+        server.cluster().inject_failure(victim);
+        server
+            .with_db(|db| db.set_node_state(victim, crate::types::NodeState::Suspected))
+            .unwrap();
+
+        let info = server.load_info();
+        assert_eq!(info.nodes_alive, 3);
+        assert_eq!(info.procs_alive, 3);
+        // The dead node's claimed proc is still claimed.
+        assert_eq!(info.procs_busy, 2, "dead node's claim must stay counted");
+        assert_eq!(info.running_jobs, 1);
+        assert_eq!(
+            info.procs_free,
+            info.procs_alive.saturating_sub(info.procs_busy),
+            "procs_free must stay coherent with the busy count"
+        );
+        assert_eq!(info.procs_free, 1);
+        assert!(server.with_db(|db| db.verify_views()));
     }
 
     #[test]

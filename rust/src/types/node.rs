@@ -27,6 +27,16 @@ impl NodeState {
             NodeState::Absent => "Absent",
         }
     }
+
+    /// Inverse of [`NodeState::as_str`]; `None` for anything else.
+    pub fn parse(s: &str) -> Option<NodeState> {
+        match s {
+            "Alive" => Some(NodeState::Alive),
+            "Suspected" => Some(NodeState::Suspected),
+            "Absent" => Some(NodeState::Absent),
+            _ => None,
+        }
+    }
 }
 
 /// A row of the nodes table.

@@ -194,6 +194,7 @@ fn assert_recovered_matches(dir: &Path, crashed: &mut Db, ctx: &str) {
     let (mut rec, _) = Db::recover(dir).expect(ctx);
     assert_eq!(rec.dump(), mem, "{ctx}: state diverged");
     assert!(rec.verify_indexes(), "{ctx}: indexes inconsistent");
+    assert!(rec.verify_views(), "{ctx}: views diverged from recompute");
     assert_eq!(
         format!("{:?}", rec.accounting()),
         mem_accounting,

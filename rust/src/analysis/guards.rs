@@ -1,0 +1,708 @@
+//! Guard-lifetime dataflow for `oarlint`.
+//!
+//! Walks one function body (a slice of the delimiter tree) and emits a
+//! linear event stream: guard acquisitions and releases, blocking calls
+//! with the set of guards live at that point, WAL commits, and the
+//! "ack" calls (`notify` / `push_event`) and remote submissions that the
+//! R3 ordering rules reason about. The rules layer never re-walks the
+//! tree: everything it needs is in the events.
+//!
+//! ## The lifetime model
+//!
+//! - An acquisition is `<chain>.lock()` / `.read()` / `.write()` with
+//!   empty parens (argument-taking `read`/`write` are I/O, not locks),
+//!   or `lock_sane(&<chain>)`. Its **class** is the last field name in
+//!   the chain (`self.shared.active.lock()` → `active`): lock identity
+//!   is keyed by field name, which is unique per lock in this codebase.
+//! - `let g = <acquisition>.unwrap();` binds a **named guard**: it lives
+//!   until `drop(g)`, or the end of the block that declared it. The
+//!   binding is recognized only when the chain after the acquisition is
+//!   nothing but `unwrap`/`expect`/`unwrap_or_else` — in
+//!   `let n = q.lock().unwrap().len();` the guard is a temporary.
+//! - Any other acquisition is a **temporary**: it dies at the end of its
+//!   statement. A temporary in a `for`/`match` header lives through the
+//!   body (Rust keeps scrutinee temporaries alive), which is exactly the
+//!   shape of the PR 4 bug class. (`if`/`while` headers get the same
+//!   conservative treatment; the tree has no guard-in-condition sites.)
+//! - `read_db(|db| …)` / `write_db(|db| …)` / `with_db(|db| …)` are the
+//!   server's closure-scoped guard helpers: modeled as a synthetic `db`
+//!   guard covering the call's arguments, with `write_db`/`with_db`
+//!   additionally committing at region end (their definitions do).
+//! - Condvar waits (`.wait(g)` / `.wait_timeout(g, d)` / `wait_sane(cv,
+//!   g, d)`) are a guard *transfer*, not a new acquisition: the guard
+//!   named in the arguments is exempt from the blocking check, any other
+//!   live guard is reported.
+
+use super::lexer::TokKind;
+use super::parser::Node;
+
+/// How a guard locks its data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Read,
+    Write,
+    Mutex,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Read => "read",
+            Mode::Write => "write",
+            Mode::Mutex => "mutex",
+        }
+    }
+}
+
+/// A guard as seen by the rules: lock class, mode, acquisition line.
+#[derive(Debug, Clone)]
+pub struct GuardRef {
+    pub class: String,
+    pub mode: Mode,
+    pub line: u32,
+}
+
+/// One step of the per-function event stream, in source order.
+#[derive(Debug)]
+pub enum Event {
+    /// A guard was acquired; `held` is what was already live.
+    Acquire { guard: GuardRef, held: Vec<GuardRef> },
+    /// A guard went out of scope (drop(), block end, statement end).
+    Release { class: String, mode: Mode, line: u32 },
+    /// A call from the blocking set, with the guards live across it.
+    Blocking {
+        call: String,
+        line: u32,
+        held: Vec<GuardRef>,
+    },
+    /// A WAL commit boundary (`commit_wal`, `flush_wal`, `.commit()`).
+    Commit { line: u32 },
+    /// An acknowledgement (`.notify(..)` / `.push_event(..)`).
+    Ack {
+        call: String,
+        line: u32,
+        held: Vec<GuardRef>,
+    },
+    /// A remote submission (`.sub(..)`) — R3's grid-side trigger.
+    Send { line: u32 },
+}
+
+/// Walk `body` and produce its event stream.
+pub fn analyze_fn(body: &[Node]) -> Vec<Event> {
+    let close_line = body.last().map(Node::line).unwrap_or(0);
+    let mut w = Walker {
+        live: Vec::new(),
+        events: Vec::new(),
+        stmt_temps: Vec::new(),
+        next_id: 0,
+        depth: 0,
+    };
+    w.walk_block(body, close_line);
+    w.events
+}
+
+struct LiveGuard {
+    id: u64,
+    class: String,
+    mode: Mode,
+    line: u32,
+    var: Option<String>,
+}
+
+struct TempRec {
+    id: u64,
+    promotable: bool,
+}
+
+struct Walker {
+    live: Vec<LiveGuard>,
+    events: Vec<Event>,
+    /// Guards acquired by the statement currently being scanned.
+    stmt_temps: Vec<TempRec>,
+    next_id: u64,
+    /// Paren/bracket nesting inside the current statement (0 = the
+    /// statement's own expression level; promotion requires 0).
+    depth: usize,
+}
+
+/// Names whose calls block (network, process control, disk sync, thread
+/// join). `.flush()`/`write_all` on the WAL sink are deliberately *not*
+/// here: serializing those writes is the sink lock's whole job.
+fn is_blocking(name: &str, args: &[Node]) -> bool {
+    match name {
+        "connect" | "connect_timeout" | "sleep" | "launch" | "kill" | "shutdown"
+        | "checkpoint" | "snapshot" | "flush_wal" | "accept" | "ping_all" | "sub" | "del" => true,
+        // Thread join only: `path.join("x")` takes arguments.
+        "join" => args.is_empty(),
+        _ => false,
+    }
+}
+
+fn idents_in(nodes: &[Node]) -> Vec<String> {
+    let mut out = Vec::new();
+    for n in nodes {
+        match n {
+            Node::Leaf(t) => {
+                if let TokKind::Ident(s) = &t.kind {
+                    out.push(s.clone());
+                }
+            }
+            Node::Group { children, .. } => out.extend(idents_in(children)),
+        }
+    }
+    out
+}
+
+/// The lock class of a `<chain>.lock()` acquisition: the identifier just
+/// before the final `.`.
+fn chain_class(nodes: &[Node], call_idx: usize) -> String {
+    if call_idx >= 2 {
+        if let Some(s) = nodes[call_idx - 2].ident() {
+            return s.to_string();
+        }
+    }
+    "anon".to_string()
+}
+
+/// Last identifier inside a `lock_sane(&self.shared.active)` argument.
+fn last_arg_ident(args: &[Node]) -> String {
+    idents_in(args)
+        .into_iter()
+        .next_back()
+        .unwrap_or_else(|| "anon".to_string())
+}
+
+/// After an acquisition's `()` at sibling index `after`, is the rest of
+/// the chain just unwrap-family calls followed by a statement end? That
+/// is the shape under which a `let` binds the guard itself.
+fn clean_tail(nodes: &[Node], mut after: usize) -> bool {
+    loop {
+        if nodes.get(after).map(|n| n.is_punct('.')) == Some(true) {
+            let name = nodes.get(after + 1).and_then(Node::ident);
+            let is_call = matches!(
+                nodes.get(after + 2),
+                Some(Node::Group { delim: '(', .. })
+            );
+            if is_call && matches!(name, Some("unwrap" | "expect" | "unwrap_or_else")) {
+                after += 3;
+                continue;
+            }
+            return false;
+        }
+        break;
+    }
+    match nodes.get(after) {
+        None => true,
+        Some(n) => n.is_punct(';') || n.is_punct('?') || n.ident() == Some("else"),
+    }
+}
+
+/// Identifiers that can appear in a `let` pattern without being the
+/// binding we want.
+fn pattern_filler(s: &str) -> bool {
+    matches!(s, "mut" | "ref" | "box" | "Ok" | "Err" | "Some" | "None")
+}
+
+fn first_pattern_ident(n: &Node) -> Option<String> {
+    match n {
+        Node::Leaf(t) => match &t.kind {
+            TokKind::Ident(s) if !pattern_filler(s) => Some(s.clone()),
+            _ => None,
+        },
+        Node::Group { children, .. } => children.iter().find_map(first_pattern_ident),
+    }
+}
+
+impl Walker {
+    fn held_refs(&self) -> Vec<GuardRef> {
+        self.live
+            .iter()
+            .map(|g| GuardRef {
+                class: g.class.clone(),
+                mode: g.mode,
+                line: g.line,
+            })
+            .collect()
+    }
+
+    fn acquire(&mut self, class: String, mode: Mode, line: u32) -> u64 {
+        let held = self.held_refs();
+        self.events.push(Event::Acquire {
+            guard: GuardRef {
+                class: class.clone(),
+                mode,
+                line,
+            },
+            held,
+        });
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.push(LiveGuard {
+            id,
+            class,
+            mode,
+            line,
+            var: None,
+        });
+        id
+    }
+
+    fn release_id(&mut self, id: u64, line: u32) {
+        if let Some(pos) = self.live.iter().position(|g| g.id == id) {
+            let g = self.live.remove(pos);
+            self.events.push(Event::Release {
+                class: g.class,
+                mode: g.mode,
+                line,
+            });
+        }
+    }
+
+    fn release_var(&mut self, var: &str, line: u32) {
+        if let Some(pos) = self
+            .live
+            .iter()
+            .rposition(|g| g.var.as_deref() == Some(var))
+        {
+            let id = self.live[pos].id;
+            self.release_id(id, line);
+        }
+    }
+
+    fn walk_block(&mut self, nodes: &[Node], close_line: u32) {
+        let mut owned: Vec<u64> = Vec::new();
+        let mut i = 0;
+        while i < nodes.len() {
+            i = self.statement(nodes, i, &mut owned);
+        }
+        for id in owned.iter().rev() {
+            self.release_id(*id, close_line);
+        }
+    }
+
+    /// Process one statement starting at `start`; returns the index just
+    /// past it. Handles `let`-binding promotion and temporary lifetimes.
+    fn statement(&mut self, nodes: &[Node], start: usize, owned: &mut Vec<u64>) -> usize {
+        let saved_temps = std::mem::take(&mut self.stmt_temps);
+        let saved_depth = std::mem::replace(&mut self.depth, 0);
+
+        let is_let = nodes[start].ident() == Some("let");
+        let mut i = start;
+        let mut pat_var: Option<String> = None;
+        let mut end_line = nodes[start].line();
+
+        if is_let {
+            // Pattern region: up to the `=` (or `;` for `let x;`).
+            i += 1;
+            while let Some(n) = nodes.get(i) {
+                if n.is_punct('=') {
+                    i += 1;
+                    break;
+                }
+                if n.is_punct(';') {
+                    break;
+                }
+                if pat_var.is_none() {
+                    pat_var = first_pattern_ident(n);
+                }
+                i += 1;
+            }
+        }
+
+        loop {
+            let Some(n) = nodes.get(i) else { break };
+            match n {
+                Node::Leaf(t) => {
+                    end_line = t.line;
+                    if matches!(t.kind, TokKind::Punct(';') | TokKind::Punct(',')) {
+                        i += 1;
+                        break;
+                    }
+                    i = self.leaf(nodes, i);
+                }
+                Node::Group {
+                    delim: '{',
+                    children,
+                    close_line,
+                    ..
+                } => {
+                    self.walk_block(children, *close_line);
+                    end_line = *close_line;
+                    i += 1;
+                    if !is_let {
+                        // A block ends the statement unless the grammar
+                        // continues it (`else` chains, method-on-block).
+                        match nodes.get(i) {
+                            Some(nx)
+                                if nx.ident() == Some("else")
+                                    || nx.is_punct('.')
+                                    || nx.is_punct('?') => {}
+                            _ => break,
+                        }
+                    }
+                }
+                Node::Group {
+                    children,
+                    close_line,
+                    ..
+                } => {
+                    self.depth += 1;
+                    self.scan_nodes(children);
+                    self.depth -= 1;
+                    end_line = *close_line;
+                    i += 1;
+                }
+            }
+        }
+
+        // Statement end: promote the single clean `let`-bound guard,
+        // release every other temporary (for/match header temporaries
+        // have already lived through their body above).
+        let temps = std::mem::take(&mut self.stmt_temps);
+        if is_let && temps.len() == 1 && temps[0].promotable && pat_var.is_some() {
+            if let Some(g) = self.live.iter_mut().find(|g| g.id == temps[0].id) {
+                g.var = pat_var;
+                owned.push(temps[0].id);
+            }
+        } else {
+            for t in temps.iter().rev() {
+                self.release_id(t.id, end_line);
+            }
+        }
+
+        self.stmt_temps = saved_temps;
+        self.depth = saved_depth;
+        i
+    }
+
+    /// Expression-level scan (inside paren/bracket groups): no statement
+    /// semantics, but brace groups still open scopes.
+    fn scan_nodes(&mut self, nodes: &[Node]) {
+        let mut i = 0;
+        while i < nodes.len() {
+            match &nodes[i] {
+                Node::Leaf(_) => i = self.leaf(nodes, i),
+                Node::Group {
+                    delim: '{',
+                    children,
+                    close_line,
+                    ..
+                } => {
+                    self.walk_block(children, *close_line);
+                    i += 1;
+                }
+                Node::Group { children, .. } => {
+                    self.depth += 1;
+                    self.scan_nodes(children);
+                    self.depth -= 1;
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Handle the leaf at `i` (with sibling lookaround for call shapes);
+    /// returns the next index to process.
+    fn leaf(&mut self, nodes: &[Node], i: usize) -> usize {
+        let Some(name) = nodes[i].ident().map(str::to_string) else {
+            return i + 1;
+        };
+        let line = nodes[i].line();
+        let is_method = i > 0 && nodes[i - 1].is_punct('.');
+        let (args, args_close) = match nodes.get(i + 1) {
+            Some(Node::Group {
+                delim: '(',
+                children,
+                close_line,
+                ..
+            }) => (children.as_slice(), *close_line),
+            _ => return i + 1, // not a call shape (macros have `!` between)
+        };
+
+        match name.as_str() {
+            "lock" | "read" | "write" if is_method && args.is_empty() => {
+                let mode = match name.as_str() {
+                    "read" => Mode::Read,
+                    "write" => Mode::Write,
+                    _ => Mode::Mutex,
+                };
+                let class = chain_class(nodes, i);
+                let id = self.acquire(class, mode, line);
+                self.stmt_temps.push(TempRec {
+                    id,
+                    promotable: self.depth == 0 && clean_tail(nodes, i + 2),
+                });
+                return i + 2;
+            }
+            "lock_sane" if !is_method => {
+                let class = last_arg_ident(args);
+                let id = self.acquire(class, Mode::Mutex, line);
+                self.stmt_temps.push(TempRec {
+                    id,
+                    promotable: self.depth == 0 && clean_tail(nodes, i + 2),
+                });
+                return i + 2;
+            }
+            "read_db" | "write_db" | "with_db" => {
+                let mode = if name == "read_db" {
+                    Mode::Read
+                } else {
+                    Mode::Write
+                };
+                let id = self.acquire("db".to_string(), mode, line);
+                self.depth += 1;
+                self.scan_nodes(args);
+                self.depth -= 1;
+                self.release_id(id, args_close);
+                if mode == Mode::Write {
+                    // write_db/with_db commit before returning.
+                    self.events.push(Event::Commit { line: args_close });
+                }
+                return i + 2;
+            }
+            "wait" | "wait_timeout" | "wait_sane" => {
+                // Condvar transfer: the guard passed in is exempt.
+                let arg_idents = idents_in(args);
+                let held: Vec<GuardRef> = self
+                    .live
+                    .iter()
+                    .filter(|g| match &g.var {
+                        Some(v) => !arg_idents.contains(v),
+                        None => true,
+                    })
+                    .map(|g| GuardRef {
+                        class: g.class.clone(),
+                        mode: g.mode,
+                        line: g.line,
+                    })
+                    .collect();
+                if !held.is_empty() {
+                    self.events.push(Event::Blocking {
+                        call: name,
+                        line,
+                        held,
+                    });
+                }
+                self.depth += 1;
+                self.scan_nodes(args);
+                self.depth -= 1;
+                return i + 2;
+            }
+            "drop" if !is_method => {
+                if let [only] = args {
+                    if let Some(v) = only.ident() {
+                        self.release_var(v, line);
+                        return i + 2;
+                    }
+                }
+            }
+            _ => {}
+        }
+
+        if name == "commit_wal" || name == "flush_wal" || (name == "commit" && is_method && args.is_empty()) {
+            self.events.push(Event::Commit { line });
+        }
+        if is_method && (name == "notify" || name == "push_event") {
+            self.events.push(Event::Ack {
+                call: name.clone(),
+                line,
+                held: self.held_refs(),
+            });
+        }
+        if is_method && name == "sub" {
+            self.events.push(Event::Send { line });
+        }
+        if is_blocking(&name, args) && !self.live.is_empty() {
+            self.events.push(Event::Blocking {
+                call: name.clone(),
+                line,
+                held: self.held_refs(),
+            });
+        }
+
+        self.depth += 1;
+        self.scan_nodes(args);
+        self.depth -= 1;
+        i + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{lexer::lex, parser};
+
+    fn events_of(src: &str) -> Vec<Event> {
+        let tokens = lex(src);
+        let nodes = parser::parse(&tokens);
+        let fns = parser::functions(&nodes);
+        assert_eq!(fns.len(), 1, "test source must hold exactly one fn");
+        analyze_fn(fns[0].body)
+    }
+
+    fn acquires(evs: &[Event]) -> Vec<(&str, Mode)> {
+        evs.iter()
+            .filter_map(|e| match e {
+                Event::Acquire { guard, .. } => Some((guard.class.as_str(), guard.mode)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn blocking(evs: &[Event]) -> Vec<&str> {
+        evs.iter()
+            .filter_map(|e| match e {
+                Event::Blocking { call, .. } => Some(call.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn named_guard_lives_until_drop() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                let mut db = s.db.write().unwrap();
+                db.touch();
+                drop(db);
+                std::thread::sleep(d);
+            }",
+        );
+        assert_eq!(acquires(&evs), vec![("db", Mode::Write)]);
+        assert!(blocking(&evs).is_empty(), "{evs:?}");
+    }
+
+    #[test]
+    fn temporary_dies_at_statement_end() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                s.active.lock().unwrap().push(1);
+                std::thread::sleep(d);
+            }",
+        );
+        assert!(blocking(&evs).is_empty(), "{evs:?}");
+    }
+
+    #[test]
+    fn for_header_temporary_lives_through_body() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                for (_, stream) in s.active.lock().unwrap().iter() {
+                    let _ = stream.shutdown(Shutdown::Read);
+                }
+            }",
+        );
+        assert_eq!(blocking(&evs), vec!["shutdown"]);
+    }
+
+    #[test]
+    fn blocking_under_named_guard_is_reported() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                let db = s.db.write().unwrap();
+                std::thread::sleep(d);
+                drop(db);
+            }",
+        );
+        assert_eq!(blocking(&evs), vec!["sleep"]);
+    }
+
+    #[test]
+    fn condvar_wait_exempts_its_own_guard() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                let mut q = s.queue.lock().unwrap();
+                while q.len() > 4 {
+                    q = wait_sane(&s.cv, q, d);
+                }
+                drop(q);
+            }",
+        );
+        assert!(blocking(&evs).is_empty(), "{evs:?}");
+    }
+
+    #[test]
+    fn condvar_wait_reports_other_guards() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                let db = s.db.read().unwrap();
+                let mut q = s.queue.lock().unwrap();
+                q = wait_sane(&s.cv, q, d);
+                drop(q);
+                drop(db);
+            }",
+        );
+        assert_eq!(blocking(&evs), vec!["wait_sane"]);
+    }
+
+    #[test]
+    fn helper_regions_are_synthetic_guards_with_commit() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                s.write_db(|db| db.touch());
+                s.hub.notify(Task::Schedule);
+            }",
+        );
+        // Acquire(db,W), Release, Commit, Ack — in that order.
+        assert_eq!(acquires(&evs), vec![("db", Mode::Write)]);
+        let shape: Vec<&str> = evs
+            .iter()
+            .map(|e| match e {
+                Event::Acquire { .. } => "acq",
+                Event::Release { .. } => "rel",
+                Event::Commit { .. } => "commit",
+                Event::Ack { .. } => "ack",
+                _ => "?",
+            })
+            .collect();
+        assert_eq!(shape, vec!["acq", "rel", "commit", "ack"]);
+    }
+
+    #[test]
+    fn block_scoped_guard_releases_at_brace() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                {
+                    let mut db = s.db.write().unwrap();
+                    db.touch();
+                }
+                s.launcher.kill(&nodes);
+            }",
+        );
+        assert!(blocking(&evs).is_empty(), "{evs:?}");
+    }
+
+    #[test]
+    fn nested_acquisition_reports_held_guards() {
+        let evs = events_of(
+            "fn f(s: &S) {
+                let db = s.db.write().unwrap();
+                let sink = s.sink.lock().unwrap();
+                drop(sink);
+                drop(db);
+            }",
+        );
+        let nested: Vec<(&str, &str)> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Acquire { guard, held } if !held.is_empty() => {
+                    Some((held[0].class.as_str(), guard.class.as_str()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nested, vec![("db", "sink")]);
+    }
+
+    #[test]
+    fn let_with_trailing_method_is_a_temporary() {
+        // `let n = q.lock().unwrap().len();` must NOT bind a guard to n.
+        let evs = events_of(
+            "fn f(s: &S) {
+                let n = s.queue.lock().unwrap().len();
+                std::thread::sleep(d);
+            }",
+        );
+        assert!(blocking(&evs).is_empty(), "{evs:?}");
+    }
+}

@@ -1,0 +1,378 @@
+//! Token-level lexer for `oarlint` (see [`crate::analysis`]).
+//!
+//! This is not a Rust compiler front-end: it produces exactly the token
+//! stream the lint rules need — identifiers, punctuation, literals
+//! (opaque), comments (kept, because suppressions live in them) — with a
+//! line number on every token. The hard part of lexing Rust at this
+//! level is *not* being fooled by literals: a `{` inside a string must
+//! not unbalance the block parser, `'a` must lex as a lifetime while
+//! `'a'` lexes as a char, and `r#"…"#` must swallow its body verbatim.
+//! Everything the rules do downstream assumes this layer got those
+//! right, so the corner cases are handled explicitly and unit-tested.
+//!
+//! The lexer is total: any input produces a token stream, never a panic
+//! or an error. Unknown bytes become [`TokKind::Punct`] tokens.
+
+/// One lexical token. Literal bodies are not retained (the rules never
+/// look inside them); comments are, because `// oarlint: allow(..)`
+/// suppressions are parsed out of them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `lock`, `db`, …).
+    Ident(String),
+    /// Lifetime (`'a`) — distinguished from char literals.
+    Lifetime,
+    /// Numeric literal (opaque).
+    Num,
+    /// String / raw string / byte string literal (opaque).
+    Str,
+    /// Char or byte-char literal (opaque).
+    Char,
+    /// Comment text without its `//` / `/* */` delimiters. Block
+    /// comments are kept with empty text: suppressions are line
+    /// comments by definition.
+    Comment(String),
+    /// Any single punctuation character that is not a delimiter.
+    Punct(char),
+    /// Opening delimiter: one of `(`, `[`, `{`.
+    Open(char),
+    /// Closing delimiter: one of `)`, `]`, `}`.
+    Close(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+/// Lex `src` into a token stream. Total: never fails.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer {
+        chars: src.chars().collect(),
+        pos: 0,
+        line: 1,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, line: u32) {
+        self.out.push(Token { kind, line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line);
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line);
+            } else if c == '"' {
+                self.bump();
+                self.string_body();
+                self.push(TokKind::Str, line);
+            } else if c == '\'' {
+                self.quote(line);
+            } else if c.is_ascii_digit() {
+                self.number();
+                self.push(TokKind::Num, line);
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed_literal(line);
+            } else if matches!(c, '(' | '[' | '{') {
+                self.bump();
+                self.push(TokKind::Open(c), line);
+            } else if matches!(c, ')' | ']' | '}') {
+                self.bump();
+                self.push(TokKind::Close(c), line);
+            } else {
+                self.bump();
+                self.push(TokKind::Punct(c), line);
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump(); // the two slashes
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(TokKind::Comment(text), line);
+    }
+
+    fn block_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump(); // "/*"
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+        self.push(TokKind::Comment(String::new()), line);
+    }
+
+    /// Body of a normal (escaped) string, opening quote already consumed.
+    fn string_body(&mut self) {
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => break,
+                _ => {}
+            }
+        }
+    }
+
+    /// Raw string with `hashes` leading `#`s; positioned just after the
+    /// opening quote. Consumes through the closing `"###…`.
+    fn raw_string_body(&mut self, hashes: usize) {
+        while let Some(c) = self.bump() {
+            if c == '"' {
+                let mut n = 0;
+                while n < hashes && self.peek(n) == Some('#') {
+                    n += 1;
+                }
+                if n == hashes {
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// `'` — lifetime or char literal, decided by lookahead: `'a` with no
+    /// closing quote after the identifier run is a lifetime; anything
+    /// else ( `'a'`, `'\n'`, `'('` ) is a char.
+    fn quote(&mut self, line: u32) {
+        let next = self.peek(1);
+        let is_lifetime = match next {
+            Some(c) if is_ident_start(c) => {
+                let mut k = 2;
+                while self.peek(k).map(is_ident_char) == Some(true) {
+                    k += 1;
+                }
+                self.peek(k) != Some('\'')
+            }
+            _ => false,
+        };
+        if is_lifetime {
+            self.bump(); // '
+            while self.peek(0).map(is_ident_char) == Some(true) {
+                self.bump();
+            }
+            self.push(TokKind::Lifetime, line);
+            return;
+        }
+        self.bump(); // opening '
+        loop {
+            match self.peek(0) {
+                Some('\\') => {
+                    self.bump();
+                    self.bump();
+                }
+                Some('\'') => {
+                    self.bump();
+                    break;
+                }
+                Some(_) => {
+                    self.bump();
+                }
+                None => break,
+            }
+        }
+        self.push(TokKind::Char, line);
+    }
+
+    /// Digits plus any alphanumeric suffix (`0xff`, `1_000u64`, `1e9`)
+    /// and a single fractional part. Exponent signs end up as separate
+    /// `Punct` tokens, which is harmless for the rules.
+    fn number(&mut self) {
+        while self.peek(0).map(is_ident_char) == Some(true) {
+            self.bump();
+        }
+        if self.peek(0) == Some('.') && self.peek(1).map(|c| c.is_ascii_digit()) == Some(true) {
+            self.bump();
+            while self.peek(0).map(is_ident_char) == Some(true) {
+                self.bump();
+            }
+        }
+    }
+
+    /// An identifier — unless it spells a literal prefix (`r"…"`,
+    /// `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'`), in which case the whole
+    /// literal is consumed.
+    fn ident_or_prefixed_literal(&mut self, line: u32) {
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if is_ident_char(c) {
+                name.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        match name.as_str() {
+            "r" | "br" | "rb" => {
+                let mut hashes = 0;
+                while self.peek(hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if self.peek(hashes) == Some('"') {
+                    for _ in 0..=hashes {
+                        self.bump(); // hashes + opening quote
+                    }
+                    self.raw_string_body(hashes);
+                    self.push(TokKind::Str, line);
+                    return;
+                }
+                // `r#ident` raw identifiers fall through: the `#` lexes
+                // as punctuation, the rest as a plain identifier.
+            }
+            "b" => {
+                if self.peek(0) == Some('"') {
+                    self.bump();
+                    self.string_body();
+                    self.push(TokKind::Str, line);
+                    return;
+                }
+                if self.peek(0) == Some('\'') {
+                    self.quote(line);
+                    // quote() pushed Char (a byte char is never a
+                    // lifetime); rewrite the prefix token away: nothing
+                    // to do, `b` was not pushed yet.
+                    return;
+                }
+            }
+            _ => {}
+        }
+        self.push(TokKind::Ident(name), line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn idents_and_punct() {
+        assert_eq!(
+            kinds("db.lock()"),
+            vec![
+                TokKind::Ident("db".into()),
+                TokKind::Punct('.'),
+                TokKind::Ident("lock".into()),
+                TokKind::Open('('),
+                TokKind::Close(')'),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_hide_delimiters() {
+        // Braces and quotes inside literals must not produce delimiter
+        // tokens — the block parser downstream depends on it.
+        let toks = kinds(r#"f("{", '\'', '{', "\"}")"#);
+        let opens = toks.iter().filter(|k| matches!(k, TokKind::Open('{'))).count();
+        let closes = toks.iter().filter(|k| matches!(k, TokKind::Close('}'))).count();
+        assert_eq!((opens, closes), (0, 0), "{toks:?}");
+    }
+
+    #[test]
+    fn raw_strings() {
+        let toks = kinds(r##"let s = r#"a " b { } "#; x"##);
+        assert!(toks.contains(&TokKind::Str));
+        assert!(toks.contains(&TokKind::Ident("x".into())));
+        assert!(!toks.iter().any(|k| matches!(k, TokKind::Open('{'))));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'a'; }");
+        assert_eq!(toks.iter().filter(|k| **k == TokKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|k| **k == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let toks = lex("a\n/* x /* y */ z */\nb");
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn line_comment_text_is_kept() {
+        let toks = lex("x // oarlint: allow(R5) reason\ny");
+        assert!(matches!(
+            &toks[1].kind,
+            TokKind::Comment(t) if t.contains("oarlint: allow(R5)")
+        ));
+    }
+
+    #[test]
+    fn numbers_with_suffixes() {
+        let toks = kinds("1_000u64 + 0xff + 3.25");
+        assert_eq!(toks.iter().filter(|k| **k == TokKind::Num).count(), 3);
+    }
+}

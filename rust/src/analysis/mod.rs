@@ -1,0 +1,90 @@
+//! `oarlint` — a zero-dependency invariant checker for this repository.
+//!
+//! The paper's complexity argument (Table 1) is that a batch scheduler
+//! stays maintainable when its coordination rules are few and explicit.
+//! This crate's history shows the failure mode when those rules live
+//! only in prose: PR 4 hand-fixed a remote cancel issued under the db
+//! lock, PR 6's "zero `db.lock()` call sites" claim was checked by grep,
+//! and PR 7's probe-coherence bug slipped past review. `oarlint` turns
+//! the six load-bearing invariants into machine-checked rules over the
+//! source itself (management-as-data, applied to the code base):
+//!
+//! * **R1** lock-order — the acquisition graph over lock classes
+//!   (`db`, `sink`, `active`, `queue`, …) stays acyclic, nothing is
+//!   re-acquired while held.
+//! * **R2** no guard held across a blocking call — the PR 4 bug class.
+//! * **R3** WAL-commit-before-ack at every mutation boundary, and
+//!   dispatch-intent-before-send in the grid scheduler.
+//! * **R4** the database stays `RwLock<Db>` — pins PR 6's claim.
+//! * **R5** panic-freedom in the RPC request paths.
+//! * **R6** atomics-ordering calibration — counters `Relaxed`, `SeqCst`
+//!   only on the known shutdown/drain flags.
+//!
+//! Pipeline: [`lexer`] (total, literal-safe tokens) → [`parser`]
+//! (delimiter tree, function items, suppression comments) → [`guards`]
+//! (per-function guard-lifetime event streams) → [`rules`] (the six
+//! rules + suppression accounting) → [`report`] (human / JSON
+//! rendering). Zero dependencies beyond `std`, by construction: the
+//! linter must build in the same offline environment as the scheduler.
+//! Findings are suppressed in place with `// oarlint: allow(<rule>)
+//! <reason>` — the reason is mandatory and reported, never discarded.
+//! See `docs/LINTS.md` for the full catalogue.
+
+pub mod guards;
+pub mod lexer;
+pub mod parser;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, Report, Severity, Suppressed};
+pub use rules::{Analyzer, RuleConfig};
+
+use std::path::Path;
+
+/// Lint every `.rs` file under `root`-relative `paths` (files or
+/// directories, walked recursively in sorted order). Directories named
+/// `fixtures` are skipped: the lint fixture corpus exists to *fail*.
+pub fn analyze_paths(root: &Path, paths: &[&str], cfg: RuleConfig) -> std::io::Result<Report> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    for rel in paths {
+        collect_rs(&root.join(rel), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut analyzer = Analyzer::new(cfg);
+    for file in &files {
+        let src = std::fs::read_to_string(file)?;
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        analyzer.add_file(&rel, &src);
+    }
+    Ok(analyzer.finish())
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    if path.is_file() {
+        if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    if !path.is_dir() {
+        // A configured path that does not exist is a usage error the
+        // caller should see, not a silent zero-file "clean" run.
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("lint path not found: {}", path.display()),
+        ));
+    }
+    if path.file_name().map(|n| n == "fixtures").unwrap_or(false) {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path)? {
+        collect_rs(&entry?.path(), out)?;
+    }
+    Ok(())
+}

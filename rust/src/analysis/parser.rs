@@ -1,0 +1,401 @@
+//! Delimiter-tree parser and item extraction for `oarlint`.
+//!
+//! The parser turns the flat token stream into a tree of balanced
+//! delimiter groups (`()`, `[]`, `{}`) with plain tokens as leaves, then
+//! walks that tree to find function items — each with its name, line,
+//! body, and whether it lives under `#[test]` / `#[cfg(test)]` (rules
+//! that guard *request paths* skip test code). Suppression comments
+//! (`// oarlint: allow(<rule>) <reason>`) are extracted from the raw
+//! token stream, because they need to know what else shares their line.
+//!
+//! Like the lexer, everything here is total: unbalanced input produces a
+//! best-effort tree, never a panic — the linter must survive any source
+//! file it is pointed at.
+
+use super::lexer::{TokKind, Token};
+
+/// A node of the delimiter tree.
+#[derive(Debug)]
+pub enum Node {
+    Leaf(Token),
+    Group {
+        delim: char,
+        open_line: u32,
+        close_line: u32,
+        children: Vec<Node>,
+    },
+}
+
+impl Node {
+    /// The identifier text of this node, if it is an identifier leaf.
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Node::Leaf(t) => match &t.kind {
+                TokKind::Ident(s) => Some(s.as_str()),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Is this node the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Node::Leaf(t) if t.kind == TokKind::Punct(c))
+    }
+
+    /// The source line this node starts on.
+    pub fn line(&self) -> u32 {
+        match self {
+            Node::Leaf(t) => t.line,
+            Node::Group { open_line, .. } => *open_line,
+        }
+    }
+}
+
+/// Build the delimiter tree. Comment tokens are dropped here (they are
+/// only meaningful to [`suppressions`]); stray closers are skipped and a
+/// missing closer closes its group at end-of-input.
+pub fn parse(tokens: &[Token]) -> Vec<Node> {
+    let mut pos = 0usize;
+    parse_group(tokens, &mut pos, None).0
+}
+
+fn closer_for(open: char) -> char {
+    match open {
+        '(' => ')',
+        '[' => ']',
+        _ => '}',
+    }
+}
+
+/// Parse siblings until the matching closer for `open` (or EOF). Returns
+/// the children and the line the group closed on.
+fn parse_group(tokens: &[Token], pos: &mut usize, open: Option<char>) -> (Vec<Node>, u32) {
+    let mut children = Vec::new();
+    let mut last_line = tokens.first().map(|t| t.line).unwrap_or(1);
+    while let Some(t) = tokens.get(*pos) {
+        last_line = t.line;
+        match &t.kind {
+            TokKind::Comment(_) => {
+                *pos += 1;
+            }
+            TokKind::Open(c) => {
+                let delim = *c;
+                let open_line = t.line;
+                *pos += 1;
+                let (inner, close_line) = parse_group(tokens, pos, Some(delim));
+                children.push(Node::Group {
+                    delim,
+                    open_line,
+                    close_line,
+                    children: inner,
+                });
+            }
+            TokKind::Close(c) => {
+                match open {
+                    Some(o) if closer_for(o) == *c => {
+                        *pos += 1;
+                        return (children, t.line);
+                    }
+                    Some(_) => {
+                        // Mismatched closer: treat it as closing this
+                        // group too (don't consume; the outer level will
+                        // claim it), keeping the tree as sane as possible.
+                        return (children, t.line);
+                    }
+                    None => {
+                        // Stray closer at top level: skip it.
+                        *pos += 1;
+                    }
+                }
+            }
+            _ => {
+                children.push(Node::Leaf(t.clone()));
+                *pos += 1;
+            }
+        }
+    }
+    (children, last_line)
+}
+
+/// A function item found in the tree. `body` borrows the children of its
+/// brace group.
+#[derive(Debug)]
+pub struct FnItem<'a> {
+    pub name: String,
+    pub line: u32,
+    pub in_test: bool,
+    pub body: &'a [Node],
+}
+
+/// Collect every function item, tracking test scope: a fn under
+/// `#[test]`, or anywhere inside a `#[cfg(test)] mod`, is `in_test`.
+pub fn functions(nodes: &[Node]) -> Vec<FnItem<'_>> {
+    let mut out = Vec::new();
+    collect_fns(nodes, false, &mut out);
+    out
+}
+
+fn attr_mentions_test(children: &[Node]) -> bool {
+    children.iter().any(|n| match n {
+        Node::Leaf(t) => matches!(&t.kind, TokKind::Ident(s) if s == "test"),
+        Node::Group { children, .. } => attr_mentions_test(children),
+    })
+}
+
+/// Find the body brace group of an item starting after index `from`,
+/// stopping at `;` (body-less items: trait methods, `extern` decls,
+/// `mod name;`). Returns (body-children, index just past it).
+fn find_body(nodes: &[Node], from: usize) -> (Option<&[Node]>, usize) {
+    let mut j = from;
+    while let Some(n) = nodes.get(j) {
+        match n {
+            Node::Leaf(t) if t.kind == TokKind::Punct(';') => return (None, j + 1),
+            Node::Group {
+                delim: '{',
+                children,
+                ..
+            } => return (Some(children), j + 1),
+            _ => j += 1,
+        }
+    }
+    (None, j)
+}
+
+fn collect_fns<'a>(nodes: &'a [Node], in_test: bool, out: &mut Vec<FnItem<'a>>) {
+    let mut i = 0;
+    let mut pending_test = false;
+    while i < nodes.len() {
+        match &nodes[i] {
+            Node::Leaf(t) if t.kind == TokKind::Punct('#') => {
+                // Attribute: `#` (optionally `!`) followed by a bracket
+                // group. `#![...]` inner attributes are skipped the same
+                // way.
+                let mut j = i + 1;
+                if matches!(nodes.get(j), Some(n) if n.is_punct('!')) {
+                    j += 1;
+                }
+                if let Some(Node::Group {
+                    delim: '[',
+                    children,
+                    ..
+                }) = nodes.get(j)
+                {
+                    if attr_mentions_test(children) {
+                        pending_test = true;
+                    }
+                    i = j + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Node::Leaf(t) => {
+                match &t.kind {
+                    TokKind::Ident(w) if w == "fn" => {
+                        let (name, line) = match nodes.get(i + 1).and_then(Node::ident) {
+                            Some(n) => (n.to_string(), nodes[i + 1].line()),
+                            None => ("?".to_string(), t.line),
+                        };
+                        let (body, next) = find_body(nodes, i + 2);
+                        if let Some(body) = body {
+                            out.push(FnItem {
+                                name,
+                                line,
+                                in_test: in_test || pending_test,
+                                body,
+                            });
+                        }
+                        pending_test = false;
+                        i = next;
+                    }
+                    TokKind::Ident(w) if w == "mod" => {
+                        let mod_test = in_test || pending_test;
+                        let (body, next) = find_body(nodes, i + 1);
+                        if let Some(body) = body {
+                            collect_fns(body, mod_test, out);
+                        }
+                        pending_test = false;
+                        i = next;
+                    }
+                    _ => i += 1,
+                }
+            }
+            Node::Group {
+                delim: '{',
+                children,
+                ..
+            } => {
+                // impl / trait / extern blocks (and struct bodies, where
+                // the recursion finds nothing): look inside for fns. fn
+                // bodies themselves are claimed above and never reach
+                // this arm.
+                collect_fns(children, in_test, out);
+                pending_test = false;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+}
+
+/// One `// oarlint: allow(<rule>) <reason>` comment, resolved to the
+/// line it suppresses: its own line when trailing code, otherwise the
+/// next line that carries code.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub rule: String,
+    /// Line of the comment itself.
+    pub line: u32,
+    /// Line the suppression applies to.
+    pub target_line: u32,
+    pub reason: String,
+    /// Set when the comment is recognizably an oarlint directive but
+    /// malformed (unknown rule, missing reason, bad syntax).
+    pub problem: Option<String>,
+}
+
+const KNOWN_RULES: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
+
+/// Extract suppressions from the raw token stream.
+pub fn suppressions(tokens: &[Token]) -> Vec<Suppression> {
+    let mut out: Vec<Suppression> = Vec::new();
+    let mut last_code_line = 0u32;
+    for (idx, tok) in tokens.iter().enumerate() {
+        let text = match &tok.kind {
+            TokKind::Comment(t) => t,
+            _ => {
+                last_code_line = tok.line;
+                continue;
+            }
+        };
+        let trimmed = text.trim();
+        let Some(directive) = trimmed.strip_prefix("oarlint:") else {
+            continue;
+        };
+        let trailing = last_code_line == tok.line;
+        let target_line = if trailing {
+            tok.line
+        } else {
+            // Next token that carries code (skipping further comments);
+            // a dangling directive at EOF targets its own line and will
+            // be reported unused.
+            tokens[idx + 1..]
+                .iter()
+                .find(|t| !matches!(t.kind, TokKind::Comment(_)))
+                .map(|t| t.line)
+                .unwrap_or(tok.line)
+        };
+        let mut s = Suppression {
+            rule: String::new(),
+            line: tok.line,
+            target_line,
+            reason: String::new(),
+            problem: None,
+        };
+        let directive = directive.trim();
+        match parse_allow(directive) {
+            Ok((rule, reason)) => {
+                if !KNOWN_RULES.contains(&rule.as_str()) {
+                    s.problem = Some(format!("unknown rule {rule:?} (expected R1..R6)"));
+                } else if reason.is_empty() {
+                    s.problem = Some(format!(
+                        "allow({rule}) requires a written reason after the closing paren"
+                    ));
+                }
+                s.rule = rule;
+                s.reason = reason;
+            }
+            Err(e) => s.problem = Some(e),
+        }
+        out.push(s);
+    }
+    out
+}
+
+fn parse_allow(directive: &str) -> Result<(String, String), String> {
+    let Some(rest) = directive.strip_prefix("allow(") else {
+        return Err(format!(
+            "expected `allow(<rule>) <reason>`, got {directive:?}"
+        ));
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("unterminated allow( — missing `)`".to_string());
+    };
+    let rule = rest[..close].trim().to_string();
+    let reason = rest[close + 1..].trim().to_string();
+    Ok((rule, reason))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn tree_balances_through_literals() {
+        let src = r#"fn f() { let s = "{{{"; g(s); }"#;
+        let nodes = parse(&lex(src));
+        let fns = functions(&nodes);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "f");
+    }
+
+    #[test]
+    fn finds_fns_in_impl_and_test_mods() {
+        let src = r#"
+            impl Foo {
+                pub fn alpha(&self) -> u32 { 1 }
+            }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn beta() { assert!(true); }
+            }
+            fn gamma() {}
+            extern "C" { fn socket(d: i32) -> i32; }
+        "#;
+        let nodes = parse(&lex(src));
+        let fns = functions(&nodes);
+        let names: Vec<(&str, bool)> = fns.iter().map(|f| (f.name.as_str(), f.in_test)).collect();
+        assert_eq!(
+            names,
+            vec![("alpha", false), ("beta", true), ("gamma", false)]
+        );
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn_only() {
+        let src = "#[test]\nfn a() {}\nfn b() {}";
+        let nodes = parse(&lex(src));
+        let fns = functions(&nodes);
+        assert!(fns[0].in_test);
+        assert!(!fns[1].in_test);
+    }
+
+    #[test]
+    fn suppression_trailing_and_own_line() {
+        let src = "\
+let a = x.unwrap(); // oarlint: allow(R5) trailing form
+// oarlint: allow(R2) own-line form
+let b = conn();
+";
+        let sup = suppressions(&lex(src));
+        assert_eq!(sup.len(), 2);
+        assert_eq!((sup[0].rule.as_str(), sup[0].target_line), ("R5", 1));
+        assert_eq!((sup[1].rule.as_str(), sup[1].target_line), ("R2", 3));
+        assert!(sup.iter().all(|s| s.problem.is_none()));
+    }
+
+    #[test]
+    fn suppression_malformed_variants() {
+        let src = "\
+// oarlint: allow(R9) no such rule
+// oarlint: allow(R1)
+// oarlint: deny(R1) wrong verb
+fn f() {}
+";
+        let sup = suppressions(&lex(src));
+        assert_eq!(sup.len(), 3);
+        assert!(sup.iter().all(|s| s.problem.is_some()));
+    }
+}

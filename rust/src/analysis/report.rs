@@ -1,0 +1,213 @@
+//! Diagnostics and report rendering for `oarlint`.
+//!
+//! A [`Report`] carries the surviving findings (errors fail the run,
+//! warnings do not), the findings that were silenced by `// oarlint:
+//! allow(..)` comments — kept, with their written reasons, so suppression
+//! stays visible instead of vanishing — and the scan counts. It renders
+//! either as compiler-style human text or as JSON via [`crate::util::Json`]
+//! for the CI artifact.
+
+use crate::util::Json;
+
+/// Finding severity. Only errors make the lint exit nonzero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One diagnostic: rule, severity, location, message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// "R1".."R6" for invariant rules, "lint" for meta-diagnostics
+    /// (malformed or unused suppressions).
+    pub rule: String,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// A finding that an `allow` comment silenced, with its reason.
+#[derive(Debug, Clone)]
+pub struct Suppressed {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// The result of one lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a valid `allow`, same ordering.
+    pub suppressed: Vec<Suppressed>,
+    pub files_scanned: usize,
+    pub functions_scanned: usize,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warning)
+            .count()
+    }
+
+    /// Unsuppressed findings for one rule (tests use this).
+    pub fn of_rule<'a>(&'a self, rule: &'a str) -> impl Iterator<Item = &'a Finding> {
+        self.findings.iter().filter(move |f| f.rule == rule)
+    }
+
+    /// Compiler-style human rendering.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}: [{}] {}:{}: {}\n",
+                f.severity.as_str(),
+                f.rule,
+                f.file,
+                f.line,
+                f.message
+            ));
+        }
+        if !self.suppressed.is_empty() {
+            out.push_str(&format!(
+                "{} finding(s) suppressed by oarlint: allow comments:\n",
+                self.suppressed.len()
+            ));
+            for s in &self.suppressed {
+                out.push_str(&format!(
+                    "  allowed: [{}] {}:{}: {} — {}\n",
+                    s.finding.rule, s.finding.file, s.finding.line, s.finding.message, s.reason
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "oarlint: {} file(s), {} function(s) scanned; {} error(s), {} warning(s), {} suppressed\n",
+            self.files_scanned,
+            self.functions_scanned,
+            self.errors(),
+            self.warnings(),
+            self.suppressed.len()
+        ));
+        out
+    }
+
+    /// JSON rendering for the CI artifact.
+    pub fn to_json(&self) -> Json {
+        fn finding_json(f: &Finding) -> Vec<(&'static str, Json)> {
+            vec![
+                ("rule", Json::Str(f.rule.clone())),
+                ("severity", Json::Str(f.severity.as_str().to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("message", Json::Str(f.message.clone())),
+            ]
+        }
+        Json::obj(vec![
+            ("tool", Json::Str("oarlint".to_string())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "functions_scanned",
+                Json::Num(self.functions_scanned as f64),
+            ),
+            ("errors", Json::Num(self.errors() as f64)),
+            ("warnings", Json::Num(self.warnings() as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| Json::obj(finding_json(f)))
+                        .collect(),
+                ),
+            ),
+            (
+                "suppressed",
+                Json::Arr(
+                    self.suppressed
+                        .iter()
+                        .map(|s| {
+                            let mut fields = finding_json(&s.finding);
+                            fields.push(("reason", Json::Str(s.reason.clone())));
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            findings: vec![Finding {
+                rule: "R2".to_string(),
+                severity: Severity::Error,
+                file: "rust/src/x.rs".to_string(),
+                line: 7,
+                message: "blocking call `connect` while holding `db` (write)".to_string(),
+            }],
+            suppressed: vec![Suppressed {
+                finding: Finding {
+                    rule: "R5".to_string(),
+                    severity: Severity::Error,
+                    file: "rust/src/y.rs".to_string(),
+                    line: 3,
+                    message: "`unwrap()` in a request path".to_string(),
+                },
+                reason: "startup-fatal by design".to_string(),
+            }],
+            files_scanned: 2,
+            functions_scanned: 5,
+        }
+    }
+
+    #[test]
+    fn human_rendering_has_locations_and_counts() {
+        let text = sample().render_human();
+        assert!(text.contains("error: [R2] rust/src/x.rs:7:"), "{text}");
+        assert!(text.contains("startup-fatal by design"), "{text}");
+        assert!(text.contains("1 error(s)"), "{text}");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("errors").and_then(Json::as_i64), Some(1));
+        let findings = parsed.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(Json::as_str),
+            Some("R2")
+        );
+        let sup = parsed.get("suppressed").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            sup[0].get("reason").and_then(Json::as_str),
+            Some("startup-fatal by design")
+        );
+    }
+}

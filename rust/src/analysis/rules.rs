@@ -1,0 +1,796 @@
+//! The six invariant rules of `oarlint`, evaluated over the event
+//! streams of [`super::guards`] plus two token-level scans.
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1   | lock-order: the acquisition graph over lock classes is acyclic, and no class is acquired while a guard on the same class is live |
+//! | R2   | no guard held across a blocking call (network, process control, disk sync, thread join) |
+//! | R3   | WAL-commit-before-ack: a mutation's commit precedes its `notify`/`push_event`; a grid dispatch (`.sub`) follows a db write recording the intent |
+//! | R4   | the database stays `RwLock<Db>`: no `Mutex<Db>`, no `db.lock()` (pins PR 6's concurrent-core claim) |
+//! | R5   | panic-freedom in request paths: `unwrap`/`expect`/`panic!`/slice-indexing need an annotated `allow` |
+//! | R6   | atomics stay calibrated: counters `Relaxed`, `SeqCst` only on the known shutdown/drain flags |
+//!
+//! R1/R2/R4/R6 apply everywhere they are enabled; R3 and R5 are scoped
+//! to the files whose invariants they encode (configurable, so fixtures
+//! can exercise them anywhere). R2/R3/R5 skip `#[test]` code: tests may
+//! block and panic freely — lock *ordering* (R1) still applies to them,
+//! since a deadlock in a test hangs the suite just as hard.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::guards::{self, Event, Mode};
+use super::lexer::{self, TokKind, Token};
+use super::parser::{self, Node, Suppression};
+use super::report::{Finding, Report, Severity, Suppressed};
+
+/// Which rules run, and where the scoped ones apply. Scopes are path
+/// suffixes; the empty suffix matches every file.
+#[derive(Debug, Clone)]
+pub struct RuleConfig {
+    /// `enabled[k]` switches rule `R{k+1}`.
+    pub enabled: [bool; 6],
+    /// Files whose mutations must commit before acking (R3).
+    pub commit_scope: Vec<String>,
+    /// Files whose remote dispatches need a prior intent write (R3).
+    pub intent_scope: Vec<String>,
+    /// Files whose request paths must be panic-free (R5).
+    pub panic_free_scope: Vec<String>,
+    /// Atomic flag names allowed to use `SeqCst` (R6).
+    pub seqcst_flags: Vec<String>,
+}
+
+impl RuleConfig {
+    /// The repository's real policy: every rule on, scoped to the files
+    /// that carry each invariant.
+    pub fn repo() -> Self {
+        RuleConfig {
+            enabled: [true; 6],
+            commit_scope: vec!["src/server/mod.rs".to_string()],
+            intent_scope: vec!["grid/scheduler.rs".to_string()],
+            panic_free_scope: vec!["rpc/server.rs".to_string()],
+            seqcst_flags: ["running", "draining", "stop", "REQUESTED", "shutdown"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+
+    /// Every rule, everywhere (fixture corpus).
+    pub fn everywhere() -> Self {
+        RuleConfig {
+            enabled: [true; 6],
+            commit_scope: vec![String::new()],
+            intent_scope: vec![String::new()],
+            panic_free_scope: vec![String::new()],
+            seqcst_flags: vec!["running".to_string()],
+        }
+    }
+
+    /// A single rule, everywhere (per-rule fixture tests).
+    pub fn only(rule: &str) -> Self {
+        let mut cfg = Self::everywhere();
+        cfg.enabled = [false; 6];
+        if let Some(ix) = rule_index(rule) {
+            cfg.enabled[ix] = true;
+        }
+        cfg
+    }
+}
+
+fn rule_index(rule: &str) -> Option<usize> {
+    match rule {
+        "R1" => Some(0),
+        "R2" => Some(1),
+        "R3" => Some(2),
+        "R4" => Some(3),
+        "R5" => Some(4),
+        "R6" => Some(5),
+        _ => None,
+    }
+}
+
+fn in_scope(path: &str, scope: &[String]) -> bool {
+    scope.iter().any(|s| path.ends_with(s.as_str()))
+}
+
+/// One observed "acquired `to` while holding `from`" edge, with its
+/// first witness location.
+#[derive(Debug)]
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: u32,
+}
+
+/// Feeds files in, produces a [`Report`]. Cross-file state is only the
+/// R1 acquisition graph; everything else is judged per file.
+pub struct Analyzer {
+    cfg: RuleConfig,
+    findings: Vec<Finding>,
+    suppressions: Vec<(String, Suppression)>,
+    edges: Vec<Edge>,
+    files: usize,
+    functions: usize,
+}
+
+impl Analyzer {
+    pub fn new(cfg: RuleConfig) -> Self {
+        Analyzer {
+            cfg,
+            findings: Vec::new(),
+            suppressions: Vec::new(),
+            edges: Vec::new(),
+            files: 0,
+            functions: 0,
+        }
+    }
+
+    fn on(&self, rule: &str) -> bool {
+        rule_index(rule).map(|ix| self.cfg.enabled[ix]).unwrap_or(false)
+    }
+
+    fn finding(&mut self, rule: &str, file: &str, line: u32, message: String) {
+        let severity = if rule == "lint" {
+            Severity::Warning
+        } else {
+            Severity::Error
+        };
+        self.findings.push(Finding {
+            rule: rule.to_string(),
+            severity,
+            file: file.to_string(),
+            line,
+            message,
+        });
+    }
+
+    /// Lint one source file.
+    pub fn add_file(&mut self, path: &str, src: &str) {
+        let tokens = lexer::lex(src);
+
+        for s in parser::suppressions(&tokens) {
+            match &s.problem {
+                Some(problem) => self.finding(
+                    "lint",
+                    path,
+                    s.line,
+                    format!("malformed oarlint directive: {problem}"),
+                ),
+                None => self.suppressions.push((path.to_string(), s)),
+            }
+        }
+
+        let nodes = parser::parse(&tokens);
+        let fns = parser::functions(&nodes);
+        self.files += 1;
+        self.functions += fns.len();
+
+        let r3_commit = self.on("R3") && in_scope(path, &self.cfg.commit_scope);
+        let r3_intent = self.on("R3") && in_scope(path, &self.cfg.intent_scope);
+        let r5_here = self.on("R5") && in_scope(path, &self.cfg.panic_free_scope);
+
+        for f in &fns {
+            let events = guards::analyze_fn(f.body);
+
+            if self.on("R1") {
+                self.check_lock_order(path, &f.name, &events);
+            }
+            if self.on("R2") && !f.in_test {
+                self.check_blocking(path, &f.name, &events);
+            }
+            if r3_commit && !f.in_test {
+                self.check_commit_before_ack(path, &f.name, &events);
+            }
+            if r3_intent && !f.in_test {
+                self.check_intent_before_send(path, &f.name, &events);
+            }
+            if self.on("R4") {
+                self.check_db_lock_regression(path, &events);
+            }
+            if r5_here && !f.in_test {
+                self.check_panic_freedom(path, &f.name, f.body);
+            }
+        }
+
+        if self.on("R4") {
+            self.check_mutex_db_type(path, &tokens);
+        }
+        if self.on("R6") {
+            self.check_atomics(path, &tokens);
+        }
+    }
+
+    // ------------------------------------------------------------ R1 --
+
+    fn check_lock_order(&mut self, path: &str, fn_name: &str, events: &[Event]) {
+        for ev in events {
+            let Event::Acquire { guard, held } = ev else {
+                continue;
+            };
+            for h in held {
+                if h.class == guard.class {
+                    self.finding(
+                        "R1",
+                        path,
+                        guard.line,
+                        format!(
+                            "nested acquisition of `{}` in `{}` while a {} guard on it \
+                             (line {}) is still live — self-deadlock on the mutex/write side",
+                            guard.class,
+                            fn_name,
+                            h.mode.as_str(),
+                            h.line
+                        ),
+                    );
+                } else {
+                    let exists = self
+                        .edges
+                        .iter()
+                        .any(|e| e.from == h.class && e.to == guard.class);
+                    if !exists {
+                        self.edges.push(Edge {
+                            from: h.class.clone(),
+                            to: guard.class.clone(),
+                            file: path.to_string(),
+                            line: guard.line,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ R2 --
+
+    fn check_blocking(&mut self, path: &str, fn_name: &str, events: &[Event]) {
+        for ev in events {
+            let Event::Blocking { call, line, held } = ev else {
+                continue;
+            };
+            let held_list: Vec<String> = held
+                .iter()
+                .map(|g| format!("`{}` ({}, line {})", g.class, g.mode.as_str(), g.line))
+                .collect();
+            self.finding(
+                "R2",
+                path,
+                *line,
+                format!(
+                    "blocking call `{}` in `{}` while holding {} — \
+                     every other thread on those locks stalls behind this I/O",
+                    call,
+                    fn_name,
+                    held_list.join(", ")
+                ),
+            );
+        }
+    }
+
+    // ------------------------------------------------------------ R3 --
+
+    fn check_commit_before_ack(&mut self, path: &str, fn_name: &str, events: &[Event]) {
+        let mut dirty = false;
+        let mut dirty_line = 0u32;
+        for ev in events {
+            match ev {
+                Event::Release {
+                    class,
+                    mode: Mode::Write,
+                    line,
+                } if class == "db" => {
+                    dirty = true;
+                    dirty_line = *line;
+                }
+                Event::Commit { .. } => dirty = false,
+                Event::Ack { call, line, held } => {
+                    if held
+                        .iter()
+                        .any(|g| g.class == "db" && g.mode == Mode::Write)
+                    {
+                        self.finding(
+                            "R3",
+                            path,
+                            *line,
+                            format!(
+                                "`{call}` in `{fn_name}` while the db write guard is still \
+                                 held — the WAL commit for that mutation cannot have \
+                                 happened yet"
+                            ),
+                        );
+                    } else if dirty {
+                        self.finding(
+                            "R3",
+                            path,
+                            *line,
+                            format!(
+                                "`{call}` in `{fn_name}` acknowledges a db write (guard \
+                                 released line {dirty_line}) before its WAL commit — a \
+                                 crash here acks state that was never durable"
+                            ),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn check_intent_before_send(&mut self, path: &str, fn_name: &str, events: &[Event]) {
+        let mut intent = false;
+        for ev in events {
+            match ev {
+                Event::Release {
+                    class,
+                    mode: Mode::Write,
+                    ..
+                } if class == "db" => intent = true,
+                Event::Send { line } => {
+                    if !intent {
+                        self.finding(
+                            "R3",
+                            path,
+                            *line,
+                            format!(
+                                "remote submission `.sub(..)` in `{fn_name}` without a \
+                                 prior db write recording the dispatch intent — a crash \
+                                 between send and record duplicates the task"
+                            ),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ R4 --
+
+    fn check_db_lock_regression(&mut self, path: &str, events: &[Event]) {
+        for ev in events {
+            let Event::Acquire { guard, .. } = ev else {
+                continue;
+            };
+            if guard.class == "db" && guard.mode == Mode::Mutex {
+                self.finding(
+                    "R4",
+                    path,
+                    guard.line,
+                    "`db.lock()` — the database is an RwLock since PR 6; mutex-style \
+                     access serializes every reader behind every writer again"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    fn check_mutex_db_type(&mut self, path: &str, tokens: &[Token]) {
+        for w in tokens.windows(3) {
+            let is_mutex = matches!(&w[0].kind, TokKind::Ident(s) if s == "Mutex");
+            let lt = w[1].kind == TokKind::Punct('<');
+            let is_db = matches!(&w[2].kind, TokKind::Ident(s) if s == "Db");
+            if is_mutex && lt && is_db {
+                self.finding(
+                    "R4",
+                    path,
+                    w[0].line,
+                    "`Mutex<Db>` — the database must stay `RwLock<Db>` (concurrent \
+                     snapshot reads are load-bearing for stat/monitoring paths)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ R5 --
+
+    fn check_panic_freedom(&mut self, path: &str, fn_name: &str, body: &[Node]) {
+        self.scan_panics(path, fn_name, body);
+    }
+
+    fn scan_panics(&mut self, path: &str, fn_name: &str, nodes: &[Node]) {
+        for (i, n) in nodes.iter().enumerate() {
+            match n {
+                Node::Leaf(_) => {
+                    if let Some(name) = n.ident() {
+                        let prev_dot = i > 0 && nodes[i - 1].is_punct('.');
+                        let next_call = matches!(
+                            nodes.get(i + 1),
+                            Some(Node::Group { delim: '(', .. })
+                        );
+                        if prev_dot && next_call && (name == "unwrap" || name == "expect") {
+                            self.finding(
+                                "R5",
+                                path,
+                                n.line(),
+                                format!(
+                                    "`.{name}(..)` in request path `{fn_name}` — a poisoned \
+                                     lock or unexpected None kills the worker; handle the \
+                                     error or add `// oarlint: allow(R5) <reason>`"
+                                ),
+                            );
+                        }
+                        if name == "panic"
+                            && matches!(nodes.get(i + 1), Some(nx) if nx.is_punct('!'))
+                        {
+                            self.finding(
+                                "R5",
+                                path,
+                                n.line(),
+                                format!("`panic!` in request path `{fn_name}`"),
+                            );
+                        }
+                    }
+                }
+                Node::Group {
+                    delim: '[',
+                    open_line,
+                    ..
+                } => {
+                    if i > 0 && is_index_base(&nodes[i - 1]) {
+                        self.finding(
+                            "R5",
+                            path,
+                            *open_line,
+                            format!(
+                                "slice/array indexing in request path `{fn_name}` — \
+                                 out-of-bounds panics; use .get()"
+                            ),
+                        );
+                    }
+                }
+                _ => {}
+            }
+            if let Node::Group { children, .. } = n {
+                self.scan_panics(path, fn_name, children);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ R6 --
+
+    fn check_atomics(&mut self, path: &str, tokens: &[Token]) {
+        for i in 0..tokens.len() {
+            let TokKind::Ident(name) = &tokens[i].kind else {
+                continue;
+            };
+            let rmw = matches!(
+                name.as_str(),
+                "fetch_add" | "fetch_sub" | "fetch_or" | "fetch_and" | "fetch_xor"
+            );
+            let rw = matches!(
+                name.as_str(),
+                "load" | "store" | "swap" | "compare_exchange" | "compare_exchange_weak"
+            );
+            if !rmw && !rw {
+                continue;
+            }
+            if i == 0 || tokens[i - 1].kind != TokKind::Punct('.') {
+                continue;
+            }
+            if !matches!(tokens.get(i + 1).map(|t| &t.kind), Some(TokKind::Open('('))) {
+                continue;
+            }
+            let orderings = orderings_in_args(tokens, i + 1);
+            if orderings.is_empty() {
+                continue; // not an atomic call (e.g. client.load())
+            }
+            let recv = if i >= 2 {
+                match &tokens[i - 2].kind {
+                    TokKind::Ident(r) => r.as_str(),
+                    _ => "<expr>",
+                }
+            } else {
+                "<expr>"
+            };
+            let line = tokens[i].line;
+            for ord in &orderings {
+                if rmw && ord != "Relaxed" {
+                    self.finding(
+                        "R6",
+                        path,
+                        line,
+                        format!(
+                            "`{name}` on `{recv}` uses Ordering::{ord} — plan/stat \
+                             counters are pure tallies and stay Relaxed (PR 6 calibration)"
+                        ),
+                    );
+                } else if rw && ord == "SeqCst" && !self.cfg.seqcst_flags.iter().any(|f| f == recv)
+                {
+                    self.finding(
+                        "R6",
+                        path,
+                        line,
+                        format!(
+                            "`{name}` on `{recv}` uses Ordering::SeqCst — SeqCst is \
+                             reserved for the shutdown/drain flags ({}); new atomics \
+                             justify their ordering or stay Relaxed/AcqRel",
+                            self.cfg.seqcst_flags.join(", ")
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -------------------------------------------------------- finish --
+
+    /// Close the run: R1 cycle detection over the accumulated graph,
+    /// then suppression application and accounting.
+    pub fn finish(mut self) -> Report {
+        if self.cfg.enabled[0] {
+            // Every Db mutation appends to the WAL under the sink lock —
+            // an acquisition order invisible to per-function analysis, so
+            // it is seeded as a policy edge.
+            self.edges.push(Edge {
+                from: "db".to_string(),
+                to: "sink".to_string(),
+                file: "(policy: Db mutations append under the WAL sink lock)".to_string(),
+                line: 0,
+            });
+            self.report_cycles();
+        }
+
+        let mut used = vec![false; self.suppressions.len()];
+        let mut kept: Vec<Finding> = Vec::new();
+        let mut suppressed: Vec<Suppressed> = Vec::new();
+        for f in std::mem::take(&mut self.findings) {
+            let hit = self.suppressions.iter().position(|(file, s)| {
+                *file == f.file && s.rule == f.rule && s.target_line == f.line
+            });
+            match hit {
+                Some(ix) => {
+                    used[ix] = true;
+                    let reason = self.suppressions[ix].1.reason.clone();
+                    suppressed.push(Suppressed { finding: f, reason });
+                }
+                None => kept.push(f),
+            }
+        }
+        for (ix, (file, s)) in self.suppressions.iter().enumerate() {
+            if !used[ix] {
+                kept.push(Finding {
+                    rule: "lint".to_string(),
+                    severity: Severity::Warning,
+                    file: file.clone(),
+                    line: s.line,
+                    message: format!(
+                        "unused suppression: allow({}) matches no {} finding on line {}",
+                        s.rule, s.rule, s.target_line
+                    ),
+                });
+            }
+        }
+
+        kept.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+        suppressed.sort_by(|a, b| {
+            (&a.finding.file, a.finding.line).cmp(&(&b.finding.file, b.finding.line))
+        });
+        Report {
+            findings: kept,
+            suppressed,
+            files_scanned: self.files,
+            functions_scanned: self.functions,
+        }
+    }
+
+    fn report_cycles(&mut self) {
+        let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+        for e in &self.edges {
+            adj.entry(e.from.as_str()).or_default().insert(e.to.as_str());
+        }
+        let mut seen: BTreeSet<BTreeSet<String>> = BTreeSet::new();
+        let mut found: Vec<(String, String, u32)> = Vec::new();
+        // Policy edge last, so a cycle is witnessed at real code when any
+        // observed edge participates in it.
+        for e in &self.edges {
+            let Some(path) = find_path(&adj, &e.to, &e.from) else {
+                continue;
+            };
+            // path = [e.to, ..., e.from], so prepending e.from closes
+            // the loop: from -> to -> ... -> from.
+            let mut cycle: Vec<String> = vec![e.from.clone()];
+            cycle.extend(path);
+            let signature: BTreeSet<String> = cycle.iter().cloned().collect();
+            if !seen.insert(signature) {
+                continue;
+            }
+            found.push((e.file.clone(), cycle.join(" -> "), e.line));
+        }
+        for (file, route, line) in found {
+            self.finding(
+                "R1",
+                &file,
+                line,
+                format!(
+                    "lock-order cycle: {route} — two threads taking these locks in \
+                     opposing order deadlock"
+                ),
+            );
+        }
+    }
+}
+
+/// BFS path from `start` to `goal` over the acquisition graph; returns
+/// the node list from `start` to `goal` inclusive.
+fn find_path(
+    adj: &BTreeMap<&str, BTreeSet<&str>>,
+    start: &str,
+    goal: &str,
+) -> Option<Vec<String>> {
+    let mut parent: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut queue: Vec<&str> = vec![];
+    if let Some(next) = adj.get(start) {
+        for &n in next {
+            if !parent.contains_key(n) {
+                parent.insert(n, start);
+                queue.push(n);
+            }
+        }
+    }
+    let mut head = 0;
+    let mut hit = parent.contains_key(goal);
+    while head < queue.len() && !hit {
+        let cur = queue[head];
+        head += 1;
+        if let Some(next) = adj.get(cur) {
+            for &n in next {
+                if !parent.contains_key(n) {
+                    parent.insert(n, cur);
+                    queue.push(n);
+                    if n == goal {
+                        hit = true;
+                    }
+                }
+            }
+        }
+    }
+    if !hit {
+        return None;
+    }
+    // Reconstruct goal <- ... <- start, then reverse; prepend start.
+    let mut rev = vec![goal.to_string()];
+    let mut cur = goal;
+    while let Some(&p) = parent.get(cur) {
+        if p == start {
+            break;
+        }
+        rev.push(p.to_string());
+        cur = p;
+    }
+    rev.push(start.to_string());
+    rev.reverse();
+    Some(rev)
+}
+
+/// Can the node before a `[..]` group be an indexing base? Identifiers
+/// (excluding keywords that introduce array literals/types) and closed
+/// call/index groups can; punctuation (`: [u8; 8]`, `#[..]`, `vec![..]`)
+/// cannot.
+fn is_index_base(prev: &Node) -> bool {
+    match prev {
+        Node::Group { delim, .. } => matches!(delim, '(' | '['),
+        Node::Leaf(_) => match prev.ident() {
+            Some(s) => !matches!(
+                s,
+                "mut" | "ref" | "return" | "break" | "in" | "as" | "else" | "match" | "if"
+                    | "while" | "box" | "move" | "static" | "dyn" | "impl" | "where" | "let"
+                    | "const" | "type" | "use" | "pub" | "fn" | "loop" | "for" | "unsafe"
+            ),
+            None => false,
+        },
+    }
+}
+
+/// Atomic-ordering identifiers among a call's argument tokens, scanned
+/// from the opening paren at `open_ix`.
+fn orderings_in_args(tokens: &[Token], open_ix: usize) -> Vec<String> {
+    const ORDS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    for t in &tokens[open_ix..] {
+        match &t.kind {
+            TokKind::Open(_) => depth += 1,
+            TokKind::Close(_) => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    break;
+                }
+            }
+            TokKind::Ident(s) if ORDS.contains(&s.as_str()) => out.push(s.clone()),
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(cfg: RuleConfig, src: &str) -> Report {
+        let mut a = Analyzer::new(cfg);
+        a.add_file("mem.rs", src);
+        a.finish()
+    }
+
+    #[test]
+    fn r1_cycle_across_functions() {
+        let src = "
+            fn ab(s: &S) {
+                let a = s.alpha.lock().unwrap();
+                let b = s.beta.lock().unwrap();
+                drop(b);
+                drop(a);
+            }
+            fn ba(s: &S) {
+                let b = s.beta.lock().unwrap();
+                let a = s.alpha.lock().unwrap();
+                drop(a);
+                drop(b);
+            }
+        ";
+        let rep = run(RuleConfig::only("R1"), src);
+        assert_eq!(rep.of_rule("R1").count(), 1, "{}", rep.render_human());
+        assert!(rep.findings[0].message.contains("cycle"));
+    }
+
+    #[test]
+    fn r3_ack_before_commit() {
+        let src = "
+            fn mutate(inner: &Inner) {
+                let mut db = inner.db.write().unwrap();
+                db.touch();
+                drop(db);
+                inner.hub.notify(Task::Schedule);
+                inner.commit_wal();
+            }
+        ";
+        let rep = run(RuleConfig::only("R3"), src);
+        assert_eq!(rep.of_rule("R3").count(), 1, "{}", rep.render_human());
+    }
+
+    #[test]
+    fn r6_seqcst_flag_allowlist() {
+        let src = "
+            fn f(s: &S) {
+                s.running.store(false, Ordering::SeqCst);
+                s.served.store(0, Ordering::SeqCst);
+                s.served.fetch_add(1, Ordering::Relaxed);
+            }
+        ";
+        let rep = run(RuleConfig::only("R6"), src);
+        assert_eq!(rep.of_rule("R6").count(), 1, "{}", rep.render_human());
+        assert!(rep.findings[0].message.contains("served"));
+    }
+
+    #[test]
+    fn suppression_silences_and_is_accounted() {
+        let src = "
+            fn f(s: &S) {
+                let db = s.db.write().unwrap();
+                db.checkpoint(); // oarlint: allow(R2) teardown must be atomic
+                drop(db);
+            }
+        ";
+        let rep = run(RuleConfig::only("R2"), src);
+        assert_eq!(rep.findings.len(), 0, "{}", rep.render_human());
+        assert_eq!(rep.suppressed.len(), 1);
+        assert!(rep.suppressed[0].reason.contains("atomic"));
+    }
+
+    #[test]
+    fn unused_suppression_warns() {
+        let src = "
+            fn f() {
+                // oarlint: allow(R2) nothing blocks here
+                let x = 1;
+            }
+        ";
+        let rep = run(RuleConfig::only("R2"), src);
+        assert_eq!(rep.warnings(), 1, "{}", rep.render_human());
+        assert!(rep.findings[0].message.contains("unused suppression"));
+    }
+}

@@ -1,0 +1,106 @@
+//! `oarlint` — lint the repository against its six concurrency/durability
+//! invariants (see `oar::analysis` and `docs/LINTS.md`).
+//!
+//! ```text
+//! oarlint [--format human|json] [--root DIR] [--out FILE] [PATH...]
+//! ```
+//!
+//! Defaults: root = the crate directory, paths = `rust/src rust/tests`,
+//! human output. Exits 1 when any unsuppressed error survives — warnings
+//! (malformed or unused suppressions) are reported but do not fail the
+//! run, so a stale `allow` cannot mask a build while still being visible.
+//! `--out FILE` writes the JSON report to a file regardless of the
+//! terminal format (the CI job uploads it as an artifact).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use oar::analysis::{analyze_paths, RuleConfig};
+
+fn main() -> ExitCode {
+    let mut format = "human".to_string();
+    let mut out_file: Option<PathBuf> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut paths: Vec<String> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--format" => match args.next() {
+                Some(v) if v == "human" || v == "json" => format = v,
+                other => return usage(&format!("--format expects human|json, got {other:?}")),
+            },
+            "--out" => match args.next() {
+                Some(v) => out_file = Some(PathBuf::from(v)),
+                None => return usage("--out expects a file path"),
+            },
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root expects a directory"),
+            },
+            "--help" | "-h" => {
+                print!("{}", HELP);
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                return usage(&format!("unknown flag {other:?}"));
+            }
+            path => paths.push(path.to_string()),
+        }
+    }
+
+    let root = root.unwrap_or_else(|| {
+        // The manifest dir when run via `cargo run`, else the cwd.
+        std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+    if paths.is_empty() {
+        paths = vec!["rust/src".to_string(), "rust/tests".to_string()];
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+
+    let report = match analyze_paths(&root, &path_refs, RuleConfig::repo()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("oarlint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    if let Some(out) = &out_file {
+        if let Err(e) = std::fs::write(out, report.to_json().dump()) {
+            eprintln!("oarlint: writing {}: {e}", out.display());
+            return ExitCode::FAILURE;
+        }
+    }
+    match format.as_str() {
+        "json" => println!("{}", report.to_json().dump()),
+        _ => print!("{}", report.render_human()),
+    }
+
+    if report.errors() > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+const HELP: &str = "\
+oarlint — invariant checker for the oar scheduler (docs/LINTS.md)
+
+USAGE: oarlint [--format human|json] [--root DIR] [--out FILE] [PATH...]
+
+  --format   terminal output format (default human)
+  --out      also write the JSON report to FILE (CI artifact)
+  --root     repository root (default: CARGO_MANIFEST_DIR, else .)
+  PATH...    root-relative files/dirs to lint (default: rust/src rust/tests)
+
+Exit status: 1 if any unsuppressed error finding remains, else 0.
+";
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("oarlint: {msg}");
+    eprint!("{}", HELP);
+    ExitCode::FAILURE
+}

@@ -40,8 +40,14 @@
 //!   meta-scheduler farming bag-of-tasks campaigns across N cluster
 //!   servers over RPC as best-effort jobs (the paper's metropolitan-GRID
 //!   deployment, § abstract / §3.3).
+//! * [`analysis`] — `oarlint`, the zero-dependency invariant checker
+//!   that machine-enforces the concurrency/durability rules the modules
+//!   above rely on (lock order, guard-vs-blocking-call discipline,
+//!   WAL-commit-before-ack, `RwLock<Db>` pinning, request-path
+//!   panic-freedom, atomics calibration). See `docs/LINTS.md`.
 
 pub mod admission;
+pub mod analysis;
 pub mod bench;
 pub mod central;
 pub mod cli;

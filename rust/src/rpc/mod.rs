@@ -24,6 +24,12 @@
 //! automaton's job-event buffer ([`crate::central::JobEvent::Cancel`]) so
 //! cancellation serializes with scheduling rounds. The wire format and
 //! error codes are specified in `docs/PROTOCOL.md`.
+//!
+//! Panic-freedom: a panicking worker silently shrinks the pool, so
+//! `unwrap()` is denied module-wide (request paths are additionally
+//! checked by `oarlint` rule R5 — see `docs/LINTS.md`); test modules
+//! opt back in locally.
+#![deny(clippy::unwrap_used)]
 
 pub mod client;
 pub mod proto;

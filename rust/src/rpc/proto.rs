@@ -441,6 +441,7 @@ pub fn ids_from_json(doc: &Json) -> Result<Vec<JobId>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on broken expectations
 mod tests {
     use super::*;
 

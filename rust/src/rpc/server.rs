@@ -27,7 +27,7 @@ use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -187,7 +187,7 @@ impl RpcServer {
             std::thread::Builder::new()
                 .name("oar-rpc-accept".into())
                 .spawn(move || accept_loop(listener, &shared))
-                .expect("spawn rpc acceptor")
+                .expect("spawn rpc acceptor") // oarlint: allow(R5) startup-fatal by design: no acceptor, no server
         };
         let workers = (0..config.workers)
             .map(|i| {
@@ -195,7 +195,7 @@ impl RpcServer {
                 std::thread::Builder::new()
                     .name(format!("oar-rpc-{i}"))
                     .spawn(move || worker_loop(&shared))
-                    .expect("spawn rpc worker")
+                    .expect("spawn rpc worker") // oarlint: allow(R5) startup-fatal by design: a short pool would silently shrink capacity
             })
             .collect();
 
@@ -236,8 +236,15 @@ impl RpcServer {
         self.shared.queue_cv.notify_all();
         self.shared.space_cv.notify_all();
         // EOF readers parked between requests; responses being written on
-        // the other half still go out.
-        for (_, stream) in self.shared.active.lock().unwrap().iter() {
+        // the other half still go out. Clone the handles out first: the
+        // shutdown syscalls must not run under the registry lock, or
+        // every worker registering/deregistering a connection stalls
+        // behind this sweep (R2).
+        let streams: Vec<TcpStream> = lock_sane(&self.shared.active)
+            .iter()
+            .filter_map(|(_, s)| s.try_clone().ok())
+            .collect();
+        for stream in streams {
             let _ = stream.shutdown(Shutdown::Read);
         }
         if let Some(h) = self.acceptor.take() {
@@ -342,6 +349,33 @@ fn bind_reuseaddr_v4(sa: &std::net::SocketAddrV4) -> Option<TcpListener> {
     }
 }
 
+/// Poison-tolerant lock for the front-end's registry and queue mutexes.
+///
+/// Handler panics are already contained per-connection by the
+/// `catch_unwind` in [`worker_loop`]; these mutexes are also touched
+/// *outside* that fence (acceptor backpressure, drain sweep,
+/// registration). `.lock().unwrap()` there would let one poisoned guard
+/// cascade-kill every worker and the acceptor — exactly the silent pool
+/// shrinkage the fence exists to prevent. The data under both locks is a
+/// plain list (no invariant spans the panic point), so continuing with
+/// the poisoned value is sound. Contrast the `db` lock, where poison
+/// *propagation* is the safety mechanism (see docs/LINTS.md §R5).
+fn lock_sane<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_sane`]'s condvar twin: wait without adopting poison.
+fn wait_sane<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    let (guard, _timed_out) = cv
+        .wait_timeout(guard, timeout)
+        .unwrap_or_else(PoisonError::into_inner);
+    guard
+}
+
 fn accept_loop(listener: TcpListener, shared: &Shared) {
     while !shared.draining.load(Ordering::SeqCst) {
         match listener.accept() {
@@ -351,14 +385,10 @@ fn accept_loop(listener: TcpListener, shared: &Shared) {
                 let _ = stream.set_nonblocking(false);
                 let _ = stream.set_nodelay(true);
                 shared.accepted_conns.fetch_add(1, Ordering::Relaxed);
-                let mut q = shared.queue.lock().unwrap();
+                let mut q = lock_sane(&shared.queue);
                 while q.len() >= shared.queue_depth && !shared.draining.load(Ordering::SeqCst) {
                     // Backpressure: block until a worker frees a slot.
-                    let (guard, _) = shared
-                        .space_cv
-                        .wait_timeout(q, Duration::from_millis(50))
-                        .unwrap();
-                    q = guard;
+                    q = wait_sane(&shared.space_cv, q, Duration::from_millis(50));
                 }
                 if shared.draining.load(Ordering::SeqCst) {
                     return; // drops the stream: client sees EOF
@@ -385,7 +415,7 @@ fn accept_loop(listener: TcpListener, shared: &Shared) {
 fn worker_loop(shared: &Shared) {
     loop {
         let stream = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_sane(&shared.queue);
             loop {
                 if let Some(s) = q.pop_front() {
                     shared.space_cv.notify_one();
@@ -394,11 +424,7 @@ fn worker_loop(shared: &Shared) {
                 if shared.draining.load(Ordering::SeqCst) {
                     break None;
                 }
-                let (guard, _) = shared
-                    .queue_cv
-                    .wait_timeout(q, Duration::from_millis(100))
-                    .unwrap();
-                q = guard;
+                q = wait_sane(&shared.queue_cv, q, Duration::from_millis(100));
             }
         };
         let Some(stream) = stream else { return };
@@ -434,7 +460,7 @@ fn serve_connection(shared: &Shared, stream: TcpStream) {
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
-    shared.active.lock().unwrap().push((conn_id, registry_handle));
+    lock_sane(&shared.active).push((conn_id, registry_handle));
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(stream);
     // Close the race with drain: if the flag was set after we were popped
@@ -489,7 +515,7 @@ fn serve_connection(shared: &Shared, stream: TcpStream) {
             break; // in-flight request answered; close out
         }
     }
-    shared.active.lock().unwrap().retain(|(id, _)| *id != conn_id);
+    lock_sane(&shared.active).retain(|(id, _)| *id != conn_id);
 }
 
 /// Was this read/decode failure a socket timeout (idle connection)?
@@ -702,6 +728,7 @@ fn handle_hold_resume(server: &Server, id: u64, params: &Json, hold: bool) -> Js
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on broken expectations
 mod tests {
     use super::*;
 

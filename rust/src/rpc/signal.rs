@@ -47,6 +47,7 @@ pub fn install() {
 pub fn install() {}
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on broken expectations
 mod tests {
     use super::*;
 

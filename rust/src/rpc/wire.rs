@@ -81,6 +81,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on broken expectations
 mod tests {
     use super::*;
 

@@ -1,0 +1,25 @@
+//! R1 fixture (positive): lock-order cycle + same-class double
+//! acquisition. Never compiled — `oarlint` lexes it; the `fixtures`
+//! directory is skipped by the real-tree scan.
+
+fn ab(s: &Shared) {
+    let a = s.alpha.lock().unwrap();
+    let b = s.beta.lock().unwrap();
+    a.merge(&b);
+    drop(b);
+    drop(a);
+}
+
+fn ba(s: &Shared) {
+    let b = s.beta.lock().unwrap();
+    let a = s.alpha.lock().unwrap();
+    b.merge(&a);
+    drop(a);
+    drop(b);
+}
+
+fn double(s: &Shared) {
+    let first = s.gamma.lock().unwrap();
+    let second = s.gamma.lock().unwrap();
+    first.merge(&second);
+}

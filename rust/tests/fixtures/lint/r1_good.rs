@@ -1,0 +1,25 @@
+//! R1 fixture (negative): both call sites take `alpha` before `beta`,
+//! so the acquisition graph is acyclic and no class nests on itself.
+
+fn merge_forward(s: &Shared) {
+    let a = s.alpha.lock().unwrap();
+    let b = s.beta.lock().unwrap();
+    a.merge(&b);
+    drop(b);
+    drop(a);
+}
+
+fn merge_again(s: &Shared) {
+    let a = s.alpha.lock().unwrap();
+    let b = s.beta.lock().unwrap();
+    b.merge(&a);
+}
+
+fn sequential_same_class(s: &Shared) {
+    {
+        let g = s.gamma.lock().unwrap();
+        g.touch();
+    }
+    let g = s.gamma.lock().unwrap();
+    g.touch();
+}

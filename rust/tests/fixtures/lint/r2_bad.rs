@@ -1,0 +1,15 @@
+//! R2 fixture (positive): blocking calls with a guard live — a named
+//! guard, and the PR 4 bug shape: a `for`-header temporary that Rust
+//! keeps alive through the whole loop body.
+
+fn sleeps_under_guard(s: &Shared) {
+    let q = s.queue.lock().unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    q.push(1);
+}
+
+fn iterates_while_calling_out(s: &Shared) {
+    for (_, stream) in s.active.lock().unwrap().iter() {
+        let _ = stream.shutdown(Shutdown::Read);
+    }
+}

@@ -1,0 +1,31 @@
+//! R2 fixture (negative): drop the guard before blocking; condvar waits
+//! hand their own guard to the OS and are exempt.
+
+fn drops_then_blocks(s: &Shared) {
+    let q = s.queue.lock().unwrap();
+    let next = q.front();
+    drop(q);
+    std::thread::sleep(Duration::from_millis(10));
+    s.run(next);
+}
+
+fn collects_then_shuts_down(s: &Shared) {
+    let streams: Vec<TcpStream> = s
+        .active
+        .lock()
+        .unwrap()
+        .iter()
+        .filter_map(|(_, st)| st.try_clone().ok())
+        .collect();
+    for stream in streams {
+        let _ = stream.shutdown(Shutdown::Read);
+    }
+}
+
+fn waits_on_condvar(s: &Shared) {
+    let mut q = s.queue.lock().unwrap();
+    while q.is_empty() {
+        q = s.cv.wait(q).unwrap();
+    }
+    q.pop();
+}

@@ -1,0 +1,26 @@
+//! R3 fixture (positive): acknowledgements that outrun durability —
+//! notify after the write-guard release but before the WAL commit,
+//! an ack issued with the write guard still held, and a grid dispatch
+//! with no prior intent write.
+
+fn acks_before_commit(inner: &Inner) {
+    let mut db = inner.db.write().unwrap();
+    db.set_job_state(id, JobState::Waiting, now);
+    drop(db);
+    inner.hub.notify(Task::Schedule);
+    inner.commit_wal();
+}
+
+fn acks_under_guard(inner: &Inner) {
+    let mut db = inner.db.write().unwrap();
+    db.log_event(now, "CANCEL", Some(id), "");
+    inner.hub.push_event(JobEvent::Cancel { job: id, at: now });
+    drop(db);
+    inner.commit_wal();
+}
+
+fn dispatches_without_intent(cx: &Campaign) {
+    let mut client = cx.connect_cluster();
+    let outcome = client.sub(&cx.spec);
+    cx.record(outcome);
+}

@@ -1,0 +1,22 @@
+//! R3 fixture (negative): commit the WAL before every acknowledgement;
+//! record dispatch intent in the db before submitting over the wire.
+
+fn commits_then_acks(inner: &Inner) {
+    let mut db = inner.db.write().unwrap();
+    db.set_job_state(id, JobState::Waiting, now);
+    drop(db);
+    inner.commit_wal();
+    inner.hub.notify(Task::Schedule);
+}
+
+fn helper_region_commits(inner: &Inner) {
+    inner.write_db(|db| db.log_event(now, "CANCEL", Some(id), ""));
+    inner.hub.push_event(JobEvent::Cancel { job: id, at: now });
+}
+
+fn records_intent_then_dispatches(cx: &Campaign) {
+    cx.write_db(|db| db.record_dispatch(cx.task, now));
+    let mut client = cx.connect_cluster();
+    let outcome = client.sub(&cx.spec);
+    cx.record(outcome);
+}

@@ -1,0 +1,11 @@
+//! R4 fixture (positive): the PR 6 regression — a `Mutex<Db>` field and
+//! mutex-style `db.lock()` access, serializing readers behind writers.
+
+struct Inner {
+    db: Mutex<Db>,
+}
+
+fn stat(inner: &Inner) -> usize {
+    let db = inner.db.lock().unwrap();
+    db.jobs().len()
+}

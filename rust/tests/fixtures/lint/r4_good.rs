@@ -1,0 +1,16 @@
+//! R4 fixture (negative): the database behind `RwLock<Db>`, read guards
+//! for queries and a write guard for mutations.
+
+struct Inner {
+    db: RwLock<Db>,
+}
+
+fn stat(inner: &Inner) -> usize {
+    let db = inner.db.read().unwrap();
+    db.jobs().len()
+}
+
+fn mutate(inner: &Inner) {
+    let mut db = inner.db.write().unwrap();
+    db.log_event(now, "NOTE", None, "");
+}

@@ -1,0 +1,12 @@
+//! R5 fixture (positive): every panic source in a request path —
+//! `.unwrap()`, `.expect()`, `panic!`, and raw slice indexing.
+
+fn handle(req: &Request, jobs: &[Job]) -> Response {
+    let id = req.args.get("id").unwrap();
+    let first = jobs[0];
+    let state = parse_state(id).expect("bad id");
+    if state.is_empty() {
+        panic!("empty state for {id}");
+    }
+    Response::ok(first, state)
+}

@@ -1,0 +1,24 @@
+//! R5 fixture (negative): the same request path written panic-free
+//! (`let .. else`, `match`, `.get()`), plus a `#[test]` function where
+//! unwrap/indexing are fine — tests may panic on broken expectations.
+
+fn handle(req: &Request, jobs: &[Job]) -> Response {
+    let Some(id) = req.args.get("id") else {
+        return Response::err("missing id");
+    };
+    let Some(first) = jobs.first() else {
+        return Response::err("no jobs");
+    };
+    let state = match parse_state(id) {
+        Ok(s) => s,
+        Err(e) => return Response::err(&e.to_string()),
+    };
+    Response::ok(first, state)
+}
+
+#[test]
+fn tests_may_panic_freely() {
+    let v = parse_state("Waiting").unwrap();
+    let first = FIXTURE_JOBS[0];
+    assert_eq!(v, first.state);
+}

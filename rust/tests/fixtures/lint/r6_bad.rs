@@ -1,0 +1,8 @@
+//! R6 fixture (positive): atomics drifting out of calibration — a
+//! SeqCst read-modify-write on a pure tally, and a SeqCst store on an
+//! atomic that is not one of the blessed shutdown/drain flags.
+
+fn telemetry(s: &Shared) {
+    s.served.fetch_add(1, Ordering::SeqCst);
+    s.peak.store(7, Ordering::SeqCst);
+}

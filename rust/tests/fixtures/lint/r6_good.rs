@@ -1,0 +1,13 @@
+//! R6 fixture (negative): counters stay Relaxed, SeqCst only on the
+//! blessed flag (`running` in the fixture config), hand-over-hand state
+//! uses AcqRel — and a non-atomic `.load()` with no Ordering argument
+//! is not mistaken for an atomic op.
+
+fn telemetry(s: &Shared) {
+    s.served.fetch_add(1, Ordering::Relaxed);
+    s.discarded.fetch_add(1, Ordering::Relaxed);
+    s.running.store(false, Ordering::SeqCst);
+    let prev = s.state.swap(2, Ordering::AcqRel);
+    let snapshot = s.client.load();
+    s.record(prev, snapshot);
+}

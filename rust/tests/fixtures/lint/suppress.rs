@@ -1,0 +1,23 @@
+//! Suppression-accounting fixture: one used allow (own-line, targeting
+//! the next code line), one real finding left unsuppressed, one unused
+//! allow, and one directive naming a rule that does not exist.
+
+fn teardown(s: &Shared) {
+    let mut db = s.db.write().unwrap();
+    // oarlint: allow(R2) teardown: the final checkpoint must be atomic with the guard
+    db.checkpoint();
+    db.snapshot(&s.path);
+    drop(db);
+}
+
+fn stray() {
+    // oarlint: allow(R2) nothing on the next line blocks
+    let x = 1;
+    let _ = x;
+}
+
+fn bogus() {
+    // oarlint: allow(R9) not a rule that exists
+    let y = 2;
+    let _ = y;
+}

@@ -1,0 +1,196 @@
+//! The `oarlint` gate, in two halves:
+//!
+//! 1. **The real tree is clean.** `rust/src` + `rust/tests` lint with
+//!    zero unsuppressed findings under the repository rule config, and
+//!    the suppression inventory is pinned — adding an `allow` without
+//!    updating the expected set here is a reviewable event, exactly like
+//!    a snapshot-test diff.
+//! 2. **Every rule actually fires.** For each of R1–R6 a positive
+//!    fixture must produce that rule's findings and a negative fixture
+//!    must stay silent, so a refactor of the analyzer cannot quietly
+//!    lobotomize a rule while the tree stays "clean".
+//!
+//! The fixture corpus lives in `rust/tests/fixtures/lint/` — never
+//! compiled (the directory is skipped by `analyze_paths`), only lexed.
+
+use std::path::Path;
+
+use oar::analysis::{analyze_paths, Analyzer, Report, RuleConfig};
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn lint_fixture(name: &str, cfg: RuleConfig) -> Report {
+    let path = repo_root().join("rust/tests/fixtures/lint").join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {name}: {e}"));
+    let mut analyzer = Analyzer::new(cfg);
+    analyzer.add_file(name, &src);
+    analyzer.finish()
+}
+
+// ------------------------------------------------- the real tree ----
+
+#[test]
+fn repository_tree_is_lint_clean() {
+    let report = analyze_paths(
+        repo_root(),
+        &["rust/src", "rust/tests"],
+        RuleConfig::repo(),
+    )
+    .expect("lint walk");
+
+    assert!(
+        report.findings.is_empty(),
+        "oarlint found unsuppressed issues:\n{}",
+        report.render_human()
+    );
+    // Sanity: an empty report because nothing was scanned is not clean.
+    assert!(
+        report.files_scanned >= 70,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    assert!(report.functions_scanned > 300);
+}
+
+#[test]
+fn repository_suppression_inventory_is_pinned() {
+    let report = analyze_paths(
+        repo_root(),
+        &["rust/src", "rust/tests"],
+        RuleConfig::repo(),
+    )
+    .expect("lint walk");
+
+    let mut inventory: Vec<(String, String)> = report
+        .suppressed
+        .iter()
+        .map(|s| (s.finding.file.clone(), s.finding.rule.clone()))
+        .collect();
+    inventory.sort();
+    let expected = [
+        ("rust/src/cli/net.rs", "R2"),       // teardown checkpoint via shared handle
+        ("rust/src/rpc/server.rs", "R5"),    // acceptor spawn is startup-fatal
+        ("rust/src/rpc/server.rs", "R5"),    // worker spawn is startup-fatal
+        ("rust/src/server/mod.rs", "R2"),    // shutdown checkpoint under guard
+        ("rust/src/server/mod.rs", "R2"),    // shutdown snapshot under guard
+    ];
+    let expected: Vec<(String, String)> = expected
+        .iter()
+        .map(|(f, r)| (f.to_string(), r.to_string()))
+        .collect();
+    assert_eq!(
+        inventory,
+        expected,
+        "suppression inventory drifted:\n{}",
+        report.render_human()
+    );
+    for s in &report.suppressed {
+        assert!(!s.reason.is_empty(), "suppression without reason: {s:?}");
+    }
+}
+
+// ------------------------------------------------ fixture corpus ----
+
+#[test]
+fn r1_lock_order_fires_and_stays_quiet() {
+    let bad = lint_fixture("r1_bad.rs", RuleConfig::only("R1"));
+    // One immediate same-class nesting + one alpha/beta cycle.
+    assert_eq!(bad.of_rule("R1").count(), 2, "{}", bad.render_human());
+    assert!(bad.findings.iter().any(|f| f.message.contains("cycle")));
+    assert!(bad.findings.iter().any(|f| f.message.contains("nested")));
+
+    let good = lint_fixture("r1_good.rs", RuleConfig::only("R1"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r2_blocking_under_guard_fires_and_stays_quiet() {
+    let bad = lint_fixture("r2_bad.rs", RuleConfig::only("R2"));
+    assert_eq!(bad.of_rule("R2").count(), 2, "{}", bad.render_human());
+    assert!(bad.findings.iter().any(|f| f.message.contains("sleep")));
+    assert!(bad.findings.iter().any(|f| f.message.contains("shutdown")));
+
+    let good = lint_fixture("r2_good.rs", RuleConfig::only("R2"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r3_commit_before_ack_fires_and_stays_quiet() {
+    let bad = lint_fixture("r3_bad.rs", RuleConfig::only("R3"));
+    // Ack-before-commit, ack-under-guard, dispatch-without-intent.
+    assert_eq!(bad.of_rule("R3").count(), 3, "{}", bad.render_human());
+    assert!(bad.findings.iter().any(|f| f.message.contains("intent")));
+
+    let good = lint_fixture("r3_good.rs", RuleConfig::only("R3"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r4_db_lock_regression_fires_and_stays_quiet() {
+    let bad = lint_fixture("r4_bad.rs", RuleConfig::only("R4"));
+    // The Mutex<Db> field and the db.lock() call site.
+    assert_eq!(bad.of_rule("R4").count(), 2, "{}", bad.render_human());
+
+    let good = lint_fixture("r4_good.rs", RuleConfig::only("R4"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r5_panic_freedom_fires_and_stays_quiet() {
+    let bad = lint_fixture("r5_bad.rs", RuleConfig::only("R5"));
+    // unwrap, slice index, expect, panic! — one each.
+    assert_eq!(bad.of_rule("R5").count(), 4, "{}", bad.render_human());
+
+    let good = lint_fixture("r5_good.rs", RuleConfig::only("R5"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r6_atomics_calibration_fires_and_stays_quiet() {
+    let bad = lint_fixture("r6_bad.rs", RuleConfig::only("R6"));
+    assert_eq!(bad.of_rule("R6").count(), 2, "{}", bad.render_human());
+
+    let good = lint_fixture("r6_good.rs", RuleConfig::only("R6"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn suppressions_are_applied_and_accounted() {
+    let rep = lint_fixture("suppress.rs", RuleConfig::only("R2"));
+
+    // The checkpoint finding is silenced, with its reason preserved.
+    assert_eq!(rep.suppressed.len(), 1, "{}", rep.render_human());
+    assert!(rep.suppressed[0].reason.contains("atomic"));
+
+    // The snapshot on the next line stays a hard error.
+    assert_eq!(rep.errors(), 1, "{}", rep.render_human());
+    assert!(rep.findings.iter().any(|f| {
+        f.rule == "R2" && f.message.contains("snapshot")
+    }));
+
+    // The unused allow and the unknown-rule directive both warn.
+    assert_eq!(rep.warnings(), 2, "{}", rep.render_human());
+    assert!(rep.findings.iter().any(|f| f.message.contains("unused suppression")));
+    assert!(rep.findings.iter().any(|f| f.message.contains("unknown rule")));
+}
+
+#[test]
+fn literals_and_comments_are_inert() {
+    // Lock calls, directives and panics inside string literals must not
+    // produce findings (nor register suppressions).
+    let src = r##"
+fn log_examples(s: &Shared) {
+    let msg = "s.db.lock() under load, then panic! — oarlint: allow(R9)";
+    let raw = r#"db.write().unwrap() while db.checkpoint() runs"#;
+    s.log(msg, raw);
+}
+"##;
+    let mut analyzer = Analyzer::new(RuleConfig::everywhere());
+    analyzer.add_file("inert.rs", src);
+    let rep = analyzer.finish();
+    assert!(rep.findings.is_empty(), "{}", rep.render_human());
+    assert!(rep.suppressed.is_empty());
+}

@@ -1,0 +1,278 @@
+//! Scale proof for the hierarchical placement path: conservative
+//! backfilling rounds over a ~100k-core resource tree. Builds the tree
+//! directly in the database (default 16 switches × 400 hosts × 16 cores
+//! = 102,400 cores over 6,400 hosts), pins half of every switch under
+//! long-running blockers so the busy profile is real, then drives
+//! scheduling rounds over a backlog mixing flat, switch-constrained and
+//! moldable requests — applying each round's decision (reshape persist,
+//! assignment, state walk to Running) before the next. Emits
+//! `BENCH_hier.json` at the repo root: topology, per-round latency,
+//! start/reshape counts and the sub-second verdict.
+//!
+//! Knobs: `OAR_HIER_SWITCHES` (16), `OAR_HIER_HOSTS` (hosts/switch,
+//! 400), `OAR_HIER_CORES` (cores/host, 16), `OAR_HIER_JOBS` (waiting
+//! jobs injected per round, 64), `OAR_HIER_ROUNDS` (5),
+//! `OAR_HIER_BUDGET_MS` (per-round latency budget, 1000).
+//!
+//! The run doubles as a correctness gate: no round may reject a job,
+//! every start's node count must match the (possibly reshaped) row, the
+//! moldable fall-through must actually fire, and the views/indexes must
+//! verify at the end; it exits non-zero otherwise.
+
+use std::path::Path;
+use std::time::Instant;
+
+use oar::db::{Db, Value};
+use oar::resources::Level;
+use oar::sched::MetaScheduler;
+use oar::types::{Job, JobSpec, JobState, Node, Time};
+use oar::util::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or(default)
+}
+
+struct Topology {
+    switches: usize,
+    hosts: usize, // per switch
+    cores: usize, // per host
+}
+
+impl Topology {
+    fn total_hosts(&self) -> usize {
+        self.switches * self.hosts
+    }
+    fn total_cores(&self) -> usize {
+        self.total_hosts() * self.cores
+    }
+}
+
+/// Build the resource tree straight into the database: cluster root,
+/// switch rows, and per host the host/cpu/core rows plus the derived
+/// nodes-table row the scheduler reads (same layout
+/// `VirtualCluster::register` produces, at a size no fixture has).
+fn build_tree(db: &mut Db, topo: &Topology) {
+    let root = db.add_resource(Level::Cluster, None, "bench", None);
+    let mut id = 0u64;
+    for s in 0..topo.switches {
+        let sw = format!("sw{}", s + 1);
+        let sw_id = db.add_resource(Level::Switch, Some(root), &sw, None);
+        for h in 0..topo.hosts {
+            id += 1;
+            let name = format!("h{}-{h}", s + 1);
+            let host = db.add_resource(Level::Host, Some(sw_id), &name, Some(id));
+            let cpu = db.add_resource(Level::Cpu, Some(host), &format!("{name}-cpu0"), None);
+            for c in 0..topo.cores {
+                db.add_resource(Level::Core, Some(cpu), &format!("{name}-core{c}"), None);
+            }
+            db.add_node(
+                Node::new(id, &name, topo.cores as u32)
+                    .with_prop("switch", Value::Text(sw.clone())),
+            );
+        }
+    }
+}
+
+/// Pin half of every switch under a Running blocker with a staggered
+/// walltime, so backfilling scans a non-trivial busy profile instead of
+/// an empty diagram.
+fn pin_blockers(db: &mut Db, topo: &Topology) {
+    let half = (topo.hosts / 2).max(1);
+    for s in 0..topo.switches {
+        let walltime = 1800 + (s % 4) as Time * 600;
+        let spec = JobSpec {
+            weight: topo.cores as u32,
+            ..JobSpec::batch("blocker", "hold", half as u32, walltime)
+        };
+        let id = db.insert_job(Job::from_spec(&spec, 0));
+        let first = (s * topo.hosts) as u64 + 1;
+        let nodes: Vec<u64> = (first..first + half as u64).collect();
+        db.assign_nodes(id, &nodes, topo.cores as u32);
+        for state in [JobState::ToLaunch, JobState::Launching, JobState::Running] {
+            db.set_job_state(id, state, 0).expect("blocker state walk");
+        }
+    }
+}
+
+/// One round's backlog: flat, switch-constrained and moldable requests
+/// in rotation. The moldable shape's first alternative asks for more
+/// cores per host than any host has, so the scheduler must fall through
+/// — every round proves the reshape path at scale.
+fn inject_backlog(db: &mut Db, topo: &Topology, jobs: usize, now: Time) {
+    let cores = topo.cores as u32;
+    for i in 0..jobs {
+        let spec = match i % 3 {
+            0 => JobSpec {
+                weight: cores,
+                ..JobSpec::batch("flat", "mpi", 8, 600)
+            },
+            1 => JobSpec {
+                weight: cores,
+                resources: Some(format!("/switch=2/host=8/core={cores}")),
+                ..JobSpec::batch("locality", "mpi", 16, 600)
+            },
+            _ => JobSpec {
+                weight: cores.saturating_mul(2),
+                resources: Some(format!(
+                    "/host=4/core={} | /host=8/core={cores}",
+                    cores.saturating_mul(2)
+                )),
+                ..JobSpec::batch("moldable", "mpi", 4, 600)
+            },
+        };
+        db.insert_job(Job::from_spec(&spec, now));
+    }
+}
+
+fn main() {
+    let topo = Topology {
+        switches: env_usize("OAR_HIER_SWITCHES", 16),
+        hosts: env_usize("OAR_HIER_HOSTS", 400),
+        cores: env_usize("OAR_HIER_CORES", 16),
+    };
+    let jobs = env_usize("OAR_HIER_JOBS", 64);
+    let rounds = env_usize("OAR_HIER_ROUNDS", 5);
+    let budget_ms = env_usize("OAR_HIER_BUDGET_MS", 1000) as f64;
+
+    println!(
+        "== hier: {} switches x {} hosts x {} cores = {} cores over {} hosts ==",
+        topo.switches,
+        topo.hosts,
+        topo.cores,
+        topo.total_cores(),
+        topo.total_hosts(),
+    );
+
+    let mut db = Db::with_standard_queues();
+    let t0 = Instant::now();
+    build_tree(&mut db, &topo);
+    println!(
+        "tree built in {:?} ({} resource rows)",
+        t0.elapsed(),
+        db.resource_count()
+    );
+    let hier = db.hierarchy();
+    let mut ok = true;
+    if hier.host_count() != topo.total_hosts() || hier.core_count() != topo.total_cores() as u64 {
+        eprintln!(
+            "GATE: hierarchy mismatch: {} hosts / {} cores",
+            hier.host_count(),
+            hier.core_count()
+        );
+        ok = false;
+    }
+    pin_blockers(&mut db, &topo);
+
+    let mut meta = MetaScheduler::sql_only();
+    let mut points = Vec::new();
+    let mut latencies_ms = Vec::new();
+    let mut total_starts = 0usize;
+    let mut total_reshapes = 0usize;
+    let mut now: Time = 10;
+
+    for round in 0..rounds {
+        inject_backlog(&mut db, &topo, jobs, now);
+
+        let t = Instant::now();
+        let d = meta.round(&db, now).expect("scheduling round");
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        latencies_ms.push(ms);
+
+        if !d.rejected.is_empty() {
+            eprintln!("GATE: round {round} rejected {:?}", d.rejected);
+            ok = false;
+        }
+        // Apply the decision the way the server does: reshape rows
+        // first, then assign and walk the started jobs to Running.
+        for (id, nb, w) in &d.reshapes {
+            db.set_job_shape(*id, *nb, *w).expect("persist reshape");
+        }
+        for (id, nodes) in &d.starts {
+            let job = db.job(*id).expect("started job row");
+            if nodes.len() as u32 != job.nb_nodes {
+                eprintln!(
+                    "GATE: round {round} job {id}: {} nodes vs nbNodes={}",
+                    nodes.len(),
+                    job.nb_nodes
+                );
+                ok = false;
+            }
+            db.assign_nodes(*id, nodes, job.weight);
+            for state in [JobState::ToLaunch, JobState::Launching, JobState::Running] {
+                db.set_job_state(*id, state, now).expect("start state walk");
+            }
+        }
+        total_starts += d.starts.len();
+        total_reshapes += d.reshapes.len();
+
+        println!(
+            "  round {round}: {ms:>8.2} ms  ({} starts, {} reshapes, {} waiting injected)",
+            d.starts.len(),
+            d.reshapes.len(),
+            jobs
+        );
+        points.push(Json::obj(vec![
+            ("round", Json::Num(round as f64)),
+            ("ms", Json::Num(ms)),
+            ("starts", Json::Num(d.starts.len() as f64)),
+            ("reshapes", Json::Num(d.reshapes.len() as f64)),
+        ]));
+        now += 60;
+    }
+
+    if total_starts == 0 {
+        eprintln!("GATE: no job ever started");
+        ok = false;
+    }
+    if total_reshapes == 0 {
+        eprintln!("GATE: the moldable fall-through never fired");
+        ok = false;
+    }
+    if !db.verify_indexes() || !db.verify_views() {
+        eprintln!("GATE: views/indexes failed verification after the run");
+        ok = false;
+    }
+
+    let mean = latencies_ms.iter().sum::<f64>() / latencies_ms.len().max(1) as f64;
+    let max = latencies_ms.iter().copied().fold(0.0f64, f64::max);
+    let sub_second = max < budget_ms;
+    println!(
+        "\nround latency over {} cores: mean {mean:.2} ms, max {max:.2} ms (budget {budget_ms} ms) → {}",
+        topo.total_cores(),
+        if sub_second { "ok" } else { "OVER BUDGET" },
+    );
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hier.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("hier".into())),
+        (
+            "topology",
+            Json::obj(vec![
+                ("switches", Json::Num(topo.switches as f64)),
+                ("hosts_per_switch", Json::Num(topo.hosts as f64)),
+                ("cores_per_host", Json::Num(topo.cores as f64)),
+                ("total_hosts", Json::Num(topo.total_hosts() as f64)),
+                ("total_cores", Json::Num(topo.total_cores() as f64)),
+            ]),
+        ),
+        ("jobs_per_round", Json::Num(jobs as f64)),
+        ("rounds", Json::Arr(points)),
+        ("round_ms_mean", Json::Num(mean)),
+        ("round_ms_max", Json::Num(max)),
+        ("budget_ms", Json::Num(budget_ms)),
+        ("sub_second", Json::Bool(sub_second)),
+        ("total_starts", Json::Num(total_starts as f64)),
+        ("total_reshapes", Json::Num(total_reshapes as f64)),
+    ]);
+    std::fs::write(&out, doc.dump()).expect("write BENCH_hier.json");
+    println!("wrote {}", out.display());
+
+    if !ok || !sub_second {
+        eprintln!("HIER VERIFICATION FAILED");
+        std::process::exit(1);
+    }
+}

@@ -16,7 +16,10 @@
 //!
 //! Conditions see the submission as a row: `user`, `command`, `nbNodes`,
 //! `weight`, `maxTime` (NULL when unset), `queue` (NULL when unset),
-//! `bestEffort`, `interactive`, `reservation` (requested start or NULL).
+//! `bestEffort`, `interactive`, `reservation` (requested start or NULL),
+//! `resources` (the canonical hierarchical request, or NULL for flat
+//! submissions — by the time rules run, `nbNodes`/`weight` already hold
+//! the flat equivalent of the first alternative).
 //! After the stored rules run, two built-in checks apply, mirroring the
 //! paper's defaults: the target queue must exist and be active, and the
 //! job must not exceed the queue's `max_procs_per_job` ("no user ask for
@@ -129,6 +132,28 @@ pub enum Admission {
 /// exactly the two round-trips the paper's submission makes.
 pub fn admit(db: &mut Db, spec: &JobSpec) -> Result<Admission> {
     let mut spec = spec.clone();
+    // Hierarchical requests first: parse with the total grammar (typed
+    // errors, never a panic), derive the flat equivalent of the first
+    // alternative so the stored rules and built-in checks see honest
+    // `nbNodes`/`weight`, default `maxTime` from the walltime, and
+    // store the canonical printed form on the job row.
+    if let Some(raw) = spec.resources.clone() {
+        let req = match crate::resources::parse_request(&raw) {
+            Ok(r) => r,
+            Err(e) => return Ok(Admission::Rejected(format!("bad resource request: {e}"))),
+        };
+        if let Some(first) = req.alternatives.first() {
+            // The parser rejected any shape whose totals overflow, so
+            // the flat equivalent is always computable here.
+            let shape = first.shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+            spec.nb_nodes = shape.total_hosts().unwrap_or(u32::MAX);
+            spec.weight = shape.weight();
+        }
+        if spec.max_time.is_none() {
+            spec.max_time = req.walltime();
+        }
+        spec.resources = Some(req.to_string());
+    }
     let rules = db.admission_rules();
     for (_prio, source) in rules {
         for line in source.lines() {
@@ -169,12 +194,35 @@ pub fn admit(db: &mut Db, spec: &JobSpec) -> Result<Admission> {
     if spec.max_time.is_none() {
         spec.max_time = Some(queue.default_max_time);
     }
-    if spec.total_procs() > queue.max_procs_per_job {
+    // `nbNodes * weight` can overflow u32 on adversarial submissions; a
+    // wrapped product would sail under the queue limit, so overflow is a
+    // typed rejection, never an arithmetic wrap.
+    let Some(total) = spec.checked_total_procs() else {
+        return Ok(Admission::Rejected(format!(
+            "nbNodes {} x weight {} overflows the processor count",
+            spec.nb_nodes, spec.weight
+        )));
+    };
+    if total > queue.max_procs_per_job {
         return Ok(Admission::Rejected(format!(
             "requests {} procs > queue limit {}",
-            spec.total_procs(),
-            queue.max_procs_per_job
+            total, queue.max_procs_per_job
         )));
+    }
+    // Every moldable alternative must respect the queue limit too — the
+    // scheduler may pick any of them later, unsupervised.
+    if let Some(r) = &spec.resources {
+        if let Ok(req) = crate::resources::parse_request(r) {
+            for alt in &req.alternatives {
+                let procs = alt.shape().ok().and_then(|s| s.total_procs());
+                if procs.map(|p| p > queue.max_procs_per_job).unwrap_or(true) {
+                    return Ok(Admission::Rejected(format!(
+                        "alternative {alt} exceeds queue limit {}",
+                        queue.max_procs_per_job
+                    )));
+                }
+            }
+        }
     }
     Ok(Admission::Accepted(spec))
 }
@@ -201,6 +249,13 @@ fn spec_row(spec: &JobSpec) -> Row {
     row.insert(
         "reservation".into(),
         spec.reservation_start.map(Value::Int).unwrap_or(Value::Null),
+    );
+    row.insert(
+        "resources".into(),
+        spec.resources
+            .clone()
+            .map(Value::Text)
+            .unwrap_or(Value::Null),
     );
     row
 }
@@ -284,6 +339,77 @@ mod tests {
         assert!(matches!(
             admit(&mut db, &spec).unwrap(),
             Admission::Rejected(m) if m.contains("queue limit")
+        ));
+    }
+
+    #[test]
+    fn rejects_overflowing_proc_requests_typed() {
+        let mut db = db();
+        let spec = JobSpec {
+            nb_nodes: u32::MAX,
+            weight: 2,
+            max_time: Some(60),
+            ..JobSpec::default()
+        };
+        assert!(matches!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected(m) if m.contains("overflows")
+        ));
+    }
+
+    #[test]
+    fn hierarchical_request_derives_flat_shape_and_walltime() {
+        let mut db = db();
+        let spec = JobSpec {
+            resources: Some("/switch=2/host=3/core=4,  walltime=0:30:0".into()),
+            max_time: None,
+            ..JobSpec::default()
+        };
+        match admit(&mut db, &spec).unwrap() {
+            Admission::Accepted(s) => {
+                assert_eq!(s.nb_nodes, 6, "2 switches x 3 hosts");
+                assert_eq!(s.weight, 4);
+                assert_eq!(s.max_time, Some(1800), "walltime fills maxTime");
+                assert_eq!(
+                    s.resources.as_deref(),
+                    Some("/switch=2/host=3/core=4,walltime=0:30:0"),
+                    "canonicalized"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_resource_request_is_a_typed_rejection() {
+        let mut db = db();
+        let spec = JobSpec {
+            resources: Some("/rack=9".into()),
+            ..JobSpec::default()
+        };
+        assert!(matches!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected(m) if m.contains("unknown resource level")
+        ));
+    }
+
+    #[test]
+    fn every_moldable_alternative_respects_the_queue_limit() {
+        let mut db = db();
+        db.add_queue(Queue {
+            max_procs_per_job: 8,
+            ..Queue::new("small", 5, crate::types::QueuePolicyKind::FifoConservative)
+        });
+        // First alternative fits (8 procs), second does not (16).
+        let spec = JobSpec {
+            resources: Some("/host=4/core=2 | /host=4/core=4".into()),
+            queue: Some("small".into()),
+            max_time: Some(60),
+            ..JobSpec::default()
+        };
+        assert!(matches!(
+            admit(&mut db, &spec).unwrap(),
+            Admission::Rejected(m) if m.contains("alternative")
         ));
     }
 

@@ -10,11 +10,15 @@ use std::path::PathBuf;
 use crate::bench::{burst, complexity, esp, features, report};
 use crate::Result;
 
-/// Parsed `--key value` flags + positional args.
+/// Parsed `--key value` flags + positional args. The one short flag is
+/// `-l <spec>` (oarsub's resource request), which *accumulates*: each
+/// occurrence is a moldable alternative.
 #[derive(Debug, Default)]
 pub struct Flags {
     pub values: BTreeMap<String, String>,
     pub positional: Vec<String>,
+    /// Repeated `-l <spec>` hierarchical resource requests, in order.
+    pub resource_specs: Vec<String>,
 }
 
 impl Flags {
@@ -22,7 +26,14 @@ impl Flags {
         let mut flags = Flags::default();
         let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
+            if a == "-l" {
+                // A trailing `-l` with no spec becomes an empty request,
+                // which the server rejects with a typed bad_request —
+                // never a silently different job.
+                flags
+                    .resource_specs
+                    .push(it.next().cloned().unwrap_or_default());
+            } else if let Some(key) = a.strip_prefix("--") {
                 let value = it
                     .peek()
                     .filter(|v| !v.starts_with("--"))
@@ -102,6 +113,9 @@ Client commands (speak the socket protocol of docs/PROTOCOL.md; all take
               [--nodes N] [--weight W] [--maxtime SECS] [--queue Q]
               [--properties EXPR] [--reservation T] [--dir D]
               [--besteffort] [--interactive] [--array N]
+              [-l /switch=S/host=N/core=M,walltime=H:M:S]... (hierarchical
+              resource request; repeat -l for moldable alternatives, the
+              scheduler starts the first feasible shape)
   stat        oarstat: list jobs [--filter \"state = 'Running'\"]
   del         oardel: cancel a job   oar del <jobId>
   hold        oarhold: suspend a Waiting job   oar hold <jobId>
@@ -470,3 +484,36 @@ fn cmd_features() -> Result<i32> {
 pub mod demo;
 pub mod grid;
 pub mod net;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn repeated_dash_l_accumulates_alternatives() {
+        let f = Flags::parse(&args(&[
+            "--command",
+            "sleep 1",
+            "-l",
+            "/host=4/core=2",
+            "-l",
+            "/host=2/core=4,walltime=0:30:0",
+        ]));
+        assert_eq!(f.values.get("command").map(String::as_str), Some("sleep 1"));
+        assert_eq!(
+            f.resource_specs,
+            vec!["/host=4/core=2", "/host=2/core=4,walltime=0:30:0"]
+        );
+        assert!(f.positional.is_empty());
+    }
+
+    #[test]
+    fn trailing_dash_l_yields_an_empty_spec_not_a_silent_drop() {
+        let f = Flags::parse(&args(&["-l"]));
+        assert_eq!(f.resource_specs, vec![String::new()]);
+    }
+}

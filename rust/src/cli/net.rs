@@ -174,6 +174,11 @@ pub fn run_sub(flags: &Flags) -> Result<i32> {
     if flags.has("interactive") {
         spec.kind = JobKind::Interactive;
     }
+    if !flags.resource_specs.is_empty() {
+        // Each `-l` is one moldable alternative; the wire format joins
+        // them with the grammar's `|` separator (docs/PROTOCOL.md).
+        spec.resources = Some(flags.resource_specs.join(" | "));
+    }
 
     // Strict parse + range: `--array 4294967296` must error, not wrap
     // to 0 and silently submit a single job (mirrors the server side).

@@ -116,9 +116,37 @@ impl VirtualCluster {
         self.nodes.iter().map(|n| n.nb_procs).sum()
     }
 
-    /// Register the inventory into a database.
+    /// Register the inventory into a database: the resource *tree* is
+    /// the source of truth — one cluster root, a switch row per distinct
+    /// `switch` property, a host row per node (with cpu and core rows
+    /// beneath it) — and the nodes table is materialized as the derived
+    /// host-level view, exactly as the scheduler keeps reading it.
     pub fn register(&self, db: &mut crate::db::Db) {
+        use crate::resources::Level;
+        let root = db.add_resource(Level::Cluster, None, self.name, None);
+        let mut switch_ids: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
         for n in &self.nodes {
+            let sw = n
+                .properties
+                .get("switch")
+                .and_then(Value::as_str)
+                .unwrap_or("sw0")
+                .to_string();
+            let sw_id = *switch_ids
+                .entry(sw.clone())
+                .or_insert_with(|| db.add_resource(Level::Switch, Some(root), &sw, None));
+            let host = db.add_resource(Level::Host, Some(sw_id), &n.hostname, Some(n.id));
+            // Model each host as one cpu holding its cores; per-core
+            // rows make the core level queryable (`WHERE level='core'`).
+            let cpu = db.add_resource(Level::Cpu, Some(host), &format!("{}-cpu0", n.hostname), None);
+            for c in 0..n.nb_procs {
+                db.add_resource(
+                    Level::Core,
+                    Some(cpu),
+                    &format!("{}-core{c}", n.hostname),
+                    None,
+                );
+            }
             db.add_node(n.clone());
         }
     }
@@ -190,5 +218,24 @@ mod tests {
     #[test]
     fn protocol_latencies_ordered() {
         assert!(Protocol::Ssh.connect_micros() > Protocol::Rsh.connect_micros());
+    }
+
+    #[test]
+    fn register_writes_the_resource_tree_and_derived_nodes() {
+        use crate::resources::Level;
+        let c = VirtualCluster::icluster();
+        let mut db = crate::db::Db::with_standard_queues();
+        c.register(&mut db);
+        // 1 root + 5 switches + 119 hosts + 119 cpus + 119 cores.
+        assert_eq!(db.resource_count(), 1 + 5 + 119 + 119 + 119);
+        assert_eq!(db.resources_at(Level::Switch).len(), 5);
+        assert_eq!(db.resources_at(Level::Host).len(), 119);
+        // The nodes table is the derived host-level view.
+        assert_eq!(db.all_nodes().len(), 119);
+        // And the placement hierarchy reads back from the table.
+        let h = db.hierarchy();
+        assert_eq!(h.switches.len(), 5);
+        assert_eq!(h.host_count(), 119);
+        assert_eq!(h.core_count(), 119);
     }
 }

@@ -137,6 +137,7 @@ mod tests {
             stop_time: stop,
             best_effort: false,
             reservation_start: None,
+            resources: None,
         }
     }
 

@@ -132,6 +132,10 @@ pub struct Db {
     campaigns: Table,
     /// Grid federation: per-task placement rows.
     grid_tasks: Table,
+    /// Hierarchical resources (cluster/switch/host/cpu/core); the nodes
+    /// table is the derived host-level view. Empty on databases built
+    /// through bare `add_node` calls (the pre-hierarchy fixtures).
+    resources: Table,
     events: EventLog,
     stats: StatCounters,
     /// Incrementally-maintained materialized views (queue depth, node
@@ -188,6 +192,7 @@ impl Db {
             admission_rules: Table::new("admission_rules"),
             campaigns: Table::new("campaigns"),
             grid_tasks: Table::new("grid_tasks"),
+            resources: Table::new("resources"),
             events: EventLog::new(),
             stats: StatCounters::default(),
             views: Views::default(),
@@ -222,6 +227,8 @@ impl Db {
         self.queues.create_index("name");
         self.grid_tasks.create_index("state");
         self.grid_tasks.create_index("campaignId");
+        self.resources.create_index("level");
+        self.resources.create_index("parent");
     }
 
     /// Drop every secondary index on every table — benchmarks use this to
@@ -235,6 +242,7 @@ impl Db {
             &mut self.admission_rules,
             &mut self.campaigns,
             &mut self.grid_tasks,
+            &mut self.resources,
         ] {
             t.drop_all_indexes();
         }
@@ -254,6 +262,7 @@ impl Db {
             "admission_rules" => Some(&self.admission_rules),
             "campaigns" => Some(&self.campaigns),
             "grid_tasks" => Some(&self.grid_tasks),
+            "resources" => Some(&self.resources),
             _ => None,
         }
     }
@@ -267,6 +276,7 @@ impl Db {
             TableId::AdmissionRules => &mut self.admission_rules,
             TableId::Campaigns => &mut self.campaigns,
             TableId::GridTasks => &mut self.grid_tasks,
+            TableId::Resources => &mut self.resources,
         }
     }
 
@@ -512,6 +522,7 @@ impl Db {
             &self.admission_rules,
             &self.campaigns,
             &self.grid_tasks,
+            &self.resources,
         ]
         .iter()
         .all(|t| t.indexes_consistent())
@@ -615,6 +626,7 @@ impl Db {
             &self.admission_rules,
             &self.campaigns,
             &self.grid_tasks,
+            &self.resources,
         ] {
             let (probes, scans) = t.plan_counters();
             s.index_probes += probes;
@@ -641,6 +653,7 @@ impl Db {
             &self.admission_rules,
             &self.campaigns,
             &self.grid_tasks,
+            &self.resources,
         ] {
             t.reset_plan_counters();
         }
@@ -862,6 +875,30 @@ impl Db {
         }) as usize)
     }
 
+    /// Persist the shape a moldable job was actually granted: the
+    /// scheduler picked one of the request's alternatives, and the job
+    /// row's flat `nbNodes`/`weight` must match it before the node
+    /// assignment rows are written (occupancy accounting and the next
+    /// round's phase-1 re-occupation both read them).
+    pub fn set_job_shape(&mut self, id: JobId, nb_nodes: u32, weight: u32) -> Result<(), DbError> {
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
+        if self.jobs.get(id).is_none() {
+            return Err(DbError::JobNotFound(id));
+        }
+        for (col, value) in [
+            ("nbNodes", Value::Int(nb_nodes as i64)),
+            ("weight", Value::Int(weight as i64)),
+        ] {
+            self.mutate(Mutation::SetCell {
+                table: TableId::Jobs,
+                id,
+                col: col.into(),
+                value,
+            });
+        }
+        Ok(())
+    }
+
     // --------------------------------------------------------- nodes ----
 
     pub fn add_node(&mut self, node: Node) -> NodeId {
@@ -943,6 +980,87 @@ impl Db {
             }
         });
         Ok(out)
+    }
+
+    // ----------------------------------------------------- resources ----
+
+    /// INSERT one vertex of the resource tree (see [`crate::resources`]);
+    /// returns the assigned resource id. Rides [`Db::mutate`] like every
+    /// other write, so the tree is WAL-durable by construction.
+    pub fn add_resource(
+        &mut self,
+        level: crate::resources::Level,
+        parent: Option<u64>,
+        name: &str,
+        node_id: Option<NodeId>,
+    ) -> u64 {
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        let row = crate::resources::resource_to_row(&crate::resources::Resource {
+            id: 0, // assigned by the table on insert
+            level,
+            parent,
+            name: name.into(),
+            node_id,
+        });
+        self.mutate(Mutation::Insert {
+            table: TableId::Resources,
+            row,
+        })
+    }
+
+    /// Every vertex of the resource tree, in id order.
+    pub fn resources(&self) -> Vec<crate::resources::Resource> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::new();
+        self.resources.for_each_all(|id, r| {
+            if let Ok(res) = crate::resources::resource_from_row(id, r) {
+                out.push(res);
+            }
+        });
+        out
+    }
+
+    /// Vertices at one level — `SELECT * FROM resources WHERE level = ?`,
+    /// answered from the `level` index.
+    pub fn resources_at(&self, level: crate::resources::Level) -> Vec<crate::resources::Resource> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let key = Value::Text(level.as_str().to_string());
+        let mut out = Vec::new();
+        self.resources.for_each_eq("level", &key, |id, r| {
+            if let Ok(res) = crate::resources::resource_from_row(id, r) {
+                out.push(res);
+            }
+        });
+        out
+    }
+
+    /// Children of one vertex — answered from the `parent` index.
+    pub fn resource_children(&self, parent: u64) -> Vec<crate::resources::Resource> {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let key = Value::Int(parent as i64);
+        let mut out = Vec::new();
+        self.resources.for_each_eq("parent", &key, |id, r| {
+            if let Ok(res) = crate::resources::resource_from_row(id, r) {
+                out.push(res);
+            }
+        });
+        out
+    }
+
+    pub fn resource_count(&self) -> usize {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        self.resources.len()
+    }
+
+    /// The placement view the scheduler matches tree requests against:
+    /// built from the `resources` table when populated, else derived
+    /// from the nodes' `switch` property (databases registered before
+    /// the table existed behave exactly as they used to).
+    pub fn hierarchy(&self) -> crate::resources::Hierarchy {
+        if self.resources.is_empty() {
+            return crate::resources::Hierarchy::from_nodes(&self.all_nodes());
+        }
+        crate::resources::Hierarchy::from_resources(&self.resources(), &self.all_nodes())
     }
 
     // --------------------------------------------------- assignments ----
@@ -1691,6 +1809,7 @@ impl Db {
             ("admission_rules", self.admission_rules.to_json()),
             ("campaigns", self.campaigns.to_json()),
             ("grid_tasks", self.grid_tasks.to_json()),
+            ("resources", self.resources.to_json()),
             ("events", self.events.to_json()),
         ])
     }
@@ -1757,6 +1876,7 @@ impl Db {
             admission_rules: table("admission_rules")?,
             campaigns: table_or_empty("campaigns")?,
             grid_tasks: table_or_empty("grid_tasks")?,
+            resources: table_or_empty("resources")?,
             events: EventLog::from_json(
                 doc.get("events")
                     .ok_or_else(|| anyhow::anyhow!("snapshot missing events"))?,
@@ -1829,6 +1949,13 @@ fn job_to_row(job: &Job) -> Row {
         "reservationStart".into(),
         job.reservation_start.map(Value::Int).unwrap_or(Value::Null),
     );
+    r.insert(
+        "resources".into(),
+        job.resources
+            .clone()
+            .map(Value::Text)
+            .unwrap_or(Value::Null),
+    );
     r
 }
 
@@ -1899,6 +2026,12 @@ fn job_from_row(r: &Row) -> Result<Job, DbError> {
             .map(Value::is_truthy)
             .unwrap_or(false),
         reservation_start: r.get("reservationStart").and_then(Value::as_i64),
+        // Absent on rows written before the hierarchical request model
+        // existed — those jobs are plain flat submissions.
+        resources: r
+            .get("resources")
+            .and_then(Value::as_str)
+            .map(str::to_string),
     })
 }
 

@@ -79,6 +79,9 @@ pub enum TableId {
     Campaigns,
     /// Grid federation: one row per task, tracking remote placement.
     GridTasks,
+    /// Hierarchical resources (cluster/switch/host/cpu/core); the nodes
+    /// table is a derived view of the host level.
+    Resources,
 }
 
 impl TableId {
@@ -91,6 +94,7 @@ impl TableId {
             TableId::AdmissionRules => "admission_rules",
             TableId::Campaigns => "campaigns",
             TableId::GridTasks => "grid_tasks",
+            TableId::Resources => "resources",
         }
     }
 
@@ -103,6 +107,7 @@ impl TableId {
             "admission_rules" => TableId::AdmissionRules,
             "campaigns" => TableId::Campaigns,
             "grid_tasks" => TableId::GridTasks,
+            "resources" => TableId::Resources,
             _ => return None,
         })
     }

@@ -46,6 +46,14 @@
 //!   WAL-commit-before-ack, `RwLock<Db>` pinning, request-path
 //!   panic-freedom, atomics calibration). See `docs/LINTS.md`.
 
+//! * [`resources`] — the hierarchical resource subsystem: the
+//!   cluster/switch/host/cpu/core tree (stored as the `resources` table,
+//!   with the nodes table derived from its host level), the total parser
+//!   for the real `-l /switch=S/host=N/core=M,walltime=H:M:S` request
+//!   grammar with moldable alternatives, and the per-level
+//!   interval-counting matcher that places tree shapes under
+//!   conservative backfilling.
+
 pub mod admission;
 pub mod analysis;
 pub mod bench;
@@ -57,6 +65,7 @@ pub mod grid;
 pub mod launcher;
 pub mod matching;
 pub mod monitor;
+pub mod resources;
 pub mod rpc;
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,936 @@
+//! Hierarchical resources: the request grammar and placement model of
+//! the real OAR (`-l /switch=S/host=N/core=M,walltime=H:M:S`).
+//!
+//! The paper's resource model is a *tree* — cluster / switch / host /
+//! cpu / core — and a submission asks for a shape inside that tree, not
+//! a flat node count. This module provides the three pieces the rest of
+//! the system composes:
+//!
+//! * **Model** — [`Level`] / [`Resource`]: rows of the `resources`
+//!   table (WAL-durable, indexed by `level` and `parent`, snapshotted
+//!   like every other table). The nodes table is a *derived view* of the
+//!   host level: [`crate::cluster::VirtualCluster::register`] writes the
+//!   tree first and materializes one node row per host.
+//! * **Grammar** — [`parse_request`]: a *total* parser for the request
+//!   language, including property filters (`{mem > 1024}/host=2`) and
+//!   moldable alternatives (`/host=4/core=2 | /host=2/core=4`, from
+//!   repeated `-l` flags). Every input returns either a
+//!   [`ResourceRequest`] or a typed [`ParseError`] — never a panic —
+//!   and `parse → print → parse` is the identity on the printed form.
+//! * **Matcher** — [`find_earliest_tree`]: conservative-backfilling
+//!   placement of a tree shape by per-level interval counting. Each
+//!   host contributes the time ranges where it can start the per-host
+//!   slice ([`crate::sched::Gantt::feasible_starts`]); counting range
+//!   coverage at the host level yields per-switch feasibility intervals,
+//!   and counting *those* at the switch level yields the earliest
+//!   instant where S switches each hold N feasible hosts.
+//!
+//! Flat `nbNodes`/`weight` submissions keep working untouched: they
+//! desugar to `/host=N/core=weight` (see `docs/PROTOCOL.md`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::db::{Row, Value};
+use crate::types::{Node, NodeId, Time};
+
+// ================================================================ model ====
+
+/// A level of the resource tree, root to leaf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Cluster,
+    Switch,
+    Host,
+    Cpu,
+    Core,
+}
+
+impl Level {
+    /// Root-to-leaf order (the canonical printing order).
+    pub const ALL: [Level; 5] = [
+        Level::Cluster,
+        Level::Switch,
+        Level::Host,
+        Level::Cpu,
+        Level::Core,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Cluster => "cluster",
+            Level::Switch => "switch",
+            Level::Host => "host",
+            Level::Cpu => "cpu",
+            Level::Core => "core",
+        }
+    }
+
+    /// Parse a level name. Accepts the aliases the real corpus uses:
+    /// `node`/`nodes` for host (flat-spec vocabulary) and `socket` for
+    /// cpu (ReFrame: "number of sockets can also be specified using
+    /// cpu=...").
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s {
+            "cluster" => Level::Cluster,
+            "switch" => Level::Switch,
+            "host" | "node" | "nodes" => Level::Host,
+            "cpu" | "socket" => Level::Cpu,
+            "core" => Level::Core,
+            _ => return None,
+        })
+    }
+
+    /// Depth below the cluster root (cluster = 0, core = 4).
+    pub fn depth(self) -> usize {
+        match self {
+            Level::Cluster => 0,
+            Level::Switch => 1,
+            Level::Host => 2,
+            Level::Cpu => 3,
+            Level::Core => 4,
+        }
+    }
+}
+
+/// One row of the `resources` table: a vertex of the tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Resource {
+    /// Row id (assigned by the table; doubles as the tree vertex id).
+    pub id: u64,
+    pub level: Level,
+    /// Parent vertex; `None` only for the cluster root.
+    pub parent: Option<u64>,
+    pub name: String,
+    /// Host-level rows link to their derived row in the nodes table.
+    pub node_id: Option<NodeId>,
+}
+
+/// Encode a resource as a table row (the `id` column is assigned by the
+/// table on insert, like every other schema).
+pub fn resource_to_row(r: &Resource) -> Row {
+    let mut row = Row::new();
+    row.insert("level".into(), Value::Text(r.level.as_str().into()));
+    row.insert(
+        "parent".into(),
+        r.parent.map(|p| Value::Int(p as i64)).unwrap_or(Value::Null),
+    );
+    row.insert("name".into(), Value::Text(r.name.clone()));
+    row.insert(
+        "nodeId".into(),
+        r.node_id
+            .map(|n| Value::Int(n as i64))
+            .unwrap_or(Value::Null),
+    );
+    row
+}
+
+/// Decode a resource row.
+pub fn resource_from_row(id: u64, row: &Row) -> crate::Result<Resource> {
+    let level = row
+        .get("level")
+        .and_then(Value::as_str)
+        .and_then(Level::parse)
+        .ok_or_else(|| anyhow::anyhow!("resources.{id}: bad level"))?;
+    Ok(Resource {
+        id,
+        level,
+        parent: row.get("parent").and_then(Value::as_i64).map(|p| p as u64),
+        name: row
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        node_id: row
+            .get("nodeId")
+            .and_then(Value::as_i64)
+            .map(|n| n as NodeId),
+    })
+}
+
+// ============================================================== grammar ====
+
+/// Every way a request string can fail to parse. The parser is *total*:
+/// any input yields a [`ResourceRequest`] or one of these — admission
+/// and the RPC front-end surface them as `bad_request` with the
+/// rendered message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    /// Empty request (or an empty alternative between `|`s).
+    Empty,
+    /// A `{...}` property filter with no closing brace.
+    UnclosedProperties,
+    /// The spec must be `/level=count(/level=count)*`.
+    MissingSlash(String),
+    /// `level` is not one of switch/host/cpu/core (or an alias).
+    UnknownLevel(String),
+    /// The count is not a positive integer.
+    BadCount(String),
+    /// The same level given twice in one alternative.
+    DuplicateLevel(&'static str),
+    /// Levels must go root→leaf (e.g. `/core=2/host=4` is inverted).
+    OutOfOrder {
+        outer: &'static str,
+        inner: &'static str,
+    },
+    /// Walltime must be `H`, `H:M` or `H:M:S` with numeric parts.
+    BadWalltime(String),
+    /// An option other than `walltime` after the comma.
+    UnknownOption(String),
+    /// Folding `cpu=C/core=K` (or the total shape) overflows.
+    Overflow,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::Empty => write!(f, "empty resource request"),
+            ParseError::UnclosedProperties => {
+                write!(f, "unclosed '{{' in property filter")
+            }
+            ParseError::MissingSlash(s) => {
+                write!(f, "expected '/level=count' spec, got {s:?}")
+            }
+            ParseError::UnknownLevel(s) => write!(
+                f,
+                "unknown resource level {s:?} (expected switch, host, cpu or core)"
+            ),
+            ParseError::BadCount(s) => {
+                write!(f, "resource count must be a positive integer, got {s:?}")
+            }
+            ParseError::DuplicateLevel(l) => write!(f, "level {l:?} given twice"),
+            ParseError::OutOfOrder { outer, inner } => {
+                write!(f, "level {inner:?} cannot nest under {outer:?}")
+            }
+            ParseError::BadWalltime(s) => {
+                write!(f, "walltime must be H:M:S, got {s:?}")
+            }
+            ParseError::UnknownOption(s) => write!(f, "unknown request option {s:?}"),
+            ParseError::Overflow => write!(f, "resource request overflows"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// The canonical shape of one alternative: how many subtrees at each
+/// level. Levels absent from the spec default to 1, except `switch`,
+/// whose absence means "anywhere in the cluster" rather than "within 1
+/// switch" (so `/host=4` can span switches, as the flat model always
+/// could).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    /// `Some(s)`: s switches, each holding `hosts` feasible hosts.
+    /// `None`: no switch locality constraint.
+    pub switches: Option<u32>,
+    /// Hosts per switch (or cluster-wide when `switches` is `None`).
+    pub hosts: u32,
+    /// Cores on each host (`cpu=C/core=K` folds to C·K).
+    pub cores: u32,
+}
+
+impl Shape {
+    /// Flat equivalent: number of distinct hosts (`nbNodes`).
+    pub fn total_hosts(&self) -> Option<u32> {
+        self.switches.unwrap_or(1).checked_mul(self.hosts)
+    }
+
+    /// Flat equivalent: procs per host (`weight`).
+    pub fn weight(&self) -> u32 {
+        self.cores
+    }
+
+    /// Total processors the shape occupies.
+    pub fn total_procs(&self) -> Option<u32> {
+        self.total_hosts()?.checked_mul(self.cores)
+    }
+}
+
+/// One alternative of a (possibly moldable) request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Alternative {
+    /// Property filter scoping this alternative (`{mem > 1024}/...`),
+    /// a SQL expression in the same language as fig. 2's `properties`.
+    pub properties: Option<String>,
+    /// Requested levels with counts, in root→leaf order.
+    pub levels: Vec<(Level, u32)>,
+    /// Per-alternative walltime in seconds (`,walltime=H:M:S`).
+    pub walltime: Option<Time>,
+}
+
+impl Alternative {
+    /// Canonical shape (validation already guaranteed non-zero counts
+    /// and root→leaf order).
+    pub fn shape(&self) -> Result<Shape, ParseError> {
+        let mut switches = None;
+        let mut hosts = 1u32;
+        let mut cores = 1u32;
+        let mut cpus = 1u32;
+        for (level, count) in &self.levels {
+            match level {
+                Level::Cluster => {}
+                Level::Switch => switches = Some(*count),
+                Level::Host => hosts = *count,
+                Level::Cpu => cpus = *count,
+                Level::Core => cores = *count,
+            }
+        }
+        let cores = cpus.checked_mul(cores).ok_or(ParseError::Overflow)?;
+        let shape = Shape {
+            switches,
+            hosts,
+            cores,
+        };
+        shape.total_procs().ok_or(ParseError::Overflow)?;
+        Ok(shape)
+    }
+}
+
+impl fmt::Display for Alternative {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(p) = &self.properties {
+            write!(f, "{{{p}}}")?;
+        }
+        for (level, count) in &self.levels {
+            write!(f, "/{}={}", level.as_str(), count)?;
+        }
+        if let Some(w) = self.walltime {
+            write!(f, ",walltime={}:{}:{}", w / 3600, (w % 3600) / 60, w % 60)?;
+        }
+        Ok(())
+    }
+}
+
+/// A parsed request: one or more moldable alternatives. The scheduler
+/// picks whichever alternative can start earliest (ties go to the first
+/// one listed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResourceRequest {
+    pub alternatives: Vec<Alternative>,
+}
+
+impl ResourceRequest {
+    /// The walltime the request implies: the longest any alternative
+    /// asks for (conservative — the Gantt reservation covers whichever
+    /// alternative is picked).
+    pub fn walltime(&self) -> Option<Time> {
+        self.alternatives.iter().filter_map(|a| a.walltime).max()
+    }
+}
+
+impl fmt::Display for ResourceRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, alt) in self.alternatives.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            write!(f, "{alt}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Split on a separator, but only outside `{...}` property filters.
+fn split_outside_braces(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => depth = depth.saturating_sub(1),
+            c if c == sep && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + c.len_utf8();
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Parse a full request: alternatives joined by `|` (how repeated `-l`
+/// flags travel on the wire). Total: every input returns `Ok` or a
+/// typed error.
+pub fn parse_request(input: &str) -> Result<ResourceRequest, ParseError> {
+    let input = input.trim();
+    if input.is_empty() {
+        return Err(ParseError::Empty);
+    }
+    let mut alternatives = Vec::new();
+    for part in split_outside_braces(input, '|') {
+        alternatives.push(parse_alternative(part.trim())?);
+    }
+    Ok(ResourceRequest { alternatives })
+}
+
+fn parse_alternative(s: &str) -> Result<Alternative, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError::Empty);
+    }
+    // Optional `{properties}` prefix.
+    let (properties, rest) = if let Some(inner) = s.strip_prefix('{') {
+        let close = inner.find('}').ok_or(ParseError::UnclosedProperties)?;
+        let props = inner[..close].trim();
+        (
+            (!props.is_empty()).then(|| props.to_string()),
+            inner[close + 1..].trim_start(),
+        )
+    } else {
+        (None, s)
+    };
+    // `,`-separated options after the level spec; only walltime exists.
+    let mut pieces = split_outside_braces(rest, ',').into_iter();
+    let spec = pieces.next().unwrap_or("").trim();
+    let mut walltime = None;
+    for opt in pieces {
+        let opt = opt.trim();
+        match opt.split_once('=') {
+            Some((k, v)) if k.trim() == "walltime" => {
+                walltime = Some(parse_walltime(v.trim())?);
+            }
+            _ => return Err(ParseError::UnknownOption(opt.to_string())),
+        }
+    }
+    // The level spec proper: `/level=count` one or more times.
+    if !spec.starts_with('/') {
+        return Err(ParseError::MissingSlash(spec.to_string()));
+    }
+    let mut levels: Vec<(Level, u32)> = Vec::new();
+    for seg in spec[1..].split('/') {
+        let seg = seg.trim();
+        let (name, count) = seg
+            .split_once('=')
+            .ok_or_else(|| ParseError::MissingSlash(seg.to_string()))?;
+        let level =
+            Level::parse(name.trim()).ok_or_else(|| ParseError::UnknownLevel(name.to_string()))?;
+        if level == Level::Cluster {
+            // The cluster root is implicit; requesting it is a grammar
+            // error, same as any unknown level name.
+            return Err(ParseError::UnknownLevel(name.to_string()));
+        }
+        let count: u32 = count
+            .trim()
+            .parse()
+            .map_err(|_| ParseError::BadCount(count.to_string()))?;
+        if count == 0 {
+            return Err(ParseError::BadCount(count.to_string()));
+        }
+        if let Some((prev, _)) = levels.last() {
+            if prev.depth() >= level.depth() {
+                if *prev == level {
+                    return Err(ParseError::DuplicateLevel(level.as_str()));
+                }
+                return Err(ParseError::OutOfOrder {
+                    outer: level.as_str(),
+                    inner: prev.as_str(),
+                });
+            }
+        }
+        levels.push((level, count));
+    }
+    let alt = Alternative {
+        properties,
+        levels,
+        walltime,
+    };
+    // Reject shapes whose core/proc totals overflow right here, so a
+    // parsed request always has a computable flat equivalent.
+    alt.shape()?;
+    Ok(alt)
+}
+
+/// `H`, `H:M` or `H:M:S` → seconds.
+fn parse_walltime(s: &str) -> Result<Time, ParseError> {
+    let bad = || ParseError::BadWalltime(s.to_string());
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.is_empty() || parts.len() > 3 {
+        return Err(bad());
+    }
+    let mut nums = Vec::new();
+    for p in &parts {
+        let n: u32 = p.trim().parse().map_err(|_| bad())?;
+        nums.push(n as i64);
+    }
+    Ok(match nums.as_slice() {
+        [h] => h * 3600,
+        [h, m] => h * 3600 + m * 60,
+        [h, m, s] => h * 3600 + m * 60 + s,
+        _ => return Err(bad()),
+    })
+}
+
+// ============================================================ hierarchy ====
+
+/// A host slot of the placement tree: the derived node plus its core
+/// capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeHost {
+    pub node: NodeId,
+    pub procs: u32,
+}
+
+/// One switch subtree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeSwitch {
+    pub name: String,
+    pub hosts: Vec<TreeHost>,
+}
+
+/// The placement view of the resource tree: switches → hosts → core
+/// counts. Built from the `resources` table when populated, or derived
+/// from the nodes' `switch` property for databases registered before
+/// the table existed (every pre-existing test fixture).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Hierarchy {
+    pub switches: Vec<TreeSwitch>,
+}
+
+impl Hierarchy {
+    /// Build from `resources` rows. Host capacity comes from the core
+    /// rows beneath each host (via its cpus), falling back to the
+    /// derived node's `nbProcs` when the tree stops at host level.
+    pub fn from_resources(resources: &[Resource], nodes: &[Node]) -> Hierarchy {
+        let procs_of: BTreeMap<NodeId, u32> = nodes.iter().map(|n| (n.id, n.nb_procs)).collect();
+        // children[parent] = child ids, one pass.
+        let mut children: BTreeMap<u64, Vec<&Resource>> = BTreeMap::new();
+        for r in resources {
+            if let Some(p) = r.parent {
+                children.entry(p).or_default().push(r);
+            }
+        }
+        let mut switches = Vec::new();
+        let mut sw_rows: Vec<&Resource> = resources
+            .iter()
+            .filter(|r| r.level == Level::Switch)
+            .collect();
+        sw_rows.sort_by_key(|r| r.id);
+        for sw in sw_rows {
+            let mut hosts = Vec::new();
+            for host in children.get(&sw.id).into_iter().flatten() {
+                if host.level != Level::Host {
+                    continue;
+                }
+                let Some(node) = host.node_id else { continue };
+                // Count core leaves under the host (cpu rows in
+                // between), else trust the derived node row.
+                let mut cores = 0u32;
+                for cpu in children.get(&host.id).into_iter().flatten() {
+                    match cpu.level {
+                        Level::Core => cores += 1,
+                        Level::Cpu => {
+                            cores += children
+                                .get(&cpu.id)
+                                .map(|cs| {
+                                    cs.iter().filter(|c| c.level == Level::Core).count() as u32
+                                })
+                                .unwrap_or(0)
+                        }
+                        _ => {}
+                    }
+                }
+                let procs = if cores > 0 {
+                    cores
+                } else {
+                    procs_of.get(&node).copied().unwrap_or(1)
+                };
+                hosts.push(TreeHost { node, procs });
+            }
+            hosts.sort_by_key(|h| h.node);
+            switches.push(TreeSwitch {
+                name: sw.name.clone(),
+                hosts,
+            });
+        }
+        Hierarchy { switches }
+    }
+
+    /// Derive from plain nodes: group by the `switch` text property
+    /// (one synthetic switch when absent).
+    pub fn from_nodes(nodes: &[Node]) -> Hierarchy {
+        let mut by_switch: BTreeMap<String, Vec<TreeHost>> = BTreeMap::new();
+        for n in nodes {
+            let sw = n
+                .properties
+                .get("switch")
+                .and_then(Value::as_str)
+                .unwrap_or("sw0")
+                .to_string();
+            by_switch.entry(sw).or_default().push(TreeHost {
+                node: n.id,
+                procs: n.nb_procs,
+            });
+        }
+        let switches = by_switch
+            .into_iter()
+            .map(|(name, mut hosts)| {
+                hosts.sort_by_key(|h| h.node);
+                TreeSwitch { name, hosts }
+            })
+            .collect();
+        Hierarchy { switches }
+    }
+
+    pub fn host_count(&self) -> usize {
+        self.switches.iter().map(|s| s.hosts.len()).sum()
+    }
+
+    pub fn core_count(&self) -> u64 {
+        self.switches
+            .iter()
+            .flat_map(|s| &s.hosts)
+            .map(|h| h.procs as u64)
+            .sum()
+    }
+}
+
+// ============================================================== matcher ====
+
+/// Inclusive time intervals during which at least `need` of the given
+/// ranges are simultaneously open — the per-level counting primitive.
+/// Each member's ranges must be pairwise disjoint (true of
+/// [`crate::sched::Gantt::feasible_starts`] output), so counting open
+/// ranges equals counting feasible members.
+pub fn coverage_intervals(ranges: &[(Time, Time)], need: usize) -> Vec<(Time, Time)> {
+    if need == 0 {
+        return vec![(0, Time::MAX / 4)];
+    }
+    let mut events: Vec<(Time, i32)> = Vec::with_capacity(ranges.len() * 2);
+    for (lo, hi) in ranges {
+        if lo > hi {
+            continue;
+        }
+        events.push((*lo, 1));
+        events.push((hi.saturating_add(1), -1));
+    }
+    events.sort_unstable();
+    let mut out = Vec::new();
+    let mut count = 0i32;
+    let mut open_at: Option<Time> = None;
+    for (t, delta) in events {
+        count += delta;
+        if count >= need as i32 {
+            if open_at.is_none() {
+                open_at = Some(t);
+            }
+        } else if let Some(lo) = open_at.take() {
+            if lo <= t - 1 {
+                out.push((lo, t - 1));
+            }
+        }
+    }
+    out
+}
+
+/// Earliest placement of `shape` in the tree: the start instant and the
+/// chosen hosts (each to be occupied with `shape.cores` procs).
+///
+/// `feasible(node, procs)` returns the inclusive ranges of start times
+/// at which `node` can hold `procs` procs for the job's duration — the
+/// per-node timeline scan the flat Gantt already does. The tree search
+/// stacks two counting passes on top: host ranges → per-switch
+/// intervals (≥ N hosts open) → cross-switch coverage (≥ S switches
+/// open).
+pub fn find_earliest_tree<F>(
+    tree: &Hierarchy,
+    eligible: &[NodeId],
+    shape: &Shape,
+    feasible: F,
+) -> Option<(Time, Vec<NodeId>)>
+where
+    F: Fn(NodeId, u32) -> Vec<(Time, Time)>,
+{
+    let elig: std::collections::BTreeSet<NodeId> = eligible.iter().copied().collect();
+    let weight = shape.cores;
+    // Per-switch: each eligible host's feasible ranges.
+    let mut per_switch: Vec<Vec<(NodeId, Vec<(Time, Time)>)>> = Vec::new();
+    for sw in &tree.switches {
+        let mut hosts = Vec::new();
+        for h in &sw.hosts {
+            if h.procs < weight || !elig.contains(&h.node) {
+                continue;
+            }
+            let ranges = feasible(h.node, weight);
+            if !ranges.is_empty() {
+                hosts.push((h.node, ranges));
+            }
+        }
+        per_switch.push(hosts);
+    }
+
+    let start = match shape.switches {
+        None => {
+            // No locality constraint: pool every host, count cluster-wide.
+            let total_hosts = shape.total_hosts()? as usize;
+            let pooled: Vec<(Time, Time)> = per_switch
+                .iter()
+                .flatten()
+                .flat_map(|(_, rs)| rs.iter().copied())
+                .collect();
+            coverage_intervals(&pooled, total_hosts).first()?.0
+        }
+        Some(s) => {
+            // Per-switch intervals where >= hosts are open, then count
+            // switches the same way.
+            let mut switch_ranges = Vec::new();
+            for hosts in &per_switch {
+                let flat: Vec<(Time, Time)> = hosts
+                    .iter()
+                    .flat_map(|(_, rs)| rs.iter().copied())
+                    .collect();
+                switch_ranges.extend(coverage_intervals(&flat, shape.hosts as usize));
+            }
+            coverage_intervals(&switch_ranges, s as usize).first()?.0
+        }
+    };
+
+    // Materialize: pick hosts whose ranges cover `start`, respecting
+    // the per-switch quota when switch locality was requested.
+    let covers =
+        |ranges: &[(Time, Time)]| ranges.iter().any(|(lo, hi)| *lo <= start && start <= *hi);
+    let mut chosen = Vec::new();
+    match shape.switches {
+        None => {
+            let need = shape.total_hosts()? as usize;
+            for (node, ranges) in per_switch.iter().flatten() {
+                if chosen.len() == need {
+                    break;
+                }
+                if covers(ranges) {
+                    chosen.push(*node);
+                }
+            }
+            if chosen.len() < need {
+                return None;
+            }
+        }
+        Some(s) => {
+            let mut switches_done = 0u32;
+            for hosts in &per_switch {
+                if switches_done == s {
+                    break;
+                }
+                let open: Vec<NodeId> = hosts
+                    .iter()
+                    .filter(|(_, rs)| covers(rs))
+                    .map(|(n, _)| *n)
+                    .collect();
+                if open.len() >= shape.hosts as usize {
+                    chosen.extend(open.into_iter().take(shape.hosts as usize));
+                    switches_done += 1;
+                }
+            }
+            if switches_done < s {
+                return None;
+            }
+        }
+    }
+    Some((start, chosen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(s: &str) -> ResourceRequest {
+        parse_request(s).unwrap_or_else(|e| panic!("{s:?}: {e}"))
+    }
+
+    #[test]
+    fn parses_the_reframe_corpus_shape() {
+        let r = req("/host=2/core=4,walltime=0:30:0");
+        assert_eq!(r.alternatives.len(), 1);
+        let shape = r.alternatives[0].shape().unwrap();
+        assert_eq!(shape.switches, None);
+        assert_eq!(shape.hosts, 2);
+        assert_eq!(shape.cores, 4);
+        assert_eq!(r.walltime(), Some(1800));
+    }
+
+    #[test]
+    fn switch_and_cpu_levels_fold() {
+        let r = req("/switch=2/host=3/cpu=2/core=4");
+        let shape = r.alternatives[0].shape().unwrap();
+        assert_eq!(shape.switches, Some(2));
+        assert_eq!(shape.hosts, 3);
+        assert_eq!(shape.cores, 8, "cpu=2/core=4 folds to 8 per host");
+        assert_eq!(shape.total_hosts(), Some(6));
+        assert_eq!(shape.total_procs(), Some(48));
+    }
+
+    #[test]
+    fn property_filters_and_alternatives() {
+        let r = req("{mem > 1024}/host=4/core=2 | /host=2/core=4,walltime=1:0:0");
+        assert_eq!(r.alternatives.len(), 2);
+        assert_eq!(r.alternatives[0].properties.as_deref(), Some("mem > 1024"));
+        assert_eq!(r.alternatives[1].properties, None);
+        assert_eq!(r.walltime(), Some(3600));
+    }
+
+    #[test]
+    fn print_parse_roundtrip_is_identity() {
+        for s in [
+            "/host=2/core=4,walltime=0:30:0",
+            "{mem > 1024}/switch=2/host=3/cpu=2/core=4",
+            "/host=4/core=2 | /host=2/core=4",
+            "/switch=1/host=16,walltime=12:0:0",
+        ] {
+            let printed = req(s).to_string();
+            assert_eq!(req(&printed).to_string(), printed, "roundtrip of {s:?}");
+        }
+    }
+
+    #[test]
+    fn typed_errors_for_every_failure_mode() {
+        use ParseError as E;
+        assert_eq!(parse_request(""), Err(E::Empty));
+        assert_eq!(parse_request("/host=2 |"), Err(E::Empty));
+        assert!(matches!(parse_request("{mem > 1"), Err(E::UnclosedProperties)));
+        assert!(matches!(parse_request("host=2"), Err(E::MissingSlash(_))));
+        assert!(matches!(parse_request("/rack=2"), Err(E::UnknownLevel(_))));
+        assert!(matches!(parse_request("/cluster=1"), Err(E::UnknownLevel(_))));
+        assert!(matches!(parse_request("/host=zero"), Err(E::BadCount(_))));
+        assert!(matches!(parse_request("/host=0"), Err(E::BadCount(_))));
+        assert!(matches!(
+            parse_request("/host=2/host=3"),
+            Err(E::DuplicateLevel("host"))
+        ));
+        assert!(matches!(
+            parse_request("/core=2/host=4"),
+            Err(E::OutOfOrder { .. })
+        ));
+        assert!(matches!(
+            parse_request("/host=2,walltime=abc"),
+            Err(E::BadWalltime(_))
+        ));
+        assert!(matches!(
+            parse_request("/host=2,fancy=1"),
+            Err(E::UnknownOption(_))
+        ));
+        assert!(matches!(
+            parse_request("/host=100000/core=100000"),
+            Err(E::Overflow)
+        ));
+    }
+
+    #[test]
+    fn coverage_counts_members_not_ranges() {
+        // Two hosts free over [0,10] and [5,20]: both open only on [5,10].
+        let ranges = [(0, 10), (5, 20)];
+        assert_eq!(coverage_intervals(&ranges, 2), vec![(5, 10)]);
+        assert_eq!(coverage_intervals(&ranges, 1), vec![(0, 20)]);
+        assert_eq!(coverage_intervals(&ranges, 3), vec![]);
+    }
+
+    fn two_switch_tree() -> Hierarchy {
+        Hierarchy {
+            switches: vec![
+                TreeSwitch {
+                    name: "sw1".into(),
+                    hosts: vec![
+                        TreeHost { node: 1, procs: 4 },
+                        TreeHost { node: 2, procs: 4 },
+                    ],
+                },
+                TreeSwitch {
+                    name: "sw2".into(),
+                    hosts: vec![
+                        TreeHost { node: 3, procs: 4 },
+                        TreeHost { node: 4, procs: 4 },
+                    ],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn tree_matcher_respects_switch_locality() {
+        let tree = two_switch_tree();
+        let elig = vec![1, 2, 3, 4];
+        // Node 2 busy until t=100: /switch=1/host=2 must wait for sw1 or
+        // use sw2 immediately — sw2 is free now.
+        let feasible = |node: NodeId, _w: u32| -> Vec<(Time, Time)> {
+            if node == 2 {
+                vec![(100, Time::MAX / 4)]
+            } else {
+                vec![(0, Time::MAX / 4)]
+            }
+        };
+        let shape = Shape {
+            switches: Some(1),
+            hosts: 2,
+            cores: 2,
+        };
+        let (t, nodes) = find_earliest_tree(&tree, &elig, &shape, feasible).unwrap();
+        assert_eq!(t, 0);
+        assert_eq!(nodes, vec![3, 4], "whole sw2 is free now");
+        // Both switches: must wait for node 2.
+        let shape = Shape {
+            switches: Some(2),
+            hosts: 2,
+            cores: 2,
+        };
+        let (t, nodes) = find_earliest_tree(&tree, &elig, &shape, feasible).unwrap();
+        assert_eq!(t, 100);
+        assert_eq!(nodes.len(), 4);
+    }
+
+    #[test]
+    fn tree_matcher_pools_without_switch_constraint(){
+        let tree = two_switch_tree();
+        let shape = Shape {
+            switches: None,
+            hosts: 3,
+            cores: 4,
+        };
+        let feasible = |_n: NodeId, _w: u32| vec![(7, Time::MAX / 4)];
+        let (t, nodes) =
+            find_earliest_tree(&tree, &[1, 2, 3, 4], &shape, feasible).unwrap();
+        assert_eq!(t, 7);
+        assert_eq!(nodes.len(), 3, "3 hosts drawn across switches");
+        // Capacity gate: cores > host procs is never feasible.
+        let shape = Shape {
+            switches: None,
+            hosts: 1,
+            cores: 8,
+        };
+        assert!(find_earliest_tree(&tree, &[1, 2, 3, 4], &shape, feasible).is_none());
+    }
+
+    #[test]
+    fn hierarchy_from_nodes_groups_by_switch_property() {
+        let nodes = vec![
+            Node::new(1, "a", 2).with_prop("switch", Value::Text("s1".into())),
+            Node::new(2, "b", 2).with_prop("switch", Value::Text("s2".into())),
+            Node::new(3, "c", 2).with_prop("switch", Value::Text("s1".into())),
+            Node::new(4, "d", 8),
+        ];
+        let h = Hierarchy::from_nodes(&nodes);
+        assert_eq!(h.switches.len(), 3, "s1, s2 and the sw0 fallback");
+        assert_eq!(h.host_count(), 4);
+        assert_eq!(h.core_count(), 14);
+    }
+
+    #[test]
+    fn resource_row_roundtrip() {
+        let r = Resource {
+            id: 7,
+            level: Level::Host,
+            parent: Some(2),
+            name: "node-3".into(),
+            node_id: Some(3),
+        };
+        let back = resource_from_row(7, &resource_to_row(&r)).unwrap();
+        assert_eq!(back, r);
+        let root = Resource {
+            id: 1,
+            level: Level::Cluster,
+            parent: None,
+            name: "cluster".into(),
+            node_id: None,
+        };
+        let back = resource_from_row(1, &resource_to_row(&root)).unwrap();
+        assert_eq!(back, root);
+    }
+}

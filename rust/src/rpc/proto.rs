@@ -166,6 +166,7 @@ const SPEC_FIELDS: &[&str] = &[
     "launchingDirectory",
     "bestEffort",
     "array",
+    "resources",
 ];
 
 /// Encode a submission as `sub` params (field names follow fig. 2, as the
@@ -186,6 +187,7 @@ pub fn spec_to_json(spec: &JobSpec) -> Json {
             Json::Str(spec.launching_directory.clone()),
         ),
         ("bestEffort", Json::Bool(spec.best_effort)),
+        ("resources", opt_str(&spec.resources)),
     ])
 }
 
@@ -245,6 +247,15 @@ pub fn spec_from_json(doc: &Json) -> Result<JobSpec> {
         spec.launching_directory = d;
     }
     spec.best_effort = bool_field("bestEffort")?.unwrap_or(false);
+    if let Some(r) = str_field("resources")? {
+        // Validate with the total grammar here, so a malformed tree
+        // request is a typed `bad_request` at the protocol edge — the
+        // same field on an older server is rejected as an unknown
+        // submission field (see PROTOCOL.md).
+        crate::resources::parse_request(&r)
+            .map_err(|e| anyhow::anyhow!("bad resources request: {e}"))?;
+        spec.resources = Some(r);
+    }
     Ok(spec)
 }
 
@@ -279,6 +290,7 @@ pub fn job_to_json(job: &Job) -> Json {
         ("stopTime", opt_num(job.stop_time)),
         ("bestEffort", Json::Bool(job.best_effort)),
         ("reservationStart", opt_num(job.reservation_start)),
+        ("resources", opt_str(&job.resources)),
     ])
 }
 
@@ -333,6 +345,7 @@ pub fn job_from_json(doc: &Json) -> Result<Job> {
         stop_time: opt_num_field("stopTime"),
         best_effort: doc.get("bestEffort").and_then(Json::as_bool).unwrap_or(false),
         reservation_start: opt_num_field("reservationStart"),
+        resources: opt_str_field("resources"),
     })
 }
 
@@ -487,6 +500,7 @@ mod tests {
             reservation_start: Some(4242),
             launching_directory: "/home/alice".into(),
             best_effort: true,
+            resources: Some("/host=3/core=2".into()),
         };
         let back = spec_from_json(&spec_to_json(&spec)).unwrap();
         assert_eq!(back, spec);
@@ -510,6 +524,11 @@ mod tests {
         let doc = Json::obj(vec![("maxTime", Json::Num(0.5))]);
         assert!(spec_from_json(&doc).is_err());
         assert!(spec_from_json(&Json::Null).is_err());
+        // A malformed tree request is bad_request at the edge, with the
+        // grammar's typed error in the message.
+        let doc = Json::obj(vec![("resources", Json::Str("/rack=2".into()))]);
+        let err = spec_from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown resource level"), "{err}");
     }
 
     #[test]

@@ -126,6 +126,7 @@ mod tests {
             eligible: vec![1, 2, 3, 4],
             best_effort: false,
             score: 0.0,
+            alts: vec![],
         }
     }
 

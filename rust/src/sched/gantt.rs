@@ -12,6 +12,7 @@
 use std::collections::BTreeMap;
 
 
+use crate::resources::Hierarchy;
 use crate::types::{JobId, NodeId, Time};
 
 /// One placed allocation (a rectangle of the Gantt).
@@ -163,6 +164,14 @@ pub const FAR_FUTURE: Time = Time::MAX / 4;
 #[derive(Debug, Clone)]
 pub struct Gantt {
     nodes: BTreeMap<NodeId, NodeTimeline>,
+    /// Placement tree for hierarchical (`/switch=…`) requests; `None`
+    /// keeps every policy on the flat per-node path.
+    hierarchy: Option<Hierarchy>,
+    /// Moldable placements recorded while policies carve the diagram:
+    /// `(job, nb_nodes, weight)` of the alternative that won. The
+    /// meta-scheduler drains these and persists the chosen shape for
+    /// jobs that actually start.
+    reshapes: Vec<(JobId, u32, u32)>,
 }
 
 impl Gantt {
@@ -181,7 +190,47 @@ impl Gantt {
                     )
                 })
                 .collect(),
+            hierarchy: None,
+            reshapes: Vec::new(),
         }
+    }
+
+    /// Attach the placement tree used by hierarchical requests.
+    pub fn set_hierarchy(&mut self, hierarchy: Hierarchy) {
+        self.hierarchy = Some(hierarchy);
+    }
+
+    pub fn hierarchy(&self) -> Option<&Hierarchy> {
+        self.hierarchy.as_ref()
+    }
+
+    /// Record that `job` was placed with a shape other than its stored
+    /// `nbNodes × weight` (a moldable alternative won).
+    pub fn note_reshape(&mut self, job: JobId, nb_nodes: u32, weight: u32) {
+        self.reshapes.push((job, nb_nodes, weight));
+    }
+
+    /// Drain the recorded moldable placements.
+    pub fn take_reshapes(&mut self) -> Vec<(JobId, u32, u32)> {
+        std::mem::take(&mut self.reshapes)
+    }
+
+    /// Inclusive time ranges from which a `(weight, dur)` job could start
+    /// on `node` — the per-node timeline scan behind [`Gantt::find_earliest`],
+    /// exposed so the tree matcher
+    /// ([`crate::resources::find_earliest_tree`]) can stack per-level
+    /// interval counting on top of it.
+    pub fn feasible_starts(
+        &self,
+        node: NodeId,
+        weight: u32,
+        dur: Time,
+        not_before: Time,
+    ) -> Vec<(Time, Time)> {
+        self.nodes
+            .get(&node)
+            .map(|tl| tl.feasible_starts(weight, dur, not_before))
+            .unwrap_or_default()
     }
 
     pub fn node_ids(&self) -> Vec<NodeId> {
@@ -545,6 +594,27 @@ mod tests {
         }
         assert!(g.occupy(9000, 1, 24, 0, 200));
         assert!(!g.occupy(9001, 1, 1, 0, 200), "exactly full at the peak");
+    }
+
+    #[test]
+    fn public_feasible_starts_mirrors_the_timeline_scan() {
+        let mut g = gantt2();
+        g.occupy(1, 1, 2, 10, 20);
+        // Full node over [10, 20): a 5s single-proc job can start in
+        // [0, 5] (finishing by 10) or any time from 20 on.
+        let r = g.feasible_starts(1, 1, 5, 0);
+        assert_eq!(r, vec![(0, 5), (20, FAR_FUTURE)]);
+        // Unknown nodes have no feasible starts.
+        assert!(g.feasible_starts(99, 1, 5, 0).is_empty());
+    }
+
+    #[test]
+    fn reshape_channel_drains_once() {
+        let mut g = gantt2();
+        assert!(g.take_reshapes().is_empty());
+        g.note_reshape(7, 2, 4);
+        assert_eq!(g.take_reshapes(), vec![(7, 2, 4)]);
+        assert!(g.take_reshapes().is_empty(), "drained");
     }
 
     #[test]

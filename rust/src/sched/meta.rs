@@ -21,9 +21,11 @@ use crate::types::{
 };
 use crate::Result;
 
+use crate::resources::Shape;
+
 use super::gantt::Gantt;
 use super::policies::{
-    BestEffortPolicy, FifoConservative, PolicyJob, QueuePolicy, SjfConservative,
+    AltShape, BestEffortPolicy, FifoConservative, PolicyJob, QueuePolicy, SjfConservative,
 };
 
 /// Meta-scheduler tunables.
@@ -66,6 +68,10 @@ pub struct SchedulerDecision {
     pub reservations_confirmed: Vec<(JobId, Vec<NodeId>)>,
     /// `toSchedule` reservations that could not be granted: → Error.
     pub reservations_rejected: Vec<JobId>,
+    /// Moldable jobs among `starts` whose winning alternative differs
+    /// from the stored `nbNodes × weight`: `(job, nb_nodes, weight)`
+    /// for the caller to persist *before* writing the assignment.
+    pub reshapes: Vec<(JobId, u32, u32)>,
 }
 
 /// The meta-scheduler module.
@@ -114,6 +120,9 @@ impl MetaScheduler {
         let fleet = db.all_nodes();
         let node_caps: Vec<(NodeId, u32)> = nodes.iter().map(|n| (n.id, n.nb_procs)).collect();
         let mut gantt = Gantt::new(&node_caps);
+        // Placement tree for hierarchical requests: the resources table
+        // when populated, or the nodes' `switch` property otherwise.
+        gantt.set_hierarchy(db.hierarchy());
 
         // 1. Occupy resources of live regular jobs (running best-effort
         //    jobs are deliberately left out: they are pre-emptable, §3.3).
@@ -262,6 +271,17 @@ impl MetaScheduler {
             decision.starts.extend(starts);
         }
 
+        // 7. Persist the winning moldable shape only for jobs that start
+        //    now: future placements are re-planned from scratch next round
+        //    (no hidden state), so their reshapes are discarded.
+        let started: std::collections::BTreeSet<JobId> =
+            decision.starts.iter().map(|s| s.0).collect();
+        decision.reshapes = gantt
+            .take_reshapes()
+            .into_iter()
+            .filter(|(id, _, _)| started.contains(id))
+            .collect();
+
         Ok(decision)
     }
 
@@ -280,7 +300,7 @@ impl MetaScheduler {
         if !self.config.dense_matching || nodes.len() > shapes::N {
             for job in waiting {
                 let eligible = SqlMatcher::eligible_nodes(&job.properties, nodes)?;
-                out.push(to_policy_job(job, eligible));
+                out.push(to_policy_job(job, eligible, nodes)?);
             }
             let _ = db;
             return Ok(out);
@@ -327,7 +347,7 @@ impl MetaScheduler {
                         .map(|(_, id)| *id)
                         .collect()
                 };
-                let mut pj = to_policy_job(job, eligible);
+                let mut pj = to_policy_job(job, eligible, nodes)?;
                 pj.score = output.scores[row];
                 out.push(pj);
             }
@@ -342,8 +362,43 @@ fn expected_stop(job: &Job, now: Time) -> Time {
     (base + job.max_time).max(now + 1)
 }
 
-fn to_policy_job(job: &Job, eligible: Vec<NodeId>) -> PolicyJob {
-    PolicyJob {
+/// Does the parsed request need the moldable/hierarchical placement
+/// path, or is the flat `nbNodes × weight` desugar already equivalent?
+fn needs_alts(req: &crate::resources::ResourceRequest) -> bool {
+    req.alternatives.len() > 1
+        || req.alternatives.iter().any(|a| {
+            a.properties.is_some() || a.shape().is_ok_and(|s| s.switches.is_some())
+        })
+}
+
+fn to_policy_job(
+    job: &Job,
+    eligible: Vec<NodeId>,
+    nodes: &[crate::types::Node],
+) -> Result<PolicyJob> {
+    // Admission stores the canonical printed form, so parsing here can
+    // only fail on a row edited behind the system's back — which falls
+    // back to the flat shape admission derived, never a crash.
+    let mut alts = Vec::new();
+    if let Some(Ok(req)) = job.resources.as_deref().map(crate::resources::parse_request) {
+        if needs_alts(&req) {
+            for a in &req.alternatives {
+                let Ok(shape) = a.shape() else { continue };
+                let alt_eligible = match &a.properties {
+                    Some(props) => {
+                        // The alternative's `{filter}` narrows the
+                        // job-level eligible set.
+                        let mut e = SqlMatcher::eligible_nodes(props, nodes)?;
+                        e.retain(|n| eligible.contains(n));
+                        Some(e)
+                    }
+                    None => None,
+                };
+                alts.push(AltShape { shape, eligible: alt_eligible });
+            }
+        }
+    }
+    Ok(PolicyJob {
         id: job.id,
         nb_nodes: job.nb_nodes,
         weight: job.weight,
@@ -352,7 +407,8 @@ fn to_policy_job(job: &Job, eligible: Vec<NodeId>) -> PolicyJob {
         eligible,
         best_effort: job.best_effort,
         score: 0.0,
-    }
+        alts,
+    })
 }
 
 /// Jobs that no configuration of the *registered* fleet could ever run
@@ -360,6 +416,11 @@ fn to_policy_job(job: &Job, eligible: Vec<NodeId>) -> PolicyJob {
 /// than `nbNodes`, or `weight` exceeding every matching node's processor
 /// count — checked against fleet *capacity*, not current load or node
 /// state, so a job blocked only by a transient failure keeps Waiting.
+///
+/// A moldable job is judged by its *minimum* requirement: it is
+/// impossible only when **no** alternative fits the registered fleet.
+/// Alternative-level `{filter}`s are ignored here — that can only keep
+/// a doomed job Waiting, never wrongly error a feasible one.
 fn split_impossible(
     jobs: Vec<PolicyJob>,
     waiting: &[Job],
@@ -374,26 +435,75 @@ fn split_impossible(
         .collect();
     for job in jobs {
         let properties = props.get(&job.id).copied().unwrap_or("");
-        let capable = match crate::db::Expr::parse(properties) {
-            Ok(expr) => fleet
-                .iter()
-                .filter(|n| n.nb_procs >= job.weight && expr.matches(&n.property_row()))
-                .count(),
-            Err(_) => 0,
-        };
-        if capable < job.nb_nodes as usize {
-            impossible.push((
-                job.id,
+        let expr = crate::db::Expr::parse(properties).ok();
+        let verdict = if job.alts.is_empty() {
+            let capable = capable_count(fleet, &expr, job.weight);
+            (capable < job.nb_nodes as usize).then(|| {
                 format!(
                     "unsatisfiable: {} capable nodes < nbNodes {}",
                     capable, job.nb_nodes
-                ),
-            ));
+                )
+            })
         } else {
-            feasible.push(job);
+            let possible = job.alts.iter().any(|a| alt_fits_fleet(fleet, &expr, &a.shape));
+            (!possible)
+                .then(|| "unsatisfiable: no alternative fits the registered fleet".to_string())
+        };
+        match verdict {
+            Some(why) => impossible.push((job.id, why)),
+            None => feasible.push(job),
         }
     }
     (feasible, impossible)
+}
+
+/// Registered nodes matching `expr` with at least `weight` processors.
+/// An unparseable expression matches nothing (the pre-existing rule).
+fn capable_count(fleet: &[crate::types::Node], expr: &Option<crate::db::Expr>, weight: u32) -> usize {
+    match expr {
+        Some(e) => fleet
+            .iter()
+            .filter(|n| n.nb_procs >= weight && e.matches(&n.property_row()))
+            .count(),
+        None => 0,
+    }
+}
+
+/// Could any configuration of the registered fleet hold `shape`? For
+/// switch-constrained shapes this demands `switches` distinct `switch`
+/// property values each with at least `hosts` capable nodes.
+fn alt_fits_fleet(
+    fleet: &[crate::types::Node],
+    expr: &Option<crate::db::Expr>,
+    shape: &Shape,
+) -> bool {
+    let Some(total_hosts) = shape.total_hosts() else {
+        return false;
+    };
+    let capable = |n: &&crate::types::Node| {
+        n.nb_procs >= shape.cores
+            && expr.as_ref().is_some_and(|e| e.matches(&n.property_row()))
+    };
+    match shape.switches {
+        None => fleet.iter().filter(capable).count() >= total_hosts as usize,
+        Some(s) => {
+            let mut per_switch: std::collections::BTreeMap<&str, usize> =
+                std::collections::BTreeMap::new();
+            for n in fleet.iter().filter(capable) {
+                let sw = n
+                    .properties
+                    .get("switch")
+                    .and_then(crate::db::Value::as_str)
+                    .unwrap_or("sw0");
+                *per_switch.entry(sw).or_default() += 1;
+            }
+            per_switch
+                .values()
+                .filter(|&&c| c >= shape.hosts as usize)
+                .count()
+                >= s as usize
+        }
+    }
 }
 
 /// Instantiate the per-queue scheduler for a policy kind.
@@ -694,5 +804,95 @@ mod tests {
         let d = dense_meta().round(&mut db, 2).unwrap();
         let ids: Vec<JobId> = d.starts.iter().map(|s| s.0).collect();
         assert_eq!(ids, vec![small]);
+    }
+
+    #[test]
+    fn moldable_request_reshapes_to_the_feasible_alternative() {
+        // 2 nodes × 4 procs: the first alternative (4 hosts) cannot
+        // exist; the second (2 hosts × 4 cores) fits now. The round must
+        // start the job under the second shape and report the reshape.
+        let mut db = setup(2, 4);
+        let j = submit(
+            &mut db,
+            JobSpec {
+                nb_nodes: 4,
+                weight: 2,
+                resources: Some("/host=4/core=2 | /host=2/core=4".into()),
+                ..JobSpec::batch("a", "x", 4, 600)
+            },
+            0,
+        );
+        let d = dense_meta().round(&mut db, 0).unwrap();
+        assert_eq!(d.starts.len(), 1, "{:?}", d.rejected);
+        assert_eq!(d.starts[0].0, j);
+        assert_eq!(d.starts[0].1.len(), 2);
+        assert_eq!(d.reshapes, vec![(j, 2, 4)]);
+    }
+
+    #[test]
+    fn moldable_job_is_impossible_only_when_every_alternative_is() {
+        let mut db = setup(2, 2);
+        let doomed = submit(
+            &mut db,
+            JobSpec {
+                nb_nodes: 5,
+                weight: 1,
+                resources: Some("/host=5/core=1 | /host=1/core=8".into()),
+                ..JobSpec::batch("a", "x", 5, 100)
+            },
+            0,
+        );
+        let saved = submit(
+            &mut db,
+            JobSpec {
+                nb_nodes: 5,
+                weight: 1,
+                resources: Some("/host=5/core=1 | /host=1/core=2".into()),
+                ..JobSpec::batch("b", "y", 5, 100)
+            },
+            1,
+        );
+        let d = dense_meta().round(&mut db, 0).unwrap();
+        assert_eq!(d.rejected.len(), 1);
+        assert_eq!(d.rejected[0].0, doomed);
+        assert!(d.starts.iter().any(|(id, _)| *id == saved));
+    }
+
+    #[test]
+    fn switch_demand_beyond_the_fleet_is_impossible() {
+        use crate::types::Node;
+        let mut db = Db::with_standard_queues();
+        // 4 nodes over 2 switches (2 each).
+        for i in 1..=4u32 {
+            db.add_node(
+                Node::new(i, &format!("n{i}"), 2)
+                    .with_prop("switch", Value::Text(format!("sw{}", (i - 1) / 2 + 1))),
+            );
+        }
+        let doomed = submit(
+            &mut db,
+            JobSpec {
+                nb_nodes: 3,
+                weight: 1,
+                resources: Some("/switch=3/host=1/core=1".into()),
+                ..JobSpec::batch("a", "x", 3, 100)
+            },
+            0,
+        );
+        let spread = submit(
+            &mut db,
+            JobSpec {
+                nb_nodes: 4,
+                weight: 2,
+                resources: Some("/switch=2/host=2/core=2".into()),
+                ..JobSpec::batch("b", "y", 4, 100)
+            },
+            1,
+        );
+        let d = dense_meta().round(&mut db, 0).unwrap();
+        assert_eq!(d.rejected.iter().map(|r| r.0).collect::<Vec<_>>(), vec![doomed]);
+        let start = d.starts.iter().find(|(id, _)| *id == spread).unwrap();
+        assert_eq!(start.1.len(), 4, "2 switches × 2 hosts");
+        assert!(d.reshapes.is_empty(), "shape matches the stored row");
     }
 }

@@ -9,4 +9,4 @@ pub mod policies;
 
 pub use gantt::{Allocation, Gantt};
 pub use meta::{policy_for, MetaScheduler, SchedulerConfig, SchedulerDecision};
-pub use policies::{PolicyJob, QueuePolicy};
+pub use policies::{AltShape, PolicyJob, QueuePolicy};

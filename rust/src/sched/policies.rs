@@ -15,9 +15,20 @@
 //! * [`BestEffortPolicy`] — §3.3: place only on resources idle *now*; the
 //!   meta-scheduler cancels these jobs when their resources are reclaimed.
 
+use crate::resources::{find_earliest_tree, Shape};
 use crate::types::{JobId, NodeId, Time};
 
 use super::gantt::Gantt;
+
+/// One moldable alternative of a hierarchical request, ready for
+/// placement: the tree shape plus its own eligible set when the
+/// alternative carried a `{properties}` filter (`None` = use the
+/// job-level eligibility).
+#[derive(Debug, Clone)]
+pub struct AltShape {
+    pub shape: Shape,
+    pub eligible: Option<Vec<NodeId>>,
+}
 
 /// The scheduler-facing view of a waiting job: fig. 2's scheduling fields
 /// plus the pre-computed eligible node set (resource matching result).
@@ -36,11 +47,18 @@ pub struct PolicyJob {
     /// Priority score from the matching kernel (higher first); tie-broken
     /// by submission order. 0 when scoring is disabled.
     pub score: f32,
+    /// Moldable/hierarchical alternatives (the `-l … -l …` request);
+    /// empty for flat jobs, which use `nb_nodes × weight` directly.
+    /// `nb_nodes`/`weight` always mirror the first alternative, so the
+    /// SJF ordering key stays meaningful for moldable jobs too.
+    pub alts: Vec<AltShape>,
 }
 
 impl PolicyJob {
+    /// Saturating for the same reason as [`crate::types::Job::total_procs`]:
+    /// an adversarial row must not wrap into a tiny SJF ordering key.
     pub fn total_procs(&self) -> u32 {
-        self.nb_nodes * self.weight
+        self.nb_nodes.saturating_mul(self.weight)
     }
 }
 
@@ -60,16 +78,57 @@ pub trait QueuePolicy {
 
 /// Place one job at its earliest feasible time and record the allocation.
 /// Returns the start time and nodes when a placement exists.
+///
+/// Flat jobs (no alternatives) take the plain `find_earliest` walk. A
+/// moldable job evaluates *every* alternative's earliest start — the
+/// tree matcher for switch-constrained shapes, the flat walk otherwise —
+/// and the earliest one wins (ties go to the first alternative, the
+/// paper's "first feasible" rule at equal times). When the winning shape
+/// differs from the job row's `nbNodes × weight`, the reshape is
+/// recorded on the Gantt for the meta-scheduler to persist.
 fn place_conservative(
     now: Time,
     job: &PolicyJob,
     gantt: &mut Gantt,
 ) -> Option<(Time, Vec<NodeId>)> {
-    let (t, nodes) =
-        gantt.find_earliest(&job.eligible, job.nb_nodes, job.weight, job.duration, now)?;
+    if job.alts.is_empty() {
+        let (t, nodes) =
+            gantt.find_earliest(&job.eligible, job.nb_nodes, job.weight, job.duration, now)?;
+        for n in &nodes {
+            let ok = gantt.occupy(job.id, *n, job.weight, t, t + job.duration);
+            debug_assert!(ok, "find_earliest must return occupiable nodes");
+        }
+        return Some((t, nodes));
+    }
+
+    let mut best: Option<(Time, Vec<NodeId>, usize)> = None;
+    for (i, alt) in job.alts.iter().enumerate() {
+        let eligible = alt.eligible.as_deref().unwrap_or(&job.eligible);
+        let candidate = match alt.shape.switches {
+            Some(_) => gantt.hierarchy().and_then(|tree| {
+                find_earliest_tree(tree, eligible, &alt.shape, |node, procs| {
+                    gantt.feasible_starts(node, procs, job.duration, now)
+                })
+            }),
+            None => alt.shape.total_hosts().and_then(|hosts| {
+                gantt.find_earliest(eligible, hosts, alt.shape.cores, job.duration, now)
+            }),
+        };
+        if let Some((t, nodes)) = candidate {
+            if best.as_ref().is_none_or(|(bt, _, _)| t < *bt) {
+                best = Some((t, nodes, i));
+            }
+        }
+    }
+    let (t, nodes, idx) = best?;
+    let shape = job.alts[idx].shape;
+    let weight = shape.weight();
     for n in &nodes {
-        let ok = gantt.occupy(job.id, *n, job.weight, t, t + job.duration);
-        debug_assert!(ok, "find_earliest must return occupiable nodes");
+        let ok = gantt.occupy(job.id, *n, weight, t, t + job.duration);
+        debug_assert!(ok, "matcher must return occupiable nodes");
+    }
+    if nodes.len() as u32 != job.nb_nodes || weight != job.weight {
+        gantt.note_reshape(job.id, nodes.len() as u32, weight);
     }
     Some((t, nodes))
 }
@@ -161,6 +220,7 @@ mod tests {
             eligible: vec![1, 2, 3, 4],
             best_effort: false,
             score: 0.0,
+            alts: vec![],
         }
     }
 
@@ -276,5 +336,82 @@ mod tests {
         j.eligible = vec![3];
         let starts = FifoConservative.schedule(0, &[j], g);
         assert_eq!(starts, vec![(1, vec![3])]);
+    }
+
+    fn alt(switches: Option<u32>, hosts: u32, cores: u32) -> AltShape {
+        AltShape {
+            shape: Shape { switches, hosts, cores },
+            eligible: None,
+        }
+    }
+
+    #[test]
+    fn moldable_job_falls_through_to_the_feasible_alternative() {
+        // Two 4-proc nodes. First alternative (/host=4/core=2) needs 4
+        // hosts — impossible; second (/host=2/core=4) fits now. The job
+        // row mirrors the first alternative, so the placement is a
+        // reshape and must be recorded.
+        let mut g = Gantt::new(&[(1, 4), (2, 4)]);
+        let mut j = job(1, 4, 100, 0);
+        j.weight = 2;
+        j.eligible = vec![1, 2];
+        j.alts = vec![alt(None, 4, 2), alt(None, 2, 4)];
+        let starts = FifoConservative.schedule(0, &[j], &mut g);
+        assert_eq!(starts, vec![(1, vec![1, 2])]);
+        assert_eq!(g.take_reshapes(), vec![(1, 2, 4)]);
+        // Both nodes fully occupied by the chosen 2×4 shape.
+        assert_eq!(g.busy_procs_at(50), 8);
+    }
+
+    #[test]
+    fn moldable_job_picks_the_earliest_alternative() {
+        // Node 1 (4 procs) busy until 100; nodes 2,3 (2 procs) free.
+        // /host=1/core=4 must wait for node 1; /host=2/core=2 runs now.
+        let mut g = Gantt::new(&[(1, 4), (2, 2), (3, 2)]);
+        g.occupy(99, 1, 4, 0, 100);
+        let mut j = job(1, 1, 50, 0);
+        j.weight = 4;
+        j.eligible = vec![1, 2, 3];
+        j.alts = vec![alt(None, 1, 4), alt(None, 2, 2)];
+        let starts = FifoConservative.schedule(0, &[j], &mut g);
+        assert_eq!(starts, vec![(1, vec![2, 3])]);
+        assert_eq!(g.take_reshapes(), vec![(1, 2, 2)]);
+    }
+
+    #[test]
+    fn switch_constrained_alternative_uses_the_hierarchy() {
+        use crate::resources::{Hierarchy, TreeHost, TreeSwitch};
+        // sw1 = {1, 2}, sw2 = {3, 4}; node 1 busy until 50, so the only
+        // same-switch pair free now is sw2's.
+        let mut g = gantt4();
+        g.set_hierarchy(Hierarchy {
+            switches: vec![
+                TreeSwitch {
+                    name: "sw1".into(),
+                    hosts: vec![TreeHost { node: 1, procs: 1 }, TreeHost { node: 2, procs: 1 }],
+                },
+                TreeSwitch {
+                    name: "sw2".into(),
+                    hosts: vec![TreeHost { node: 3, procs: 1 }, TreeHost { node: 4, procs: 1 }],
+                },
+            ],
+        });
+        g.occupy(99, 1, 1, 0, 50);
+        let mut j = job(1, 2, 100, 0);
+        j.alts = vec![alt(Some(1), 2, 1)];
+        let starts = FifoConservative.schedule(0, &[j], &mut g);
+        assert_eq!(starts, vec![(1, vec![3, 4])]);
+        assert!(g.take_reshapes().is_empty(), "shape matches the job row");
+    }
+
+    #[test]
+    fn moldable_with_no_feasible_alternative_places_nothing() {
+        let mut g = Gantt::new(&[(1, 2)]);
+        let mut j = job(1, 1, 10, 0);
+        j.eligible = vec![1];
+        j.alts = vec![alt(None, 4, 1), alt(None, 1, 8)];
+        let starts = FifoConservative.schedule(0, &[j], &mut g);
+        assert!(starts.is_empty());
+        assert!(g.allocations().is_empty());
     }
 }

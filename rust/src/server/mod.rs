@@ -744,6 +744,23 @@ fn apply_decision(inner: &Arc<Inner>, decision: &SchedulerDecision, now: Time) {
         kills.push((*id, nodes));
     }
 
+    // Moldable placements: persist the winning alternative's shape
+    // *before* the assignment below reads the row, so `assign_nodes`
+    // records the right per-node processor count.
+    for (id, nb_nodes, weight) in &decision.reshapes {
+        let Ok(job) = db.job(*id) else { continue };
+        if job.state != JobState::Waiting {
+            continue; // stale decision
+        }
+        let _ = db.set_job_shape(*id, *nb_nodes, *weight);
+        db.log_event(
+            now,
+            "RESHAPED",
+            Some(*id),
+            &format!("nbNodes={nb_nodes} weight={weight}"),
+        );
+    }
+
     let mut launches: Vec<(JobId, Vec<NodeId>, Time)> = Vec::new();
     for (id, nodes) in &decision.starts {
         let Ok(job) = db.job(*id) else { continue };

@@ -35,8 +35,10 @@ pub struct SimJob {
 }
 
 impl SimJob {
+    /// Saturating like [`crate::types::Job::total_procs`]: synthetic
+    /// workload generators can hand in adversarial shapes.
     pub fn total_procs(&self) -> u32 {
-        self.nb_nodes * self.weight
+        self.nb_nodes.saturating_mul(self.weight)
     }
 }
 
@@ -220,6 +222,7 @@ pub fn simulate(
                     eligible: node_ids.clone(),
                     best_effort: false,
                     score: 0.0,
+                    alts: vec![],
                 }
             })
             .collect();

@@ -65,6 +65,10 @@ pub struct JobSpec {
     pub launching_directory: String,
     /// §3.3: job may be cancelled when its resources are reclaimed.
     pub best_effort: bool,
+    /// Hierarchical resource request (`-l /switch=S/host=N/core=M`,
+    /// possibly moldable) in the [`crate::resources`] grammar. `None` is
+    /// the flat case, which desugars to `/host=nbNodes/core=weight`.
+    pub resources: Option<String>,
 }
 
 impl Default for JobSpec {
@@ -81,6 +85,7 @@ impl Default for JobSpec {
             reservation_start: None,
             launching_directory: "/tmp".into(),
             best_effort: false,
+            resources: None,
         }
     }
 }
@@ -97,9 +102,17 @@ impl JobSpec {
         }
     }
 
-    /// Total processors requested (`nbNodes * weight`).
+    /// Total processors requested (`nbNodes * weight`), saturating:
+    /// adversarial submissions can overflow `u32`, and a wrapped small
+    /// number would sail through the queue-limit check. Admission
+    /// rejects the saturated sentinel via [`JobSpec::checked_total_procs`].
     pub fn total_procs(&self) -> u32 {
-        self.nb_nodes * self.weight
+        self.nb_nodes.saturating_mul(self.weight)
+    }
+
+    /// `nbNodes * weight`, or `None` when it overflows `u32`.
+    pub fn checked_total_procs(&self) -> Option<u32> {
+        self.nb_nodes.checked_mul(self.weight)
     }
 }
 
@@ -134,6 +147,11 @@ pub struct Job {
     pub best_effort: bool,
     /// Requested reservation slot, when `reservation != None`.
     pub reservation_start: Option<Time>,
+    /// Hierarchical resource request (canonical printed form), when the
+    /// submission used the tree grammar; `nb_nodes`/`weight` hold the
+    /// flat equivalent of the first alternative until the scheduler
+    /// picks one.
+    pub resources: Option<String>,
 }
 
 impl Job {
@@ -165,12 +183,16 @@ impl Job {
             stop_time: None,
             best_effort: spec.best_effort,
             reservation_start: spec.reservation_start,
+            resources: spec.resources.clone(),
         }
     }
 
-    /// Total processors this job occupies.
+    /// Total processors this job occupies. Saturating for the same
+    /// reason as [`JobSpec::total_procs`]: admission has already
+    /// rejected genuine overflows, but a row edited behind the system's
+    /// back must not wrap into a tiny claim.
     pub fn total_procs(&self) -> u32 {
-        self.nb_nodes * self.weight
+        self.nb_nodes.saturating_mul(self.weight)
     }
 
     /// Response time as defined by the paper's §3.2.2 burst evaluation:
@@ -212,6 +234,7 @@ mod tests {
             stop_time: None,
             best_effort: false,
             reservation_start: None,
+            resources: None,
         }
     }
 
@@ -219,6 +242,21 @@ mod tests {
     fn total_procs_is_nodes_times_weight() {
         assert_eq!(job().total_procs(), 8);
         assert_eq!(JobSpec::batch("u", "c", 3, 60).total_procs(), 3);
+    }
+
+    #[test]
+    fn total_procs_saturates_instead_of_wrapping() {
+        let spec = JobSpec {
+            nb_nodes: u32::MAX,
+            weight: 3,
+            ..JobSpec::default()
+        };
+        assert_eq!(spec.total_procs(), u32::MAX, "saturates, never wraps");
+        assert_eq!(spec.checked_total_procs(), None);
+        let mut j = job();
+        j.nb_nodes = u32::MAX;
+        j.weight = u32::MAX;
+        assert_eq!(j.total_procs(), u32::MAX);
     }
 
     #[test]

@@ -102,6 +102,7 @@ fn random_policy_jobs(rng: &mut Rng, n_nodes: u32) -> Vec<PolicyJob> {
             eligible: (1..=n_nodes).collect(),
             best_effort: false,
             score: 0.0,
+            alts: vec![],
         })
         .collect()
 }
@@ -178,6 +179,7 @@ fn prop_fifo_conservative_no_delay_by_later_submission() {
             eligible: (1..=n_nodes).collect(),
             best_effort: false,
             score: 0.0,
+            alts: vec![],
         });
         let after = planned_starts(&extended);
         for (id, start) in &before {

@@ -1,0 +1,214 @@
+//! Observability ablation bench: what does the telemetry layer cost?
+//!
+//! Two measurements, both against the runtime kill switch
+//! (`obs::set_enabled`), which leaves the same single predictable branch
+//! in place that the `obs_noop` feature folds to `false` at compile
+//! time (run with `--features obs_noop` for the true compiled-out
+//! baseline — the JSON records which mode measured):
+//!
+//! 1. **Micro**: ns/op for the three record primitives (counter inc,
+//!    histogram observe, span enter+drop), enabled vs disabled.
+//! 2. **Macro**: end-to-end scheduler throughput (submit a batch, drain
+//!    to terminal) with instrumentation on vs off, interleaved rounds,
+//!    medians. The per-phase spans, guard-wait histograms and round
+//!    counters all fire on this path.
+//!
+//! Emits `BENCH_obs.json` at the repo root and exits non-zero when the
+//! macro overhead exceeds the gate (`OAR_OBS_MAX_OVERHEAD_PCT`, default
+//! 2.0) — the ISSUE's acceptance bound.
+//!
+//! Knobs: `OAR_OBS_JOBS` (jobs per macro round, default 400),
+//! `OAR_OBS_ROUNDS` (interleaved round pairs, default 5),
+//! `OAR_OBS_MICRO_OPS` (ops per micro loop, default 2,000,000).
+
+use std::hint::black_box;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oar::cluster::VirtualCluster;
+use oar::obs;
+use oar::server::{Server, ServerConfig};
+use oar::types::JobSpec;
+use oar::util::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
+    xs[xs.len() / 2]
+}
+
+// ------------------------------------------------------------- micro ----
+
+static MICRO_C: obs::Counter = obs::Counter::new("bench_micro_total");
+static MICRO_H: obs::Histogram = obs::Histogram::new("bench_micro_us", "us");
+static MICRO_S: obs::Histogram = obs::Histogram::new("bench_micro_span_us", "us");
+
+/// ns/op of `f` repeated `ops` times.
+fn time_ns(ops: usize, mut f: impl FnMut(u64)) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..ops {
+        f(black_box(i as u64));
+    }
+    t0.elapsed().as_nanos() as f64 / ops.max(1) as f64
+}
+
+fn micro(ops: usize, enabled: bool) -> Json {
+    obs::set_enabled(enabled);
+    let counter = time_ns(ops, |_| MICRO_C.inc());
+    let hist = time_ns(ops, |i| MICRO_H.observe(i % 4096));
+    // Spans push into the ring mutex on drop; measure the full RAII
+    // round-trip, which is what an instrumented region actually pays.
+    let span = time_ns(ops / 16, |_| {
+        let _s = obs::Span::enter("bench.micro", &MICRO_S);
+    });
+    obs::set_enabled(true);
+    Json::obj(vec![
+        ("counter_inc_ns", Json::Num(counter)),
+        ("hist_observe_ns", Json::Num(hist)),
+        ("span_ns", Json::Num(span)),
+    ])
+}
+
+// ------------------------------------------------------------- macro ----
+
+/// One macro round: fresh volatile server, submit `jobs`, drain to
+/// terminal. Returns (jobs/sec, verified).
+fn macro_round(jobs: usize, enabled: bool) -> (f64, bool) {
+    obs::set_enabled(enabled);
+    let cluster = Arc::new(VirtualCluster::tiny(8, 1));
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    let server = Arc::new(Server::new(cluster, cfg));
+
+    let t0 = Instant::now();
+    let mut acked = 0usize;
+    for i in 0..jobs {
+        let spec = JobSpec::batch("obs", "date", 1 + (i % 2) as u32, 60);
+        if let Ok(Ok(_)) = server.submit(&spec) {
+            acked += 1;
+        }
+        if i % 64 == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let drained = server.wait_all_terminal(Duration::from_secs(120));
+    let wall = t0.elapsed();
+    obs::set_enabled(true);
+
+    let db_jobs = server.read_db(|db| db.job_count());
+    let ok = drained && acked == jobs && db_jobs == jobs;
+    (jobs as f64 / wall.as_secs_f64().max(1e-9), ok)
+}
+
+fn main() {
+    let jobs = env_usize("OAR_OBS_JOBS", 400);
+    let rounds = env_usize("OAR_OBS_ROUNDS", 5);
+    let micro_ops = env_usize("OAR_OBS_MICRO_OPS", 2_000_000);
+    let max_overhead = env_f64("OAR_OBS_MAX_OVERHEAD_PCT", 2.0);
+    let compiled_out = cfg!(feature = "obs_noop");
+    println!(
+        "== obs ablation: {rounds}x{jobs}-job rounds, {micro_ops} micro ops, gate {max_overhead}% \
+         (mode: {}) ==\n",
+        if compiled_out { "compiled-out (obs_noop)" } else { "runtime switch" }
+    );
+
+    // Micro: warm both paths once, then measure.
+    let _ = micro(micro_ops / 10, true);
+    let micro_on = micro(micro_ops, true);
+    let micro_off = micro(micro_ops, false);
+    println!("  micro enabled:  {}", micro_on.dump());
+    println!("  micro disabled: {}", micro_off.dump());
+
+    // Macro: interleave on/off rounds so machine drift cancels; one
+    // throwaway warmup round first.
+    let _ = macro_round(jobs / 4, true);
+    let mut on = Vec::new();
+    let mut off = Vec::new();
+    let mut all_ok = true;
+    for r in 0..rounds {
+        let (tp_on, ok_on) = macro_round(jobs, true);
+        let (tp_off, ok_off) = macro_round(jobs, false);
+        all_ok &= ok_on && ok_off;
+        println!(
+            "  round {r}: {tp_on:>8.0} jobs/s instrumented   {tp_off:>8.0} jobs/s ablated  \
+             ({})",
+            if ok_on && ok_off { "ok" } else { "FAILED" }
+        );
+        on.push(tp_on);
+        off.push(tp_off);
+    }
+    let med_on = median(&mut on);
+    let med_off = median(&mut off);
+    // Overhead of instrumentation relative to the ablated baseline;
+    // negative (noise) clamps to zero.
+    let overhead_pct = ((med_off / med_on.max(1e-9) - 1.0) * 100.0).max(0.0);
+    println!(
+        "\n  median: {med_on:.0} jobs/s instrumented vs {med_off:.0} ablated \
+         -> overhead {overhead_pct:.2}% (gate {max_overhead}%)"
+    );
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_obs.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("obs".into())),
+        (
+            "mode",
+            Json::Str(if compiled_out { "compiled_out" } else { "runtime_switch" }.into()),
+        ),
+        ("jobs_per_round", Json::Num(jobs as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("micro_ops", Json::Num(micro_ops as f64)),
+        (
+            "micro_ns_per_op",
+            Json::obj(vec![("enabled", micro_on), ("disabled", micro_off)]),
+        ),
+        (
+            "macro_jobs_per_sec",
+            Json::obj(vec![
+                (
+                    "instrumented",
+                    Json::Arr(on.iter().map(|v| Json::Num(*v)).collect()),
+                ),
+                (
+                    "ablated",
+                    Json::Arr(off.iter().map(|v| Json::Num(*v)).collect()),
+                ),
+                ("median_instrumented", Json::Num(med_on)),
+                ("median_ablated", Json::Num(med_off)),
+            ]),
+        ),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("max_overhead_pct", Json::Num(max_overhead)),
+        (
+            "verified",
+            Json::obj(vec![("workloads_ok", Json::Bool(all_ok))]),
+        ),
+    ]);
+    std::fs::write(&out, doc.dump()).expect("write BENCH_obs.json");
+    println!("wrote {}", out.display());
+
+    if !all_ok {
+        eprintln!("OBS ABLATION VERIFICATION FAILED (workload correctness)");
+        std::process::exit(1);
+    }
+    if overhead_pct > max_overhead {
+        eprintln!("OBS OVERHEAD GATE FAILED: {overhead_pct:.2}% > {max_overhead}%");
+        std::process::exit(1);
+    }
+}

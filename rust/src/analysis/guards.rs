@@ -85,6 +85,15 @@ pub enum Event {
     },
     /// A remote submission (`.sub(..)`) — R3's grid-side trigger.
     Send { line: u32 },
+    /// A telemetry call (`.observe(..)` / `.inc()` / `.rise()` /
+    /// `.fall()` / `Span::enter(..)`) with guards live across it —
+    /// R7's raw material. Only emitted when something is held: an
+    /// unguarded metric update is always fine.
+    Telemetry {
+        call: String,
+        line: u32,
+        held: Vec<GuardRef>,
+    },
 }
 
 /// Walk `body` and produce its event stream.
@@ -511,6 +520,19 @@ impl Walker {
         }
         if is_method && name == "sub" {
             self.events.push(Event::Send { line });
+        }
+        // Telemetry sites: metric-record methods, plus the path-call
+        // `Span::enter` (`is_method` is false for `::` calls). Recorded
+        // only while guards are live — that is the only case R7 reads.
+        if !self.live.is_empty()
+            && ((is_method && matches!(name.as_str(), "observe" | "inc" | "rise" | "fall"))
+                || (!is_method && name == "enter"))
+        {
+            self.events.push(Event::Telemetry {
+                call: name.clone(),
+                line,
+                held: self.held_refs(),
+            });
         }
         if is_blocking(&name, args) && !self.live.is_empty() {
             self.events.push(Event::Blocking {

@@ -6,7 +6,7 @@
 //! only in prose: PR 4 hand-fixed a remote cancel issued under the db
 //! lock, PR 6's "zero `db.lock()` call sites" claim was checked by grep,
 //! and PR 7's probe-coherence bug slipped past review. `oarlint` turns
-//! the six load-bearing invariants into machine-checked rules over the
+//! the seven load-bearing invariants into machine-checked rules over the
 //! source itself (management-as-data, applied to the code base):
 //!
 //! * **R1** lock-order — the acquisition graph over lock classes
@@ -19,10 +19,13 @@
 //! * **R5** panic-freedom in the RPC request paths.
 //! * **R6** atomics-ordering calibration — counters `Relaxed`, `SeqCst`
 //!   only on the known shutdown/drain flags.
+//! * **R7** telemetry off the commit path — no metric/span call while
+//!   the db write guard or the WAL sink lock is held (PR 10's overhead
+//!   bound depends on it).
 //!
 //! Pipeline: [`lexer`] (total, literal-safe tokens) → [`parser`]
 //! (delimiter tree, function items, suppression comments) → [`guards`]
-//! (per-function guard-lifetime event streams) → [`rules`] (the six
+//! (per-function guard-lifetime event streams) → [`rules`] (the seven
 //! rules + suppression accounting) → [`report`] (human / JSON
 //! rendering). Zero dependencies beyond `std`, by construction: the
 //! linter must build in the same offline environment as the scheduler.

@@ -1,4 +1,4 @@
-//! The six invariant rules of `oarlint`, evaluated over the event
+//! The seven invariant rules of `oarlint`, evaluated over the event
 //! streams of [`super::guards`] plus two token-level scans.
 //!
 //! | rule | invariant |
@@ -9,12 +9,14 @@
 //! | R4   | the database stays `RwLock<Db>`: no `Mutex<Db>`, no `db.lock()` (pins PR 6's concurrent-core claim) |
 //! | R5   | panic-freedom in request paths: `unwrap`/`expect`/`panic!`/slice-indexing need an annotated `allow` |
 //! | R6   | atomics stay calibrated: counters `Relaxed`, `SeqCst` only on the known shutdown/drain flags |
+//! | R7   | telemetry stays off the commit path: no metric/span call while the db write guard or the WAL sink lock is held |
 //!
-//! R1/R2/R4/R6 apply everywhere they are enabled; R3 and R5 are scoped
-//! to the files whose invariants they encode (configurable, so fixtures
-//! can exercise them anywhere). R2/R3/R5 skip `#[test]` code: tests may
-//! block and panic freely — lock *ordering* (R1) still applies to them,
-//! since a deadlock in a test hangs the suite just as hard.
+//! R1/R2/R4/R6 apply everywhere they are enabled; R3, R5 and R7 are
+//! scoped to the files whose invariants they encode (configurable, so
+//! fixtures can exercise them anywhere). R2/R3/R5/R7 skip `#[test]`
+//! code: tests may block and panic freely — lock *ordering* (R1) still
+//! applies to them, since a deadlock in a test hangs the suite just as
+//! hard.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -28,7 +30,7 @@ use super::report::{Finding, Report, Severity, Suppressed};
 #[derive(Debug, Clone)]
 pub struct RuleConfig {
     /// `enabled[k]` switches rule `R{k+1}`.
-    pub enabled: [bool; 6],
+    pub enabled: [bool; 7],
     /// Files whose mutations must commit before acking (R3).
     pub commit_scope: Vec<String>,
     /// Files whose remote dispatches need a prior intent write (R3).
@@ -37,6 +39,8 @@ pub struct RuleConfig {
     pub panic_free_scope: Vec<String>,
     /// Atomic flag names allowed to use `SeqCst` (R6).
     pub seqcst_flags: Vec<String>,
+    /// Instrumented files whose guarded regions must stay telemetry-free (R7).
+    pub telemetry_scope: Vec<String>,
 }
 
 impl RuleConfig {
@@ -44,7 +48,7 @@ impl RuleConfig {
     /// that carry each invariant.
     pub fn repo() -> Self {
         RuleConfig {
-            enabled: [true; 6],
+            enabled: [true; 7],
             commit_scope: vec!["src/server/mod.rs".to_string()],
             intent_scope: vec!["grid/scheduler.rs".to_string()],
             panic_free_scope: vec!["rpc/server.rs".to_string()],
@@ -52,24 +56,35 @@ impl RuleConfig {
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
+            telemetry_scope: [
+                "src/server/mod.rs",
+                "src/db/wal.rs",
+                "src/rpc/server.rs",
+                "src/grid/scheduler.rs",
+                "src/monitor/mod.rs",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         }
     }
 
     /// Every rule, everywhere (fixture corpus).
     pub fn everywhere() -> Self {
         RuleConfig {
-            enabled: [true; 6],
+            enabled: [true; 7],
             commit_scope: vec![String::new()],
             intent_scope: vec![String::new()],
             panic_free_scope: vec![String::new()],
             seqcst_flags: vec!["running".to_string()],
+            telemetry_scope: vec![String::new()],
         }
     }
 
     /// A single rule, everywhere (per-rule fixture tests).
     pub fn only(rule: &str) -> Self {
         let mut cfg = Self::everywhere();
-        cfg.enabled = [false; 6];
+        cfg.enabled = [false; 7];
         if let Some(ix) = rule_index(rule) {
             cfg.enabled[ix] = true;
         }
@@ -85,6 +100,7 @@ fn rule_index(rule: &str) -> Option<usize> {
         "R4" => Some(3),
         "R5" => Some(4),
         "R6" => Some(5),
+        "R7" => Some(6),
         _ => None,
     }
 }
@@ -169,6 +185,7 @@ impl Analyzer {
         let r3_commit = self.on("R3") && in_scope(path, &self.cfg.commit_scope);
         let r3_intent = self.on("R3") && in_scope(path, &self.cfg.intent_scope);
         let r5_here = self.on("R5") && in_scope(path, &self.cfg.panic_free_scope);
+        let r7_here = self.on("R7") && in_scope(path, &self.cfg.telemetry_scope);
 
         for f in &fns {
             let events = guards::analyze_fn(f.body);
@@ -190,6 +207,9 @@ impl Analyzer {
             }
             if r5_here && !f.in_test {
                 self.check_panic_freedom(path, &f.name, f.body);
+            }
+            if r7_here && !f.in_test {
+                self.check_telemetry(path, &f.name, &events);
             }
         }
 
@@ -513,6 +533,37 @@ impl Analyzer {
         }
     }
 
+    // ------------------------------------------------------------ R7 --
+
+    fn check_telemetry(&mut self, path: &str, fn_name: &str, events: &[Event]) {
+        for ev in events {
+            let Event::Telemetry { call, line, held } = ev else {
+                continue;
+            };
+            let hot = held
+                .iter()
+                .find(|g| (g.class == "db" && g.mode == Mode::Write) || g.class == "sink");
+            if let Some(g) = hot {
+                self.finding(
+                    "R7",
+                    path,
+                    *line,
+                    format!(
+                        "telemetry call `{}` in `{}` while the `{}` {} guard (line {}) \
+                         is held — recording a metric extends the commit critical \
+                         section; capture the timestamp under the guard and observe \
+                         after release",
+                        call,
+                        fn_name,
+                        g.class,
+                        g.mode.as_str(),
+                        g.line
+                    ),
+                );
+            }
+        }
+    }
+
     // -------------------------------------------------------- finish --
 
     /// Close the run: R1 cycle detection over the accumulated graph,
@@ -764,6 +815,29 @@ mod tests {
         let rep = run(RuleConfig::only("R6"), src);
         assert_eq!(rep.of_rule("R6").count(), 1, "{}", rep.render_human());
         assert!(rep.findings[0].message.contains("served"));
+    }
+
+    #[test]
+    fn r7_telemetry_under_commit_guards() {
+        let src = "
+            fn mutate(inner: &Inner) {
+                let t0 = clock::now_us();
+                let mut db = inner.db.write().unwrap();
+                db.touch();
+                metrics::DB_WRITE_WAIT_US.observe(clock::now_us() - t0);
+                drop(db);
+                metrics::DB_WRITE_WAIT_US.observe(clock::now_us() - t0);
+            }
+            fn flush(w: &Wal) {
+                let s = w.sink.lock().unwrap();
+                let _span = Span::enter(FLUSH, &metrics::WAL_FLUSH_US);
+                drop(s);
+            }
+        ";
+        let rep = run(RuleConfig::only("R7"), src);
+        assert_eq!(rep.of_rule("R7").count(), 2, "{}", rep.render_human());
+        assert!(rep.findings[0].message.contains("observe"));
+        assert!(rep.findings[1].message.contains("enter"));
     }
 
     #[test]

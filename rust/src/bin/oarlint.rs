@@ -1,4 +1,4 @@
-//! `oarlint` — lint the repository against its six concurrency/durability
+//! `oarlint` — lint the repository against its seven concurrency/durability
 //! invariants (see `oar::analysis` and `docs/LINTS.md`).
 //!
 //! ```text

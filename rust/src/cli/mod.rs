@@ -122,6 +122,14 @@ Client commands (speak the socket protocol of docs/PROTOCOL.md; all take
   resume      oarresume: release a held job    oar resume <jobId>
   nodes       oarnodes: fleet state
   queues      queue table (priority, policy, limits, active)
+  metrics     Prometheus-style text dump of the server's metrics registry
+              (counters, gauges, latency histograms; docs/OBSERVABILITY.md)
+              [--watch] [--every SECS] re-renders until interrupted
+  top         one-screen dashboard: occupancy + queue depths + scheduler
+              round / lock-wait / WAL / RPC latency percentiles
+              [--watch] [--every SECS]
+  events      tail the server's event log  [--tail N] [--kind KIND]
+              [--job ID]
 
 Grid federation (a CiGri-style meta-scheduler farming bag-of-tasks
 campaigns across clusters as best-effort jobs):
@@ -174,6 +182,9 @@ pub fn run(args: Vec<String>) -> Result<i32> {
         "resume" => net::run_resume(&flags),
         "nodes" => net::run_nodes(&flags),
         "queues" => net::run_queues(&flags),
+        "metrics" => net::run_metrics(&flags),
+        "top" => net::run_top(&flags),
+        "events" => net::run_events(&flags),
         "grid" => grid::run_grid(&flags),
         "snapshot" => crate::cli::demo::run_snapshot(
             flags

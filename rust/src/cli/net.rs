@@ -306,6 +306,157 @@ pub fn run_nodes(flags: &Flags) -> Result<i32> {
     }
 }
 
+// ------------------------------------------------------ observability ----
+
+/// Shared `--watch` loop: render once, or every `--every SECS` (default
+/// 2) until interrupted. Reconnects each round so a server restart
+/// doesn't strand the watcher on a dead socket.
+fn watch_loop(flags: &Flags, mut render: impl FnMut(&mut RpcClient) -> Result<i32>) -> Result<i32> {
+    if !flags.has("watch") {
+        let mut client = connect(flags)?;
+        return render(&mut client);
+    }
+    let every = Duration::from_secs(flags.get_u64("every", 2).max(1));
+    loop {
+        match connect(flags) {
+            Ok(mut client) => {
+                if let Err(e) = render(&mut client) {
+                    eprintln!("watch: {e}");
+                }
+            }
+            Err(e) => eprintln!("watch: {e}"),
+        }
+        std::thread::sleep(every);
+    }
+}
+
+/// `oar metrics [--watch]`: Prometheus-style text exposition of the
+/// server's registry (see `docs/OBSERVABILITY.md` for the name scheme).
+pub fn run_metrics(flags: &Flags) -> Result<i32> {
+    watch_loop(flags, |client| match client.metrics()? {
+        Ok(snap) => {
+            print!("{}", snap.render_text());
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("metrics", &e)),
+    })
+}
+
+/// `oar top [--watch]`: one-screen dashboard merging the `load` probe,
+/// the queue table and the registry's latency histograms — occupancy,
+/// queue depths, and per-phase scheduler / lock-wait / WAL / RPC
+/// percentiles at a glance.
+pub fn run_top(flags: &Flags) -> Result<i32> {
+    watch_loop(flags, |client| {
+        let load = match client.load()? {
+            Ok(l) => l,
+            Err(e) => return Ok(report_rpc_error("top", &e)),
+        };
+        let snap = match client.metrics()? {
+            Ok(s) => s,
+            Err(e) => return Ok(report_rpc_error("top", &e)),
+        };
+
+        println!("── oar top ──");
+        println!(
+            "occupancy: {}/{} procs busy ({} free) on {}/{} alive nodes; {} waiting, {} running",
+            load.procs_busy,
+            load.procs_alive,
+            load.procs_free,
+            load.nodes_alive,
+            load.nodes_total,
+            load.waiting_jobs,
+            load.running_jobs,
+        );
+
+        let counter = |name: &str| {
+            snap.counters
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        let gauge = |name: &str| {
+            snap.gauges
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        println!(
+            "activity:  {} sched rounds, {} rpc requests ({} in flight), {} db events ({} evicted)",
+            counter("oar_sched_rounds_total"),
+            counter("oar_rpc_requests_total"),
+            gauge("oar_rpc_inflight"),
+            counter("oar_db_events_rows"),
+            counter("oar_db_events_evicted_total"),
+        );
+
+        // Latency table: every histogram with at least one observation,
+        // registry order (catalogue groups related phases together).
+        let rows: Vec<Vec<String>> = snap
+            .hists
+            .iter()
+            .filter(|h| h.count > 0)
+            .map(|h| {
+                vec![
+                    h.name.clone(),
+                    h.count.to_string(),
+                    format!("{:.0}", h.mean()),
+                    h.p50().to_string(),
+                    h.p99().to_string(),
+                    h.max.to_string(),
+                    h.unit.clone(),
+                ]
+            })
+            .collect();
+        if rows.is_empty() {
+            println!("no latency observations yet");
+        } else {
+            println!(
+                "{}",
+                report::table(
+                    &["histogram", "count", "mean", "p50≤", "p99≤", "max", "unit"],
+                    &rows
+                )
+            );
+        }
+        Ok(0)
+    })
+}
+
+/// `oar events`: tail the server's bounded event log
+/// (`--tail N --kind KIND --job ID`).
+pub fn run_events(flags: &Flags) -> Result<i32> {
+    let tail = strict_u64(flags, "tail", 20)? as usize;
+    let job = if flags.has("job") {
+        Some(strict_u64(flags, "job", 0)?)
+    } else {
+        None
+    };
+    let kind = flags.values.get("kind").map(String::as_str);
+    let mut client = connect(flags)?;
+    match client.events(tail, kind, job)? {
+        Ok((records, total)) => {
+            let rows: Vec<Vec<String>> = records
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.time.to_string(),
+                        r.kind.clone(),
+                        r.job.map(|j| j.to_string()).unwrap_or_default(),
+                        r.detail.clone(),
+                    ]
+                })
+                .collect();
+            println!("{}", report::table(&["time", "kind", "job", "detail"], &rows));
+            println!("{} of {} matching event(s)", rows.len(), total);
+            Ok(0)
+        }
+        Err(e) => Ok(report_rpc_error("events", &e)),
+    }
+}
+
 /// `oar queues`: the queue table.
 pub fn run_queues(flags: &Flags) -> Result<i32> {
     let mut client = connect(flags)?;

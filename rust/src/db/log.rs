@@ -2,9 +2,23 @@
 //! information analysis" is one of the four user needs of §1; a module
 //! handles "errors logging" in §2). Events are rows too, so the same
 //! query machinery analyzes them.
-
+//!
+//! The log is **bounded**: a long-running server logs an event per job
+//! transition forever, so the in-memory window keeps only the most
+//! recent [`EventLog::retention`] records (default
+//! [`DEFAULT_EVENT_RETENTION`]) and counts what it evicts
+//! ([`EventLog::evicted`], exposed as `oar_db_events_evicted_total`).
+//! Durability is unaffected: every event still reaches the WAL as a
+//! `LogEvent` mutation before it is applied, and replay drives eviction
+//! through this same `append`, so a recovered log converges to the same
+//! window a crash-free run would hold. Eviction is oldest-first and a
+//! pure function of the append sequence and the cap — deterministic.
 
 use crate::types::{JobId, Time};
+
+/// Default retention cap (records). At ~5 events per job lifecycle this
+/// keeps the last few thousand jobs' history resident.
+pub const DEFAULT_EVENT_RETENTION: usize = 16_384;
 
 /// One logged event.
 #[derive(Debug, Clone)]
@@ -17,10 +31,32 @@ pub struct EventRecord {
     pub detail: String,
 }
 
-/// Append-only event log.
-#[derive(Debug, Clone, Default)]
+/// Bounded event log: append-only in order, evicting oldest-first past
+/// the retention cap.
+///
+/// Storage is a `Vec` plus a `start` cursor: eviction advances the
+/// cursor (O(1)) and the backing vector is compacted once the dead
+/// prefix reaches the cap, so an append is amortized O(1) and the
+/// buffer never holds more than two caps of records — while
+/// [`EventLog::all`] stays a plain slice.
+#[derive(Debug, Clone)]
 pub struct EventLog {
     records: Vec<EventRecord>,
+    /// Index of the oldest live record in `records`.
+    start: usize,
+    cap: usize,
+    evicted: u64,
+}
+
+impl Default for EventLog {
+    fn default() -> EventLog {
+        EventLog {
+            records: Vec::new(),
+            start: 0,
+            cap: DEFAULT_EVENT_RETENTION,
+            evicted: 0,
+        }
+    }
 }
 
 impl EventLog {
@@ -30,44 +66,89 @@ impl EventLog {
 
     pub fn append(&mut self, rec: EventRecord) {
         self.records.push(rec);
+        self.enforce();
     }
 
+    fn enforce(&mut self) {
+        while self.records.len() - self.start > self.cap {
+            self.start += 1;
+            self.evicted += 1;
+        }
+        // Compact once the dead prefix is as large as the window can
+        // be: one O(cap) drain per cap evictions.
+        if self.start > self.cap.max(1) {
+            self.records.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// Change the retention cap. Takes effect immediately (a shrink
+    /// evicts down to the new cap) and for all subsequent appends —
+    /// including WAL replay, so a recovered server must be configured
+    /// with the same cap to converge to the same window (the snapshot
+    /// records the cap, see `Db::snapshot_doc`).
+    pub fn set_retention(&mut self, cap: usize) {
+        self.cap = cap;
+        self.enforce();
+    }
+
+    /// The retention cap (records).
+    pub fn retention(&self) -> usize {
+        self.cap
+    }
+
+    /// Total records evicted by the cap over this log's lifetime.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Restore the eviction tally when rebuilding from a snapshot (the
+    /// in-window records travel in the snapshot; the tally of what was
+    /// already gone must too, or recovery would zero the odometer).
+    pub fn set_evicted_total(&mut self, evicted: u64) {
+        self.evicted = evicted;
+    }
+
+    /// The live window, oldest first.
     pub fn all(&self) -> &[EventRecord] {
-        &self.records
+        &self.records[self.start..]
     }
 
+    /// Live records (≤ the retention cap).
     pub fn len(&self) -> usize {
-        self.records.len()
+        self.records.len() - self.start
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.len() == 0
     }
 
     /// Events of one kind, in time order.
     pub fn of_kind(&self, kind: &str) -> Vec<&EventRecord> {
-        self.records.iter().filter(|r| r.kind == kind).collect()
+        self.all().iter().filter(|r| r.kind == kind).collect()
     }
 
     /// Events concerning one job.
     pub fn of_job(&self, job: JobId) -> Vec<&EventRecord> {
-        self.records.iter().filter(|r| r.job == Some(job)).collect()
+        self.all().iter().filter(|r| r.job == Some(job)).collect()
     }
 
     /// Events whose kind starts with `prefix` (e.g. `RECOVERY_` — the
     /// restart-reconciliation audit trail), in time order.
     pub fn of_kind_prefix(&self, prefix: &str) -> Vec<&EventRecord> {
-        self.records
+        self.all()
             .iter()
             .filter(|r| r.kind.starts_with(prefix))
             .collect()
     }
 
-    /// Snapshot encoding.
+    /// Snapshot encoding: the live window as a plain array (the cap and
+    /// eviction tally are separate snapshot fields, so this shape is
+    /// unchanged from the unbounded log).
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
         Json::Arr(
-            self.records
+            self.all()
                 .iter()
                 .map(|r| {
                     Json::obj(vec![
@@ -115,6 +196,10 @@ impl EventLog {
 mod tests {
     use super::*;
 
+    fn ev(i: i64) -> EventRecord {
+        EventRecord { time: i, kind: format!("K{}", i % 3), job: Some(i as JobId % 5), detail: String::new() }
+    }
+
     #[test]
     fn filtering() {
         let mut log = EventLog::new();
@@ -124,5 +209,79 @@ mod tests {
         assert_eq!(log.of_kind("SUBMISSION").len(), 2);
         assert_eq!(log.of_job(1).len(), 2);
         assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_first_and_counts() {
+        let mut log = EventLog::new();
+        log.set_retention(10);
+        for i in 0..35 {
+            log.append(ev(i));
+        }
+        assert_eq!(log.len(), 10);
+        assert_eq!(log.evicted(), 25);
+        let times: Vec<i64> = log.all().iter().map(|r| r.time).collect();
+        assert_eq!(times, (25..35).collect::<Vec<_>>());
+        // The backing buffer is bounded too (compaction ran).
+        assert!(log.records.len() <= 2 * 10 + 1, "buffer {} too large", log.records.len());
+    }
+
+    #[test]
+    fn shrinking_the_cap_evicts_immediately() {
+        let mut log = EventLog::new();
+        for i in 0..8 {
+            log.append(ev(i));
+        }
+        log.set_retention(3);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.evicted(), 5);
+        assert_eq!(log.all()[0].time, 5);
+        assert_eq!(log.retention(), 3);
+    }
+
+    #[test]
+    fn eviction_is_a_pure_function_of_the_append_sequence() {
+        // Same cap + same appends => same window and tally, regardless
+        // of when compaction happened — the determinism WAL replay needs.
+        let mut a = EventLog::new();
+        let mut b = EventLog::new();
+        a.set_retention(7);
+        b.set_retention(7);
+        for i in 0..100 {
+            a.append(ev(i));
+        }
+        for i in 0..100 {
+            b.append(ev(i));
+        }
+        assert_eq!(a.evicted(), b.evicted());
+        let ta: Vec<i64> = a.all().iter().map(|r| r.time).collect();
+        let tb: Vec<i64> = b.all().iter().map(|r| r.time).collect();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn zero_cap_keeps_nothing_but_counts_everything() {
+        let mut log = EventLog::new();
+        log.set_retention(0);
+        for i in 0..5 {
+            log.append(ev(i));
+        }
+        assert!(log.is_empty());
+        assert_eq!(log.evicted(), 5);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_window_shape() {
+        let mut log = EventLog::new();
+        log.set_retention(4);
+        for i in 0..9 {
+            log.append(ev(i));
+        }
+        let back = EventLog::from_json(&log.to_json()).unwrap();
+        assert_eq!(back.len(), 4);
+        let times: Vec<i64> = back.all().iter().map(|r| r.time).collect();
+        assert_eq!(times, vec![5, 6, 7, 8]);
+        // The tally is restored separately by the snapshot decoder.
+        assert_eq!(back.evicted(), 0);
     }
 }

@@ -33,7 +33,7 @@ mod wal;
 pub use accounting::{Accounting, AccountingBuilder, UserUsage};
 pub use expr::{CmpOp, Columns, Expr, ParseError};
 pub use index::{ColumnIndex, IndexKey};
-pub use log::{EventLog, EventRecord};
+pub use log::{EventLog, EventRecord, DEFAULT_EVENT_RETENTION};
 pub use plan::{PlanKind, QueryPlan};
 pub use store::{Db, DbHandle, DbError, QueryStats};
 pub use table::{ColName, Row, Table};

@@ -1757,6 +1757,48 @@ impl Db {
         self.events.all()
     }
 
+    /// The `events` RPC read: the newest `tail` events matching the
+    /// optional kind/job filters, oldest first, plus the total match
+    /// count inside the retained window. One logical SELECT.
+    pub fn events_tail(
+        &self,
+        tail: usize,
+        kind: Option<&str>,
+        job: Option<JobId>,
+    ) -> (Vec<EventRecord>, usize) {
+        self.stats.selects.fetch_add(1, Ordering::Relaxed);
+        let matches: Vec<&EventRecord> = self
+            .events
+            .all()
+            .iter()
+            .filter(|r| kind.is_none_or(|k| r.kind == k))
+            .filter(|r| job.is_none_or(|j| r.job == Some(j)))
+            .collect();
+        let total = matches.len();
+        let start = total.saturating_sub(tail);
+        (matches[start..].iter().map(|r| (*r).clone()).collect(), total)
+    }
+
+    /// Configure the event-log retention cap (see `db/log.rs`: evicts
+    /// oldest-first immediately and on every later append). Not a
+    /// logged mutation — a recovered server must be configured with the
+    /// same cap (the snapshot records it) to converge to the same
+    /// retained window.
+    pub fn set_event_retention(&mut self, cap: usize) {
+        self.events.set_retention(cap);
+    }
+
+    /// The event-log retention cap (records).
+    pub fn event_retention(&self) -> usize {
+        self.events.retention()
+    }
+
+    /// Events evicted by the retention cap over this database's life
+    /// (surfaced as `oar_db_events_evicted_total`).
+    pub fn events_evicted(&self) -> u64 {
+        self.events.evicted()
+    }
+
     /// Events whose kind starts with `prefix` (e.g. `RECOVERY_` — the
     /// restart-reconciliation audit trail), in time order.
     pub fn events_with_kind_prefix(&self, prefix: &str) -> Vec<&EventRecord> {
@@ -1811,6 +1853,11 @@ impl Db {
             ("grid_tasks", self.grid_tasks.to_json()),
             ("resources", self.resources.to_json()),
             ("events", self.events.to_json()),
+            // Bounded-log bookkeeping: the window above is only
+            // interpretable with its cap, and the eviction odometer must
+            // survive restarts (or recovery would silently zero it).
+            ("events_cap", Json::Num(self.events.retention() as f64)),
+            ("events_evicted", Json::Num(self.events.evicted() as f64)),
         ])
     }
 
@@ -1887,6 +1934,16 @@ impl Db {
             snapshot_fail_after: None,
         };
         db.create_standard_indexes();
+        // Bounded-log bookkeeping (absent in pre-cap snapshots: keep
+        // the defaults). Restore the cap *before* WAL replay appends —
+        // eviction during replay must run under the same cap as the
+        // run that wrote the log.
+        if let Some(cap) = doc.get("events_cap").and_then(crate::util::Json::as_i64) {
+            db.events.set_retention(cap.max(0) as usize);
+        }
+        if let Some(evicted) = doc.get("events_evicted").and_then(crate::util::Json::as_i64) {
+            db.events.set_evicted_total(evicted.max(0) as u64);
+        }
         // Views are derived state, never serialized: rebuild them from
         // the loaded base tables, exactly like the indexes above. WAL
         // replay then maintains them through `apply`.

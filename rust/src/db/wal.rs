@@ -416,6 +416,9 @@ struct Sink {
     file: File,
     /// Framed records accepted by `append` but not yet written to `file`.
     pending: Vec<u8>,
+    /// Record count inside `pending` (the group-commit batch-size
+    /// distribution is reported in records as well as bytes).
+    pending_records: usize,
     /// Buffer appends for batched flushes (off: flush every record).
     group: bool,
     /// `sync_data` after every flush: power-loss durability, amortized
@@ -434,6 +437,7 @@ impl Sink {
         }
         self.file.write_all(&self.pending)?;
         self.pending.clear();
+        self.pending_records = 0;
         if self.sync_on_flush {
             self.file.sync_data()?;
         }
@@ -453,15 +457,31 @@ pub struct WalCommit {
 impl WalCommit {
     /// Make every acknowledged-to-be-appended record durable (to the
     /// degree the sync mode promises). Call before acking a write.
+    ///
+    /// Telemetry (flush latency + batch-size distribution) is captured
+    /// under the sink lock but recorded after it drops — the R7 lint
+    /// (docs/LINTS.md) forbids metric calls while the sink is held.
     pub fn commit(&self) -> Result<(), AppendError> {
-        let mut s = self.sink.lock().unwrap();
-        if s.crashed {
-            // Dead process: the tear already flushed what it accepted.
-            return Err(AppendError::Injected);
-        }
-        if let Err(e) = s.flush() {
-            s.crashed = true;
-            return Err(AppendError::Io(e));
+        let t0 = crate::obs::clock::now_us();
+        let (batch_bytes, batch_records) = {
+            let mut s = self.sink.lock().unwrap();
+            if s.crashed {
+                // Dead process: the tear already flushed what it accepted.
+                return Err(AppendError::Injected);
+            }
+            let bytes = s.pending.len();
+            let records = s.pending_records;
+            if let Err(e) = s.flush() {
+                s.crashed = true;
+                return Err(AppendError::Io(e));
+            }
+            (bytes, records)
+        };
+        if batch_bytes > 0 {
+            crate::obs::metrics::WAL_FLUSH_US
+                .observe(crate::obs::clock::now_us().saturating_sub(t0));
+            crate::obs::metrics::WAL_BATCH_BYTES.observe(batch_bytes as u64);
+            crate::obs::metrics::WAL_BATCH_RECORDS.observe(batch_records as u64);
         }
         Ok(())
     }
@@ -545,6 +565,7 @@ impl Wal {
             sink: Arc::new(Mutex::new(Sink {
                 file,
                 pending: Vec::new(),
+                pending_records: 0,
                 group: false,
                 sync_on_flush,
                 failpoint: None,
@@ -564,6 +585,7 @@ impl Wal {
     /// [`AppendError`] for how callers must treat the two failure classes
     /// differently.
     pub fn append(&mut self, m: &Mutation) -> Result<(), AppendError> {
+        let t0 = crate::obs::clock::now_us();
         let mut s = self.sink.lock().unwrap();
         if s.crashed {
             return Err(AppendError::Injected);
@@ -588,6 +610,7 @@ impl Wal {
             });
         }
         s.pending.extend_from_slice(&framed);
+        s.pending_records += 1;
         if !s.group || s.pending.len() >= GROUP_FLUSH_BYTES {
             if let Err(e) = s.flush() {
                 s.crashed = true;
@@ -597,6 +620,8 @@ impl Wal {
         drop(s);
         self.total += 1;
         self.since_checkpoint += 1;
+        crate::obs::metrics::WAL_APPEND_US
+            .observe(crate::obs::clock::now_us().saturating_sub(t0));
         Ok(())
     }
 

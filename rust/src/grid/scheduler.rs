@@ -644,12 +644,16 @@ fn requeue_or_fail(inner: &GridInner, db: &mut Db, task: &GridTask, why: &str, k
 /// The round thread is the only writer, so copy-out/write-back is
 /// race-free; readers just see the previous round's snapshot.
 fn round(inner: &Arc<GridInner>) {
+    // Declared first: every guard the round takes below is scoped inside
+    // the function, so the span records only after all are released.
+    let _round = crate::obs::Span::enter("grid.round", &crate::obs::metrics::GRID_ROUND_US);
     inner.counters.rounds.fetch_add(1, Ordering::Relaxed);
     let mut clusters: Vec<ClusterState> = inner.clusters.lock().unwrap().clone();
     let n = clusters.len();
     let mut sessions: Vec<Option<RpcClient>> = Vec::with_capacity(n);
 
     // ------------------------------------------------------- probe ----
+    let t_probe = crate::obs::clock::now_us();
     for cs in clusters.iter_mut() {
         let now = inner.now();
         if let Some(until) = cs.blacklisted_until {
@@ -692,7 +696,14 @@ fn round(inner: &Arc<GridInner>) {
         }
     }
 
+    // Phase boundaries are guard-free points (each phase takes and
+    // releases its guards internally), so recording here never overlaps
+    // a held lock.
+    crate::obs::metrics::GRID_PROBE_US
+        .observe(crate::obs::clock::now_us().saturating_sub(t_probe));
+
     // --------------------------------------------------- reconcile ----
+    let t_reconcile = crate::obs::clock::now_us();
     for i in 0..n {
         if sessions[i].is_none() {
             continue;
@@ -893,10 +904,14 @@ fn round(inner: &Arc<GridInner>) {
         }
     }
 
+    crate::obs::metrics::GRID_RECONCILE_US
+        .observe(crate::obs::clock::now_us().saturating_sub(t_reconcile));
+
     // ---------------------------------------------------- dispatch ----
     // Headrooms first: the pending fetch is capped at what this wave can
     // actually place, so a million-task backlog costs a million-row
     // materialization exactly never.
+    let t_dispatch = crate::obs::clock::now_us();
     let headrooms: Vec<u32> = {
         let db = inner.db.read().unwrap();
         let mut outstanding: BTreeMap<String, u32> = BTreeMap::new();
@@ -990,6 +1005,9 @@ fn round(inner: &Arc<GridInner>) {
             }
         }
     }
+
+    crate::obs::metrics::GRID_DISPATCH_US
+        .observe(crate::obs::clock::now_us().saturating_sub(t_dispatch));
 
     // ------------------------------------------------ close campaigns ----
     let now = inner.now();

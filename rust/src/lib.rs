@@ -46,6 +46,12 @@
 //!   WAL-commit-before-ack, `RwLock<Db>` pinning, request-path
 //!   panic-freedom, atomics calibration). See `docs/LINTS.md`.
 
+//! * [`obs`] — the observability layer (§1's "logging information
+//!   analysis", live): a zero-dependency metrics registry (relaxed-atomic
+//!   counters/gauges + log2-bucketed latency histograms), RAII tracing
+//!   spans with a bounded forensics ring, and a deterministic test
+//!   clock — exposed via the `metrics`/`events` RPC methods,
+//!   `oar metrics` and `oar top`. See `docs/OBSERVABILITY.md`.
 //! * [`resources`] — the hierarchical resource subsystem: the
 //!   cluster/switch/host/cpu/core tree (stored as the `resources` table,
 //!   with the nodes table derived from its host level), the total parser
@@ -65,6 +71,7 @@ pub mod grid;
 pub mod launcher;
 pub mod matching;
 pub mod monitor;
+pub mod obs;
 pub mod resources;
 pub mod rpc;
 pub mod runtime;

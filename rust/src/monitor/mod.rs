@@ -27,6 +27,8 @@ pub fn monitor_round(
     launcher: &Launcher,
     now: Time,
 ) -> Result<MonitorReport> {
+    // Declared before either guard: both drop before the span records.
+    let _round = crate::obs::Span::enter("monitor.round", &crate::obs::metrics::MONITOR_ROUND_US);
     let nodes = db.read().unwrap().all_nodes();
     let ids: Vec<_> = nodes.iter().map(|n| n.id).collect();
     let states = launcher.ping_all(&ids);

@@ -1,0 +1,54 @@
+//! The observability clock: monotonic microseconds since process start,
+//! with a deterministic manual mode for tests.
+//!
+//! Every duration the `obs` layer records flows through [`now_us`], so a
+//! test that freezes the clock and advances it by hand can assert *exact*
+//! histogram bucket placement instead of sleeping and hoping. The manual
+//! mode is process-global on purpose: the deterministic suites live in
+//! their own integration binary (`rust/tests/obs.rs`), which is a
+//! separate process, so freezing there cannot skew timings observed by
+//! the other test suites.
+//!
+//! The real mode derives from a lazily-pinned [`Instant`] epoch (the
+//! first call wins), never from wall-clock time — `SystemTime` can step
+//! backwards under NTP and would corrupt latency histograms.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static MANUAL: AtomicBool = AtomicBool::new(false);
+static MANUAL_US: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Current observability time in microseconds. Monotonic in real mode;
+/// exactly what the test set in manual mode.
+pub fn now_us() -> u64 {
+    if MANUAL.load(Ordering::Relaxed) {
+        return MANUAL_US.load(Ordering::Relaxed);
+    }
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Switch to manual time, pinned at `us`. Subsequent [`now_us`] calls
+/// return exactly the values driven by [`advance_us`].
+pub fn freeze_at(us: u64) {
+    MANUAL_US.store(us, Ordering::Relaxed);
+    MANUAL.store(true, Ordering::Relaxed);
+}
+
+/// Advance manual time. No-op on the real clock reading, but always
+/// updates the manual register so freeze→advance sequences compose.
+pub fn advance_us(us: u64) {
+    MANUAL_US.fetch_add(us, Ordering::Relaxed);
+}
+
+/// Return to the real monotonic clock.
+pub fn unfreeze() {
+    MANUAL.store(false, Ordering::Relaxed);
+}
+
+/// Whether the clock is in manual (test) mode.
+pub fn is_frozen() -> bool {
+    MANUAL.load(Ordering::Relaxed)
+}

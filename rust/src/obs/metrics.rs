@@ -1,0 +1,178 @@
+//! The metric catalogue: every metric in the tree, registered by
+//! `static` name (docs/OBSERVABILITY.md documents each one).
+//!
+//! Naming scheme: `oar_<subsystem>_<what>[_<unit>]`, with `_total` for
+//! counters. Units are microseconds (`_us`) unless stated otherwise.
+//! Adding a metric means adding the `static` *and* its entry in the
+//! `all_*` slice below — the obs test suite asserts the two stay in
+//! sync (every name unique, every static enumerated).
+
+use super::registry::{Counter, Gauge, Histogram};
+
+// ---------------------------------------------------- central server ----
+
+/// Whole scheduling round (plan + apply + launch dispatch).
+pub static SCHED_ROUND_US: Histogram = Histogram::new("oar_sched_round_us", "us");
+/// Plan phase: `Scheduler::round` under the db *read* guard (includes
+/// the guard acquisition wait, reported separately below).
+pub static SCHED_PLAN_US: Histogram = Histogram::new("oar_sched_plan_us", "us");
+/// Apply phase: `apply_decision` under the db *write* guard, through
+/// the group-commit WAL flush.
+pub static SCHED_APPLY_US: Histogram = Histogram::new("oar_sched_apply_us", "us");
+/// Scheduling rounds run.
+pub static SCHED_ROUNDS: Counter = Counter::new("oar_sched_rounds_total");
+/// One monitoring round: reachability sweep + state reconciliation.
+pub static MONITOR_ROUND_US: Histogram = Histogram::new("oar_monitor_round_us", "us");
+
+// ---------------------------------------------------------- db locks ----
+
+/// Wait to acquire a shared db read guard.
+pub static DB_READ_WAIT_US: Histogram = Histogram::new("oar_db_read_wait_us", "us");
+/// Wait to acquire the exclusive db write guard.
+pub static DB_WRITE_WAIT_US: Histogram = Histogram::new("oar_db_write_wait_us", "us");
+
+// --------------------------------------------------------------- wal ----
+
+/// One `Wal::append`: frame + buffer (group mode) or flush (immediate).
+pub static WAL_APPEND_US: Histogram = Histogram::new("oar_wal_append_us", "us");
+/// One group-commit flush (`WalCommit::commit` with a non-empty batch).
+pub static WAL_FLUSH_US: Histogram = Histogram::new("oar_wal_flush_us", "us");
+/// Bytes per flushed group-commit batch.
+pub static WAL_BATCH_BYTES: Histogram = Histogram::new("oar_wal_batch_bytes", "bytes");
+/// Records per flushed group-commit batch.
+pub static WAL_BATCH_RECORDS: Histogram = Histogram::new("oar_wal_batch_records", "records");
+
+// --------------------------------------------------------------- rpc ----
+
+/// Requests dispatched (any method, any outcome).
+pub static RPC_REQUESTS: Counter = Counter::new("oar_rpc_requests_total");
+/// Requests currently inside `dispatch`.
+pub static RPC_INFLIGHT: Gauge = Gauge::new("oar_rpc_inflight");
+
+pub static RPC_PING_US: Histogram = Histogram::new("oar_rpc_ping_us", "us");
+pub static RPC_SUB_US: Histogram = Histogram::new("oar_rpc_sub_us", "us");
+pub static RPC_STAT_US: Histogram = Histogram::new("oar_rpc_stat_us", "us");
+pub static RPC_DEL_US: Histogram = Histogram::new("oar_rpc_del_us", "us");
+pub static RPC_HOLD_US: Histogram = Histogram::new("oar_rpc_hold_us", "us");
+pub static RPC_RESUME_US: Histogram = Histogram::new("oar_rpc_resume_us", "us");
+pub static RPC_LOAD_US: Histogram = Histogram::new("oar_rpc_load_us", "us");
+pub static RPC_NODES_US: Histogram = Histogram::new("oar_rpc_nodes_us", "us");
+pub static RPC_QUEUES_US: Histogram = Histogram::new("oar_rpc_queues_us", "us");
+pub static RPC_METRICS_US: Histogram = Histogram::new("oar_rpc_metrics_us", "us");
+pub static RPC_EVENTS_US: Histogram = Histogram::new("oar_rpc_events_us", "us");
+/// Unknown or malformed-envelope requests (no recognized method).
+pub static RPC_OTHER_US: Histogram = Histogram::new("oar_rpc_other_us", "us");
+
+/// Per-method latency histogram; unrecognized methods share `other`.
+pub fn rpc_method_hist(method: &str) -> &'static Histogram {
+    match method {
+        "ping" => &RPC_PING_US,
+        "sub" => &RPC_SUB_US,
+        "stat" => &RPC_STAT_US,
+        "del" => &RPC_DEL_US,
+        "hold" => &RPC_HOLD_US,
+        "resume" => &RPC_RESUME_US,
+        "load" => &RPC_LOAD_US,
+        "nodes" => &RPC_NODES_US,
+        "queues" => &RPC_QUEUES_US,
+        "metrics" => &RPC_METRICS_US,
+        "events" => &RPC_EVENTS_US,
+        _ => &RPC_OTHER_US,
+    }
+}
+
+/// One counter per stable error code (`rpc::proto::code`).
+pub static RPC_ERR_BAD_REQUEST: Counter = Counter::new("oar_rpc_err_bad_request_total");
+pub static RPC_ERR_UNSUPPORTED_VERSION: Counter =
+    Counter::new("oar_rpc_err_unsupported_version_total");
+pub static RPC_ERR_UNKNOWN_METHOD: Counter = Counter::new("oar_rpc_err_unknown_method_total");
+pub static RPC_ERR_ADMISSION_REJECTED: Counter =
+    Counter::new("oar_rpc_err_admission_rejected_total");
+pub static RPC_ERR_BAD_FILTER: Counter = Counter::new("oar_rpc_err_bad_filter_total");
+pub static RPC_ERR_NO_SUCH_JOB: Counter = Counter::new("oar_rpc_err_no_such_job_total");
+pub static RPC_ERR_ILLEGAL_STATE: Counter = Counter::new("oar_rpc_err_illegal_state_total");
+pub static RPC_ERR_SHUTTING_DOWN: Counter = Counter::new("oar_rpc_err_shutting_down_total");
+pub static RPC_ERR_INTERNAL: Counter = Counter::new("oar_rpc_err_internal_total");
+/// A code outside the stable set (future servers; never minted today).
+pub static RPC_ERR_OTHER: Counter = Counter::new("oar_rpc_err_other_total");
+
+/// Per-error-code counter; codes outside the stable set share `other`.
+pub fn rpc_error_counter(code: &str) -> &'static Counter {
+    match code {
+        "bad_request" => &RPC_ERR_BAD_REQUEST,
+        "unsupported_version" => &RPC_ERR_UNSUPPORTED_VERSION,
+        "unknown_method" => &RPC_ERR_UNKNOWN_METHOD,
+        "admission_rejected" => &RPC_ERR_ADMISSION_REJECTED,
+        "bad_filter" => &RPC_ERR_BAD_FILTER,
+        "no_such_job" => &RPC_ERR_NO_SUCH_JOB,
+        "illegal_state" => &RPC_ERR_ILLEGAL_STATE,
+        "shutting_down" => &RPC_ERR_SHUTTING_DOWN,
+        "internal" => &RPC_ERR_INTERNAL,
+        _ => &RPC_ERR_OTHER,
+    }
+}
+
+// -------------------------------------------------------------- grid ----
+
+/// Whole executive round (probe → reconcile → dispatch → close).
+pub static GRID_ROUND_US: Histogram = Histogram::new("oar_grid_round_us", "us");
+/// Probe phase: one bounded `load` per cluster.
+pub static GRID_PROBE_US: Histogram = Histogram::new("oar_grid_probe_us", "us");
+/// Reconcile phase: per-cluster `stat` + task-state convergence.
+pub static GRID_RECONCILE_US: Histogram = Histogram::new("oar_grid_reconcile_us", "us");
+/// Dispatch phase: intent records + remote `sub` calls.
+pub static GRID_DISPATCH_US: Histogram = Histogram::new("oar_grid_dispatch_us", "us");
+
+// ------------------------------------------------------- enumeration ----
+
+pub fn all_counters() -> &'static [&'static Counter] {
+    &[
+        &SCHED_ROUNDS,
+        &RPC_REQUESTS,
+        &RPC_ERR_BAD_REQUEST,
+        &RPC_ERR_UNSUPPORTED_VERSION,
+        &RPC_ERR_UNKNOWN_METHOD,
+        &RPC_ERR_ADMISSION_REJECTED,
+        &RPC_ERR_BAD_FILTER,
+        &RPC_ERR_NO_SUCH_JOB,
+        &RPC_ERR_ILLEGAL_STATE,
+        &RPC_ERR_SHUTTING_DOWN,
+        &RPC_ERR_INTERNAL,
+        &RPC_ERR_OTHER,
+    ]
+}
+
+pub fn all_gauges() -> &'static [&'static Gauge] {
+    &[&RPC_INFLIGHT]
+}
+
+pub fn all_hists() -> &'static [&'static Histogram] {
+    &[
+        &SCHED_ROUND_US,
+        &SCHED_PLAN_US,
+        &SCHED_APPLY_US,
+        &MONITOR_ROUND_US,
+        &DB_READ_WAIT_US,
+        &DB_WRITE_WAIT_US,
+        &WAL_APPEND_US,
+        &WAL_FLUSH_US,
+        &WAL_BATCH_BYTES,
+        &WAL_BATCH_RECORDS,
+        &RPC_PING_US,
+        &RPC_SUB_US,
+        &RPC_STAT_US,
+        &RPC_DEL_US,
+        &RPC_HOLD_US,
+        &RPC_RESUME_US,
+        &RPC_LOAD_US,
+        &RPC_NODES_US,
+        &RPC_QUEUES_US,
+        &RPC_METRICS_US,
+        &RPC_EVENTS_US,
+        &RPC_OTHER_US,
+        &GRID_ROUND_US,
+        &GRID_PROBE_US,
+        &GRID_RECONCILE_US,
+        &GRID_DISPATCH_US,
+    ]
+}

@@ -1,0 +1,127 @@
+//! Observability (`obs`): in-process telemetry for the whole scheduler.
+//!
+//! The paper's §1 names "user-friendly logging information analysis" as
+//! a first-class need; this module is the runtime half of that — a
+//! zero-dependency telemetry layer answering "where does a scheduling
+//! round spend its time, how long do readers wait on the `RwLock<Db>`,
+//! how big are group-commit WAL batches" *on a live server*:
+//!
+//! - a global, lock-free **metrics registry** ([`registry`]): relaxed
+//!   atomic counters, gauges and log2-bucketed latency histograms,
+//!   registered by static name in the catalogue ([`metrics`]);
+//! - **tracing spans** ([`Span::enter`]): RAII timing into histograms
+//!   plus a bounded ring of recent [`SpanRecord`]s with parent/child
+//!   nesting, for post-hoc round forensics;
+//! - a deterministic, injectable **clock** ([`clock`]) so tests assert
+//!   exact bucket placement.
+//!
+//! Exposure: the versioned `metrics` RPC method (typed
+//! [`MetricsSnapshot`]), the Prometheus-style text exposition
+//! (`oar metrics [--watch]`), and the `oar top` dashboard. See
+//! docs/OBSERVABILITY.md for the catalogue and the overhead numbers.
+//!
+//! Invariant (machine-checked, docs/LINTS.md §R7): no metric or span
+//! call executes while holding the db write guard's commit path or the
+//! WAL sink lock — instrumentation times *across* those regions and
+//! records after release.
+
+pub mod clock;
+pub mod metrics;
+pub mod registry;
+pub mod span;
+
+pub use registry::{
+    bucket_index, bucket_le, enabled, set_enabled, snapshot, Counter, DbCounters, Gauge,
+    Histogram, HistogramSnapshot, MetricsSnapshot, BUCKETS, SNAPSHOT_VERSION,
+};
+pub use span::{
+    recent_spans, ring_stats, set_ring_capacity, Span, SpanRecord, DEFAULT_RING_CAPACITY,
+};
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on broken expectations
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_le_is_inclusive_upper_bound() {
+        // Every representable value lands in a bucket whose `le` bounds it.
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1000, 1 << 20] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_le(i), "v={v} i={i} le={}", bucket_le(i));
+            if i > 0 {
+                assert!(v > bucket_le(i - 1), "v={v} not above lower bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn catalogue_names_are_unique_and_enumerated() {
+        let mut names: Vec<&str> = metrics::all_counters().iter().map(|c| c.name()).collect();
+        names.extend(metrics::all_gauges().iter().map(|g| g.name()));
+        names.extend(metrics::all_hists().iter().map(|h| h.name()));
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name in the catalogue");
+        assert!(names.iter().all(|n| n.starts_with("oar_")));
+    }
+
+    #[test]
+    fn rpc_lookups_cover_the_protocol() {
+        for m in [
+            "ping", "sub", "stat", "del", "hold", "resume", "load", "nodes", "queues",
+            "metrics", "events",
+        ] {
+            assert_ne!(metrics::rpc_method_hist(m).name(), "oar_rpc_other_us", "{m}");
+        }
+        assert_eq!(metrics::rpc_method_hist("nope").name(), "oar_rpc_other_us");
+        for c in crate::rpc::proto::code::ALL {
+            assert_ne!(
+                metrics::rpc_error_counter(c).name(),
+                "oar_rpc_err_other_total",
+                "{c}"
+            );
+        }
+        assert_eq!(
+            metrics::rpc_error_counter("martian").name(),
+            "oar_rpc_err_other_total"
+        );
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        metrics::SCHED_ROUNDS.inc();
+        metrics::SCHED_PLAN_US.observe(5);
+        metrics::SCHED_PLAN_US.observe(5000);
+        let snap = snapshot(Some(&DbCounters { view_hits: 7, ..DbCounters::default() }));
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.counter("oar_db_view_hits_total"), Some(7));
+        assert!(back.counter("oar_sched_rounds_total").unwrap() >= 1);
+        let h = back.hist("oar_sched_plan_us").unwrap();
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+    }
+
+    #[test]
+    fn text_exposition_has_one_line_per_scalar() {
+        let snap = snapshot(None);
+        let text = snap.render_text();
+        assert!(text.contains("# TYPE oar_rpc_requests_total counter"));
+        assert!(text.contains("# TYPE oar_rpc_inflight gauge"));
+        assert!(text.contains("# TYPE oar_sched_plan_us histogram"));
+        assert!(text.contains("oar_sched_plan_us_count"));
+    }
+}

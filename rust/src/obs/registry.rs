@@ -1,0 +1,476 @@
+//! The metrics registry: relaxed-atomic counters, gauges and
+//! log-bucketed histograms, registered by `static` name.
+//!
+//! Registration is the catalogue in [`crate::obs::metrics`]: every metric
+//! is a `static` item built with a `const` constructor, so the hot path
+//! is a single relaxed atomic op on a pre-existing cell — no lazy init,
+//! no map lookup, no lock, ever. Enumeration (for the `metrics` RPC and
+//! the Prometheus-style exposition) walks fixed `&'static` slices.
+//!
+//! All orderings are `Relaxed` by calibration (docs/LINTS.md §R6): these
+//! are pure tallies — nothing synchronizes *through* a metric.
+//!
+//! The whole layer has a kill switch: [`set_enabled`] for the runtime
+//! ablation the `obs` bench measures, and the `obs_noop` cargo feature
+//! for a true compiled-out baseline (the `enabled()` branch folds to
+//! `false` and the record paths disappear).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// Number of log2 buckets per histogram. Bucket 0 holds the value 0;
+/// bucket `i >= 1` holds values in `[2^(i-1), 2^i)`; the last bucket
+/// absorbs everything above. 40 buckets cover > 6 days in microseconds.
+pub const BUCKETS: usize = 40;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether record calls do anything. With the `obs_noop` feature the
+/// answer is a compile-time `false`.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(feature = "obs_noop")]
+    {
+        false
+    }
+    #[cfg(not(feature = "obs_noop"))]
+    {
+        ENABLED.load(Ordering::Relaxed)
+    }
+}
+
+/// Runtime kill switch (the ablation baseline in `benches/obs.rs`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------ counter ----
+
+/// A monotonically increasing tally.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Counter {
+        Counter { name, v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+// ------------------------------------------------------------- gauge ----
+
+/// A value that goes up and down (in-flight requests, queue depth).
+pub struct Gauge {
+    name: &'static str,
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str) -> Gauge {
+        Gauge { name, v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn rise(&self) {
+        if enabled() {
+            self.v.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Paired with [`Gauge::rise`]. Always executes (not gated on
+    /// [`enabled`]) so a toggle mid-request cannot strand the gauge
+    /// above zero forever; a spurious decrement clamps at the reader.
+    #[inline]
+    pub fn fall(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed).max(0)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+// --------------------------------------------------------- histogram ----
+
+/// A log2-bucketed distribution. `p50`/`p99`/`max` are derived from the
+/// buckets at snapshot time; recording is one index computation plus two
+/// relaxed adds (three when a new max is seen).
+pub struct Histogram {
+    name: &'static str,
+    /// Unit suffix carried into the exposition (`us`, `bytes`, ...).
+    unit: &'static str,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+/// Index of the bucket holding `v`: 0 for 0, else `⌊log2 v⌋ + 1`,
+/// clamped into the last bucket.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the overflow
+/// bucket — rendered as `+Inf`).
+pub fn bucket_le(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str, unit: &'static str) -> Histogram {
+        // `AtomicU64` is not `Copy`; a `const` item is the standard way
+        // to splat a fresh cell per array slot.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            unit,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: [ZERO; BUCKETS],
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        // Per-bucket loads are individually relaxed, so a racing observe
+        // can make the straight `count` load disagree with the bucket
+        // sum by in-flight observations. The snapshot's own invariant
+        // (bucket-sum == count, asserted by tests and consumers) is kept
+        // by deriving the count from the buckets we actually read.
+        let count: u64 = buckets.iter().sum();
+        HistogramSnapshot {
+            name: self.name.to_string(),
+            unit: self.unit.to_string(),
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram, with percentiles derivable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub name: String,
+    pub unit: String,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    /// One count per log2 bucket, index as in [`bucket_le`].
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// Upper bound of the bucket containing the q-th quantile
+    /// (`0.0 < q <= 1.0`), 0 when empty. Exact for the bucket edges the
+    /// deterministic-clock suite drives; an upper bound otherwise.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                // The overflow bucket has no finite upper bound; the
+                // observed max is the tightest true statement.
+                return if bucket_le(i) == u64::MAX { self.max } else { bucket_le(i) };
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Sparse encoding: only non-empty buckets travel, as
+        // [index, count] pairs — a fresh histogram is a few bytes.
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(*c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("unit", Json::Str(self.unit.clone())),
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("p50", Json::Num(self.p50() as f64)),
+            ("p99", Json::Num(self.p99() as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<HistogramSnapshot> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let unit = j.get("unit")?.as_str()?.to_string();
+        let count = j.get("count")?.as_f64()? as u64;
+        let sum = j.get("sum")?.as_f64()? as u64;
+        let max = j.get("max")?.as_f64()? as u64;
+        let mut buckets = vec![0u64; BUCKETS];
+        for pair in j.get("buckets")?.as_arr()? {
+            let p = pair.as_arr()?;
+            let i = p.first()?.as_f64()? as usize;
+            let c = p.get(1)?.as_f64()? as u64;
+            if i < BUCKETS {
+                buckets[i] = c;
+            }
+        }
+        Some(HistogramSnapshot { name, unit, count, sum, max, buckets })
+    }
+}
+
+// ---------------------------------------------------------- snapshot ----
+
+/// Query-engine counters read under a db *read* guard at snapshot time.
+///
+/// These live in `QueryStats`/per-table cells that are bumped inside
+/// `Db` methods — including the apply/commit path under the write guard
+/// — so they are bridged into the registry here, at read time, instead
+/// of being recorded inline (the R7 invariant: no telemetry call under
+/// the write guard's commit path or the WAL sink lock).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DbCounters {
+    pub selects: u64,
+    pub inserts: u64,
+    pub updates: u64,
+    pub deletes: u64,
+    pub index_probes: u64,
+    pub full_scans: u64,
+    pub view_hits: u64,
+    /// Live rows in the bounded event log.
+    pub events_len: u64,
+    /// Rows evicted by the retention cap since this `Db` was built.
+    pub events_evicted: u64,
+    /// The retention cap itself.
+    pub events_cap: u64,
+}
+
+impl DbCounters {
+    fn pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("oar_db_selects_total", self.selects),
+            ("oar_db_inserts_total", self.inserts),
+            ("oar_db_updates_total", self.updates),
+            ("oar_db_deletes_total", self.deletes),
+            ("oar_db_index_probes_total", self.index_probes),
+            ("oar_db_full_scans_total", self.full_scans),
+            ("oar_db_view_hits_total", self.view_hits),
+            ("oar_db_events_rows", self.events_len),
+            ("oar_db_events_evicted_total", self.events_evicted),
+            ("oar_db_events_retention_cap", self.events_cap),
+        ]
+    }
+}
+
+/// The versioned, typed snapshot the `metrics` RPC ships.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub version: u64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistogramSnapshot>,
+}
+
+/// Snapshot wire-format version (bump on breaking shape changes).
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Assemble a snapshot of every registered metric, merging the
+/// db-derived counters when the caller holds them.
+pub fn snapshot(db: Option<&DbCounters>) -> MetricsSnapshot {
+    let mut counters: Vec<(String, u64)> = super::metrics::all_counters()
+        .iter()
+        .map(|c| (c.name().to_string(), c.get()))
+        .collect();
+    if let Some(db) = db {
+        counters.extend(db.pairs().into_iter().map(|(n, v)| (n.to_string(), v)));
+    }
+    let (ring_len, ring_cap, ring_evicted) = super::span::ring_stats();
+    counters.push(("oar_obs_spans_evicted_total".to_string(), ring_evicted));
+    let mut gauges: Vec<(String, i64)> = super::metrics::all_gauges()
+        .iter()
+        .map(|g| (g.name().to_string(), g.get()))
+        .collect();
+    gauges.push(("oar_obs_span_ring_rows".to_string(), ring_len as i64));
+    gauges.push(("oar_obs_span_ring_cap".to_string(), ring_cap as i64));
+    let hists = super::metrics::all_hists().iter().map(|h| h.snapshot()).collect();
+    MetricsSnapshot { version: SNAPSHOT_VERSION, counters, gauges, hists }
+}
+
+impl MetricsSnapshot {
+    pub fn hist(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(self.version as f64)),
+            (
+                "counters",
+                Json::Arr(
+                    self.counters
+                        .iter()
+                        .map(|(n, v)| {
+                            Json::Arr(vec![Json::Str(n.clone()), Json::Num(*v as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Arr(
+                    self.gauges
+                        .iter()
+                        .map(|(n, v)| {
+                            Json::Arr(vec![Json::Str(n.clone()), Json::Num(*v as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("hists", Json::Arr(self.hists.iter().map(|h| h.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<MetricsSnapshot> {
+        let version = j.get("v")?.as_f64()? as u64;
+        let mut counters = Vec::new();
+        for pair in j.get("counters")?.as_arr()? {
+            let p = pair.as_arr()?;
+            counters.push((p.first()?.as_str()?.to_string(), p.get(1)?.as_f64()? as u64));
+        }
+        let mut gauges = Vec::new();
+        for pair in j.get("gauges")?.as_arr()? {
+            let p = pair.as_arr()?;
+            gauges.push((p.first()?.as_str()?.to_string(), p.get(1)?.as_f64()? as i64));
+        }
+        let mut hists = Vec::new();
+        for h in j.get("hists")?.as_arr()? {
+            hists.push(HistogramSnapshot::from_json(h)?);
+        }
+        Some(MetricsSnapshot { version, counters, gauges, hists })
+    }
+
+    /// Prometheus-style text exposition (`oar metrics`). One line per
+    /// counter/gauge, and per histogram: `_count`, `_sum`, `_max`,
+    /// quantile series and cumulative `_bucket{le=...}` lines.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for h in &self.hists {
+            let _ = writeln!(out, "# TYPE {} histogram", h.name);
+            let _ = writeln!(out, "{}_count {}", h.name, h.count);
+            let _ = writeln!(out, "{}_sum {}", h.name, h.sum);
+            let _ = writeln!(out, "{}_max {}", h.name, h.max);
+            let _ = writeln!(out, "{}{{quantile=\"0.5\"}} {}", h.name, h.p50());
+            let _ = writeln!(out, "{}{{quantile=\"0.99\"}} {}", h.name, h.p99());
+            let mut cum = 0u64;
+            for (i, c) in h.buckets.iter().enumerate() {
+                if *c == 0 {
+                    continue;
+                }
+                cum += c;
+                let le = bucket_le(i);
+                if le == u64::MAX {
+                    let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {cum}", h.name);
+                } else {
+                    let _ = writeln!(out, "{}_bucket{{le=\"{le}\"}} {cum}", h.name);
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,163 @@
+//! Tracing spans: RAII timing into histograms plus a bounded ring of
+//! recent span records for post-hoc round forensics.
+//!
+//! [`Span::enter`] stamps the obs clock, links itself under the
+//! thread's current span (parent/child nesting via a thread-local), and
+//! on drop records the elapsed time into its histogram and pushes a
+//! [`SpanRecord`] into a global fixed-capacity ring. The ring overwrites
+//! oldest-first, so memory is bounded no matter how long the server
+//! runs; overwrites are tallied (`oar_obs_spans_evicted_total`).
+//!
+//! Lock discipline: the ring mutex (`RING`) is a leaf — record/read
+//! take it for a few instructions and never acquire anything under it.
+//! Instrumented code must still never *reach* a record call while
+//! holding the db write guard or the WAL sink lock; that is the R7 lint
+//! (docs/LINTS.md), and the RAII sites are arranged so the drop fires
+//! after those guards are released.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use super::clock;
+use super::registry::Histogram;
+
+/// Default ring capacity (records, not bytes; a record is ~64 bytes).
+pub const DEFAULT_RING_CAPACITY: usize = 1024;
+
+/// One finished span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Unique id (process-wide, never 0).
+    pub id: u64,
+    /// Enclosing span's id at enter time; 0 for a root span.
+    pub parent: u64,
+    pub name: &'static str,
+    /// Obs-clock time at enter, microseconds.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Innermost live span on this thread (0 = none).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+struct Ring {
+    buf: Vec<SpanRecord>,
+    /// Next overwrite position once `buf.len() == cap`.
+    head: usize,
+    cap: usize,
+    evicted: u64,
+}
+
+// Telemetry must survive a panicking peer (the rpc workers run handlers
+// under catch_unwind): the ring holds a plain list with no cross-field
+// invariant, so poison is ignored, same policy as the rpc queue locks.
+static RING: Mutex<Ring> = Mutex::new(Ring {
+    buf: Vec::new(),
+    head: 0,
+    cap: DEFAULT_RING_CAPACITY,
+    evicted: 0,
+});
+
+fn ring_push(rec: SpanRecord) {
+    let mut r = RING.lock().unwrap_or_else(PoisonError::into_inner);
+    if r.cap == 0 {
+        r.evicted += 1;
+        return;
+    }
+    if r.buf.len() < r.cap {
+        r.buf.push(rec);
+    } else {
+        let head = r.head;
+        r.buf[head] = rec;
+        r.head = (head + 1) % r.cap;
+        r.evicted += 1;
+    }
+}
+
+/// The most recent `n` finished spans, oldest first.
+pub fn recent_spans(n: usize) -> Vec<SpanRecord> {
+    let r = RING.lock().unwrap_or_else(PoisonError::into_inner);
+    let len = r.buf.len();
+    let take = n.min(len);
+    let mut out = Vec::with_capacity(take);
+    // Chronological order: the ring's oldest entry sits at `head`.
+    for i in (len - take)..len {
+        out.push(r.buf[(r.head + i) % len].clone());
+    }
+    out
+}
+
+/// `(live records, capacity, overwritten-total)`.
+pub fn ring_stats() -> (usize, usize, u64) {
+    let r = RING.lock().unwrap_or_else(PoisonError::into_inner);
+    (r.buf.len(), r.cap, r.evicted)
+}
+
+/// Resize the ring (test hook / future config). Existing records are
+/// kept newest-first up to the new capacity.
+pub fn set_ring_capacity(cap: usize) {
+    let mut r = RING.lock().unwrap_or_else(PoisonError::into_inner);
+    let mut records: Vec<SpanRecord> = {
+        let len = r.buf.len();
+        let mut v = Vec::with_capacity(len);
+        for i in 0..len {
+            v.push(r.buf[(r.head + i) % len].clone());
+        }
+        v
+    };
+    if records.len() > cap {
+        let drop_n = records.len() - cap;
+        records.drain(..drop_n);
+        r.evicted += drop_n as u64;
+    }
+    r.buf = records;
+    r.head = 0;
+    r.cap = cap;
+}
+
+/// An in-progress timed region. Construct with [`Span::enter`]; the
+/// drop records into the histogram and the ring.
+pub struct Span {
+    name: &'static str,
+    hist: &'static Histogram,
+    id: u64,
+    parent: u64,
+    start_us: u64,
+}
+
+impl Span {
+    pub fn enter(name: &'static str, hist: &'static Histogram) -> Span {
+        let parent = CURRENT.with(Cell::get);
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        CURRENT.with(|c| c.set(id));
+        Span { name, hist, id, parent, start_us: clock::now_us() }
+    }
+
+    /// This span's id (stable across its lifetime; useful in tests).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.parent));
+        if !super::registry::enabled() {
+            return;
+        }
+        let dur_us = clock::now_us().saturating_sub(self.start_us);
+        self.hist.observe(dur_us);
+        ring_push(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            start_us: self.start_us,
+            dur_us,
+        });
+    }
+}

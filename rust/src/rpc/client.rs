@@ -266,6 +266,39 @@ impl RpcClient {
         }
     }
 
+    /// `metrics`: the server's full observability snapshot — counters,
+    /// gauges and latency histograms (see `docs/OBSERVABILITY.md`).
+    pub fn metrics(&mut self) -> CallResult<crate::obs::MetricsSnapshot> {
+        let res = self.call("metrics", Json::Null)?;
+        match res {
+            Ok(ok) => Ok(Ok(proto::metrics_from_json(&ok)?)),
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// `events`: the newest `tail` event-log records (oldest first),
+    /// optionally filtered by kind and/or job, plus the total number of
+    /// live records matching the filter.
+    pub fn events(
+        &mut self,
+        tail: usize,
+        kind: Option<&str>,
+        job: Option<JobId>,
+    ) -> CallResult<(Vec<crate::db::EventRecord>, usize)> {
+        let mut params = vec![("tail", Json::Num(tail as f64))];
+        if let Some(k) = kind {
+            params.push(("kind", Json::Str(k.to_string())));
+        }
+        if let Some(j) = job {
+            params.push(("job", Json::Num(j as f64)));
+        }
+        let res = self.call("events", Json::obj(params))?;
+        match res {
+            Ok(ok) => Ok(Ok(proto::events_from_json(&ok)?)),
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
     /// `queues`: the queue table, by decreasing priority.
     pub fn queues(&mut self) -> CallResult<Vec<Queue>> {
         let res = self.call("queues", Json::Null)?;

@@ -42,6 +42,20 @@ pub mod code {
     pub const SHUTTING_DOWN: &str = "shutting_down";
     /// Anything else (e.g. a stored admission rule that fails to parse).
     pub const INTERNAL: &str = "internal";
+
+    /// Every stable code, for exhaustiveness checks (the per-code obs
+    /// counters assert they cover this list).
+    pub const ALL: &[&str] = &[
+        BAD_REQUEST,
+        UNSUPPORTED_VERSION,
+        UNKNOWN_METHOD,
+        ADMISSION_REJECTED,
+        BAD_FILTER,
+        NO_SUCH_JOB,
+        ILLEGAL_STATE,
+        SHUTTING_DOWN,
+        INTERNAL,
+    ];
 }
 
 /// Build a request envelope.
@@ -429,6 +443,88 @@ pub fn load_from_json(doc: &Json) -> Result<crate::server::LoadInfo> {
     })
 }
 
+// ----------------------------------------------------------- metrics ----
+
+/// Encode a metrics registry snapshot (`metrics` result). Delegates to
+/// the snapshot's own encoding: the `v` field *inside* the object is
+/// the snapshot schema version ([`crate::obs::SNAPSHOT_VERSION`]),
+/// versioned independently of the protocol envelope.
+pub fn metrics_to_json(snap: &crate::obs::MetricsSnapshot) -> Json {
+    snap.to_json()
+}
+
+/// Decode a metrics snapshot (client side of `metrics`).
+pub fn metrics_from_json(doc: &Json) -> Result<crate::obs::MetricsSnapshot> {
+    crate::obs::MetricsSnapshot::from_json(doc)
+        .ok_or_else(|| anyhow::anyhow!("malformed metrics snapshot"))
+}
+
+// ------------------------------------------------------------ events ----
+
+/// Encode an `events` result: the tail window (oldest first) plus the
+/// total number of live records that matched the filter — so a client
+/// showing the last N knows how many more it could have asked for.
+pub fn events_to_json(records: &[crate::db::EventRecord], total: usize) -> Json {
+    Json::obj(vec![
+        (
+            "events",
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("time", Json::Num(r.time as f64)),
+                            ("kind", Json::Str(r.kind.clone())),
+                            (
+                                "job",
+                                r.job.map(|j| Json::Num(j as f64)).unwrap_or(Json::Null),
+                            ),
+                            ("detail", Json::Str(r.detail.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total", Json::Num(total as f64)),
+    ])
+}
+
+/// Decode the client side of `events`.
+pub fn events_from_json(doc: &Json) -> Result<(Vec<crate::db::EventRecord>, usize)> {
+    let arr = doc
+        .get("events")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("events result missing events array"))?;
+    let records = arr
+        .iter()
+        .map(|item| -> Result<crate::db::EventRecord> {
+            Ok(crate::db::EventRecord {
+                time: item
+                    .get("time")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("event record missing time"))?,
+                kind: item
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("event record missing kind"))?
+                    .to_string(),
+                job: item.get("job").and_then(Json::as_i64).map(|j| j.max(0) as JobId),
+                detail: item
+                    .get("detail")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let total = doc
+        .get("total")
+        .and_then(Json::as_i64)
+        .filter(|t| *t >= 0)
+        .ok_or_else(|| anyhow::anyhow!("events result missing total"))?;
+    Ok((records, total as usize))
+}
+
 /// Encode submission ids (`sub` result).
 pub fn ids_to_json(ids: &[JobId]) -> Json {
     Json::obj(vec![(
@@ -600,5 +696,41 @@ mod tests {
         let ids = vec![1u64, 5, 42];
         assert_eq!(ids_from_json(&ids_to_json(&ids)).unwrap(), ids);
         assert!(ids_from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn events_roundtrip() {
+        let records = vec![
+            crate::db::EventRecord {
+                time: 10,
+                kind: "SUBMISSION".into(),
+                job: Some(3),
+                detail: "alice".into(),
+            },
+            crate::db::EventRecord {
+                time: 11,
+                kind: "SCHEDULER_ROUND".into(),
+                job: None,
+                detail: String::new(),
+            },
+        ];
+        let (back, total) = events_from_json(&events_to_json(&records, 57)).unwrap();
+        assert_eq!(total, 57);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].time, 10);
+        assert_eq!(back[0].kind, "SUBMISSION");
+        assert_eq!(back[0].job, Some(3));
+        assert_eq!(back[0].detail, "alice");
+        assert_eq!(back[1].job, None);
+        assert!(events_from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn metrics_codec_delegates_to_the_snapshot_encoding() {
+        let snap = crate::obs::snapshot(None);
+        let back = metrics_from_json(&metrics_to_json(&snap)).unwrap();
+        assert_eq!(back.version, crate::obs::SNAPSHOT_VERSION);
+        assert_eq!(back.counters.len(), snap.counters.len());
+        assert_eq!(back.hists.len(), snap.hists.len());
     }
 }

@@ -33,6 +33,7 @@ use std::time::Duration;
 
 use super::proto::{self, code};
 use super::wire;
+use crate::obs::metrics;
 use crate::server::Server;
 use crate::types::JobState;
 use crate::util::Json;
@@ -491,7 +492,7 @@ fn serve_connection(shared: &Shared, stream: TcpStream) {
                 break;
             }
         };
-        let response = dispatch(shared, &doc);
+        let response = timed_dispatch(shared, &doc);
         shared.served.fetch_add(1, Ordering::Relaxed);
         match wire::write_frame(&mut writer, &response) {
             Ok(()) => {}
@@ -529,6 +530,33 @@ fn is_timeout(e: &anyhow::Error) -> bool {
             )
         })
         .unwrap_or(false)
+}
+
+/// One request through [`dispatch`] with the obs layer around it:
+/// request counter, in-flight gauge, per-method latency histogram and
+/// per-error-code counters. All recording happens strictly before or
+/// after the dispatch — every handler acquires and releases its own
+/// guards internally, so no metric call overlaps a held lock (oarlint
+/// R7). The method label is read from the raw envelope best-effort: an
+/// unreadable envelope lands in the `other` histogram alongside its
+/// `bad_request` error count.
+fn timed_dispatch(shared: &Shared, doc: &Json) -> Json {
+    metrics::RPC_REQUESTS.inc();
+    metrics::RPC_INFLIGHT.rise();
+    let t0 = crate::obs::clock::now_us();
+    let response = dispatch(shared, doc);
+    let dur_us = crate::obs::clock::now_us().saturating_sub(t0);
+    metrics::RPC_INFLIGHT.fall();
+    let method = doc.get("method").and_then(Json::as_str).unwrap_or("");
+    metrics::rpc_method_hist(method).observe(dur_us);
+    if let Some(err_code) = response
+        .get("err")
+        .and_then(|e| e.get("code"))
+        .and_then(Json::as_str)
+    {
+        metrics::rpc_error_counter(err_code).inc();
+    }
+    response
 }
 
 /// Decode the envelope and route to the matching [`Server`] command.
@@ -586,6 +614,11 @@ fn dispatch(shared: &Shared, doc: &Json) -> Json {
                 )]),
             )
         }
+        // Typed registry snapshot (see docs/OBSERVABILITY.md): the db
+        // counters inside are read under one shared read guard, so this
+        // probe never waits behind a scheduling round's apply phase.
+        "metrics" => proto::ok_response(id, proto::metrics_to_json(&server.metrics_snapshot())),
+        "events" => handle_events(server, id, &params),
         other => proto::err_response(
             id,
             code::UNKNOWN_METHOD,
@@ -679,6 +712,43 @@ fn handle_del(server: &Server, id: u64, params: &Json) -> Json {
         ),
         Err(e) => proto::err_response(id, code::NO_SUCH_JOB, &e.to_string()),
     }
+}
+
+/// `events`: tail the bounded event log (`oar events`). Read guard
+/// only. Params: strict-integer `tail` (newest N, default 20),
+/// optional string `kind`, strict-integer `job` — the same validation
+/// discipline as `sub`/`del` (fractional numbers are rejected, never
+/// truncated).
+fn handle_events(server: &Server, id: u64, params: &Json) -> Json {
+    let tail = match proto::int_param(params, "tail") {
+        Ok(None) => 20,
+        Ok(Some(n)) if (0..=1_000_000).contains(&n) => n,
+        Ok(Some(_)) => {
+            return proto::err_response(id, code::BAD_REQUEST, "tail must be in 0..=1000000")
+        }
+        Err(e) => return proto::err_response(id, code::BAD_REQUEST, &e.to_string()),
+    };
+    let kind = match params.get("kind") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(other) => {
+            return proto::err_response(
+                id,
+                code::BAD_REQUEST,
+                &format!("kind must be a string, got {other:?}"),
+            )
+        }
+    };
+    let job = match proto::int_param(params, "job") {
+        Ok(None) => None,
+        Ok(Some(n)) if n >= 0 => Some(n as u64),
+        Ok(Some(_)) => {
+            return proto::err_response(id, code::BAD_REQUEST, "job must be non-negative")
+        }
+        Err(e) => return proto::err_response(id, code::BAD_REQUEST, &e.to_string()),
+    };
+    let (records, total) = server.events_tail(tail as usize, kind.as_deref(), job);
+    proto::ok_response(id, proto::events_to_json(&records, total))
 }
 
 /// `hold`/`resume` (`oarhold`/`oarresume`): the in-process [`Server`] API
@@ -814,6 +884,63 @@ mod tests {
         assert_eq!(info.procs_alive, 2);
         assert_eq!(info.procs_free, 2);
         assert_eq!(info.running_jobs, 0);
+    }
+
+    #[test]
+    fn metrics_and_events_via_dispatch() {
+        let shared = shared();
+        // Through the instrumented wrapper, so the request itself lands
+        // in the registry too.
+        let resp = timed_dispatch(&shared, &proto::request(1, "metrics", Json::Null));
+        let snap = proto::metrics_from_json(resp.get("ok").expect("ok")).unwrap();
+        assert_eq!(snap.version, crate::obs::SNAPSHOT_VERSION);
+        // The db-derived counters travel with the registry catalogue.
+        assert!(
+            snap.counters
+                .iter()
+                .any(|(n, _)| n == "oar_db_events_retention_cap"),
+            "merged db counters missing"
+        );
+
+        // Submit one job so the log has a SUBMISSION row, then tail it
+        // with every filter at once.
+        let params = Json::obj(vec![
+            ("user", Json::Str("u".into())),
+            ("command", Json::Str("sleep 30".into())),
+        ]);
+        let resp = dispatch(&shared, &proto::request(2, "sub", params));
+        let ids = proto::ids_from_json(resp.get("ok").expect("ok")).unwrap();
+        let resp = dispatch(
+            &shared,
+            &proto::request(
+                3,
+                "events",
+                Json::obj(vec![
+                    ("tail", Json::Num(5.0)),
+                    ("kind", Json::Str("SUBMISSION".into())),
+                    ("job", Json::Num(ids[0] as f64)),
+                ]),
+            ),
+        );
+        let (records, total) = proto::events_from_json(resp.get("ok").expect("ok")).unwrap();
+        assert_eq!(total, 1);
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].kind, "SUBMISSION");
+        assert_eq!(records[0].job, Some(ids[0]));
+
+        // Mistyped params are typed errors, same discipline as `sub`.
+        let resp = dispatch(
+            &shared,
+            &proto::request(4, "events", Json::obj(vec![("tail", Json::Num(1.5))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_REQUEST));
+        let resp = dispatch(
+            &shared,
+            &proto::request(5, "events", Json::obj(vec![("kind", Json::Num(7.0))])),
+        );
+        let err = resp.get("err").expect("err");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code::BAD_REQUEST));
     }
 
     #[test]

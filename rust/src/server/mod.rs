@@ -164,8 +164,16 @@ impl Inner {
     /// queued behind the same batch find it already flushed and return
     /// without touching the file (that is the group commit).
     fn write_db<T>(&self, f: impl FnOnce(&mut Db) -> T) -> T {
-        let out = f(&mut self.db.write().unwrap());
+        let t0 = crate::obs::clock::now_us();
+        let (out, wait_us) = {
+            let mut db = self.db.write().unwrap();
+            let wait = crate::obs::clock::now_us().saturating_sub(t0);
+            (f(&mut db), wait)
+        };
         self.commit_wal();
+        // Recorded only after the guard dropped *and* the batch landed:
+        // telemetry never runs inside the commit path (oarlint R7).
+        crate::obs::metrics::DB_WRITE_WAIT_US.observe(wait_us);
         out
     }
 
@@ -173,7 +181,14 @@ impl Inner {
     /// Many readers proceed concurrently; none blocks a scheduling
     /// round's planning phase.
     fn read_db<T>(&self, f: impl FnOnce(&Db) -> T) -> T {
-        f(&self.db.read().unwrap())
+        let t0 = crate::obs::clock::now_us();
+        let (out, wait_us) = {
+            let db = self.db.read().unwrap();
+            let wait = crate::obs::clock::now_us().saturating_sub(t0);
+            (f(&db), wait)
+        };
+        crate::obs::metrics::DB_READ_WAIT_US.observe(wait_us);
+        out
     }
 
     /// Flush WAL records buffered by write guards that already dropped.
@@ -496,6 +511,44 @@ impl Server {
         self.read_db(|db| db.queues_by_priority())
     }
 
+    /// Typed snapshot of the whole metrics registry (`metrics` RPC
+    /// method, `oar metrics` / `oar top`): the static catalogue merged
+    /// with the database's per-plan counters and the event log's
+    /// retention accounting, the latter read under one shared read
+    /// guard so the db-derived numbers are mutually coherent.
+    pub fn metrics_snapshot(&self) -> crate::obs::MetricsSnapshot {
+        let dbc = self.read_db(|db| {
+            let s = db.stats();
+            crate::obs::DbCounters {
+                selects: s.selects,
+                inserts: s.inserts,
+                updates: s.updates,
+                deletes: s.deletes,
+                index_probes: s.index_probes,
+                full_scans: s.full_scans,
+                view_hits: s.view_hits,
+                events_len: db.events().len() as u64,
+                events_evicted: db.events_evicted(),
+                events_cap: db.event_retention() as u64,
+            }
+        });
+        crate::obs::snapshot(Some(&dbc))
+    }
+
+    /// The newest `tail` events (returned oldest-first), optionally
+    /// filtered by kind and/or job, plus the total number of live
+    /// records matching the filter — the `events` RPC method. Read
+    /// guard only: tailing the log never waits behind a round's apply
+    /// phase.
+    pub fn events_tail(
+        &self,
+        tail: usize,
+        kind: Option<&str>,
+        job: Option<JobId>,
+    ) -> (Vec<crate::db::EventRecord>, usize) {
+        self.read_db(|db| db.events_tail(tail, kind, job))
+    }
+
     /// The `load` probe: current occupancy, answered from the database's
     /// materialized views under one read guard — O(1) whatever the table
     /// sizes, and mutually coherent because every view is maintained by
@@ -689,9 +742,15 @@ fn automaton_loop(inner: Arc<Inner>, mut meta: MetaScheduler, mut planner: Plann
 
 fn run_schedule(inner: &Arc<Inner>, meta: &mut MetaScheduler) {
     let now = inner.now();
+    // Round span declared before any guard: locals drop in reverse
+    // declaration order, so every guard taken below is released before
+    // the span records (oarlint R7 — no telemetry under the write lock).
+    let _round = crate::obs::Span::enter("sched.round", &crate::obs::metrics::SCHED_ROUND_US);
+    crate::obs::metrics::SCHED_ROUNDS.inc();
     // Planning is pure and runs under a *read* guard: `stat`/`load`/grid
     // probes keep answering while the round computes its placement.
     let decision = {
+        let _plan = crate::obs::Span::enter("sched.plan", &crate::obs::metrics::SCHED_PLAN_US);
         let db = inner.db.read().unwrap();
         match meta.round(&db, now) {
             Ok(d) => d,
@@ -708,6 +767,9 @@ fn run_schedule(inner: &Arc<Inner>, meta: &mut MetaScheduler) {
 }
 
 fn apply_decision(inner: &Arc<Inner>, decision: &SchedulerDecision, now: Time) {
+    // Declared before the write guard: the guard (and the group-commit
+    // flush below) finish before this span records its duration.
+    let _apply = crate::obs::Span::enter("sched.apply", &crate::obs::metrics::SCHED_APPLY_US);
     let mut db = inner.db.write().unwrap();
 
     for (id, nodes) in &decision.reservations_confirmed {

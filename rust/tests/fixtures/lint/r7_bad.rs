@@ -1,0 +1,26 @@
+//! R7 fixture (positive): telemetry recorded while commit-path guards
+//! are held — under the named db write guard, inside a `write_db`
+//! helper region, and under the WAL sink lock.
+
+fn observes_under_write_guard(inner: &Inner) {
+    let t0 = clock::now_us();
+    let mut db = inner.db.write().unwrap();
+    db.set_job_state(id, JobState::Running, now);
+    metrics::DB_WRITE_WAIT_US.observe(clock::now_us() - t0);
+    drop(db);
+    inner.commit_wal();
+}
+
+fn counts_inside_helper_region(inner: &Inner) {
+    inner.write_db(|db| {
+        db.log_event(now, "START", Some(id), "");
+        metrics::SCHED_ROUNDS.inc();
+    });
+}
+
+fn spans_under_sink_lock(wal: &Wal) {
+    let mut s = wal.sink.lock().unwrap();
+    let _flush = Span::enter("wal.flush", &metrics::WAL_FLUSH_US);
+    s.push(frame);
+    drop(s);
+}

@@ -1,0 +1,30 @@
+//! R7 fixture (negative): the repository's instrumentation discipline.
+//! Timestamps are captured under the guard; every metric record happens
+//! after release, and spans open before the guard so drop order releases
+//! the lock first.
+
+fn observes_after_release(inner: &Inner) {
+    let t0 = clock::now_us();
+    let (out, wait_us) = {
+        let mut db = inner.db.write().unwrap();
+        let wait = clock::now_us().saturating_sub(t0);
+        (db.touch(), wait)
+    };
+    inner.commit_wal();
+    metrics::DB_WRITE_WAIT_US.observe(wait_us);
+    report(out);
+}
+
+fn span_opens_before_the_guard(inner: &Inner) {
+    let _apply = Span::enter("sched.apply", &metrics::SCHED_APPLY_US);
+    let mut db = inner.db.write().unwrap();
+    db.touch();
+    drop(db);
+    inner.commit_wal();
+}
+
+fn unguarded_counters_are_fine() {
+    metrics::RPC_REQUESTS.inc();
+    metrics::RPC_INFLIGHT.rise();
+    metrics::RPC_INFLIGHT.fall();
+}

@@ -5,7 +5,7 @@
 //!    the suppression inventory is pinned — adding an `allow` without
 //!    updating the expected set here is a reviewable event, exactly like
 //!    a snapshot-test diff.
-//! 2. **Every rule actually fires.** For each of R1–R6 a positive
+//! 2. **Every rule actually fires.** For each of R1–R7 a positive
 //!    fixture must produce that rule's findings and a negative fixture
 //!    must stay silent, so a refactor of the analyzer cannot quietly
 //!    lobotomize a rule while the tree stays "clean".
@@ -154,6 +154,20 @@ fn r6_atomics_calibration_fires_and_stays_quiet() {
     assert_eq!(bad.of_rule("R6").count(), 2, "{}", bad.render_human());
 
     let good = lint_fixture("r6_good.rs", RuleConfig::only("R6"));
+    assert!(good.findings.is_empty(), "{}", good.render_human());
+}
+
+#[test]
+fn r7_telemetry_off_commit_path_fires_and_stays_quiet() {
+    let bad = lint_fixture("r7_bad.rs", RuleConfig::only("R7"));
+    // Observe under the write guard, inc inside write_db, span under
+    // the sink lock — one each.
+    assert_eq!(bad.of_rule("R7").count(), 3, "{}", bad.render_human());
+    assert!(bad.findings.iter().any(|f| f.message.contains("observe")));
+    assert!(bad.findings.iter().any(|f| f.message.contains("inc")));
+    assert!(bad.findings.iter().any(|f| f.message.contains("enter")));
+
+    let good = lint_fixture("r7_good.rs", RuleConfig::only("R7"));
     assert!(good.findings.is_empty(), "{}", good.render_human());
 }
 

@@ -1,0 +1,393 @@
+//! The observability suite, in its own process on purpose: the obs
+//! clock's manual mode and the runtime kill switch are process-global,
+//! so driving them here cannot skew timings recorded by the other
+//! integration binaries.
+//!
+//! Three halves:
+//! 1. **Concurrency**: multi-thread hammers proving counter exactness,
+//!    the histogram bucket-sum == count invariant under racing
+//!    observes, and that the span ring stays bounded.
+//! 2. **Determinism**: the frozen clock drives exact bucket placement,
+//!    quantile edges, and span durations.
+//! 3. **End-to-end**: a live durable server + RPC front-end, asserting
+//!    the `metrics` method returns real per-phase scheduler timings,
+//!    lock-wait histograms, WAL batch distributions and per-method RPC
+//!    latencies, and that `events` tails the bounded log with filters.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use oar::cluster::VirtualCluster;
+use oar::obs::{self, clock};
+use oar::rpc::{proto, RpcClient, RpcConfig, RpcServer};
+use oar::server::{Server, ServerConfig};
+use oar::types::{JobSpec, JobState};
+
+/// Everything in this binary mutates process-global state (the clock,
+/// the kill switch, the span ring, the shared catalogue), so the tests
+/// serialize on one lock instead of trusting the harness thread count.
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn seq() -> std::sync::MutexGuard<'static, ()> {
+    SEQ.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------------- concurrency ----
+
+#[test]
+fn counters_are_exact_under_contention() {
+    let _g = seq();
+    static HAMMERED: obs::Counter = obs::Counter::new("test_hammered_total");
+    const THREADS: usize = 8;
+    const PER: u64 = 100_000;
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..PER {
+                    HAMMERED.inc();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(HAMMERED.get(), THREADS as u64 * PER, "a relaxed inc was lost");
+}
+
+#[test]
+fn histogram_invariants_hold_under_racing_observes() {
+    let _g = seq();
+    static RACED: obs::Histogram = obs::Histogram::new("test_raced_us", "us");
+    const THREADS: u64 = 8;
+    const PER: u64 = 20_000;
+
+    // Snapshot concurrently with the observers: whatever interleaving a
+    // snapshot catches, its own bucket-sum must equal its own count.
+    let reader = std::thread::spawn(|| {
+        let mut last = 0u64;
+        for _ in 0..200 {
+            let s = RACED.snapshot();
+            let bucket_sum: u64 = s.buckets.iter().sum();
+            assert_eq!(bucket_sum, s.count, "snapshot caught a torn histogram");
+            assert!(s.count >= last, "count went backwards");
+            last = s.count;
+            std::thread::yield_now();
+        }
+    });
+    let writers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for i in 0..PER {
+                    // Values spread over many buckets, deterministic sum.
+                    RACED.observe((t * PER + i) % 4096);
+                }
+            })
+        })
+        .collect();
+    for h in writers {
+        h.join().unwrap();
+    }
+    reader.join().unwrap();
+
+    let s = RACED.snapshot();
+    assert_eq!(s.count, THREADS * PER, "an observe was lost");
+    assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+    let expected_sum: u64 = (0..THREADS)
+        .flat_map(|t| (0..PER).map(move |i| (t * PER + i) % 4096))
+        .sum();
+    assert_eq!(s.sum, expected_sum);
+    assert_eq!(s.max, 4095);
+}
+
+#[test]
+fn span_ring_is_bounded_and_accounts_evictions() {
+    let _g = seq();
+    static RING_HIST: obs::Histogram = obs::Histogram::new("test_ring_us", "us");
+    obs::set_ring_capacity(64);
+    let (_, _, evicted_before) = obs::ring_stats();
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..500 {
+                    let _s = obs::Span::enter("ring.hammer", &RING_HIST);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let (len, cap, evicted) = obs::ring_stats();
+    assert_eq!(cap, 64);
+    assert!(len <= 64, "ring grew past its capacity: {len}");
+    // 2000 spans into 64 slots: most were overwritten, and every
+    // overwrite is tallied.
+    assert!(
+        evicted - evicted_before >= 2000 - 64,
+        "evictions untallied: {evicted_before} -> {evicted}"
+    );
+    assert!(obs::recent_spans(1000).len() <= 64);
+    obs::set_ring_capacity(obs::DEFAULT_RING_CAPACITY);
+}
+
+#[test]
+fn kill_switch_stops_recording_without_stranding_gauges() {
+    let _g = seq();
+    static OFF_C: obs::Counter = obs::Counter::new("test_off_total");
+    static OFF_H: obs::Histogram = obs::Histogram::new("test_off_us", "us");
+    static OFF_G: obs::Gauge = obs::Gauge::new("test_off_inflight");
+
+    OFF_G.rise(); // in flight when the switch flips
+    obs::set_enabled(false);
+    OFF_C.inc();
+    OFF_H.observe(42);
+    OFF_G.fall(); // not gated: must not strand the gauge above zero
+    obs::set_enabled(true);
+
+    assert_eq!(OFF_C.get(), 0);
+    assert_eq!(OFF_H.snapshot().count, 0);
+    assert_eq!(OFF_G.get(), 0);
+}
+
+// ------------------------------------------------------- determinism ----
+
+#[test]
+fn frozen_clock_places_observations_in_exact_buckets() {
+    let _g = seq();
+    static EDGES: obs::Histogram = obs::Histogram::new("test_edges_us", "us");
+    clock::freeze_at(1_000);
+    assert!(clock::is_frozen());
+
+    // Each (advance, bucket) pair sits exactly on a log2 bucket edge.
+    for (dur, bucket) in [
+        (0u64, 0usize), // zero lands in the dedicated zero bucket
+        (1, 1),
+        (2, 2),
+        (3, 2),    // still < 4
+        (4, 3),
+        (1023, 10), // last value of [512, 1024)
+        (1024, 11), // first value of [1024, 2048)
+    ] {
+        let t0 = clock::now_us();
+        clock::advance_us(dur);
+        let before = EDGES.snapshot().buckets[bucket];
+        EDGES.observe(clock::now_us() - t0);
+        let after = EDGES.snapshot().buckets[bucket];
+        assert_eq!(after, before + 1, "duration {dur} missed bucket {bucket}");
+    }
+    clock::unfreeze();
+    assert!(!clock::is_frozen());
+}
+
+#[test]
+fn quantiles_derive_from_buckets() {
+    let _g = seq();
+    static Q: obs::Histogram = obs::Histogram::new("test_quantiles_us", "us");
+    for v in 1..=100u64 {
+        Q.observe(v);
+    }
+    let s = Q.snapshot();
+    assert_eq!(s.count, 100);
+    assert_eq!(s.max, 100);
+    assert!((s.mean() - 50.5).abs() < 1e-9);
+    // Rank 50 is the value 50, whose log2 bucket covers [32, 64).
+    assert_eq!(s.p50(), 63);
+    // Rank 99 is the value 99, bucket [64, 128).
+    assert_eq!(s.p99(), 127);
+}
+
+#[test]
+fn frozen_clock_drives_exact_span_durations_and_nesting() {
+    let _g = seq();
+    static OUTER: obs::Histogram = obs::Histogram::new("test_span_outer_us", "us");
+    static INNER: obs::Histogram = obs::Histogram::new("test_span_inner_us", "us");
+    clock::freeze_at(50_000);
+
+    let outer_id;
+    {
+        let outer = obs::Span::enter("det.outer", &OUTER);
+        outer_id = outer.id();
+        clock::advance_us(300);
+        {
+            let _inner = obs::Span::enter("det.inner", &INNER);
+            clock::advance_us(400);
+        }
+        clock::advance_us(100);
+    }
+    clock::unfreeze();
+
+    let spans = obs::recent_spans(8);
+    let inner = spans.iter().find(|s| s.name == "det.inner").expect("inner");
+    let outer = spans.iter().find(|s| s.name == "det.outer").expect("outer");
+    assert_eq!(inner.dur_us, 400, "inner span must time exactly its region");
+    assert_eq!(inner.start_us, 50_300);
+    assert_eq!(inner.parent, outer_id, "nesting must link child to parent");
+    assert_eq!(outer.dur_us, 800);
+    assert_eq!(outer.start_us, 50_000);
+    assert_eq!(outer.parent, 0, "outer span is a root");
+    // The child finished first: ring order is completion order.
+    assert_eq!(OUTER.snapshot().buckets[obs::bucket_index(800)], 1);
+    assert_eq!(INNER.snapshot().buckets[obs::bucket_index(400)], 1);
+}
+
+// -------------------------------------------------------- end-to-end ----
+
+/// The ISSUE's acceptance check: a live durable server + front-end, a
+/// real workload, then the `metrics` RPC must report non-empty per-phase
+/// scheduler timings, lock-wait histograms, WAL batch distributions and
+/// per-method RPC latencies — and `events` must tail the bounded log.
+#[test]
+fn metrics_and_events_rpc_report_a_live_server() {
+    let _g = seq();
+    let dir = std::env::temp_dir().join(format!("oar-obs-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cluster = Arc::new(VirtualCluster::tiny(4, 1));
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    cfg.data_dir = Some(dir.clone());
+    let server = Arc::new(Server::open(cluster, cfg).unwrap());
+    let rpc = RpcServer::start(server.clone(), RpcConfig::loopback()).unwrap();
+    let addr = rpc.addr().to_string();
+
+    let mut client = RpcClient::connect(&addr).unwrap();
+    let id = client
+        .sub(&JobSpec::batch("alice", "date", 2, 60))
+        .unwrap()
+        .unwrap();
+    client
+        .sub(&JobSpec::batch("bob", "date", 1, 60))
+        .unwrap()
+        .unwrap();
+    assert!(server.wait_all_terminal(Duration::from_secs(30)));
+    assert_eq!(
+        server.with_db(|db| db.job(id)).unwrap().state,
+        JobState::Terminated
+    );
+    // Mint one typed error so the per-code counters are exercised too.
+    assert_eq!(
+        client.hold(424_242).unwrap().unwrap_err().code,
+        proto::code::NO_SUCH_JOB
+    );
+
+    let snap = client.metrics().unwrap().unwrap();
+    assert_eq!(snap.version, obs::SNAPSHOT_VERSION);
+
+    // Scheduler phases: rounds ran, plan/apply both timed.
+    for hist in ["oar_sched_round_us", "oar_sched_plan_us", "oar_sched_apply_us"] {
+        let h = snap.hist(hist).unwrap_or_else(|| panic!("{hist} missing"));
+        assert!(h.count > 0, "{hist} recorded nothing");
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count, "{hist} torn");
+    }
+    assert!(snap.counter("oar_sched_rounds_total").unwrap() > 0);
+
+    // Lock waits: the workload took both guard kinds.
+    assert!(snap.hist("oar_db_read_wait_us").unwrap().count > 0);
+    assert!(snap.hist("oar_db_write_wait_us").unwrap().count > 0);
+
+    // WAL: every mutation appended; group commit flushed real batches.
+    assert!(snap.hist("oar_wal_append_us").unwrap().count > 0);
+    let batches = snap.hist("oar_wal_batch_records").unwrap();
+    assert!(batches.count > 0, "no group-commit batch was observed");
+    assert!(batches.sum > 0, "batches must contain records");
+    assert!(snap.hist("oar_wal_batch_bytes").unwrap().sum > 0);
+    assert!(snap.hist("oar_wal_flush_us").unwrap().count >= 1);
+
+    // RPC: per-method latencies and the request/error counters.
+    assert!(snap.hist("oar_rpc_sub_us").unwrap().count >= 2);
+    assert!(snap.hist("oar_rpc_hold_us").unwrap().count >= 1);
+    assert!(snap.counter("oar_rpc_requests_total").unwrap() >= 4);
+    assert!(snap.counter("oar_rpc_err_no_such_job_total").unwrap() >= 1);
+    // The snapshot is taken inside the `metrics` dispatch itself.
+    assert!(snap.gauge("oar_rpc_inflight").unwrap() >= 1);
+
+    // Db bridge counters rode along under the read guard.
+    assert!(snap.counter("oar_db_inserts_total").unwrap() >= 2);
+    assert_eq!(
+        snap.counter("oar_db_events_retention_cap").unwrap(),
+        oar::db::DEFAULT_EVENT_RETENTION as u64
+    );
+
+    // The span ring saw the round spans, with plan nested under round.
+    let spans = obs::recent_spans(obs::DEFAULT_RING_CAPACITY);
+    assert!(spans.iter().any(|s| s.name == "sched.round"));
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.name == "sched.plan" && s.parent != 0),
+        "plan spans must nest under their round"
+    );
+
+    // `events`: full tail, then kind- and job-filtered.
+    let (all, total) = client.events(10, None, None).unwrap().unwrap();
+    assert!(total > 0, "a terminal workload must have logged events");
+    assert!(all.len() <= 10 && !all.is_empty());
+    assert!(all.windows(2).all(|w| w[0].time <= w[1].time), "oldest first");
+    let kind = all[0].kind.clone();
+    let (of_kind, kind_total) = client.events(100, Some(&kind), None).unwrap().unwrap();
+    assert!(kind_total >= 1);
+    assert!(of_kind.iter().all(|e| e.kind == kind));
+    let (of_job, job_total) = client.events(100, None, Some(id)).unwrap().unwrap();
+    assert!(job_total >= 1, "job {id} must have logged events");
+    assert!(of_job.iter().all(|e| e.job == Some(id)));
+
+    // The second request sees strictly more requests than the first
+    // snapshot did: the metrics path meters itself.
+    let snap2 = client.metrics().unwrap().unwrap();
+    assert!(snap2.hist("oar_rpc_metrics_us").unwrap().count >= 1);
+    assert!(
+        snap2.counter("oar_rpc_requests_total").unwrap()
+            > snap.counter("oar_rpc_requests_total").unwrap()
+    );
+
+    rpc.drain();
+    drop(client);
+    let server = Arc::try_unwrap(server).ok().expect("front-end joined");
+    drop(server.shutdown());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 1's RPC face: the event log keeps its retention cap over
+/// the wire — flooding past the cap evicts oldest rows, `events` still
+/// answers, and the eviction counters surface in `metrics`.
+#[test]
+fn bounded_event_log_reports_evictions_over_rpc() {
+    let _g = seq();
+    let cluster = Arc::new(VirtualCluster::tiny(2, 1));
+    let mut cfg = ServerConfig::fast(0.0);
+    cfg.sched.dense_matching = false;
+    let server = Arc::new(Server::new(cluster, cfg));
+    let rpc = RpcServer::start(server.clone(), RpcConfig::loopback()).unwrap();
+    let addr = rpc.addr().to_string();
+
+    server.with_db(|db| {
+        db.set_event_retention(8);
+        for i in 0..50i64 {
+            db.log_event(i, "FLOOD", None, &format!("row {i}"));
+        }
+    });
+
+    let mut client = RpcClient::connect(&addr).unwrap();
+    let (tail, total) = client.events(100, Some("FLOOD"), None).unwrap().unwrap();
+    assert_eq!(total, 8, "retention cap must bound the live log");
+    assert_eq!(tail.len(), 8);
+    assert_eq!(tail[0].detail, "row 42", "oldest surviving row");
+    assert_eq!(tail[7].detail, "row 49", "newest row");
+
+    let snap = client.metrics().unwrap().unwrap();
+    assert_eq!(snap.counter("oar_db_events_retention_cap").unwrap(), 8);
+    assert_eq!(snap.counter("oar_db_events_rows").unwrap(), 8);
+    assert_eq!(snap.counter("oar_db_events_evicted_total").unwrap(), 42);
+
+    // Mistyped params are BAD_REQUEST, not a panic or a truncation.
+    let res = client
+        .call("events", oar::util::Json::obj(vec![(
+            "tail",
+            oar::util::Json::Num(1.5),
+        )]))
+        .unwrap();
+    assert_eq!(res.unwrap_err().code, proto::code::BAD_REQUEST);
+}
